@@ -1,0 +1,72 @@
+//! Analog-defect robustness study (paper §V-A, Fig. 9b).
+//!
+//! Sweeps memristor-conductance and DAC defect rates on a trained model
+//! and reports mean relative accuracy over independent defect draws —
+//! including the paper's operating point (~0.2% flip probability from a
+//! 1 µS conductance σ), where the accuracy drop should stay < 0.5%.
+//!
+//! Run: `cargo run --release --example defect_study`
+
+use xtime::cam::DefectSpec;
+use xtime::compiler::{compile, CamEngine, CompileOptions};
+use xtime::data::by_name;
+use xtime::trees::{gbdt, GbdtParams};
+use xtime::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== analog defect injection study (Fig. 9b protocol) ===\n");
+    let data = by_name("churn").expect("dataset").generate_n(6000);
+    let split = data.split(0.8, 0.0, 3);
+    let model = gbdt::train(
+        &split.train,
+        &GbdtParams { n_rounds: 60, max_leaves: 64, ..Default::default() },
+        None,
+    );
+    let program = compile(&model, &CompileOptions::default())?;
+
+    let test_rows = 600.min(split.test.n_rows());
+    let ideal = {
+        let engine = CamEngine::new(&program);
+        let mut hits = 0;
+        for i in 0..test_rows {
+            hits += (engine.predict(&program, split.test.row(i)) == split.test.y[i]) as usize;
+        }
+        hits as f64 / test_rows as f64
+    };
+    println!("ideal (defect-free) accuracy: {ideal:.4}  ({} trees)", model.n_trees());
+
+    let runs = 20; // paper: 100 runs; 20 keeps the example snappy
+    let mut table = Table::new(&["defect %", "memristor rel.acc", "DAC rel.acc"]);
+    for pct in [0.002, 0.01, 0.05, 0.10, 0.20] {
+        let mut rel = [0.0f64; 2];
+        for (which, spec) in
+            [DefectSpec::memristor(pct), DefectSpec::dac(pct)].into_iter().enumerate()
+        {
+            let mut acc_sum = 0.0;
+            for run in 0..runs {
+                let engine = CamEngine::with_defects(&program, spec, 1000 + run as u64);
+                let mut hits = 0;
+                for i in 0..test_rows {
+                    hits +=
+                        (engine.predict(&program, split.test.row(i)) == split.test.y[i]) as usize;
+                }
+                acc_sum += hits as f64 / test_rows as f64;
+            }
+            rel[which] = (acc_sum / runs as f64) / ideal;
+        }
+        table.row(&[
+            format!("{:.1}", pct * 100.0),
+            format!("{:.4}", rel[0]),
+            format!("{:.4}", rel[1]),
+        ]);
+    }
+    table.print(&format!("mean relative accuracy over {runs} defect draws"));
+
+    println!(
+        "\npaper operating point: ~0.2% flip probability (1 µS σ on a 1–100 µS\n\
+         window) → expect < 0.5% accuracy drop; ensembles average out\n\
+         individual bound perturbations, so degradation stays graceful until\n\
+         defect rates reach several percent."
+    );
+    Ok(())
+}

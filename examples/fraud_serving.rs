@@ -1,0 +1,130 @@
+//! End-to-end serving driver (the paper's motivating deployment: §I fraud
+//! detection / streaming decision systems; §III-D PCIe-card offload).
+//!
+//! Trains a real churn/fraud-style binary model at a Table-II-like
+//! topology, compiles it, loads the AOT XLA artifact, and serves a
+//! sustained stream of requests through the dynamic-batching coordinator,
+//! reporting latency percentiles and throughput for both the XLA hot path
+//! and the functional-CAM backend, with the exact CPU baseline measured on
+//! the same machine for grounding. Also runs the cycle-level chip
+//! simulation of the same program so software-served and silicon-projected
+//! numbers appear side by side.
+//!
+//! This is the repository's required end-to-end validation driver; its
+//! output is recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example fraud_serving`
+
+use std::path::Path;
+use std::time::Instant;
+use xtime::baselines::cpu_measure;
+use xtime::compiler::{compile, CompileOptions};
+use xtime::coordinator::{Backend, BatchPolicy, FunctionalBackend, Server, XlaBackend};
+use xtime::data::by_name;
+use xtime::runtime::XlaCamEngine;
+use xtime::sim::{simulate, ChipConfig, Workload};
+use xtime::trees::{gbdt, metrics, GbdtParams};
+use xtime::util::bench::{rate, t, Table};
+
+const N_REQUESTS: usize = 20_000;
+
+fn serve(
+    name: &str,
+    backend: Box<dyn Backend>,
+    program: &xtime::compiler::CamProgram,
+    data: &xtime::data::Dataset,
+    table: &mut Table,
+) {
+    let server = Server::start(backend, BatchPolicy { max_wait_us: 200, max_batch: 0 }, program.n_features);
+    // Pre-quantize requests so the measured path is submit→reply.
+    let bins: Vec<Vec<u16>> =
+        (0..N_REQUESTS).map(|i| program.quantizer.bin_row(data.row(i % data.n_rows()))).collect();
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(N_REQUESTS);
+    for b in bins {
+        pending.push(server.submit(b));
+    }
+    for rx in pending {
+        rx.recv().expect("reply");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let lat = server.latency_summary().unwrap();
+    let stats = server.stats();
+    table.row(&[
+        name.to_string(),
+        rate(N_REQUESTS as f64 / wall, "req"),
+        t(lat.median),
+        t(lat.p95),
+        format!("{:.1}", stats.mean_batch),
+    ]);
+    server.shutdown();
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== X-TIME end-to-end serving driver (fraud/churn detection) ===\n");
+
+    // Train at a Table-II-like topology (404 trees in the paper; 128 here
+    // keeps the demo quick while staying multi-core on chip).
+    let data = by_name("churn").expect("dataset").generate_n(10_000);
+    let split = data.split(0.8, 0.1, 42);
+    let t_train = Instant::now();
+    let model = gbdt::train(
+        &split.train,
+        &GbdtParams {
+            n_rounds: 128,
+            max_leaves: 256,
+            early_stop_rounds: 10,
+            ..Default::default()
+        },
+        Some(&split.val),
+    );
+    println!(
+        "trained {} trees (≤{} leaves, depth {}) in {:.1}s — test accuracy {:.3}",
+        model.n_trees(),
+        model.max_leaves(),
+        model.max_depth(),
+        t_train.elapsed().as_secs_f64(),
+        metrics::score(&model, &split.test)
+    );
+
+    let program = compile(&model, &CompileOptions::default())?;
+    println!(
+        "compiled: {} cores, {} CAM rows, task {}\n",
+        program.cores_per_replica(),
+        program.total_rows(),
+        program.task.name()
+    );
+
+    // --- serve through the coordinator --------------------------------------
+    let mut table = Table::new(&["backend", "throughput", "p50 latency", "p95 latency", "mean batch"]);
+
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let engine = XlaCamEngine::new(&program, &artifacts, 64)?;
+        println!("XLA bucket: {} (batch {})", engine.bucket().file, engine.max_batch());
+        serve("xla-aot (PJRT)", Box::new(XlaBackend { engine }), &program, &data, &mut table);
+    } else {
+        println!("artifacts missing — run `make artifacts` for the XLA row");
+    }
+    serve("cam-functional", Box::new(FunctionalBackend::new(&program)), &program, &data, &mut table);
+
+    // Measured CPU baseline on the same machine (exact tree walk).
+    let cpu = cpu_measure(&model, &data, N_REQUESTS);
+    table.row(&[
+        "cpu tree-walk".into(),
+        rate(cpu.throughput_sps, "req"),
+        t(cpu.latency_ns.median * 1e-9),
+        t(cpu.latency_ns.p95 * 1e-9),
+        "1.0".into(),
+    ]);
+    table.print(&format!("serving {} requests", N_REQUESTS));
+
+    // --- silicon projection ---------------------------------------------------
+    let batched = compile(&model, &CompileOptions { replicas: 0, ..Default::default() })?;
+    let rep = simulate(&batched, &ChipConfig::default(), &Workload::saturating(1_000_000), 0.05);
+    println!(
+        "\nX-TIME chip projection: {:.0} ns unloaded latency, {:.0} MS/s ({} replicas, bound {}), {:.2} nJ/dec",
+        rep.latency_ns.min, rep.throughput_msps, rep.n_replicas, rep.bottleneck, rep.energy_nj_per_decision
+    );
+    Ok(())
+}

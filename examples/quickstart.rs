@@ -1,0 +1,81 @@
+//! Quickstart: the whole X-TIME flow in ~60 lines.
+//!
+//! 1. synthesize a tabular dataset (Table II "churn" stand-in);
+//! 2. train a gradient-boosted ensemble (XGBoost-style, from scratch);
+//! 3. compile it to analog-CAM threshold maps + NoC config;
+//! 4. run inference three ways — CPU reference, functional CAM model,
+//!    and the AOT XLA artifact on PJRT — and check they agree;
+//! 5. simulate the chip to get latency / throughput / energy.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::path::Path;
+use xtime::compiler::{compile, CamEngine, CompileOptions};
+use xtime::data::by_name;
+use xtime::runtime::XlaCamEngine;
+use xtime::sim::{simulate, ChipConfig, Workload};
+use xtime::trees::{gbdt, metrics, GbdtParams};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data ---------------------------------------------------------------
+    let data = by_name("churn").expect("catalog dataset").generate_n(4000);
+    let split = data.split(0.8, 0.0, 7);
+    println!("dataset: churn  ({} rows × {} features)", data.n_rows(), data.n_features);
+
+    // 2. Train --------------------------------------------------------------
+    let model = gbdt::train(
+        &split.train,
+        &GbdtParams { n_rounds: 40, max_leaves: 32, ..Default::default() },
+        None,
+    );
+    println!(
+        "model  : {} trees, ≤{} leaves, accuracy {:.3}",
+        model.n_trees(),
+        model.max_leaves(),
+        metrics::score(&model, &split.test)
+    );
+
+    // 3. Compile ------------------------------------------------------------
+    let program = compile(&model, &CompileOptions::default())?;
+    println!(
+        "compile: {} core(s), {} CAM rows, {} NoC routers ({} accumulating)",
+        program.cores_per_replica(),
+        program.total_rows(),
+        program.noc.n_routers(),
+        program.noc.n_accumulating()
+    );
+
+    // 4. Run all three engines ----------------------------------------------
+    let cam = CamEngine::new(&program);
+    let rows: Vec<&[f32]> = (0..200).map(|i| split.test.row(i)).collect();
+    let mut agree_cam = 0;
+    for row in &rows {
+        agree_cam += (cam.predict(&program, row) == model.predict(row)) as usize;
+    }
+    println!("functional CAM engine agrees with CPU on {agree_cam}/200 samples");
+
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let xla = XlaCamEngine::new(&program, &artifacts, 64)?;
+        let preds = xla.predict_rows(&program, &rows)?;
+        let agree = rows
+            .iter()
+            .zip(&preds)
+            .filter(|(row, p)| **p == model.predict(row))
+            .count();
+        println!(
+            "XLA artifact ({}) agrees with CPU on {agree}/200 samples",
+            xla.bucket().file
+        );
+    } else {
+        println!("(run `make artifacts` to exercise the XLA path)");
+    }
+
+    // 5. Simulate the chip ----------------------------------------------------
+    let rep = simulate(&program, &ChipConfig::default(), &Workload::saturating(100_000), 0.05);
+    println!(
+        "chip   : latency {:.0} ns, throughput {:.0} MS/s, {:.3} nJ/decision (bound: {})",
+        rep.latency_ns.min, rep.throughput_msps, rep.energy_nj_per_decision, rep.bottleneck
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+"""AOT pipeline: lower the L2 graph to HLO text artifacts for the Rust
+runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md and
+aot_recipe.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<bucket>.hlo.txt`` per entry in ``model.BUCKETS`` plus a
+``manifest.json`` describing shapes, padding conventions and the kernel
+mode, which ``rust/src/runtime`` consumes to pick buckets at serving time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import (
+    BUCKETS,
+    DC_HI,
+    DC_LO,
+    PAD_HI,
+    PAD_LO,
+    bucket_args,
+    bucket_args_fast,
+    bucket_fn,
+    bucket_fn_fast,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, mode: str = "fast_u8") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    fast = mode == "fast_u8"
+    fn = bucket_fn_fast() if fast else bucket_fn(mode)
+    manifest = {
+        "format": "hlo-text",
+        "kernel_mode": mode,
+        "layout": "transposed_u8" if fast else "batch_major_i32",
+        "pad": {"row_lo": PAD_LO, "row_hi": PAD_HI, "feat_lo": DC_LO, "feat_hi": DC_HI},
+        "inputs": (
+            ["qt[u8,F,B]", "lo[u8,N,F]", "hi_inc[u8,N,F]", "leaf[f32,N,K]"]
+            if fast
+            else ["q[i32,B,F]", "lo[i32,N,F]", "hi[i32,N,F]", "leaf[f32,N,K]"]
+        ),
+        "output": "logits[f32,K,B] (1-tuple)" if fast else "logits[f32,B,K] (1-tuple)",
+        "buckets": [],
+    }
+    for bucket in BUCKETS:
+        args = bucket_args_fast(bucket) if fast else bucket_args(bucket)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{bucket.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["buckets"].append(
+            {
+                "file": fname,
+                "batch": bucket.batch,
+                "features": bucket.features,
+                "rows": bucket.rows,
+                "classes": bucket.classes,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                "hlo_bytes": len(text),
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(manifest['buckets'])} buckets)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--mode",
+        default="fast_u8",
+        choices=["fast_u8", "direct", "macro_cell"],
+        help="CAM match formulation baked into the artifacts (fast_u8 = "
+        "perf-optimized u8/transposed layout; direct/macro_cell = "
+        "batch-major i32 hardware-mode kernels)",
+    )
+    args = ap.parse_args()
+    build(args.out, args.mode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,234 @@
+"""L1 Pallas kernel: fused analog-CAM match + leaf accumulation.
+
+The X-TIME hot spot — "search every stored root-to-leaf window against the
+query, then gather + class-reduce the matched leaves" — maps onto the TPU
+as one fused kernel (DESIGN.md §Hardware-Adaptation):
+
+* the massively parallel match-line comparison becomes a **vectorized
+  interval compare** over a `[rows × features]` tile resident in VMEM
+  (the VMEM tile plays the role of the aCAM array; the HBM→VMEM BlockSpec
+  schedule plays the role of the stacked/queued array organization);
+* the MMR + SRAM gather + in-core ACC + in-network reduction collapse
+  into a **match-matrix × leaf-table matmul** targeting the MXU — the
+  match matrix is 0/1-valued so low-precision accumulation is exact.
+
+Two match modes are provided:
+
+* ``direct``     — the ideal 8-bit comparison ``lo <= q < hi``;
+* ``macro_cell`` — the paper's two-cycle MSB/LSB evaluation (Eq. 3),
+  bit-identical to ``direct`` for 8-bit inputs (proven in tests), kept as
+  a faithful functional model of the increased-precision macro-cell.
+
+VMEM budget (documented for the real-TPU estimate in DESIGN.md §Perf):
+with the default tiles ``TB=64, TN=256`` at F=130, K=8 the working set is
+  q 64×130×4B = 33 KB, lo/hi 2×256×130×4B = 266 KB, leaf 256×8×4B = 8 KB,
+  match 64×256×4B = 64 KB, out 64×8×4B = 2 KB  →  ≈ 0.4 MB ≪ 16 MB VMEM,
+leaving room for double buffering of the N-dimension stream.
+
+Kernels are compiled with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SUB_LEVELS = 16
+
+
+def _match_tile(q, lo, hi, mode: str):
+    """Match a query tile ``[TB, F]`` against a bounds tile ``[TN, F]``.
+
+    Returns float32 ``[TB, TN]`` (0.0 / 1.0) ready for the MXU matmul.
+    """
+    qb = q[:, None, :]  # [TB, 1, F]
+    if mode == "direct":
+        cell = (qb >= lo[None]) & (qb < hi[None])
+    elif mode == "macro_cell":
+        qm, ql = qb // SUB_LEVELS, qb % SUB_LEVELS
+        tlm, tll = lo[None] // SUB_LEVELS, lo[None] % SUB_LEVELS
+        thm, thl = hi[None] // SUB_LEVELS, hi[None] % SUB_LEVELS
+        # Cycle 1: the OR brackets of Eq. (3); cycle 2: the MSB-only terms.
+        cycle1 = ((qm >= tlm + 1) | (ql >= tll)) & ((qm < thm) | (ql < thl))
+        cycle2 = (qm >= tlm) & (qm < thm + 1)
+        cell = cycle1 & cycle2
+    else:
+        raise ValueError(f"unknown match mode {mode!r}")
+    return jnp.all(cell, axis=-1).astype(jnp.float32)
+
+
+def _kernel(q_ref, lo_ref, hi_ref, leaf_ref, out_ref, *, mode: str):
+    """Grid = (B/TB, N/TN); the N dimension accumulates into out_ref."""
+    n_idx = pl.program_id(1)
+    match = _match_tile(q_ref[...], lo_ref[...], hi_ref[...], mode)
+    partial = jnp.dot(match, leaf_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(n_idx > 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+def _pick_tile(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ preferred (shape-safe tiling)."""
+    t = min(preferred, dim)
+    while dim % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "tile_b", "tile_n"))
+def cam_infer(
+    q: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    leaf: jnp.ndarray,
+    *,
+    mode: str = "direct",
+    tile_b: int = 64,
+    tile_n: int = 256,
+) -> jnp.ndarray:
+    """Fused CAM inference: ``[B,K] = onehot_match(q; lo, hi) @ leaf``.
+
+    Args:
+      q:    ``[B, F]`` int32 query bins (0..255).
+      lo:   ``[N, F]`` int32 inclusive lower bounds.
+      hi:   ``[N, F]`` int32 exclusive upper bounds (≤ 256; padding rows
+            use ``lo=256, hi=0`` so they never match).
+      leaf: ``[N, K]`` float32 leaf logits in their class column.
+      mode: ``direct`` or ``macro_cell`` (Eq. 3 two-cycle evaluation).
+
+    Returns:
+      ``[B, K]`` float32 logits (base score added downstream by the CP).
+    """
+    b, f = q.shape
+    n, f2 = lo.shape
+    assert f == f2 and hi.shape == lo.shape, "bounds shape mismatch"
+    assert leaf.shape[0] == n, "leaf table row mismatch"
+    k = leaf.shape[1]
+
+    tb = _pick_tile(b, tile_b)
+    tn = _pick_tile(n, tile_n)
+    grid = (b // tb, n // tn)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, f), lambda ib, in_: (ib, 0)),
+            pl.BlockSpec((tn, f), lambda ib, in_: (in_, 0)),
+            pl.BlockSpec((tn, f), lambda ib, in_: (in_, 0)),
+            pl.BlockSpec((tn, k), lambda ib, in_: (in_, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, k), lambda ib, in_: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, lo, hi, leaf)
+
+
+def _kernel_fast(qt_ref, lo_ref, hi_ref, leaf_ref, out_ref):
+    """Transposed u8 kernel — the production artifact path.
+
+    Perf-pass result (EXPERIMENTS.md §Perf): int32 batch-major tiles run
+    memory-bound on re-streaming the bounds table per query row. Packing
+    bounds/queries to u8 (4× less traffic; `hi` stored *inclusive* so 256
+    fits in a byte) and transposing so the **batch** dimension is
+    innermost (each bounds cache line is reused across all queries in one
+    vector op) gives 107 ms → 25.7 ms on the B=64, N=16384, F=130 bucket.
+    On a real TPU the same layout maps naturally: batch along lanes,
+    bounds rows along sublanes, leaf matmul on the MXU.
+    """
+    n_idx = pl.program_id(0)
+    qt = qt_ref[...]  # [F, B] u8
+    lo = lo_ref[...]  # [TN, F] u8
+    hi = hi_ref[...]  # [TN, F] u8, inclusive upper bound
+    cell = (qt[None] >= lo[:, :, None]) & (qt[None] <= hi[:, :, None])  # [TN,F,B]
+    match = jnp.all(cell, axis=1).astype(jnp.float32)  # [TN, B]
+    partial = jnp.dot(leaf_ref[...].T, match, preferred_element_type=jnp.float32)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(n_idx > 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def cam_infer_fast(
+    qt: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi_inc: jnp.ndarray,
+    leaf: jnp.ndarray,
+    *,
+    tile_n: int = 2048,
+) -> jnp.ndarray:
+    """Optimized fused inference (see `_kernel_fast`).
+
+    Args:
+      qt:     ``[F, B]`` uint8 transposed query bins.
+      lo:     ``[N, F]`` uint8 inclusive lower bounds.
+      hi_inc: ``[N, F]`` uint8 INCLUSIVE upper bounds (= ``hi - 1``;
+              never-match padding rows use ``lo=255, hi_inc=0``).
+      leaf:   ``[N, K]`` float32 leaf logits.
+
+    Returns:
+      ``[K, B]`` float32 logits (transposed, matching the kernel layout).
+    """
+    f, b = qt.shape
+    n, f2 = lo.shape
+    assert f == f2 and hi_inc.shape == lo.shape and leaf.shape[0] == n
+    k = leaf.shape[1]
+    tn = _pick_tile(n, tile_n)
+    return pl.pallas_call(
+        _kernel_fast,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((f, b), lambda i: (0, 0)),
+            pl.BlockSpec((tn, f), lambda i: (i, 0)),
+            pl.BlockSpec((tn, f), lambda i: (i, 0)),
+            pl.BlockSpec((tn, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, b), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, b), jnp.float32),
+        interpret=True,
+    )(qt, lo, hi_inc, leaf)
+
+
+def cam_match(
+    q: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, *, mode: str = "direct"
+) -> jnp.ndarray:
+    """Match matrix only (debug/visibility path): ``[B, N]`` float32 0/1.
+
+    Implemented via the fused kernel with an identity-per-row leaf table
+    would be O(N²); instead this thin Pallas kernel materializes the tile
+    match directly.
+    """
+    b, f = q.shape
+    n, _ = lo.shape
+    tb = _pick_tile(b, 64)
+    tn = _pick_tile(n, 256)
+
+    def kernel(q_ref, lo_ref, hi_ref, out_ref):
+        out_ref[...] = _match_tile(q_ref[...], lo_ref[...], hi_ref[...], mode)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tb, n // tn),
+        in_specs=[
+            pl.BlockSpec((tb, f), lambda ib, in_: (ib, 0)),
+            pl.BlockSpec((tn, f), lambda ib, in_: (in_, 0)),
+            pl.BlockSpec((tn, f), lambda ib, in_: (in_, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tn), lambda ib, in_: (ib, in_)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(q, lo, hi)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the CAM match/accumulate kernels.
+
+This is the L1 correctness reference: the Pallas kernels in
+``cam_match.py`` must agree with these functions exactly (the match is an
+integer/boolean computation, and the leaf accumulation is a sum of exact
+0/1-weighted f32 values, so equality is bit-level up to f32 summation
+order; tests use exact comparison on the match matrix and tight allclose
+on the logits).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SUB_LEVELS = 16  # 4-bit memristor levels (M = 4)
+
+
+def cam_match_ref(q: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """Ideal interval match.
+
+    Args:
+      q:  ``[B, F]`` integer query bins.
+      lo: ``[N, F]`` inclusive lower bounds.
+      hi: ``[N, F]`` exclusive upper bounds.
+
+    Returns:
+      ``[B, N]`` boolean: row n matches query b iff
+      ``all_f(lo[n,f] <= q[b,f] < hi[n,f])``.
+    """
+    qb = q[:, None, :]  # [B, 1, F]
+    ge = qb >= lo[None, :, :]
+    lt = qb < hi[None, :, :]
+    return jnp.all(ge & lt, axis=-1)
+
+
+def cam_match_macro_ref(q: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """Two-cycle 8-bit-on-4-bit macro-cell match — Eq. (3) of the paper.
+
+    Decomposes queries and bounds into 4-bit MSB/LSB halves and evaluates
+
+      [(q_MSB >= T_LMSB + 1) | (q_LSB >= T_LLSB)] & (q_MSB >= T_LMSB)
+      & [(q_MSB < T_HMSB) | (q_LSB < T_HLSB)] & (q_MSB < T_HMSB + 1)
+
+    per cell, ANDing along features. Provably equal to ``cam_match_ref``
+    for 8-bit inputs; kept separate so the hardware formulation is
+    independently testable (Rust mirrors it in ``cam/cell.rs``).
+    """
+    qm, ql = q // SUB_LEVELS, q % SUB_LEVELS
+    tlm, tll = lo // SUB_LEVELS, lo % SUB_LEVELS
+    thm, thl = hi // SUB_LEVELS, hi % SUB_LEVELS
+
+    qm_b, ql_b = qm[:, None, :], ql[:, None, :]
+    c1_lower = (qm_b >= tlm[None] + 1) | (ql_b >= tll[None])
+    c2_lower = qm_b >= tlm[None]
+    c1_upper = (qm_b < thm[None]) | (ql_b < thl[None])
+    c2_upper = qm_b < thm[None] + 1
+    cell = c1_lower & c2_lower & c1_upper & c2_upper
+    return jnp.all(cell, axis=-1)
+
+
+def cam_infer_ref(
+    q: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, leaf: jnp.ndarray
+) -> jnp.ndarray:
+    """Full ensemble inference oracle.
+
+    The CAM match (one-hot per tree) followed by the leaf gather and the
+    class-wise in-network reduction is exactly a matmul of the 0/1 match
+    matrix with the per-class leaf table (DESIGN.md §Hardware-Adaptation).
+
+    Args:
+      q:    ``[B, F]`` query bins.
+      lo:   ``[N, F]`` lower bounds (N = total CAM rows over all cores).
+      hi:   ``[N, F]`` upper bounds.
+      leaf: ``[N, K]`` leaf logits scattered into their class column.
+
+    Returns:
+      ``[B, K]`` accumulated logits (before base-score offset, which the
+      Rust co-processor adds).
+    """
+    match = cam_match_ref(q, lo, hi)
+    return jnp.dot(match.astype(jnp.float32), leaf)

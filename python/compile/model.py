@@ -1,0 +1,141 @@
+"""L2 JAX model: the X-TIME ensemble-inference compute graph.
+
+The chip-level computation for one batch is:
+
+  bins -> per-row CAM match -> leaf gather -> class-wise reduce -> logits
+
+which the L1 kernel fuses into a single match+matmul. This module wraps
+it into the shape-bucketed functions that get AOT-lowered (``aot.py``) and
+defines the padding conventions shared with the Rust runtime
+(``rust/src/runtime/``):
+
+* feature padding: extra columns get ``lo=0, hi=256`` (don't care) and the
+  query pads with zeros;
+* row padding: ``lo=256, hi=0`` windows never match; their leaf row is 0;
+* class padding: unused class columns carry zero leaves.
+
+The Rust side owns quantization (the DAC) and the base-score/threshold/
+argmax decision (the CP); this graph is exactly the in-fabric part.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.cam_match import cam_infer, cam_infer_fast
+
+# Never-matching padding row bounds (lo > any query, hi = 0).
+PAD_LO = 256
+PAD_HI = 0
+# Don't-care bounds for padded feature columns.
+DC_LO = 0
+DC_HI = 256
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """A monomorphic artifact shape: batch × features × rows × classes."""
+
+    batch: int
+    features: int
+    rows: int
+    classes: int
+
+    @property
+    def name(self) -> str:
+        return f"cam_b{self.batch}_f{self.features}_n{self.rows}_k{self.classes}"
+
+
+#: The artifact set built by ``make artifacts``. Chosen to cover the
+#: Table II model range after padding: F ≤ 130 (gas), medium/large row
+#: counts, single-sample (latency) and batched (throughput) entry points.
+BUCKETS = [
+    Bucket(batch=1, features=32, rows=2048, classes=8),
+    Bucket(batch=64, features=32, rows=2048, classes=8),
+    Bucket(batch=1, features=130, rows=2048, classes=8),
+    Bucket(batch=64, features=130, rows=2048, classes=8),
+    Bucket(batch=64, features=32, rows=8192, classes=8),
+    Bucket(batch=64, features=130, rows=8192, classes=8),
+    Bucket(batch=64, features=32, rows=16384, classes=8),
+    Bucket(batch=64, features=130, rows=16384, classes=8),
+    # Quickstart-size bucket (tiny, fast to compile and run everywhere).
+    Bucket(batch=8, features=16, rows=256, classes=8),
+]
+
+
+def xtime_infer(q, lo, hi, leaf, *, mode: str = "direct"):
+    """The L2 graph: bins + programmed bounds + leaf table → logits.
+
+    All shape/padding handling happens at compile (bucket) time; this
+    function is pure compute so XLA sees one fused pipeline.
+    """
+    return cam_infer(q, lo, hi, leaf, mode=mode)
+
+
+def bucket_fn(mode: str = "direct"):
+    """The jittable entry point lowered per bucket."""
+
+    def fn(q, lo, hi, leaf):
+        return (xtime_infer(q, lo, hi, leaf, mode=mode),)
+
+    return fn
+
+
+def bucket_args(bucket: Bucket):
+    """abstract input signature for lowering a bucket."""
+    return (
+        jax.ShapeDtypeStruct((bucket.batch, bucket.features), jnp.int32),
+        jax.ShapeDtypeStruct((bucket.rows, bucket.features), jnp.int32),
+        jax.ShapeDtypeStruct((bucket.rows, bucket.features), jnp.int32),
+        jax.ShapeDtypeStruct((bucket.rows, bucket.classes), jnp.float32),
+    )
+
+
+def bucket_fn_fast():
+    """Optimized artifact entry point (perf pass, EXPERIMENTS.md §Perf):
+    u8-packed bounds, transposed query/logit layout. Inputs:
+    ``qt[u8, F, B], lo[u8, N, F], hi_inc[u8, N, F], leaf[f32, N, K]`` →
+    ``logits[f32, K, B]`` where ``hi_inc`` is the INCLUSIVE upper bound."""
+
+    def fn(qt, lo, hi_inc, leaf):
+        return (cam_infer_fast(qt, lo, hi_inc, leaf),)
+
+    return fn
+
+
+def bucket_args_fast(bucket: Bucket):
+    return (
+        jax.ShapeDtypeStruct((bucket.features, bucket.batch), jnp.uint8),
+        jax.ShapeDtypeStruct((bucket.rows, bucket.features), jnp.uint8),
+        jax.ShapeDtypeStruct((bucket.rows, bucket.features), jnp.uint8),
+        jax.ShapeDtypeStruct((bucket.rows, bucket.classes), jnp.float32),
+    )
+
+
+def pad_program(lo, hi, leaf, bucket: Bucket):
+    """Pad concrete program tensors into a bucket's shapes (test helper;
+    the Rust runtime reimplements this in ``runtime/buckets.rs``)."""
+    n, f = lo.shape
+    k = leaf.shape[1]
+    assert n <= bucket.rows and f <= bucket.features and k <= bucket.classes
+    plo = jnp.full((bucket.rows, bucket.features), DC_LO, jnp.int32)
+    phi = jnp.full((bucket.rows, bucket.features), DC_HI, jnp.int32)
+    # Padding rows must never match.
+    plo = plo.at[n:, :].set(PAD_LO)
+    phi = phi.at[n:, :].set(PAD_HI)
+    plo = plo.at[:n, :f].set(lo)
+    phi = phi.at[:n, :f].set(hi)
+    pleaf = jnp.zeros((bucket.rows, bucket.classes), jnp.float32)
+    pleaf = pleaf.at[:n, :k].set(leaf)
+    return plo, phi, pleaf
+
+
+def pad_query(q, bucket: Bucket):
+    """Pad a query batch ``[b, f]`` into bucket shape (zeros everywhere)."""
+    b, f = q.shape
+    assert b <= bucket.batch and f <= bucket.features
+    pq = jnp.zeros((bucket.batch, bucket.features), jnp.int32)
+    return pq.at[:b, :f].set(q)

@@ -1,0 +1,9 @@
+"""Shared pytest config: hypothesis profile for the offline CI image
+(interpret-mode Pallas calls are slow; disable deadlines, derandomize)."""
+
+import hypothesis
+
+hypothesis.settings.register_profile(
+    "offline", deadline=None, max_examples=30, derandomize=True
+)
+hypothesis.settings.load_profile("offline")

@@ -1,0 +1,92 @@
+"""Perf-pass kernel (`cam_infer_fast`, u8/transposed layout) must agree
+with the oracle and the hardware-mode kernel exactly."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from compile.kernels.cam_match import cam_infer, cam_infer_fast
+from compile.kernels.ref import cam_infer_ref
+
+
+def to_fast(q, lo, hi):
+    """Convert exclusive-i32 inputs to the fast kernel's u8 layout."""
+    qt = jnp.asarray(np.asarray(q).T, jnp.uint8)
+    lo8 = jnp.asarray(np.asarray(lo), jnp.uint8)
+    # hi is exclusive in 0..=256; inclusive u8 encoding: hi-1 (clamped so
+    # never-match rows hi=0 stay below lo=255).
+    hi8 = jnp.asarray(np.clip(np.asarray(hi) - 1, 0, 255), jnp.uint8)
+    return qt, lo8, hi8
+
+
+def random_case(rng, b, n, f, k):
+    q = rng.integers(0, 256, size=(b, f), dtype=np.int32)
+    lo = rng.integers(0, 200, size=(n, f)).astype(np.int32)
+    hi = np.minimum(lo + rng.integers(1, 80, size=(n, f)), 256).astype(np.int32)
+    dc = rng.random((n, f)) < 0.2
+    lo[dc], hi[dc] = 0, 256
+    nm = rng.random(n) < 0.05
+    lo[nm, :], hi[nm, :] = 256, 0
+    leaf = rng.standard_normal((n, k)).astype(np.float32)
+    leaf[nm, :] = 0.0
+    return jnp.asarray(q), jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(leaf)
+
+
+@given(
+    b=st.integers(1, 8),
+    n=st.integers(1, 64),
+    f=st.integers(1, 16),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fast_kernel_matches_oracle(b, n, f, k, seed):
+    rng = np.random.default_rng(seed)
+    q, lo, hi, leaf = random_case(rng, b, n, f, k)
+    qt, lo8, hi8 = to_fast(q, lo, hi)
+    got = np.asarray(cam_infer_fast(qt, lo8, hi8, leaf)).T  # [K,B] → [B,K]
+    want = np.asarray(cam_infer_ref(q, lo, hi, leaf))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 48),
+    f=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fast_equals_hardware_mode_kernel(b, n, f, seed):
+    rng = np.random.default_rng(seed)
+    q, lo, hi, leaf = random_case(rng, b, n, f, 4)
+    qt, lo8, hi8 = to_fast(q, lo, hi)
+    fast = np.asarray(cam_infer_fast(qt, lo8, hi8, leaf)).T
+    hw = np.asarray(cam_infer(q, lo, hi, leaf, mode="macro_cell"))
+    np.testing.assert_allclose(fast, hw, rtol=1e-6, atol=1e-6)
+
+
+def test_fast_padding_rows_never_match():
+    qt = jnp.zeros((3, 2), jnp.uint8)
+    lo = jnp.full((8, 3), 255, jnp.uint8)
+    hi = jnp.zeros((8, 3), jnp.uint8)
+    leaf = jnp.ones((8, 2), jnp.float32)
+    out = np.asarray(cam_infer_fast(qt, lo, hi, leaf))
+    np.testing.assert_array_equal(out, 0.0)
+
+
+def test_fast_inclusive_boundary():
+    # Window [10, 20) exclusive == [10, 19] inclusive in u8 encoding.
+    qt = jnp.asarray([[9, 10, 19, 20]], jnp.uint8).reshape(1, 4)
+    lo = jnp.asarray([[10]], jnp.uint8)
+    hi = jnp.asarray([[19]], jnp.uint8)
+    leaf = jnp.asarray([[1.0]], jnp.float32)
+    out = np.asarray(cam_infer_fast(qt, lo, hi, leaf))[0]
+    np.testing.assert_array_equal(out, [0.0, 1.0, 1.0, 0.0])
+
+
+def test_fast_tile_invariance():
+    rng = np.random.default_rng(3)
+    q, lo, hi, leaf = random_case(rng, 8, 96, 11, 5)
+    qt, lo8, hi8 = to_fast(q, lo, hi)
+    a = np.asarray(cam_infer_fast(qt, lo8, hi8, leaf, tile_n=8))
+    b = np.asarray(cam_infer_fast(qt, lo8, hi8, leaf, tile_n=96))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

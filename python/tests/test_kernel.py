@@ -1,0 +1,164 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; the match matrix must be *exactly*
+equal (it is a boolean computation) and logits allclose at f32 tolerance.
+"""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from compile.kernels.cam_match import cam_infer, cam_match
+from compile.kernels.ref import cam_infer_ref, cam_match_macro_ref, cam_match_ref
+
+
+def random_case(rng, b, n, f, k, dont_care=0.2, never=0.05):
+    """Random bounds with don't-care cells, never-match rows, real windows."""
+    q = rng.integers(0, 256, size=(b, f), dtype=np.int32)
+    lo = rng.integers(0, 200, size=(n, f)).astype(np.int32)
+    width = rng.integers(1, 80, size=(n, f)).astype(np.int32)
+    hi = np.minimum(lo + width, 256).astype(np.int32)
+    dc = rng.random((n, f)) < dont_care
+    lo[dc], hi[dc] = 0, 256
+    nm = rng.random(n) < never
+    lo[nm, :], hi[nm, :] = 256, 0
+    leaf = rng.standard_normal((n, k)).astype(np.float32)
+    leaf[nm, :] = 0.0
+    return jnp.asarray(q), jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(leaf)
+
+
+@given(
+    b=st.integers(1, 9),
+    n=st.integers(1, 70),
+    f=st.integers(1, 20),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_kernel_matches_oracle(b, n, f, k, seed):
+    rng = np.random.default_rng(seed)
+    q, lo, hi, leaf = random_case(rng, b, n, f, k)
+    got = cam_infer(q, lo, hi, leaf, mode="direct")
+    want = cam_infer_ref(q, lo, hi, leaf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@given(
+    b=st.integers(1, 6),
+    n=st.integers(1, 40),
+    f=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_match_kernel_exact(b, n, f, seed):
+    rng = np.random.default_rng(seed)
+    q, lo, hi, _ = random_case(rng, b, n, f, 1)
+    got = np.asarray(cam_match(q, lo, hi, mode="direct"))
+    want = np.asarray(cam_match_ref(q, lo, hi)).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    b=st.integers(1, 6),
+    n=st.integers(1, 40),
+    f=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_macro_cell_mode_bit_identical(b, n, f, seed):
+    """Eq. (3) two-cycle evaluation == ideal 8-bit comparison (Table I)."""
+    rng = np.random.default_rng(seed)
+    q, lo, hi, _ = random_case(rng, b, n, f, 1)
+    macro_kernel = np.asarray(cam_match(q, lo, hi, mode="macro_cell"))
+    macro_ref = np.asarray(cam_match_macro_ref(q, lo, hi)).astype(np.float32)
+    ideal = np.asarray(cam_match_ref(q, lo, hi)).astype(np.float32)
+    np.testing.assert_array_equal(macro_kernel, macro_ref)
+    np.testing.assert_array_equal(macro_kernel, ideal)
+
+
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 40),
+    f=st.integers(1, 10),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_macro_cell_fused_matches_oracle(b, n, f, k, seed):
+    rng = np.random.default_rng(seed)
+    q, lo, hi, leaf = random_case(rng, b, n, f, k)
+    got = cam_infer(q, lo, hi, leaf, mode="macro_cell")
+    want = cam_infer_ref(q, lo, hi, leaf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_dont_care_row_matches_everything():
+    q = jnp.asarray([[0, 255, 128]], dtype=jnp.int32)
+    lo = jnp.zeros((1, 3), jnp.int32)
+    hi = jnp.full((1, 3), 256, jnp.int32)
+    assert np.asarray(cam_match(q, lo, hi))[0, 0] == 1.0
+
+
+def test_padding_row_never_matches():
+    q = jnp.asarray([[0], [255]], dtype=jnp.int32)
+    lo = jnp.full((4, 1), 256, jnp.int32)
+    hi = jnp.zeros((4, 1), jnp.int32)
+    assert np.asarray(cam_match(q, lo, hi)).sum() == 0.0
+
+
+def test_boundary_semantics():
+    """lo inclusive, hi exclusive — the CAM window convention."""
+    q = jnp.asarray([[9], [10], [19], [20]], dtype=jnp.int32)
+    lo = jnp.asarray([[10]], dtype=jnp.int32)
+    hi = jnp.asarray([[20]], dtype=jnp.int32)
+    m = np.asarray(cam_match(q, lo, hi))[:, 0]
+    np.testing.assert_array_equal(m, [0.0, 1.0, 1.0, 0.0])
+
+
+@pytest.mark.parametrize("tb,tn", [(1, 1), (3, 7), (64, 256), (128, 512)])
+def test_tile_shapes_do_not_change_results(tb, tn):
+    rng = np.random.default_rng(7)
+    q, lo, hi, leaf = random_case(rng, 8, 96, 11, 5)
+    want = cam_infer_ref(q, lo, hi, leaf)
+    got = cam_infer(q, lo, hi, leaf, tile_b=tb, tile_n=tn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_one_match_per_tree_yields_leaf_sum():
+    """A disjoint partition of the query space (one tree) accumulates
+    exactly the matched leaf — the §II-D mapping semantics."""
+    # Two 'trees' of two rows each, partitioning q in [0,128) / [128,256).
+    lo = jnp.asarray([[0], [128], [0], [64]], dtype=jnp.int32)
+    hi = jnp.asarray([[128], [256], [64], [256]], dtype=jnp.int32)
+    leaf = jnp.asarray([[1.0], [2.0], [10.0], [20.0]], dtype=jnp.float32)
+    q = jnp.asarray([[30], [200]], dtype=jnp.int32)
+    out = np.asarray(cam_infer(q, lo, hi, leaf))
+    # q=30: rows 0 (+1) and 2 (+10); q=200: rows 1 (+2) and 3 (+20).
+    np.testing.assert_allclose(out[:, 0], [11.0, 22.0])
+
+
+def test_jit_cache_stable_across_calls():
+    rng = np.random.default_rng(3)
+    q, lo, hi, leaf = random_case(rng, 4, 32, 8, 4)
+    a = np.asarray(cam_infer(q, lo, hi, leaf))
+    b = np.asarray(cam_infer(q, lo, hi, leaf))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_leaf_gradients_flow_through_reference():
+    """The match is a hard indicator, so only `leaf` is differentiable —
+    the quantity future co-design training (paper §V-A outlook) would
+    optimize. Gradients are checked on the oracle graph (pallas_call has
+    no registered AD rule; the AOT serving path never differentiates)."""
+    rng = np.random.default_rng(5)
+    q, lo, hi, leaf = random_case(rng, 2, 16, 4, 3)
+
+    def loss(leaf_):
+        return jnp.sum(cam_infer_ref(q, lo, hi, leaf_) ** 2)
+
+    g = jax.grad(loss)(leaf)
+    assert g.shape == leaf.shape
+    assert np.isfinite(np.asarray(g)).all()
+    # Gradient of a matched leaf equals 2·logit; unmatched leaves get 0.
+    match = np.asarray(cam_match_ref(q, lo, hi))
+    unmatched_rows = ~match.any(axis=0)
+    np.testing.assert_array_equal(np.asarray(g)[unmatched_rows], 0.0)

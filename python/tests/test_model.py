@@ -1,0 +1,100 @@
+"""L2 model + AOT pipeline tests: padding semantics, bucket lowering and
+manifest integrity."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import build, to_hlo_text
+from compile.kernels.ref import cam_infer_ref
+from compile.model import (
+    BUCKETS,
+    Bucket,
+    bucket_args,
+    bucket_fn,
+    pad_program,
+    pad_query,
+    xtime_infer,
+)
+
+
+def small_case(rng, b=4, n=20, f=7, k=3):
+    q = rng.integers(0, 256, size=(b, f)).astype(np.int32)
+    lo = rng.integers(0, 200, size=(n, f)).astype(np.int32)
+    hi = np.minimum(lo + rng.integers(1, 60, size=(n, f)), 256).astype(np.int32)
+    leaf = rng.standard_normal((n, k)).astype(np.float32)
+    return jnp.asarray(q), jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(leaf)
+
+
+def test_padding_preserves_logits():
+    """Padding rows/features/classes must not change the result — the
+    contract the Rust runtime relies on when bucketing programs."""
+    rng = np.random.default_rng(11)
+    q, lo, hi, leaf = small_case(rng)
+    bucket = Bucket(batch=8, features=16, rows=256, classes=8)
+    plo, phi, pleaf = pad_program(lo, hi, leaf, bucket)
+    pq = pad_query(q, bucket)
+    padded = np.asarray(xtime_infer(pq, plo, phi, pleaf))
+    want = np.asarray(cam_infer_ref(q, lo, hi, leaf))
+    np.testing.assert_allclose(padded[:4, :3], want, rtol=1e-6, atol=1e-6)
+    # Pad batch rows see only don't-care features on real rows... they may
+    # match real windows at q=0; correctness only requires the *real*
+    # batch rows to be exact, which is asserted above. Padded class
+    # columns must be exactly zero.
+    np.testing.assert_array_equal(padded[:, 3:], 0.0)
+
+
+def test_bucket_lowering_produces_hlo_text():
+    bucket = Bucket(batch=2, features=8, rows=64, classes=4)
+    lowered = jax.jit(bucket_fn("direct")).lower(*bucket_args(bucket))
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[2,4]" in text  # output logits shape
+
+
+def test_build_writes_manifest_and_artifacts():
+    with tempfile.TemporaryDirectory() as d:
+        # Patch BUCKETS to a tiny set for test speed by building only the
+        # quickstart bucket through the public API.
+        import compile.aot as aot
+        import compile.model as model
+
+        orig = model.BUCKETS
+        try:
+            model.BUCKETS = [Bucket(batch=2, features=8, rows=64, classes=4)]
+            # aot.build reads the symbol through its own import.
+            aot.BUCKETS = model.BUCKETS
+            manifest = aot.build(d)
+        finally:
+            model.BUCKETS = orig
+            aot.BUCKETS = orig
+        files = os.listdir(d)
+        assert "manifest.json" in files
+        assert any(f.endswith(".hlo.txt") for f in files)
+        with open(os.path.join(d, "manifest.json")) as f:
+            m = json.load(f)
+        assert m == manifest
+        assert m["format"] == "hlo-text"
+        b = m["buckets"][0]
+        assert (b["batch"], b["features"], b["rows"], b["classes"]) == (2, 8, 64, 4)
+        text = open(os.path.join(d, b["file"])).read()
+        assert len(text) == b["hlo_bytes"]
+
+
+def test_default_buckets_cover_table2_models():
+    """Every Table II model shape must fit some bucket after padding:
+    F ≤ 130 always; the serving path needs at least one bucket with
+    batch = 1 (latency) and one with batch ≥ 64 (throughput)."""
+    assert any(b.features >= 130 for b in BUCKETS)
+    assert any(b.batch == 1 for b in BUCKETS)
+    assert any(b.batch >= 64 for b in BUCKETS)
+    assert all(b.classes >= 7 for b in BUCKETS)  # covertype has 7 classes
+
+
+def test_bucket_names_unique():
+    names = [b.name for b in BUCKETS]
+    assert len(set(names)) == len(names)

@@ -1,0 +1,146 @@
+//! Ablations of the design choices DESIGN.md calls out (not paper
+//! figures — supporting evidence for the paper's §III design decisions):
+//!
+//!  A1. **In-network reduction** (§III-D): config-bit accumulation at the
+//!      routers vs shipping every core's logit flit to the CP.
+//!  A2. **Two-cycle macro-cell** (§III-B): 2 cells / 2 cycles vs the
+//!      rejected 3-cell single-cycle OR variant (larger area) vs plain
+//!      4-bit cells (1 cycle, but Fig. 9a accuracy loss).
+//!  A3. **Input batching / replication** (Fig. 7c): chip throughput vs
+//!      replica count.
+//!  A4. **Defect-aware co-design training** (§V-A outlook): bin-jitter
+//!      training vs standard under memristor defects.
+//!
+//! Run: `cargo bench --bench ablations` (XTIME_FAST=1 to smoke-test)
+
+use xtime::bench_support::{bench_split, fast_mode};
+use xtime::cam::DefectSpec;
+use xtime::compiler::{compile, CamEngine, CompileOptions};
+use xtime::sim::{chip_area, simulate, ChipConfig, Workload};
+use xtime::trees::{gbdt, GbdtParams};
+use xtime::util::bench::{rate, Table};
+
+fn main() {
+    let split = bench_split("eye"); // multiclass: reduction matters most
+    let model = gbdt::train(
+        &split.train,
+        &GbdtParams {
+            n_rounds: if fast_mode() { 12 } else { 48 },
+            max_leaves: 64,
+            ..Default::default()
+        },
+        None,
+    );
+    let program = compile(&model, &CompileOptions { replicas: 0, core_rows: 64, ..Default::default() })
+        .unwrap();
+    let n = if fast_mode() { 20_000 } else { 100_000 };
+
+    // ---- A1: in-network reduction --------------------------------------
+    let mut cfg = ChipConfig::default();
+    let with = simulate(&program, &cfg, &Workload::saturating(n), 0.05);
+    cfg.in_network_reduction = false;
+    let without = simulate(&program, &cfg, &Workload::saturating(n), 0.05);
+    let mut t = Table::new(&["router accumulation", "throughput", "bound", "mean latency (ns)"]);
+    t.row(&[
+        "on  (paper)".into(),
+        rate(with.throughput_msps * 1e6, "S"),
+        with.bottleneck.into(),
+        format!("{:.0}", with.latency_ns.mean),
+    ]);
+    t.row(&[
+        "off (all flits to CP)".into(),
+        rate(without.throughput_msps * 1e6, "S"),
+        without.bottleneck.into(),
+        format!("{:.0}", without.latency_ns.mean),
+    ]);
+    t.print("A1 — in-network reduction (eye model, multi-core layout)");
+    println!(
+        "→ {:.1}× throughput from router accumulation\n",
+        with.throughput_msps / without.throughput_msps
+    );
+
+    // ---- A2: macro-cell variants ----------------------------------------
+    let base_cfg = ChipConfig::default();
+    let area8 = chip_area(&base_cfg).total();
+    let mut t = Table::new(&["cell design", "λ_CAM", "rel. area", "8-bit capable"]);
+    t.row(&["2 cells / 2 cycles (paper)".into(), "4".into(), "1.00×".into(), "yes".into()]);
+    // The rejected design: 3 cells + complex routing per §III-B ≈ 1.5× the
+    // aCAM area for one fewer search cycle.
+    t.row(&["3 cells / 1 cycle (rejected)".into(), "3".into(), "1.50×".into(), "yes".into()]);
+    t.row(&["plain 4-bit cell".into(), "3".into(), "0.50×".into(), "no (Fig. 9a loss)".into()]);
+    t.print(&format!("A2 — precision cell variants (chip aCAM area baseline {area8:.1} mm²)"));
+    let tput_gain = 4.0 / 3.0;
+    println!(
+        "→ the 1-cycle variant buys ≤{tput_gain:.2}× core throughput for 1.5× aCAM area;\n  \
+         at the chip level the input/output fabric usually binds first, so the\n  \
+         paper's compact 2-cycle cell is the right trade.\n"
+    );
+
+    // ---- A3: replication sweep -------------------------------------------
+    // Use a deliberately core-bound mapping (8 small trees packed into
+    // one core → II = 8 → 125 MS/s per replica) so replication has a
+    // bound to lift: churn's 2-flit input ceiling is 500 MS/s.
+    let churn = bench_split("churn");
+    let packed = gbdt::train(
+        &churn.train,
+        &GbdtParams { n_rounds: 8, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    let mut t = Table::new(&["replicas", "trees/core", "throughput", "bound"]);
+    for replicas in [1usize, 2, 4, 8, 0] {
+        let p = compile(&packed, &CompileOptions { replicas, ..Default::default() }).unwrap();
+        let rep = simulate(&p, &ChipConfig::default(), &Workload::saturating(n), 0.05);
+        t.row(&[
+            if replicas == 0 { format!("{} (fill chip)", p.n_replicas) } else { format!("{replicas}") },
+            format!("{}", p.max_trees_per_core()),
+            rate(rep.throughput_msps * 1e6, "S"),
+            rep.bottleneck.into(),
+        ]);
+    }
+    t.print("A3 — input batching (Fig. 7c replication; churn, 8 trees/core)");
+
+    // ---- A4: defect-aware training ----------------------------------------
+    let split = bench_split("churn");
+    let rounds = if fast_mode() { 16 } else { 48 };
+    let standard = gbdt::train(
+        &split.train,
+        &GbdtParams { n_rounds: rounds, max_leaves: 32, ..Default::default() },
+        None,
+    );
+    let robust = gbdt::train(
+        &split.train,
+        &GbdtParams { n_rounds: rounds, max_leaves: 32, bin_jitter: 0.05, ..Default::default() },
+        None,
+    );
+    let runs = if fast_mode() { 5 } else { 20 };
+    let mut t = Table::new(&["training", "clean acc", "acc @5% defects", "acc @15% defects"]);
+    for (name, m) in [("standard", &standard), ("defect-aware (5% jitter)", &robust)] {
+        let p = compile(m, &CompileOptions::default()).unwrap();
+        let clean = eval(&CamEngine::new(&p), &p, &split.test);
+        let mut at = [0.0f64; 2];
+        for (i, pct) in [0.05, 0.15].into_iter().enumerate() {
+            let mut sum = 0.0;
+            for run in 0..runs {
+                let e = CamEngine::with_defects(&p, DefectSpec::memristor(pct), 900 + run as u64);
+                sum += eval(&e, &p, &split.test);
+            }
+            at[i] = sum / runs as f64;
+        }
+        t.row(&[
+            name.into(),
+            format!("{clean:.4}"),
+            format!("{:.4}", at[0]),
+            format!("{:.4}", at[1]),
+        ]);
+    }
+    t.print("A4 — defect-aware co-design training (churn)");
+}
+
+fn eval(engine: &CamEngine, program: &xtime::compiler::CamProgram, data: &xtime::data::Dataset) -> f64 {
+    let n = 400.min(data.n_rows());
+    let mut hits = 0usize;
+    for i in 0..n {
+        hits += (engine.predict(program, data.row(i)) == data.y[i]) as usize;
+    }
+    hits as f64 / n as f64
+}

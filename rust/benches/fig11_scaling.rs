@@ -1,0 +1,92 @@
+//! Regenerates **Fig. 11**: (a) throughput as a function of N_trees and
+//! tree depth D — X-TIME flat vs GPU ∝ 1/(N_trees·D); (b) throughput as a
+//! function of N_feat — GPU flat vs X-TIME decaying once the feature
+//! broadcast saturates the input port.
+//!
+//! Uses exact-topology synthetic ensembles (training is irrelevant to
+//! architecture throughput).
+//!
+//! Run: `cargo bench --bench fig11_scaling`
+
+use xtime::baselines::{GpuModel, GpuWorkload};
+use xtime::bench_support::{fast_mode, random_ensemble};
+use xtime::compiler::{compile, CompileOptions};
+use xtime::data::Task;
+use xtime::sim::{simulate, ChipConfig, Workload};
+use xtime::util::bench::{rate, Table};
+
+fn xtime_tput(n_trees: usize, depth: usize, n_feat: usize, cfg: &ChipConfig) -> Option<f64> {
+    let model = random_ensemble(n_trees, depth, n_feat, Task::Binary, 77);
+    let program = compile(&model, &CompileOptions { replicas: 0, ..Default::default() }).ok()?;
+    let n = if fast_mode() { 20_000 } else { 100_000 };
+    let rep = simulate(&program, cfg, &Workload::saturating(n), 0.05);
+    Some(rep.throughput_msps * 1e6)
+}
+
+fn main() {
+    let cfg = ChipConfig::default();
+    let gpu = GpuModel::default();
+
+    // ---- (a) N_trees × D sweep ---------------------------------------------
+    let mut table = Table::new(&[
+        "N_trees", "D", "X-TIME", "GPU", "X-TIME/GPU",
+    ]);
+    let tree_counts: &[usize] = if fast_mode() { &[64, 512] } else { &[16, 64, 256, 1024, 4096] };
+    for &d in &[4usize, 6, 8] {
+        for &n_trees in tree_counts {
+            let Some(xt) = xtime_tput(n_trees, d, 32, &cfg) else {
+                table.row(&[
+                    format!("{n_trees}"),
+                    format!("{d}"),
+                    "chip full".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            };
+            let g = gpu.throughput_sps(&GpuWorkload {
+                n_trees,
+                mean_depth: d as f64,
+                max_depth: d as f64,
+                n_features: 32,
+            });
+            table.row(&[
+                format!("{n_trees}"),
+                format!("{d}"),
+                rate(xt, "S"),
+                rate(g, "S"),
+                format!("{:.0}×", xt / g),
+            ]);
+        }
+    }
+    table.print("Fig. 11(a) — throughput vs N_trees and D (N_feat = 32)");
+    println!(
+        "paper shape: X-TIME constant in N_trees and D (until cores run\n\
+         out); GPU ∝ 1/(N_trees · D) → the gap grows with model size.\n"
+    );
+
+    // ---- (b) N_feat sweep -----------------------------------------------------
+    let mut table = Table::new(&["N_feat", "X-TIME", "GPU", "input flits"]);
+    let feats: &[usize] = if fast_mode() { &[8, 64, 130] } else { &[8, 16, 32, 64, 100, 130] };
+    for &f in feats {
+        let xt = xtime_tput(128, 6, f, &cfg).expect("fits");
+        let g = gpu.throughput_sps(&GpuWorkload {
+            n_trees: 128,
+            mean_depth: 6.0,
+            max_depth: 6.0,
+            n_features: f,
+        });
+        table.row(&[
+            format!("{f}"),
+            rate(xt, "S"),
+            rate(g, "S"),
+            format!("{}", cfg.input_flits(f)),
+        ]);
+    }
+    table.print("Fig. 11(b) — throughput vs N_feat (128 trees, D = 6)");
+    println!(
+        "paper shape: GPU flat in N_feat; X-TIME decays ∝ 1/⌈8·N_feat/64⌉\n\
+         once the broadcast of features to all cores binds (the paper's\n\
+         stated pain point)."
+    );
+}

@@ -1,0 +1,126 @@
+//! §Perf hot-path bench: measured wall-clock of the repository's own
+//! serving stack on this machine (not a paper figure — the optimization
+//! target of EXPERIMENTS.md §Perf).
+//!
+//! Reports per-batch and per-sample times for:
+//!   * the XLA AOT artifact (PJRT CPU, `fast_u8` layout),
+//!   * the functional CAM engine,
+//!   * the exact CPU tree-walk,
+//! plus the end-to-end dynamic-batching server throughput.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::path::Path;
+use xtime::bench_support::cached_model;
+use xtime::compiler::{compile, CamEngine, CompileOptions};
+use xtime::coordinator::{BatchPolicy, Server, XlaBackend};
+use xtime::data::by_name;
+use xtime::runtime::XlaCamEngine;
+use xtime::util::bench::{rate, t, time_fn, Table};
+
+fn main() {
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    // 64 trees × ~130 leaves ≈ 8k CAM rows → fits the n16384 bucket.
+    let model = cached_model("churn", 8, 1, Some(64));
+    let program = compile(&model, &CompileOptions::default()).unwrap();
+    let data = by_name("churn").unwrap().generate_n(4096);
+    let bins: Vec<Vec<u16>> =
+        (0..4096).map(|i| program.quantizer.bin_row(data.row(i))).collect();
+
+    println!(
+        "hot-path bench: churn model, {} trees, {} CAM rows, {} features",
+        model.n_trees(),
+        program.total_rows(),
+        program.n_features
+    );
+
+    let mut table = Table::new(&["path", "batch", "per batch", "per sample", "rate"]);
+
+    // Exact CPU tree-walk (single thread).
+    let s = time_fn(3, 20, || {
+        for b in bins.iter().take(256) {
+            std::hint::black_box(model.logits_bins(b));
+        }
+    });
+    table.row(&[
+        "cpu tree-walk".into(),
+        "1".into(),
+        t(s.median / 256.0),
+        t(s.median / 256.0),
+        rate(256.0 / s.median, "S"),
+    ]);
+
+    // Functional CAM engine.
+    let cam = CamEngine::new(&program);
+    let s = time_fn(1, 5, || {
+        for b in bins.iter().take(64) {
+            std::hint::black_box(cam.infer_bins(b));
+        }
+    });
+    table.row(&[
+        "cam-functional".into(),
+        "1".into(),
+        t(s.median / 64.0),
+        t(s.median / 64.0),
+        rate(64.0 / s.median, "S"),
+    ]);
+
+    // XLA artifact, per device batch.
+    if artifacts.join("manifest.json").exists() {
+        let xla = XlaCamEngine::new(&program, &artifacts, 64).expect("xla engine");
+        let cap = xla.max_batch();
+        let batch: Vec<Vec<u16>> = bins.iter().take(cap).cloned().collect();
+        let s = time_fn(2, 10, || {
+            std::hint::black_box(xla.infer_bins_batch(&batch).unwrap());
+        });
+        table.row(&[
+            format!("xla-aot ({})", xla.bucket().file),
+            format!("{cap}"),
+            t(s.median),
+            t(s.median / cap as f64),
+            rate(cap as f64 / s.median, "S"),
+        ]);
+
+        // Single-sample latency path (batch=1 bucket if available).
+        if let Ok(xla1) = XlaCamEngine::new(&program, &artifacts, 1) {
+            let one = vec![bins[0].clone()];
+            let s = time_fn(2, 10, || {
+                std::hint::black_box(xla1.infer_bins_batch(&one).unwrap());
+            });
+            table.row(&[
+                format!("xla-aot ({})", xla1.bucket().file),
+                "1".into(),
+                t(s.median),
+                t(s.median),
+                rate(1.0 / s.median, "S"),
+            ]);
+        }
+
+        // End-to-end server (submit→reply) under closed-loop load.
+        let server = Server::start(
+            Box::new(XlaBackend {
+                engine: XlaCamEngine::new(&program, &artifacts, 64).unwrap(),
+            }),
+            BatchPolicy::default(),
+            program.n_features,
+        );
+        let n = 4096;
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = (0..n).map(|i| server.submit(bins[i % bins.len()].clone())).collect();
+        for rx in pending {
+            rx.recv().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        table.row(&[
+            "server (xla, dyn-batch)".into(),
+            format!("{:.0}", server.stats().mean_batch),
+            "-".into(),
+            t(wall / n as f64),
+            rate(n as f64 / wall, "req"),
+        ]);
+    } else {
+        println!("(artifacts missing — XLA rows skipped; run `make artifacts`)");
+    }
+
+    table.print("serving hot path on this machine");
+}

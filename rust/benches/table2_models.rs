@@ -1,0 +1,45 @@
+//! Regenerates **Table II** (datasets and models characterization):
+//! per dataset — task, samples, N_feat, N_classes, model family, N_trees,
+//! N_leaves,max — for the trained stand-in models, plus their measured
+//! accuracy (not in the paper's table but recorded for EXPERIMENTS.md).
+//!
+//! Run: `cargo bench --bench table2_models` (XTIME_FAST=1 for a smoke run)
+
+use xtime::bench_support::{bench_split, cached_model, tree_scale};
+use xtime::data::by_name;
+use xtime::trees::{metrics, paper_model};
+use xtime::util::bench::Table;
+
+fn main() {
+    println!("Table II reproduction (tree scale ×{}):", tree_scale());
+    let mut table = Table::new(&[
+        "Dataset", "ID", "Task", "Samples", "N_feat", "N_classes", "Model", "N_trees",
+        "N_leaves,max", "score",
+    ]);
+    for (id, name) in
+        ["churn", "eye", "covertype", "gas", "gesture", "telco", "rossmann"].iter().enumerate()
+    {
+        let spec = by_name(name).unwrap();
+        let mspec = paper_model(name).unwrap();
+        let model = cached_model(name, 8, 1, None);
+        let split = bench_split(name);
+        let score = metrics::score(&model, &split.test);
+        table.row(&[
+            name.to_string(),
+            format!("{}", id + 1),
+            spec.task.name(),
+            format!("{}", spec.paper_samples),
+            format!("{}", spec.n_features),
+            format!("{}", spec.task.n_classes()),
+            mspec.kind.name().to_string(),
+            format!("{}", model.n_trees()),
+            format!("{}", model.max_leaves()),
+            format!("{score:.3}"),
+        ]);
+    }
+    table.print("Table II — datasets and models");
+    println!(
+        "\npaper targets: N_trees = 404/2352/1351/1356/1895/159/2017, \
+         N_leaves,max = 256/256/231/217/256/4/256"
+    );
+}

@@ -1,0 +1,126 @@
+//! Booster ASIC baseline (He et al. [26]; paper §V-B comparison).
+//!
+//! Booster is a purely digital accelerator whose cores store tree nodes in
+//! LUTs and *walk* the tree: `D` sequential node fetches per sample, each
+//! taking ~4 cycles (fetch node, compare, select child, address). The
+//! paper's comparison (Fig. 10) keeps X-TIME's chip fabric (same NoC, same
+//! core count) and swaps the core: time complexity per sample is O(D)
+//! against the CAM's O(1), and the pipeline can only accept a new sample
+//! every `4·D` cycles (§V-B: "throughput limited by the tree depth to
+//! 1/4D"), with load imbalance synchronizing on the deepest tree.
+
+use crate::sim::ChipConfig;
+
+/// Booster timing model sharing the X-TIME chip fabric.
+#[derive(Clone, Copy, Debug)]
+pub struct BoosterModel {
+    /// Cycles per tree-node visit (paper: 4).
+    pub cycles_per_node: u64,
+}
+
+impl Default for BoosterModel {
+    fn default() -> Self {
+        BoosterModel { cycles_per_node: 4 }
+    }
+}
+
+/// Workload topology for the Booster model.
+#[derive(Clone, Copy, Debug)]
+pub struct BoosterWorkload {
+    pub max_depth: usize,
+    pub n_features: usize,
+    pub n_outputs: usize,
+    /// Batch replicas mapped on the chip (same replication as X-TIME).
+    pub n_replicas: usize,
+}
+
+impl BoosterModel {
+    /// Core initiation interval: a new sample enters every `4·D_max`
+    /// cycles (the deepest tree gates the whole core — load imbalance).
+    pub fn core_interval(&self, w: &BoosterWorkload) -> u64 {
+        self.cycles_per_node * w.max_depth as u64
+    }
+
+    /// Single-sample latency in cycles on the shared fabric: broadcast +
+    /// tree walk + reduction + CP (same NoC terms as X-TIME).
+    pub fn latency_cycles(&self, w: &BoosterWorkload, cfg: &ChipConfig) -> u64 {
+        let levels = cfg.noc_levels();
+        let walk = self.cycles_per_node * w.max_depth as u64;
+        // +1 leaf fetch, +1 accumulate.
+        cfg.input_flits(w.n_features)
+            + levels * cfg.hop_cycles
+            + walk
+            + 2
+            + levels * cfg.hop_cycles
+            + w.n_outputs as u64
+            + cfg.cp_cycles.max(w.n_outputs as u64)
+    }
+
+    pub fn latency_s(&self, w: &BoosterWorkload, cfg: &ChipConfig) -> f64 {
+        self.latency_cycles(w, cfg) as f64 * cfg.cycle_ns() * 1e-9
+    }
+
+    /// Saturated chip throughput, samples/s: min of the core bound
+    /// (n_replicas / II), the input broadcast bound and the output bound —
+    /// identical fabric limits to X-TIME.
+    pub fn throughput_sps(&self, w: &BoosterWorkload, cfg: &ChipConfig) -> f64 {
+        let hz = cfg.clock_ghz * 1e9;
+        let core = w.n_replicas as f64 / self.core_interval(w) as f64;
+        let input = 1.0 / cfg.input_flits(w.n_features) as f64;
+        let output = 1.0 / w.n_outputs as f64;
+        core.min(input).min(output) * hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn o_of_d_walk_dominates_latency() {
+        let cfg = ChipConfig::default();
+        let m = BoosterModel::default();
+        let shallow = BoosterWorkload { max_depth: 2, n_features: 19, n_outputs: 1, n_replicas: 1 };
+        let deep = BoosterWorkload { max_depth: 10, ..shallow };
+        let l_shallow = m.latency_cycles(&shallow, &cfg);
+        let l_deep = m.latency_cycles(&deep, &cfg);
+        assert_eq!(l_deep - l_shallow, 4 * 8, "walk cost is 4 cycles/level");
+    }
+
+    #[test]
+    fn throughput_is_1_over_4d_per_core() {
+        // §V-B: Booster throughput bound is 1/(4·D) samples per clock.
+        let cfg = ChipConfig::default();
+        let m = BoosterModel::default();
+        let w = BoosterWorkload { max_depth: 8, n_features: 8, n_outputs: 1, n_replicas: 1 };
+        let tput = m.throughput_sps(&w, &cfg);
+        assert!((tput - 1e9 / 32.0).abs() < 1.0, "{tput}");
+    }
+
+    #[test]
+    fn rossmann_like_8x_gap_vs_xtime() {
+        // §V-B: "8× reduced speedup compared to X-TIME in the case of the
+        // regression dataset": X-TIME II = 4 vs Booster II = 4·D = 32 at
+        // D = 8, with identical fabric bounds elsewhere.
+        let cfg = ChipConfig::default();
+        let m = BoosterModel::default();
+        let w = BoosterWorkload { max_depth: 8, n_features: 29, n_outputs: 1, n_replicas: 1 };
+        let booster_ii = m.core_interval(&w);
+        let xtime_ii = cfg.core_interval(8, 1);
+        assert_eq!(booster_ii / xtime_ii, 8);
+    }
+
+    #[test]
+    fn replication_helps_until_fabric_bound() {
+        let cfg = ChipConfig::default();
+        let m = BoosterModel::default();
+        let w1 = BoosterWorkload { max_depth: 8, n_features: 130, n_outputs: 1, n_replicas: 1 };
+        let w32 = BoosterWorkload { n_replicas: 32, ..w1 };
+        let t1 = m.throughput_sps(&w1, &cfg);
+        let t32 = m.throughput_sps(&w32, &cfg);
+        assert!(t32 > t1);
+        // 130 features → 17 input flits: fabric caps at 1/17 per clock.
+        let input_bound = 1e9 / 17.0;
+        assert!(t32 <= input_bound * 1.001, "{t32}");
+    }
+}

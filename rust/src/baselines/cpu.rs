@@ -1,0 +1,85 @@
+//! Measured CPU baseline: actual wall-clock timing of the reference
+//! `Ensemble` inference on this machine. Not a paper figure by itself, but
+//! grounds the simulated comparisons with at least one *measured* software
+//! point (and is the "exact" functional reference everything must agree
+//! with).
+
+use crate::data::Dataset;
+use crate::trees::Ensemble;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Measured result of CPU batch inference.
+#[derive(Clone, Debug)]
+pub struct CpuReport {
+    pub n_samples: usize,
+    /// Per-sample latency stats, nanoseconds.
+    pub latency_ns: Summary,
+    /// Sustained throughput, samples/s.
+    pub throughput_sps: f64,
+}
+
+/// Run the model over the first `n` rows of `data` (cycling if needed),
+/// timing per-sample latency and aggregate throughput.
+pub fn measure(model: &Ensemble, data: &Dataset, n: usize) -> CpuReport {
+    assert!(data.n_rows() > 0);
+    // Pre-quantize outside the timed loop? No: binning is part of the
+    // serving cost on CPU just as the DAC is on chip. Keep it inside.
+    let mut lat = Vec::with_capacity(n.min(4096));
+    let t0 = Instant::now();
+    let mut sink = 0f32;
+    for i in 0..n {
+        let row = data.row(i % data.n_rows());
+        let s = Instant::now();
+        sink += model.predict(row);
+        if lat.len() < 4096 {
+            lat.push(s.elapsed().as_nanos() as f64);
+        }
+    }
+    let total = t0.elapsed().as_secs_f64();
+    std::hint::black_box(sink);
+    CpuReport {
+        n_samples: n,
+        latency_ns: Summary::of(&lat),
+        throughput_sps: n as f64 / total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::by_name;
+    use crate::trees::{gbdt, GbdtParams};
+
+    #[test]
+    fn measures_positive_throughput() {
+        let d = by_name("telco").unwrap().generate_n(500);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 4, max_leaves: 4, ..Default::default() },
+            None,
+        );
+        let r = measure(&m, &d, 1000);
+        assert_eq!(r.n_samples, 1000);
+        assert!(r.throughput_sps > 1000.0, "{}", r.throughput_sps);
+        assert!(r.latency_ns.mean > 0.0);
+    }
+
+    #[test]
+    fn bigger_models_are_slower() {
+        let d = by_name("churn").unwrap().generate_n(800);
+        let small = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 2, max_leaves: 4, ..Default::default() },
+            None,
+        );
+        let big = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 64, max_leaves: 64, ..Default::default() },
+            None,
+        );
+        let ts = measure(&small, &d, 3000).throughput_sps;
+        let tb = measure(&big, &d, 3000).throughput_sps;
+        assert!(tb < ts, "big {tb} ≥ small {ts}");
+    }
+}

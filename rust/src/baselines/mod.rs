@@ -1,0 +1,11 @@
+//! Comparison baselines for Fig. 10/11: the analytical V100/FIL GPU model
+//! (substituting the paper's measured GPU, DESIGN.md S8), the Booster ASIC
+//! model [26], and a *measured* CPU reference on this machine.
+
+pub mod booster;
+pub mod cpu;
+pub mod gpu;
+
+pub use booster::{BoosterModel, BoosterWorkload};
+pub use cpu::{measure as cpu_measure, CpuReport};
+pub use gpu::{GpuModel, GpuWorkload};

@@ -1,0 +1,159 @@
+//! Shared helpers for the `rust/benches/` harnesses: a trained-model cache
+//! (benches share Table II models instead of retraining) and synthetic
+//! ensemble generators for the Fig. 11 sweeps.
+
+use crate::data::{by_name, Dataset, FeatureQuantizer, Task};
+use crate::trees::{paper_model, train_paper_model, Ensemble, Node, Tree};
+use crate::util::Rng;
+use std::path::PathBuf;
+
+/// `XTIME_FAST=1` shrinks bench workloads ~8× (CI-friendly smoke runs).
+pub fn fast_mode() -> bool {
+    std::env::var("XTIME_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Tree-count scale for trained-model benches.
+pub fn tree_scale() -> f64 {
+    if fast_mode() {
+        0.125
+    } else {
+        1.0
+    }
+}
+
+fn cache_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target/xtime_bench_cache");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Table II dataset at its catalog generation size.
+pub fn bench_dataset(name: &str) -> Dataset {
+    by_name(name).unwrap_or_else(|| panic!("unknown dataset {name}")).generate()
+}
+
+/// Canonical bench split (80/20, fixed seed). [`cached_model`] trains on
+/// `.train`; benches must evaluate on `.test` of the same split.
+pub fn bench_split(name: &str) -> crate::data::Split {
+    bench_dataset(name).split(0.8, 0.0, 17)
+}
+
+/// Train (or load from cache) a Table II model. `n_bits` / `leaves_mult`
+/// parameterize the Fig. 9a precision regimes; `trees` of `None` uses the
+/// paper topology scaled by [`tree_scale`].
+pub fn cached_model(
+    name: &str,
+    n_bits: u8,
+    leaves_mult: usize,
+    trees: Option<usize>,
+) -> Ensemble {
+    let spec = paper_model(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+    let n_trees = trees.unwrap_or(((spec.n_trees as f64 * tree_scale()) as usize).max(4));
+    let leaves = (spec.n_leaves_max * leaves_mult).min(256 * leaves_mult);
+    let key = format!("{name}_b{n_bits}_l{leaves}_t{n_trees}.json");
+    let path = cache_dir().join(&key);
+    if let Ok(model) = Ensemble::load(&path) {
+        return model;
+    }
+    // Train on the canonical bench split so evaluations on
+    // `bench_split(name).test` are honest held-out scores.
+    let split = bench_split(name);
+    let model = train_paper_model(&split.train, &spec, n_bits, leaves, Some(n_trees));
+    let _ = model.save(&path);
+    model
+}
+
+/// A random balanced ensemble with exact topology (N_trees, depth, F) for
+/// the Fig. 11 architecture sweeps — no training needed: architecture
+/// latency/throughput depend only on topology.
+pub fn random_ensemble(
+    n_trees: usize,
+    depth: usize,
+    n_features: usize,
+    task: Task,
+    seed: u64,
+) -> Ensemble {
+    let n_bins = 256usize;
+    let mut rng = Rng::new(seed);
+    let k = task.n_outputs();
+    let mut trees = Vec::with_capacity(n_trees);
+    let mut tree_class = Vec::with_capacity(n_trees);
+    for t in 0..n_trees {
+        let mut tr = rng.fork(t as u64);
+        trees.push(random_tree(depth, n_features, n_bins, &mut tr));
+        tree_class.push((t % k) as u16);
+    }
+    // Uniform quantizer over [0, 1).
+    let edges: Vec<Vec<f32>> = (0..n_features)
+        .map(|_| (1..n_bins).map(|b| b as f32 / n_bins as f32).collect())
+        .collect();
+    Ensemble {
+        name: format!("synthetic_t{n_trees}_d{depth}_f{n_features}"),
+        task,
+        n_features,
+        trees,
+        tree_class,
+        base_score: vec![0.0; k],
+        quantizer: FeatureQuantizer { n_bits: 8, edges },
+    }
+}
+
+fn random_tree(depth: usize, n_features: usize, n_bins: usize, rng: &mut Rng) -> Tree {
+    // Complete binary tree: internal nodes then leaves, built recursively.
+    let mut tree = Tree::default();
+    build_node(&mut tree, depth, n_features, n_bins, rng);
+    tree
+}
+
+fn build_node(tree: &mut Tree, depth: usize, n_features: usize, n_bins: usize, rng: &mut Rng) -> u32 {
+    let idx = tree.nodes.len() as u32;
+    if depth == 0 {
+        tree.nodes.push(Node::Leaf { value: rng.f32() - 0.5 });
+        return idx;
+    }
+    tree.nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+    let left = build_node(tree, depth - 1, n_features, n_bins, rng);
+    let right = build_node(tree, depth - 1, n_features, n_bins, rng);
+    tree.nodes[idx as usize] = Node::Split {
+        feature: rng.below(n_features) as u32,
+        threshold_bin: (1 + rng.below(n_bins - 1)) as u16,
+        left,
+        right,
+    };
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_ensemble_topology_exact() {
+        let e = random_ensemble(16, 5, 32, Task::Binary, 9);
+        assert_eq!(e.n_trees(), 16);
+        assert!(e.trees.iter().all(|t| t.n_leaves() == 32 && t.depth() == 5));
+        assert_eq!(e.n_features, 32);
+        // Predictions well-defined on arbitrary rows.
+        let row = vec![0.3f32; 32];
+        let l = e.logits(&row);
+        assert_eq!(l.len(), 1);
+        assert!(l[0].is_finite());
+    }
+
+    #[test]
+    fn random_ensemble_multiclass_classes_cycle() {
+        let e = random_ensemble(9, 3, 8, Task::MultiClass(3), 4);
+        assert_eq!(e.tree_class, vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn cached_model_roundtrip() {
+        let a = cached_model("telco", 8, 1, Some(6));
+        let b = cached_model("telco", 8, 1, Some(6)); // from cache
+        assert_eq!(a.n_trees(), b.n_trees());
+        let d = bench_dataset("telco");
+        for i in 0..20 {
+            assert_eq!(a.predict(d.row(i)), b.predict(d.row(i)));
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Analog CAM arrays and the core's stacked/queued macro-array (§III, Fig. 4).
+//!
+//! A physical array is `H × W` macro-cells (chip parameter: 128 × 65).
+//! Each X-TIME core combines:
+//!  * `N_stacked = 2` arrays extended row-wise (256 addressable words), and
+//!  * `N_queued = 2` arrays extended column-wise (130 features), whose
+//!    match lines are ANDed by selectively pre-charging array `i+1` only on
+//!    rows matched in array `i`.
+//!
+//! The functional semantics is a row-wise interval match over the full
+//! word; the queued decomposition matters for the latency/energy model
+//! (only matched rows of array `i+1` are charged).
+
+use super::cell::MacroCell;
+
+/// Physical array geometry at 16 nm (paper §III-C, ref [38]).
+pub const ARRAY_ROWS: usize = 128;
+pub const ARRAY_COLS: usize = 65;
+/// Core macro-array: 2 stacked × 2 queued physical arrays.
+pub const N_STACKED: usize = 2;
+pub const N_QUEUED: usize = 2;
+pub const CORE_ROWS: usize = ARRAY_ROWS * N_STACKED; // 256 words
+pub const CORE_COLS: usize = ARRAY_COLS * N_QUEUED; // 130 features
+
+/// A dense array of macro-cells (row-major).
+#[derive(Clone, Debug)]
+pub struct CamArray {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub cells: Vec<MacroCell>,
+}
+
+impl CamArray {
+    /// All-don't-care array.
+    pub fn dont_care(n_rows: usize, n_cols: usize) -> CamArray {
+        CamArray { n_rows, n_cols, cells: vec![MacroCell::DONT_CARE; n_rows * n_cols] }
+    }
+
+    /// Never-matching array (inverted windows — padding rows).
+    pub fn never(n_rows: usize, n_cols: usize) -> CamArray {
+        CamArray {
+            n_rows,
+            n_cols,
+            cells: vec![MacroCell::new(crate::cam::cell::MACRO_BINS, 0); n_rows * n_cols],
+        }
+    }
+
+    #[inline]
+    pub fn cell(&self, row: usize, col: usize) -> &MacroCell {
+        &self.cells[row * self.n_cols + col]
+    }
+
+    pub fn cell_mut(&mut self, row: usize, col: usize) -> &mut MacroCell {
+        &mut self.cells[row * self.n_cols + col]
+    }
+
+    /// Ideal single-shot search: per-row match of `query` (8-bit bins).
+    /// `query.len()` may be shorter than `n_cols`; missing trailing
+    /// features are treated as don't care (they are padding columns).
+    pub fn search_ideal(&self, query: &[u16], out: &mut Vec<bool>) {
+        out.clear();
+        let w = query.len().min(self.n_cols);
+        for r in 0..self.n_rows {
+            let base = r * self.n_cols;
+            let mut m = true;
+            for (c, q) in query.iter().take(w).enumerate() {
+                if !self.cells[base + c].matches_ideal(*q) {
+                    m = false;
+                    break;
+                }
+            }
+            out.push(m);
+        }
+    }
+
+    /// Two-cycle macro-cell search (the hardware path). Equivalent to
+    /// [`CamArray::search_ideal`] for 8-bit queries — asserted by tests.
+    pub fn search_two_cycle(&self, query: &[u16], out: &mut Vec<bool>) {
+        out.clear();
+        let w = query.len().min(self.n_cols);
+        for r in 0..self.n_rows {
+            let base = r * self.n_cols;
+            // MAL precharged high; both cycles must hold on every cell.
+            let mut mal = true;
+            for (c, q) in query.iter().take(w).enumerate() {
+                let (c1, c2) = self.cells[base + c].search_cycles(*q as u8);
+                if !(c1 && c2) {
+                    mal = false;
+                    break;
+                }
+            }
+            out.push(mal);
+        }
+    }
+
+    /// Number of rows whose match line would be charged during a search
+    /// where only `precharged` rows are active (queued-array model).
+    pub fn search_gated(&self, query: &[u16], precharged: &[bool], out: &mut Vec<bool>) {
+        out.clear();
+        let w = query.len().min(self.n_cols);
+        for r in 0..self.n_rows {
+            if !precharged[r] {
+                out.push(false);
+                continue;
+            }
+            let base = r * self.n_cols;
+            let mut m = true;
+            for (c, q) in query.iter().take(w).enumerate() {
+                if !self.cells[base + c].matches_ideal(*q) {
+                    m = false;
+                    break;
+                }
+            }
+            out.push(m);
+        }
+    }
+}
+
+/// A core's full CAM macro: logical `CORE_ROWS × CORE_COLS` view split into
+/// queued segments for the pipeline/energy model.
+#[derive(Clone, Debug)]
+pub struct CoreCam {
+    /// One logical array per queued segment, each `n_rows × ARRAY_COLS`.
+    pub segments: Vec<CamArray>,
+    pub n_rows: usize,
+    pub n_cols: usize,
+}
+
+/// Result of a gated core search: final match vector plus per-segment
+/// charged-row counts (for the energy model).
+pub struct CoreSearch {
+    pub matches: Vec<bool>,
+    pub charged_rows: Vec<usize>,
+}
+
+impl CoreCam {
+    /// Build from a logical bounds matrix `[n_rows × n_cols]` of macro-cells.
+    pub fn from_cells(n_rows: usize, n_cols: usize, cells: Vec<MacroCell>) -> CoreCam {
+        assert!(n_rows <= CORE_ROWS, "core overflow: {n_rows} rows");
+        assert!(n_cols <= CORE_COLS, "core overflow: {n_cols} features");
+        assert_eq!(cells.len(), n_rows * n_cols);
+        let n_segments = n_cols.div_ceil(ARRAY_COLS).max(1);
+        let mut segments = Vec::with_capacity(n_segments);
+        for s in 0..n_segments {
+            let c0 = s * ARRAY_COLS;
+            let c1 = ((s + 1) * ARRAY_COLS).min(n_cols);
+            let mut seg = CamArray::dont_care(n_rows, c1 - c0);
+            for r in 0..n_rows {
+                for c in c0..c1 {
+                    *seg.cell_mut(r, c - c0) = cells[r * n_cols + c];
+                }
+            }
+            segments.push(seg);
+        }
+        CoreCam { segments, n_rows, n_cols }
+    }
+
+    /// Search the full word: segment 0 searches all rows; segment `i+1`
+    /// pre-charges only rows matched by segment `i` (§III-A "only
+    /// previously matched lines are charged").
+    pub fn search(&self, query: &[u16]) -> CoreSearch {
+        let mut active = vec![true; self.n_rows];
+        let mut charged = Vec::with_capacity(self.segments.len());
+        let mut out = Vec::new();
+        for (s, seg) in self.segments.iter().enumerate() {
+            let c0 = s * ARRAY_COLS;
+            let c1 = (c0 + seg.n_cols).min(query.len());
+            let q = if c0 < query.len() { &query[c0..c1] } else { &[] };
+            charged.push(active.iter().filter(|&&a| a).count());
+            seg.search_gated(q, &active, &mut out);
+            std::mem::swap(&mut active, &mut out);
+        }
+        CoreSearch { matches: active, charged_rows: charged }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cam::cell::MACRO_BINS;
+    use crate::util::prop;
+
+    fn random_array(g: &mut prop::Gen, rows: usize, cols: usize) -> CamArray {
+        let mut a = CamArray::dont_care(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let lo = g.usize_in(0, 200) as u16;
+                let hi = (lo as usize + g.usize_in(0, 80)) as u16;
+                *a.cell_mut(r, c) = MacroCell::new(lo, hi.min(MACRO_BINS));
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn two_cycle_search_equals_ideal() {
+        prop::check(200, 0xA22A, |g| {
+            let rows = g.usize_in(1, 24);
+            let cols = g.usize_in(1, 12);
+            let a = random_array(g, rows, cols);
+            let q: Vec<u16> = (0..cols).map(|_| g.u8() as u16).collect();
+            let mut ideal = Vec::new();
+            let mut twoc = Vec::new();
+            a.search_ideal(&q, &mut ideal);
+            a.search_two_cycle(&q, &mut twoc);
+            prop::require(ideal == twoc, format!("rows={rows} cols={cols}"))
+        });
+    }
+
+    #[test]
+    fn dont_care_array_matches_all() {
+        let a = CamArray::dont_care(8, 4);
+        let mut out = Vec::new();
+        a.search_ideal(&[0, 255, 17, 99], &mut out);
+        assert!(out.iter().all(|&m| m));
+    }
+
+    #[test]
+    fn never_array_matches_none() {
+        let a = CamArray::never(8, 4);
+        let mut out = Vec::new();
+        a.search_ideal(&[0, 255, 17, 99], &mut out);
+        assert!(out.iter().all(|&m| !m));
+    }
+
+    #[test]
+    fn core_segmentation_preserves_semantics() {
+        // A CoreCam over >65 features must produce the same matches as a
+        // flat row-wise check (the logical-AND equivalence of §III-A).
+        prop::check(60, 0xC02E, |g| {
+            let rows = g.usize_in(1, 32);
+            let cols = g.usize_in(66, 130);
+            let mut cells = Vec::with_capacity(rows * cols);
+            for _ in 0..rows * cols {
+                let lo = g.usize_in(0, 220) as u16;
+                let hi = (lo as usize + g.usize_in(1, 60)) as u16;
+                cells.push(MacroCell::new(lo, hi.min(MACRO_BINS)));
+            }
+            let q: Vec<u16> = (0..cols).map(|_| g.u8() as u16).collect();
+            // Flat reference.
+            let flat: Vec<bool> = (0..rows)
+                .map(|r| (0..cols).all(|c| cells[r * cols + c].matches_ideal(q[c])))
+                .collect();
+            let core = CoreCam::from_cells(rows, cols, cells);
+            let got = core.search(&q);
+            prop::require(
+                got.matches == flat,
+                format!("rows={rows} cols={cols}"),
+            )?;
+            // Segment 0 always pre-charges every row.
+            prop::require(got.charged_rows[0] == rows, "first segment charges all rows")
+        });
+    }
+
+    #[test]
+    fn gating_reduces_charged_rows() {
+        // With tight first-segment windows, the second segment must charge
+        // at most as many rows as the first matched.
+        let rows = 64;
+        let cols = 130;
+        let mut cells = vec![MacroCell::DONT_CARE; rows * cols];
+        // First feature only matches q=5 on even rows.
+        for r in 0..rows {
+            cells[r * cols] =
+                if r % 2 == 0 { MacroCell::new(5, 6) } else { MacroCell::new(100, 101) };
+        }
+        let core = CoreCam::from_cells(rows, cols, cells);
+        let mut q = vec![0u16; cols];
+        q[0] = 5;
+        let s = core.search(&q);
+        assert_eq!(s.charged_rows[0], rows);
+        assert_eq!(s.charged_rows[1], rows / 2);
+        assert_eq!(s.matches.iter().filter(|&&m| m).count(), rows / 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "core overflow")]
+    fn overflow_rows_panics() {
+        CoreCam::from_cells(CORE_ROWS + 1, 4, vec![MacroCell::DONT_CARE; (CORE_ROWS + 1) * 4]);
+    }
+}

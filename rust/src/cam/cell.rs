@@ -1,0 +1,276 @@
+//! Analog CAM cell models (paper §II-C, §III-B).
+//!
+//! The base analog CAM sub-cell stores a range with two memristor
+//! conductances at `M = 4` bits (16 levels) and matches when the applied
+//! analog query voltage falls inside the range. The paper's novel
+//! contribution is the *macro-cell*: two sub-cells + a two-cycle search
+//! that evaluates an `N = 8`-bit comparison on 4-bit devices — Eq. (3):
+//!
+//! ```text
+//! MAL = [(q_MSB ≥ T_LMSB + 1) ∨ (q_LSB ≥ T_LLSB)]   (cycle 1, lower)
+//!     ∧ (q_MSB ≥ T_LMSB)                             (cycle 2, lower)
+//!     ∧ [(q_MSB < T_HMSB) ∨ (q_LSB < T_HLSB)]        (cycle 1, upper)
+//!     ∧ (q_MSB < T_HMSB + 1)                         (cycle 2, upper)
+//! ```
+//!
+//! This module implements both the ideal 8-bit comparison and the
+//! two-cycle macro-cell evaluation, and [`tests::macro_cell_equals_ideal`]
+//! proves them equivalent over the whole (q, T_L, T_H) space — the
+//! correctness claim behind Table I.
+
+/// Number of levels per memristor device (M = 4 bits).
+pub const SUB_LEVELS: u16 = 16;
+/// Full-precision bin count reachable with a macro-cell (N = 8 bits).
+pub const MACRO_BINS: u16 = 256;
+
+/// One 4-bit analog sub-cell: a `[lo, hi)` window in device levels.
+/// `lo ∈ 0..=16`, `hi ∈ 0..=16`; `lo = 0, hi = 16` is "don't care".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SubCell {
+    pub lo: u8,
+    pub hi: u8,
+}
+
+impl SubCell {
+    pub const DONT_CARE: SubCell = SubCell { lo: 0, hi: SUB_LEVELS as u8 };
+
+    /// Single-cycle analog match: `lo ≤ q < hi`.
+    #[inline]
+    pub fn matches(&self, q: u8) -> bool {
+        self.lo <= q && q < self.hi
+    }
+}
+
+/// An 8-bit macro-cell built from two sub-cells per bound (MSB + LSB).
+///
+/// Thresholds live in *bin* space: `lo ∈ 0..=256`, `hi ∈ 0..=256`, row
+/// matches iff `lo ≤ q < hi`. `hi = 256` (and `lo = 0`) encode the
+/// "don't care" (full-range) programming of a missing feature (§II-D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MacroCell {
+    pub lo: u16,
+    pub hi: u16,
+}
+
+impl MacroCell {
+    pub const DONT_CARE: MacroCell = MacroCell { lo: 0, hi: MACRO_BINS };
+
+    pub fn new(lo: u16, hi: u16) -> MacroCell {
+        debug_assert!(lo <= MACRO_BINS && hi <= MACRO_BINS);
+        MacroCell { lo, hi }
+    }
+
+    pub fn is_dont_care(&self) -> bool {
+        self.lo == 0 && self.hi >= MACRO_BINS
+    }
+
+    /// Ideal 8-bit comparison (the functional spec).
+    #[inline]
+    pub fn matches_ideal(&self, q: u16) -> bool {
+        self.lo <= q && q < self.hi
+    }
+
+    /// MSB/LSB decomposition of a bound: `T = 16·T_MSB + T_LSB`.
+    /// `T = 256` decomposes to `(16, 0)` — the MSB device programmed past
+    /// its last comparison level, i.e. "always below" for the upper bound.
+    #[inline]
+    pub fn split_bound(t: u16) -> (u16, u16) {
+        (t / SUB_LEVELS, t % SUB_LEVELS)
+    }
+
+    /// Two-cycle macro-cell evaluation, Eq. (3). `q` must be an 8-bit bin.
+    /// Returns the final MAL state after both cycles; the per-cycle parts
+    /// are exposed by [`MacroCell::search_cycles`] for the pipeline model.
+    #[inline]
+    pub fn matches_two_cycle(&self, q: u8) -> bool {
+        let (c1, c2) = self.search_cycles(q);
+        c1 && c2
+    }
+
+    /// The two search cycles of Table I.
+    ///
+    /// Cycle 1 evaluates the OR brackets (both bounds); cycle 2 evaluates
+    /// the second, MSB-only terms. The physical MAL is precharged before
+    /// cycle 1 and only stays high if *both* cycles match (charge is not
+    /// restored between cycles), implementing the AND.
+    #[inline]
+    pub fn search_cycles(&self, q: u8) -> (bool, bool) {
+        let (q_msb, q_lsb) = (u16::from(q) / SUB_LEVELS, u16::from(q) % SUB_LEVELS);
+        let (tl_msb, tl_lsb) = Self::split_bound(self.lo);
+        let (th_msb, th_lsb) = Self::split_bound(self.hi);
+
+        // Cycle 1: [(q_MSB ≥ T_LMSB+1) ∨ (q_LSB ≥ T_LLSB)]
+        //        ∧ [(q_MSB < T_HMSB) ∨ (q_LSB < T_HLSB)]
+        let c1_lower = q_msb >= tl_msb + 1 || q_lsb >= tl_lsb;
+        let c1_upper = q_msb < th_msb || q_lsb < th_lsb;
+
+        // Cycle 2: (q_MSB ≥ T_LMSB) ∧ (q_MSB < T_HMSB+1); the LSB
+        // sub-cells are driven with always-match inputs (VDD/GND wires in
+        // Table I) so only the MSB terms constrain the MAL.
+        let c2_lower = q_msb >= tl_msb;
+        let c2_upper = q_msb < th_msb + 1;
+
+        (c1_lower && c1_upper, c2_lower && c2_upper)
+    }
+
+    /// The four physical sub-cells (lower-MSB, lower-LSB, upper-MSB,
+    /// upper-LSB) as programmed device windows — used by the defect model,
+    /// which perturbs *device levels*, not logical bins.
+    pub fn sub_cells(&self) -> [(u16, u16); 2] {
+        [Self::split_bound(self.lo), Self::split_bound(self.hi)]
+    }
+
+    /// Rebuild from (possibly defect-perturbed) sub-cell levels.
+    pub fn from_levels(lo_msb: u16, lo_lsb: u16, hi_msb: u16, hi_lsb: u16) -> MacroCell {
+        MacroCell {
+            lo: (lo_msb * SUB_LEVELS + lo_lsb).min(MACRO_BINS),
+            hi: (hi_msb * SUB_LEVELS + hi_lsb).min(MACRO_BINS),
+        }
+    }
+}
+
+/// A 4-bit-only cell operating directly on 4-bit bins (the prior-work
+/// baseline [51] and the "X-TIME 4bit" ablation of Fig. 9a). One cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cell4 {
+    pub lo: u16,
+    pub hi: u16,
+}
+
+impl Cell4 {
+    pub const DONT_CARE: Cell4 = Cell4 { lo: 0, hi: SUB_LEVELS };
+
+    #[inline]
+    pub fn matches(&self, q: u16) -> bool {
+        self.lo <= q && q < self.hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn macro_cell_equals_ideal_exhaustive_band() {
+        // Exhaustive over q and a dense grid of (lo, hi) pairs including
+        // every boundary-adjacent configuration — this is the Table I
+        // correctness claim.
+        for lo in (0..=MACRO_BINS).step_by(7) {
+            for hi in (0..=MACRO_BINS).step_by(5) {
+                let c = MacroCell::new(lo, hi);
+                for q in 0u16..MACRO_BINS {
+                    assert_eq!(
+                        c.matches_two_cycle(q as u8),
+                        c.matches_ideal(q),
+                        "q={q} lo={lo} hi={hi}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn macro_cell_equals_ideal_random() {
+        prop::check(20_000, 0xEC3, |g| {
+            let lo = g.usize_in(0, 257) as u16;
+            let hi = g.usize_in(0, 257) as u16;
+            let q = g.u8();
+            let c = MacroCell::new(lo, hi);
+            prop::require(
+                c.matches_two_cycle(q) == c.matches_ideal(q as u16),
+                format!("q={q} lo={lo} hi={hi}"),
+            )
+        });
+    }
+
+    #[test]
+    fn boundary_cases() {
+        // Half-open semantics: lo inclusive, hi exclusive.
+        let c = MacroCell::new(16, 32);
+        assert!(!c.matches_two_cycle(15));
+        assert!(c.matches_two_cycle(16));
+        assert!(c.matches_two_cycle(31));
+        assert!(!c.matches_two_cycle(32));
+        // Empty range never matches.
+        let never = MacroCell::new(8, 8);
+        for q in 0..=255u8 {
+            assert!(!never.matches_two_cycle(q));
+        }
+        // Inverted range (used as padding rows) never matches.
+        let inv = MacroCell::new(200, 10);
+        for q in 0..=255u8 {
+            assert!(!inv.matches_two_cycle(q));
+        }
+    }
+
+    #[test]
+    fn dont_care_matches_everything() {
+        for q in 0..=255u8 {
+            assert!(MacroCell::DONT_CARE.matches_two_cycle(q));
+        }
+        assert!(MacroCell::DONT_CARE.is_dont_care());
+    }
+
+    #[test]
+    fn cycle1_alone_is_not_sufficient() {
+        // The two-cycle scheme is genuinely needed: there must exist cases
+        // where cycle 1 matches but cycle 2 rejects (otherwise one search
+        // would do and the paper's Table I scheme would be vacuous).
+        let mut found = false;
+        for lo in 0..=MACRO_BINS {
+            let c = MacroCell::new(lo, MACRO_BINS);
+            for q in 0..MACRO_BINS {
+                let (c1, c2) = c.search_cycles(q as u8);
+                if c1 && !c2 {
+                    found = true;
+                    break;
+                }
+            }
+            if found {
+                break;
+            }
+        }
+        assert!(found, "cycle 2 never constrained the result");
+    }
+
+    #[test]
+    fn split_bound_roundtrip() {
+        for t in 0..=MACRO_BINS {
+            let (m, l) = MacroCell::split_bound(t);
+            assert_eq!(m * SUB_LEVELS + l, t);
+            assert!(l < SUB_LEVELS);
+        }
+    }
+
+    #[test]
+    fn sub_cell_matches() {
+        let s = SubCell { lo: 3, hi: 10 };
+        assert!(!s.matches(2));
+        assert!(s.matches(3));
+        assert!(s.matches(9));
+        assert!(!s.matches(10));
+        assert!(SubCell::DONT_CARE.matches(0) && SubCell::DONT_CARE.matches(15));
+    }
+
+    #[test]
+    fn cell4_semantics() {
+        let c = Cell4 { lo: 2, hi: 9 };
+        assert!(!c.matches(1));
+        assert!(c.matches(2) && c.matches(8));
+        assert!(!c.matches(9));
+        assert!(Cell4::DONT_CARE.matches(15));
+    }
+
+    #[test]
+    fn from_levels_roundtrip() {
+        prop::check(2000, 0x1E7E15, |g| {
+            let lo = g.usize_in(0, 257) as u16;
+            let hi = g.usize_in(0, 257) as u16;
+            let c = MacroCell::new(lo, hi);
+            let [(lm, ll), (hm, hl)] = c.sub_cells();
+            let back = MacroCell::from_levels(lm, ll, hm, hl);
+            prop::require(back == c, format!("lo={lo} hi={hi}"))
+        });
+    }
+}

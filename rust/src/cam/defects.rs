@@ -1,0 +1,204 @@
+//! Analog defect injection (paper §V-A, Fig. 9b).
+//!
+//! A *defect* is a single-level random flip in either
+//!  * a memristor conductance — one of the four devices of a macro-cell
+//!    (lower/upper bound × MSB/LSB sub-cell) moves one level up or down, or
+//!  * a DAC output — the analog query voltage applied on one data line is
+//!    one level off.
+//!
+//! Following the paper's protocol, a fraction `pct` of devices is selected
+//! uniformly at random, half flipped up and half down, and accuracy is
+//! averaged over many independent draws.
+
+use super::cell::{MacroCell, SUB_LEVELS};
+use crate::util::Rng;
+
+/// Defect-injection configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct DefectSpec {
+    /// Fraction of memristor devices flipped (0.0 – 1.0).
+    pub memristor_pct: f64,
+    /// Fraction of DAC channels flipped (0.0 – 1.0).
+    pub dac_pct: f64,
+}
+
+impl DefectSpec {
+    pub const NONE: DefectSpec = DefectSpec { memristor_pct: 0.0, dac_pct: 0.0 };
+
+    pub fn memristor(pct: f64) -> DefectSpec {
+        DefectSpec { memristor_pct: pct, dac_pct: 0.0 }
+    }
+
+    pub fn dac(pct: f64) -> DefectSpec {
+        DefectSpec { memristor_pct: 0.0, dac_pct: pct }
+    }
+}
+
+/// Flip one sub-cell level up/down, clamping to the device range.
+/// Level space is 0..=16 (16 = "programmed past last level" upper bound).
+fn flip_level(level: u16, up: bool) -> u16 {
+    if up {
+        (level + 1).min(SUB_LEVELS)
+    } else {
+        level.saturating_sub(1)
+    }
+}
+
+/// Perturb stored macro-cells in place: each of the 4 devices per cell is
+/// independently selected with probability `pct`; selected devices flip
+/// one level, alternating up/down draws (half up, half down in
+/// expectation, as in the paper).
+pub fn inject_memristor_defects(cells: &mut [MacroCell], pct: f64, rng: &mut Rng) {
+    if pct <= 0.0 {
+        return;
+    }
+    for cell in cells.iter_mut() {
+        let [(mut lm, mut ll), (mut hm, mut hl)] = cell.sub_cells();
+        for dev in 0..4u8 {
+            if rng.chance(pct) {
+                let up = rng.chance(0.5);
+                match dev {
+                    0 => lm = flip_level(lm, up),
+                    1 => ll = flip_level(ll, up),
+                    2 => hm = flip_level(hm, up),
+                    _ => hl = flip_level(hl, up),
+                }
+            }
+        }
+        *cell = MacroCell::from_levels(lm, ll, hm, hl);
+    }
+}
+
+/// Per-column DAC error table for one core: offset applied to the query's
+/// MSB/LSB level on that data line (−1, 0, +1).
+#[derive(Clone, Debug)]
+pub struct DacErrors {
+    pub msb_off: Vec<i8>,
+    pub lsb_off: Vec<i8>,
+}
+
+impl DacErrors {
+    pub fn none(n_cols: usize) -> DacErrors {
+        DacErrors { msb_off: vec![0; n_cols], lsb_off: vec![0; n_cols] }
+    }
+
+    /// Draw a defect table: each DAC channel (2 per column: MSB and LSB
+    /// line drivers) flips with probability `pct`.
+    pub fn draw(n_cols: usize, pct: f64, rng: &mut Rng) -> DacErrors {
+        let mut d = DacErrors::none(n_cols);
+        if pct <= 0.0 {
+            return d;
+        }
+        for c in 0..n_cols {
+            if rng.chance(pct) {
+                d.msb_off[c] = if rng.chance(0.5) { 1 } else { -1 };
+            }
+            if rng.chance(pct) {
+                d.lsb_off[c] = if rng.chance(0.5) { 1 } else { -1 };
+            }
+        }
+        d
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.msb_off.iter().all(|&o| o == 0) && self.lsb_off.iter().all(|&o| o == 0)
+    }
+
+    /// Apply to an 8-bit query bin: the MSB DAC shifts by 16 bins, the LSB
+    /// DAC by 1, clamped to the representable range.
+    pub fn apply(&self, col: usize, q: u16) -> u16 {
+        let mut v = q as i32;
+        if col < self.msb_off.len() {
+            v += self.msb_off[col] as i32 * SUB_LEVELS as i32;
+            v += self.lsb_off[col] as i32;
+        }
+        v.clamp(0, 255) as u16
+    }
+
+    /// Apply to a full query row.
+    pub fn apply_row(&self, q: &[u16]) -> Vec<u16> {
+        q.iter().enumerate().map(|(c, &v)| self.apply(c, v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cam::cell::MACRO_BINS;
+
+    #[test]
+    fn zero_pct_is_identity() {
+        let mut cells = vec![MacroCell::new(10, 200), MacroCell::new(0, MACRO_BINS)];
+        let orig = cells.clone();
+        let mut rng = Rng::new(1);
+        inject_memristor_defects(&mut cells, 0.0, &mut rng);
+        assert_eq!(cells, orig);
+        let d = DacErrors::draw(8, 0.0, &mut rng);
+        assert!(d.is_clean());
+        assert_eq!(d.apply(3, 77), 77);
+    }
+
+    #[test]
+    fn flip_moves_exactly_one_level() {
+        // With pct=1 every device flips; bound moves by ±1 (LSB) and/or
+        // ±16 (MSB) level-equivalents.
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let lo = rng.below(240) as u16;
+            let hi = lo + rng.below(16) as u16 + 1;
+            let mut cells = vec![MacroCell::new(lo, hi)];
+            inject_memristor_defects(&mut cells, 1.0, &mut rng);
+            let d_lo = (cells[0].lo as i32 - lo as i32).abs();
+            let d_hi = (cells[0].hi as i32 - hi as i32).abs();
+            // Each bound has one MSB (±16) and one LSB (±1) flip; combined
+            // displacement ∈ {15, 16, 17} or cancelled edge clamps ≤ 17.
+            assert!(d_lo <= 17, "lo moved {d_lo}");
+            assert!(d_hi <= 17, "hi moved {d_hi}");
+        }
+    }
+
+    #[test]
+    fn defect_rate_statistics() {
+        // At pct = 0.1 about 10% of devices flip → measure on many cells.
+        let n = 20_000;
+        let mut cells = vec![MacroCell::new(64, 192); n];
+        let mut rng = Rng::new(3);
+        inject_memristor_defects(&mut cells, 0.1, &mut rng);
+        let changed = cells.iter().filter(|c| **c != MacroCell::new(64, 192)).count();
+        // 64 = (4,0) and 192 = (12,0): the two LSB devices sit at level 0,
+        // so their down-flips clamp to no-ops. Effective change prob:
+        // 1 − (1−p)² · (1−p/2)² ≈ 0.269 at p = 0.1.
+        let frac = changed as f64 / n as f64;
+        assert!((0.24..0.30).contains(&frac), "changed fraction {frac}");
+    }
+
+    #[test]
+    fn dac_offsets_shift_query() {
+        let d = DacErrors { msb_off: vec![1, -1, 0], lsb_off: vec![0, 1, -1] };
+        assert_eq!(d.apply(0, 100), 116);
+        assert_eq!(d.apply(1, 100), 85);
+        assert_eq!(d.apply(2, 0), 0); // clamped
+        assert_eq!(d.apply(2, 255), 254);
+    }
+
+    #[test]
+    fn levels_clamp_at_range_edges() {
+        let mut cells = vec![MacroCell::new(0, MACRO_BINS)];
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            inject_memristor_defects(&mut cells, 1.0, &mut rng);
+            assert!(cells[0].lo <= MACRO_BINS && cells[0].hi <= MACRO_BINS);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let mut cells = vec![MacroCell::new(30, 99); 64];
+            let mut rng = Rng::new(77);
+            inject_memristor_defects(&mut cells, 0.3, &mut rng);
+            cells
+        };
+        assert_eq!(mk(), mk());
+    }
+}

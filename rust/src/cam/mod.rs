@@ -1,0 +1,12 @@
+//! Functional analog-CAM model: cells (including the paper's two-cycle
+//! 8-bit macro-cell, §III-B), arrays with stacked/queued core organization
+//! (§III-C) and analog defect injection (§V-A).
+
+pub mod analog;
+pub mod array;
+pub mod cell;
+pub mod defects;
+
+pub use array::{CamArray, CoreCam, CoreSearch, ARRAY_COLS, ARRAY_ROWS, CORE_COLS, CORE_ROWS};
+pub use cell::{Cell4, MacroCell, SubCell, MACRO_BINS, SUB_LEVELS};
+pub use defects::{inject_memristor_defects, DacErrors, DefectSpec};

@@ -1,0 +1,309 @@
+//! Functional CAM inference engine.
+//!
+//! Executes a [`CamProgram`] with the analog-CAM functional model:
+//! per-core gated search (stacked/queued arrays), MMR match resolution,
+//! SRAM leaf retrieval, in-core accumulation and in-network reduction.
+//! Supports analog defect injection (Fig. 9b). This is the bit-accurate
+//! reference the cycle simulator and the XLA backend are validated
+//! against; absent defects it must agree with [`Ensemble::logits`]
+//! (`trees` module) exactly up to summation order.
+
+use super::program::CamProgram;
+use crate::cam::{inject_memristor_defects, CoreCam, DacErrors, DefectSpec, MacroCell};
+use crate::data::Task;
+use crate::util::Rng;
+
+/// Per-core compiled search state.
+struct EngineCore {
+    cam: CoreCam,
+    /// Leaf payloads per row.
+    leaf: Vec<f32>,
+    class: Vec<u16>,
+    /// MMR iteration budget (= N_trees,core).
+    n_trees_core: usize,
+    dac: DacErrors,
+}
+
+/// Functional engine over a compiled program.
+pub struct CamEngine {
+    pub task: Task,
+    pub n_outputs: usize,
+    base_score: Vec<f32>,
+    cores: Vec<EngineCore>,
+    n_features: usize,
+    /// Bin-space → 8-bit macro-cell level scale (`256 / n_bins`).
+    scale: u16,
+}
+
+/// Statistics of one inference (feeds the energy model).
+#[derive(Clone, Debug, Default)]
+pub struct SearchStats {
+    /// Charged match lines per queued segment, summed over cores.
+    pub charged_rows: usize,
+    /// Total matched rows (MMR iterations consumed).
+    pub matches: usize,
+}
+
+impl CamEngine {
+    /// Build a defect-free engine.
+    pub fn new(program: &CamProgram) -> CamEngine {
+        Self::with_defects(program, DefectSpec::NONE, 0)
+    }
+
+    /// Build an engine with analog defects drawn from `seed`.
+    pub fn with_defects(program: &CamProgram, defects: DefectSpec, seed: u64) -> CamEngine {
+        let mut rng = Rng::new(seed ^ 0xDEFEC7);
+        let scale = (crate::cam::MACRO_BINS / program.n_bins.max(1)) as u16;
+        let mut cores = Vec::with_capacity(program.cores.len());
+        for (ci, c) in program.cores.iter().enumerate() {
+            let n_rows = c.rows.len();
+            let mut cells = Vec::with_capacity(n_rows * program.n_features);
+            for r in &c.rows {
+                for f in 0..program.n_features {
+                    // Bounds are scaled into the 8-bit macro-cell level
+                    // space so 4-bit programs exercise the same hardware
+                    // path with coarser levels.
+                    cells.push(MacroCell::new(r.lo[f] * scale, r.hi[f] * scale));
+                }
+            }
+            let mut crng = rng.fork(ci as u64);
+            inject_memristor_defects(&mut cells, defects.memristor_pct, &mut crng);
+            let dac = DacErrors::draw(program.n_features, defects.dac_pct, &mut crng);
+            cores.push(EngineCore {
+                cam: CoreCam::from_cells(n_rows, program.n_features, cells),
+                leaf: c.rows.iter().map(|r| r.leaf).collect(),
+                class: c.rows.iter().map(|r| r.class).collect(),
+                n_trees_core: c.n_trees_core(),
+                dac,
+            });
+        }
+        CamEngine {
+            task: program.task,
+            n_outputs: program.task.n_outputs(),
+            base_score: program.base_score.clone(),
+            cores,
+            n_features: program.n_features,
+            scale,
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Inference over quantized bins; returns logits per output column.
+    pub fn infer_bins(&self, bins: &[u16]) -> Vec<f32> {
+        self.infer_bins_stats(bins).0
+    }
+
+    /// Inference + search statistics.
+    pub fn infer_bins_stats(&self, bins: &[u16]) -> (Vec<f32>, SearchStats) {
+        assert_eq!(bins.len(), self.n_features, "feature arity mismatch");
+        // Queries are scaled into the same 8-bit level space as the
+        // programmed bounds, modelling the DAC's full-scale mapping.
+        let scaled: Vec<u16> = bins.iter().map(|&b| b * self.scale).collect();
+        let mut acc = vec![0f64; self.n_outputs];
+        let mut stats = SearchStats::default();
+        for core in &self.cores {
+            // DAC conversion (possibly defective) then gated CAM search.
+            let q = core.dac.apply_row(&scaled);
+            let res = core.cam.search(&q);
+            stats.charged_rows += res.charged_rows.iter().sum::<usize>();
+            // MMR: resolve matches one at a time, bounded by the
+            // iteration budget (§III-A). Defects can produce more matches
+            // than trees; the hardware stops after N_trees,core tokens.
+            let mut taken = 0usize;
+            for (row, &m) in res.matches.iter().enumerate() {
+                if !m {
+                    continue;
+                }
+                if taken >= core.n_trees_core {
+                    break;
+                }
+                taken += 1;
+                acc[core.class[row] as usize] += core.leaf[row] as f64;
+            }
+            stats.matches += taken;
+        }
+        let logits: Vec<f32> = acc
+            .iter()
+            .zip(self.base_score.iter().chain(std::iter::repeat(&0.0)))
+            .map(|(&a, &b)| a as f32 + b)
+            .collect();
+        (logits, stats)
+    }
+
+    /// Quantize a raw feature row with the program's quantizer, then infer.
+    pub fn infer_row(&self, program: &CamProgram, row: &[f32]) -> Vec<f32> {
+        let bins = program.quantizer.bin_row(row);
+        self.infer_bins(&bins)
+    }
+
+    /// Task-level decision from logits (the co-processor's job, §III-A).
+    pub fn decide(&self, logits: &[f32]) -> f32 {
+        match self.task {
+            Task::Regression => logits[0],
+            Task::Binary => (logits[0] > 0.0) as usize as f32,
+            Task::MultiClass(_) => {
+                let mut best = 0usize;
+                for c in 1..logits.len() {
+                    if logits[c] > logits[best] {
+                        best = c;
+                    }
+                }
+                best as f32
+            }
+        }
+    }
+
+    /// End-to-end prediction for a raw row.
+    pub fn predict(&self, program: &CamProgram, row: &[f32]) -> f32 {
+        let l = self.infer_row(program, row);
+        self.decide(&l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::program::{compile, CompileOptions};
+    use crate::data::by_name;
+    use crate::trees::{gbdt, rf, GbdtParams, RfParams};
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn engine_matches_cpu_reference_binary() {
+        let d = by_name("churn").unwrap().generate_n(1500);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 15, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let e = CamEngine::new(&p);
+        for i in 0..200 {
+            let row = d.row(i);
+            let cam = e.infer_row(&p, row);
+            let cpu = m.logits(row);
+            assert!(close(cam[0], cpu[0]), "row {i}: cam {} vs cpu {}", cam[0], cpu[0]);
+            assert_eq!(e.predict(&p, row), m.predict(row));
+        }
+    }
+
+    #[test]
+    fn engine_matches_cpu_reference_multiclass() {
+        let d = by_name("eye").unwrap().generate_n(1200);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 8, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        // Force a multi-core layout to exercise placement + reduction.
+        let p = compile(&m, &CompileOptions { core_rows: 48, ..Default::default() }).unwrap();
+        assert!(p.cores_per_replica() > 1);
+        let e = CamEngine::new(&p);
+        for i in 0..150 {
+            let row = d.row(i);
+            let cam = e.infer_row(&p, row);
+            let cpu = m.logits(row);
+            for k in 0..cam.len() {
+                assert!(close(cam[k], cpu[k]), "row {i} class {k}: {} vs {}", cam[k], cpu[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_cpu_reference_rf_regression() {
+        let d = by_name("rossmann").unwrap().generate_n(1000);
+        let m = rf::train(&d, &RfParams { n_estimators: 10, max_leaves: 32, ..Default::default() });
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let e = CamEngine::new(&p);
+        for i in 0..100 {
+            let row = d.row(i);
+            assert!(close(e.infer_row(&p, row)[0], m.logits(row)[0]), "row {i}");
+        }
+    }
+
+    #[test]
+    fn four_bit_program_runs_on_macro_cells() {
+        let d = by_name("telco").unwrap().generate_n(900);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 6, max_leaves: 8, n_bits: 4, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        assert_eq!(p.n_bins, 16);
+        let e = CamEngine::new(&p);
+        for i in 0..100 {
+            let row = d.row(i);
+            assert!(close(e.infer_row(&p, row)[0], m.logits(row)[0]), "row {i}");
+        }
+    }
+
+    #[test]
+    fn defects_degrade_gracefully() {
+        let d = by_name("churn").unwrap().generate_n(1500);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 20, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let clean = CamEngine::new(&p);
+        let dirty = CamEngine::with_defects(&p, DefectSpec::memristor(0.3), 42);
+        let mut clean_hits = 0;
+        let mut dirty_hits = 0;
+        let n = 400;
+        for i in 0..n {
+            let row = d.row(i);
+            clean_hits += (clean.predict(&p, row) == d.y[i]) as usize;
+            dirty_hits += (dirty.predict(&p, row) == d.y[i]) as usize;
+        }
+        let (ca, da) = (clean_hits as f64 / n as f64, dirty_hits as f64 / n as f64);
+        // Heavy defects must hurt but the ensemble keeps it above chance.
+        assert!(da <= ca + 0.02, "defects improved accuracy? {ca} vs {da}");
+        assert!(da > 0.5, "catastrophic collapse: {da}");
+    }
+
+    #[test]
+    fn small_defect_rate_nearly_harmless() {
+        // Paper: ~0.2% flip probability → accuracy drop < 0.5%.
+        let d = by_name("churn").unwrap().generate_n(1500);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 20, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let clean = CamEngine::new(&p);
+        let dirty = CamEngine::with_defects(&p, DefectSpec::memristor(0.002), 7);
+        let n = 400;
+        let mut agree = 0;
+        for i in 0..n {
+            let row = d.row(i);
+            agree += (clean.predict(&p, row) == dirty.predict(&p, row)) as usize;
+        }
+        assert!(agree as f64 / n as f64 > 0.97, "agreement {}", agree as f64 / n as f64);
+    }
+
+    #[test]
+    fn stats_report_charged_rows() {
+        let d = by_name("telco").unwrap().generate_n(700);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 4, max_leaves: 4, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let e = CamEngine::new(&p);
+        let bins = p.quantizer.bin_row(d.row(0));
+        let (_, stats) = e.infer_bins_stats(&bins);
+        // Exactly one row matches per tree.
+        assert_eq!(stats.matches, 4);
+        assert!(stats.charged_rows >= p.total_rows());
+    }
+}

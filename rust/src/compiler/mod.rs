@@ -1,0 +1,14 @@
+//! The X-TIME compiler (paper §II-D, §III-A, §III-D): trained ensembles →
+//! CAM threshold maps, core placement, NoC router configuration — plus the
+//! bit-accurate functional engine used as the reference for the cycle
+//! simulator and the XLA runtime.
+
+pub mod engine;
+pub mod noc;
+pub mod paths;
+pub mod program;
+
+pub use engine::{CamEngine, SearchStats};
+pub use noc::{NocConfig, Router};
+pub use paths::{extract_rows, CamRow};
+pub use program::{compile, CamProgram, CompileError, CompileOptions, CoreImage, CHIP_CORES};

@@ -1,0 +1,261 @@
+//! Programmable H-tree NoC configuration (paper §III-D, Fig. 7).
+//!
+//! The chip connects 4096 cores through a radix-4 H-tree (1365 routers)
+//! converging on the co-processor. Each router has one *configuration bit*:
+//!
+//!  * `1` — accumulate: sum incoming leaf logits into a single flit
+//!    (legal only when every core in the router's subtree contributes to
+//!    the same class and the same input-batch replica);
+//!  * `0` — passthrough: forward distinct logit streams unchanged.
+//!
+//! The compiler derives the bits from the placement: a router accumulates
+//! iff all used cores below it share one `(class, replica)` group. This
+//! generalizes all four inference modes of §III-D (regression/binary,
+//! multi-class, and both with input batching).
+
+use super::program::CoreImage;
+
+/// A router in the H-tree.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Router {
+    /// Level above the cores (1 = leaf routers).
+    pub level: usize,
+    /// First chip slot covered by this router's subtree.
+    pub slot_base: usize,
+    /// Number of slots covered (`radix^level`).
+    pub slot_span: usize,
+    /// The configuration bit.
+    pub accumulate: bool,
+}
+
+/// The configured H-tree.
+#[derive(Clone, Debug)]
+pub struct NocConfig {
+    pub radix: usize,
+    /// Chip slots (rounded up to a power of the radix).
+    pub n_slots: usize,
+    pub levels: usize,
+    /// Routers in level-major order (level 1 first).
+    pub routers: Vec<Router>,
+    /// Group of each chip slot: `(class, replica)` of the core mapped
+    /// there, or `None` for unused slots.
+    pub slot_group: Vec<Option<(u16, u32)>>,
+}
+
+impl NocConfig {
+    /// Build the tree for a placement. Replica `r`'s copy of core `i`
+    /// occupies chip slot `r * cores_per_replica + i`.
+    pub fn build(cores: &[CoreImage], n_replicas: usize, chip_cores: usize) -> NocConfig {
+        let radix = 4usize;
+        let used = cores.len() * n_replicas;
+        let mut n_slots = radix; // at least one router
+        let mut levels = 1usize;
+        while n_slots < chip_cores.max(used) {
+            n_slots *= radix;
+            levels += 1;
+        }
+
+        let mut slot_group = vec![None; n_slots];
+        for r in 0..n_replicas {
+            for (i, c) in cores.iter().enumerate() {
+                slot_group[r * cores.len() + i] = Some((c.class, r as u32));
+            }
+        }
+
+        let mut routers = Vec::new();
+        for level in 1..=levels {
+            let span = radix.pow(level as u32);
+            for j in 0..n_slots / span {
+                let base = j * span;
+                let mut group: Option<(u16, u32)> = None;
+                let mut uniform = true;
+                for s in base..base + span {
+                    if let Some(g) = slot_group[s] {
+                        match group {
+                            None => group = Some(g),
+                            Some(g0) if g0 != g => {
+                                uniform = false;
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                routers.push(Router {
+                    level,
+                    slot_base: base,
+                    slot_span: span,
+                    accumulate: uniform && group.is_some(),
+                });
+            }
+        }
+        NocConfig { radix, n_slots, levels, routers, slot_group }
+    }
+
+    pub fn n_routers(&self) -> usize {
+        self.routers.len()
+    }
+
+    /// Routers whose configuration bit is set.
+    pub fn n_accumulating(&self) -> usize {
+        self.routers.iter().filter(|r| r.accumulate).count()
+    }
+
+    /// Router index covering `slot` at `level` (level-major layout).
+    pub fn router_at(&self, level: usize, slot: usize) -> usize {
+        debug_assert!((1..=self.levels).contains(&level));
+        let mut idx = 0usize;
+        for l in 1..level {
+            idx += self.n_slots / self.radix.pow(l as u32);
+        }
+        idx + slot / self.radix.pow(level as u32)
+    }
+
+    /// Functional in-network reduction: fold per-slot logit contributions
+    /// up the tree honoring the configuration bits; returns the flit
+    /// streams arriving at the co-processor as `(class, replica, value)`.
+    ///
+    /// Used by tests and the cycle simulator to verify that the
+    /// configuration never merges logits across classes or batch slots.
+    pub fn reduce(&self, slot_values: &[(usize, f32)]) -> Vec<(u16, u32, f32)> {
+        // Streams per slot: (class, replica, value).
+        let mut streams: Vec<Vec<(u16, u32, f32)>> = vec![Vec::new(); self.n_slots];
+        for &(slot, v) in slot_values {
+            let (class, replica) =
+                self.slot_group[slot].expect("value injected into an unused slot");
+            streams[slot].push((class, replica, v));
+        }
+        let mut width = self.n_slots;
+        for level in 1..=self.levels {
+            let mut next: Vec<Vec<(u16, u32, f32)>> = vec![Vec::new(); width / self.radix];
+            for (j, bucket) in next.iter_mut().enumerate() {
+                let r = &self.routers[self.router_at(level, j * self.radix.pow(level as u32))];
+                let mut merged: Vec<(u16, u32, f32)> = Vec::new();
+                for c in 0..self.radix {
+                    merged.extend(streams[j * self.radix + c].iter().copied());
+                }
+                if r.accumulate && !merged.is_empty() {
+                    let (class, replica, _) = merged[0];
+                    debug_assert!(
+                        merged.iter().all(|&(c, rep, _)| c == class && rep == replica),
+                        "accumulating router with mixed groups"
+                    );
+                    let sum: f32 = merged.iter().map(|&(_, _, v)| v).sum();
+                    bucket.push((class, replica, sum));
+                } else {
+                    *bucket = merged;
+                }
+            }
+            streams = next;
+            width /= self.radix;
+        }
+        streams.into_iter().flatten().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::paths::CamRow;
+
+    fn core(class: u16) -> CoreImage {
+        CoreImage {
+            rows: vec![CamRow { lo: vec![0], hi: vec![16], leaf: 1.0, class, tree: 0 }],
+            trees: vec![0],
+            class,
+            replica: 0,
+        }
+    }
+
+    #[test]
+    fn paper_chip_has_1365_routers() {
+        let cores: Vec<CoreImage> = (0..8).map(|_| core(0)).collect();
+        let noc = NocConfig::build(&cores, 1, 4096);
+        assert_eq!(noc.n_slots, 4096);
+        assert_eq!(noc.levels, 6);
+        // 1024 + 256 + 64 + 16 + 4 + 1 = 1365 (paper §IV-B).
+        assert_eq!(noc.n_routers(), 1365);
+    }
+
+    #[test]
+    fn regression_mode_all_accumulate() {
+        // Fig. 7(a): single class, single batch → every router with used
+        // cores below it accumulates; one flit reaches the CP.
+        let cores: Vec<CoreImage> = (0..16).map(|_| core(0)).collect();
+        let noc = NocConfig::build(&cores, 1, 16);
+        assert!(noc.routers.iter().all(|r| r.accumulate));
+        let inputs: Vec<(usize, f32)> = (0..16).map(|s| (s, 1.0)).collect();
+        let out = noc.reduce(&inputs);
+        assert_eq!(out, vec![(0, 0, 16.0)]);
+    }
+
+    #[test]
+    fn multiclass_mode_separates_classes() {
+        // Fig. 7(b): two classes alternating → the flit streams reaching
+        // the CP keep per-class sums separate.
+        let cores: Vec<CoreImage> = (0..8).map(|i| core((i % 2) as u16)).collect();
+        let noc = NocConfig::build(&cores, 1, 8);
+        let inputs: Vec<(usize, f32)> = (0..8).map(|s| (s, (s + 1) as f32)).collect();
+        let mut out = noc.reduce(&inputs);
+        out.sort_by_key(|&(c, r, _)| (c, r));
+        let class0: f32 = out.iter().filter(|&&(c, _, _)| c == 0).map(|&(_, _, v)| v).sum();
+        let class1: f32 = out.iter().filter(|&&(c, _, _)| c == 1).map(|&(_, _, v)| v).sum();
+        assert_eq!(class0, 1.0 + 3.0 + 5.0 + 7.0);
+        assert_eq!(class1, 2.0 + 4.0 + 6.0 + 8.0);
+    }
+
+    #[test]
+    fn batching_mode_separates_replicas() {
+        // Fig. 7(c): same class, 2 replicas of 4 cores → low-level routers
+        // accumulate within a replica, upper ones pass through.
+        let cores: Vec<CoreImage> = (0..4).map(|_| core(0)).collect();
+        let noc = NocConfig::build(&cores, 2, 8);
+        let inputs: Vec<(usize, f32)> = (0..8).map(|s| (s, 1.0)).collect();
+        let mut out = noc.reduce(&inputs);
+        out.sort_by_key(|&(c, r, _)| (c, r));
+        assert_eq!(out, vec![(0, 0, 4.0), (0, 1, 4.0)]);
+        // The leaf routers (level 1) covering each replica accumulate;
+        // the root must not.
+        let root = noc.routers.last().unwrap();
+        assert!(!root.accumulate);
+    }
+
+    #[test]
+    fn class_grouped_layout_accumulates_below_class_boundary() {
+        // 4 cores class 0 then 4 cores class 1 (our compiler's layout):
+        // level-1 routers are uniform → accumulate; root is mixed.
+        let cores: Vec<CoreImage> =
+            (0..8).map(|i| core(if i < 4 { 0 } else { 1 })).collect();
+        let noc = NocConfig::build(&cores, 1, 8);
+        let lvl1: Vec<bool> =
+            noc.routers.iter().filter(|r| r.level == 1).map(|r| r.accumulate).collect();
+        // 8 cores round up to 16 slots → 4 leaf routers; the two with used
+        // cores below them are class-uniform (accumulate), the two over
+        // empty slots are inert (bit = 0).
+        assert_eq!(lvl1, vec![true, true, false, false]);
+        assert!(!noc.routers.last().unwrap().accumulate);
+        let out = noc.reduce(&(0..8).map(|s| (s, 1.0)).collect::<Vec<_>>());
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn unused_slots_are_ignored() {
+        let cores: Vec<CoreImage> = (0..3).map(|_| core(0)).collect();
+        let noc = NocConfig::build(&cores, 1, 16);
+        let out = noc.reduce(&[(0, 1.0), (1, 2.0), (2, 3.0)]);
+        assert_eq!(out, vec![(0, 0, 6.0)]);
+    }
+
+    #[test]
+    fn router_at_indexing() {
+        let cores: Vec<CoreImage> = (0..4).map(|_| core(0)).collect();
+        let noc = NocConfig::build(&cores, 1, 64);
+        // 64 slots: level 1 → 16 routers (idx 0..16), level 2 → 4, level 3 → 1.
+        assert_eq!(noc.levels, 3);
+        assert_eq!(noc.router_at(1, 0), 0);
+        assert_eq!(noc.router_at(1, 63), 15);
+        assert_eq!(noc.router_at(2, 0), 16);
+        assert_eq!(noc.router_at(3, 0), 20);
+        assert_eq!(noc.n_routers(), 21);
+    }
+}

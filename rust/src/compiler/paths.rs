@@ -1,0 +1,191 @@
+//! Root-to-leaf path extraction: trees → CAM rows (paper §II-D, Fig. 3).
+//!
+//! Every root-to-leaf path of a decision tree becomes one CAM row. Walking
+//! down the tree, each comparison `bin(f) >= t` narrows the feature's
+//! interval: going left imposes `bin < t` (upper bound), going right
+//! imposes `bin >= t` (lower bound). Features never tested on the path
+//! keep the full "don't care" range.
+
+use crate::trees::{Node, Tree};
+
+/// One CAM row: per-feature half-open windows `[lo, hi)` in bin space plus
+/// the leaf payload stored in the core's SRAM (§III-A: "leaf value, class
+/// ID/label and tree ID").
+#[derive(Clone, Debug, PartialEq)]
+pub struct CamRow {
+    pub lo: Vec<u16>,
+    pub hi: Vec<u16>,
+    pub leaf: f32,
+    pub class: u16,
+    pub tree: u32,
+}
+
+impl CamRow {
+    /// Ideal row match: the query bin vector falls in every window.
+    #[inline]
+    pub fn matches(&self, bins: &[u16]) -> bool {
+        debug_assert_eq!(bins.len(), self.lo.len());
+        self.lo
+            .iter()
+            .zip(&self.hi)
+            .zip(bins)
+            .all(|((&lo, &hi), &q)| lo <= q && q < hi)
+    }
+
+    /// Number of non-don't-care cells (path length; equals tree depth of
+    /// this leaf at most, since repeated features merge into one window).
+    pub fn n_constrained(&self, n_bins: u16) -> usize {
+        self.lo
+            .iter()
+            .zip(&self.hi)
+            .filter(|&(&lo, &hi)| lo != 0 || hi < n_bins)
+            .count()
+    }
+}
+
+/// Extract all root-to-leaf paths of `tree` as CAM rows.
+///
+/// `n_bins` is the quantizer's bin count (`2^n_bits`); windows span
+/// `[0, n_bins)` when unconstrained.
+pub fn extract_rows(tree: &Tree, n_features: usize, n_bins: u16, class: u16, tree_id: u32) -> Vec<CamRow> {
+    let mut rows = Vec::with_capacity(tree.n_leaves());
+    let mut lo = vec![0u16; n_features];
+    let mut hi = vec![n_bins; n_features];
+    walk(tree, 0, &mut lo, &mut hi, n_bins, class, tree_id, &mut rows);
+    rows
+}
+
+#[allow(clippy::too_many_arguments)]
+fn walk(
+    tree: &Tree,
+    node: u32,
+    lo: &mut [u16],
+    hi: &mut [u16],
+    n_bins: u16,
+    class: u16,
+    tree_id: u32,
+    rows: &mut Vec<CamRow>,
+) {
+    match tree.nodes[node as usize] {
+        Node::Leaf { value } => rows.push(CamRow {
+            lo: lo.to_vec(),
+            hi: hi.to_vec(),
+            leaf: value,
+            class,
+            tree: tree_id,
+        }),
+        Node::Split { feature, threshold_bin, left, right } => {
+            let f = feature as usize;
+            // Left: bin < t → tighten upper bound.
+            let saved_hi = hi[f];
+            hi[f] = hi[f].min(threshold_bin);
+            if lo[f] < hi[f] {
+                walk(tree, left, lo, hi, n_bins, class, tree_id, rows);
+            }
+            hi[f] = saved_hi;
+            // Right: bin >= t → tighten lower bound.
+            let saved_lo = lo[f];
+            lo[f] = lo[f].max(threshold_bin);
+            if lo[f] < hi[f] {
+                walk(tree, right, lo, hi, n_bins, class, tree_id, rows);
+            }
+            lo[f] = saved_lo;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trees::Node;
+    use crate::util::prop;
+
+    fn sample_tree() -> Tree {
+        // f0 >= 3 ? (f1 >= 7 ? 3.0 : 2.0) : 1.0   (Fig. 1a/Fig. 3 style)
+        Tree {
+            nodes: vec![
+                Node::Split { feature: 0, threshold_bin: 3, left: 1, right: 2 },
+                Node::Leaf { value: 1.0 },
+                Node::Split { feature: 1, threshold_bin: 7, left: 3, right: 4 },
+                Node::Leaf { value: 2.0 },
+                Node::Leaf { value: 3.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn row_per_leaf_with_correct_windows() {
+        let rows = extract_rows(&sample_tree(), 2, 16, 5, 9);
+        assert_eq!(rows.len(), 3);
+        // Leaf 1.0: f0 ∈ [0,3), f1 don't care.
+        assert_eq!(rows[0].lo, vec![0, 0]);
+        assert_eq!(rows[0].hi, vec![3, 16]);
+        assert_eq!(rows[0].leaf, 1.0);
+        // Leaf 2.0: f0 ∈ [3,16), f1 ∈ [0,7).
+        assert_eq!(rows[1].lo, vec![3, 0]);
+        assert_eq!(rows[1].hi, vec![16, 7]);
+        // Leaf 3.0: f0 ∈ [3,16), f1 ∈ [7,16).
+        assert_eq!(rows[2].lo, vec![3, 7]);
+        assert_eq!(rows[2].hi, vec![16, 16]);
+        assert!(rows.iter().all(|r| r.class == 5 && r.tree == 9));
+    }
+
+    #[test]
+    fn repeated_feature_windows_intersect() {
+        // f0>=4 then f0>=8 on the right branch: rightmost leaf window is
+        // [8,16), middle is [4,8).
+        let t = Tree {
+            nodes: vec![
+                Node::Split { feature: 0, threshold_bin: 4, left: 1, right: 2 },
+                Node::Leaf { value: 0.0 },
+                Node::Split { feature: 0, threshold_bin: 8, left: 3, right: 4 },
+                Node::Leaf { value: 1.0 },
+                Node::Leaf { value: 2.0 },
+            ],
+        };
+        let rows = extract_rows(&t, 1, 16, 0, 0);
+        assert_eq!(rows.len(), 3);
+        assert_eq!((rows[1].lo[0], rows[1].hi[0]), (4, 8));
+        assert_eq!((rows[2].lo[0], rows[2].hi[0]), (8, 16));
+    }
+
+    /// The fundamental mapping theorem (§II-D): for any query, exactly one
+    /// row matches per tree, and it carries the tree's predicted leaf.
+    #[test]
+    fn exactly_one_row_matches_and_agrees() {
+        prop::check(300, 0x9A75_1234, |g| {
+            // Random tree via the grower on random data.
+            use crate::trees::grow::{grow_tree, BinnedMatrix, GrowParams, GrowScratch};
+            let n = 64;
+            let n_features = g.usize_in(1, 6);
+            let n_bins = 16usize;
+            let bins: Vec<u16> =
+                (0..n * n_features).map(|_| g.usize_in(0, n_bins) as u16).collect();
+            let gvec: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let h = vec![1.0f32; n];
+            let m = BinnedMatrix { bins, n_rows: n, n_features, n_bins };
+            let p = GrowParams { max_leaves: 8, lambda: 0.0, leaf_scale: 1.0, ..Default::default() };
+            let mut scratch = GrowScratch::new(n_features, n_bins);
+            let tree =
+                grow_tree(&m, (0..n as u32).collect(), &gvec, &h, &p, g.rng(), &mut scratch);
+
+            let rows = extract_rows(&tree, n_features, n_bins as u16, 0, 0);
+            prop::require(rows.len() == tree.n_leaves(), "row count == leaf count")?;
+
+            let q: Vec<u16> = (0..n_features).map(|_| g.usize_in(0, n_bins) as u16).collect();
+            let matched: Vec<&CamRow> = rows.iter().filter(|r| r.matches(&q)).collect();
+            prop::require(matched.len() == 1, format!("matched {} rows", matched.len()))?;
+            prop::require(
+                matched[0].leaf == tree.predict_bins(&q),
+                format!("leaf {} != predict {}", matched[0].leaf, tree.predict_bins(&q)),
+            )
+        });
+    }
+
+    #[test]
+    fn constrained_cell_count() {
+        let rows = extract_rows(&sample_tree(), 2, 16, 0, 0);
+        assert_eq!(rows[0].n_constrained(16), 1); // only f0
+        assert_eq!(rows[1].n_constrained(16), 2);
+    }
+}

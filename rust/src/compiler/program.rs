@@ -1,0 +1,450 @@
+//! CAM program: the compiled form of a tree ensemble — core images,
+//! replication and NoC configuration (paper §III-A, §III-D).
+
+use super::noc::NocConfig;
+use super::paths::{extract_rows, CamRow};
+use crate::cam::CORE_ROWS;
+use crate::data::{FeatureQuantizer, Task};
+use crate::trees::Ensemble;
+use crate::util::Json;
+
+/// Chip capacity (paper: 4096 cores, 256 words × 130 features per core).
+pub const CHIP_CORES: usize = 4096;
+
+/// One core's image: CAM rows plus metadata for the MMR/SRAM/ACC stages.
+#[derive(Clone, Debug)]
+pub struct CoreImage {
+    pub rows: Vec<CamRow>,
+    /// Tree ids mapped to this core (`N_trees,core` = len).
+    pub trees: Vec<u32>,
+    /// Class all trees in this core contribute to (Fig. 7b invariant).
+    pub class: u16,
+    /// Replica (batch slot) this core belongs to (Fig. 7c input batching).
+    pub replica: u32,
+}
+
+impl CoreImage {
+    pub fn n_trees_core(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+/// Compilation options.
+#[derive(Clone, Copy, Debug)]
+pub struct CompileOptions {
+    /// Replicate the model into unused cores to serve batched inputs
+    /// (Fig. 7c). 0 = auto (fill the chip), 1 = no replication.
+    pub replicas: usize,
+    /// Core word capacity (tests shrink this to force multi-core layouts).
+    pub core_rows: usize,
+    /// Chip core budget.
+    pub chip_cores: usize,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions { replicas: 1, core_rows: CORE_ROWS, chip_cores: CHIP_CORES }
+    }
+}
+
+/// A compiled ensemble ready for the functional engine, the cycle
+/// simulator and the XLA runtime.
+#[derive(Clone, Debug)]
+pub struct CamProgram {
+    pub name: String,
+    pub task: Task,
+    pub n_features: usize,
+    /// Quantizer bin count (`2^n_bits`).
+    pub n_bins: u16,
+    pub n_bits: u8,
+    pub base_score: Vec<f32>,
+    /// Core images of replica 0; replicas are identical copies.
+    pub cores: Vec<CoreImage>,
+    pub n_replicas: usize,
+    pub noc: NocConfig,
+    pub quantizer: FeatureQuantizer,
+    /// Total trees in the source ensemble.
+    pub n_trees: usize,
+}
+
+/// Compiler error.
+#[derive(Debug, PartialEq)]
+pub enum CompileError {
+    /// A tree has more leaves than a core has words.
+    TreeTooLarge { tree: u32, leaves: usize, capacity: usize },
+    /// Model needs more cores than the chip provides.
+    ChipOverflow { needed: usize, available: usize },
+    /// Quantizer precision exceeds the CAM's 8-bit macro-cell.
+    PrecisionUnsupported { n_bits: u8 },
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::TreeTooLarge { tree, leaves, capacity } => {
+                write!(f, "tree {tree} has {leaves} leaves > core capacity {capacity}")
+            }
+            CompileError::ChipOverflow { needed, available } => {
+                write!(f, "model needs {needed} cores > {available} available")
+            }
+            CompileError::PrecisionUnsupported { n_bits } => {
+                write!(f, "{n_bits}-bit features exceed the 8-bit macro-cell")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// Compile an ensemble into a [`CamProgram`].
+///
+/// Placement (§III-A): trees are grouped by class (so each core is
+/// class-uniform, Fig. 7b) and packed round-robin over the minimum number
+/// of cores whose 256-word budget fits them. If `options.replicas` > 1 (or
+/// 0 = auto) the whole layout is replicated into spare cores for input
+/// batching (Fig. 7c).
+pub fn compile(model: &Ensemble, options: &CompileOptions) -> Result<CamProgram, CompileError> {
+    if model.quantizer.n_bits > 8 {
+        return Err(CompileError::PrecisionUnsupported { n_bits: model.quantizer.n_bits });
+    }
+    let n_bins = model.quantizer.n_bins() as u16;
+    let capacity = options.core_rows;
+
+    // Extract rows per tree, grouped by class.
+    let k = model.task.n_outputs().max(1);
+    let mut class_trees: Vec<Vec<(u32, Vec<CamRow>)>> = vec![Vec::new(); k];
+    for (t, tree) in model.trees.iter().enumerate() {
+        let class = model.tree_class[t];
+        let rows = extract_rows(tree, model.n_features, n_bins, class, t as u32);
+        if rows.len() > capacity {
+            return Err(CompileError::TreeTooLarge {
+                tree: t as u32,
+                leaves: rows.len(),
+                capacity,
+            });
+        }
+        class_trees[class as usize].push((t as u32, rows));
+    }
+
+    // Per class: round-robin packing over the minimal core count.
+    let mut cores: Vec<CoreImage> = Vec::new();
+    for (class, trees) in class_trees.iter().enumerate() {
+        if trees.is_empty() {
+            continue;
+        }
+        let total: usize = trees.iter().map(|(_, r)| r.len()).sum();
+        let mut n_cores = total.div_ceil(capacity).max(1);
+        'retry: loop {
+            let mut imgs: Vec<CoreImage> = (0..n_cores)
+                .map(|_| CoreImage {
+                    rows: Vec::new(),
+                    trees: Vec::new(),
+                    class: class as u16,
+                    replica: 0,
+                })
+                .collect();
+            for (i, (tid, rows)) in trees.iter().enumerate() {
+                // Round-robin with first-fit fallback.
+                let start = i % n_cores;
+                let mut placed = false;
+                for off in 0..n_cores {
+                    let c = (start + off) % n_cores;
+                    if imgs[c].rows.len() + rows.len() <= capacity {
+                        imgs[c].rows.extend(rows.iter().cloned());
+                        imgs[c].trees.push(*tid);
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    // Fragmentation: grow the core count and repack.
+                    n_cores += 1;
+                    continue 'retry;
+                }
+            }
+            cores.extend(imgs);
+            break;
+        }
+    }
+
+    let model_cores = cores.len();
+    if model_cores > options.chip_cores {
+        return Err(CompileError::ChipOverflow {
+            needed: model_cores,
+            available: options.chip_cores,
+        });
+    }
+
+    // Replication for batching.
+    let max_replicas = (options.chip_cores / model_cores).max(1);
+    let n_replicas = match options.replicas {
+        0 => max_replicas,
+        r => r.min(max_replicas),
+    };
+
+    let noc = NocConfig::build(&cores, n_replicas, options.chip_cores);
+
+    Ok(CamProgram {
+        name: model.name.clone(),
+        task: model.task,
+        n_features: model.n_features,
+        n_bins,
+        n_bits: model.quantizer.n_bits,
+        base_score: model.base_score.clone(),
+        cores,
+        n_replicas,
+        noc,
+        quantizer: model.quantizer.clone(),
+        n_trees: model.n_trees(),
+    })
+}
+
+impl CamProgram {
+    /// Cores used by one replica.
+    pub fn cores_per_replica(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Total cores used on chip (all replicas).
+    pub fn total_cores(&self) -> usize {
+        self.cores.len() * self.n_replicas
+    }
+
+    /// Max trees mapped to any single core (drives pipeline bubbles, Eq. 5).
+    pub fn max_trees_per_core(&self) -> usize {
+        self.cores.iter().map(|c| c.n_trees_core()).max().unwrap_or(0)
+    }
+
+    /// Total CAM rows (≈ total ensemble leaves).
+    pub fn total_rows(&self) -> usize {
+        self.cores.iter().map(|c| c.rows.len()).sum()
+    }
+
+    // ---- serialization ---------------------------------------------------
+    pub fn to_json(&self) -> Json {
+        let mut cores = Vec::with_capacity(self.cores.len());
+        for c in &self.cores {
+            let mut lo = Vec::new();
+            let mut hi = Vec::new();
+            let mut leaf = Vec::new();
+            let mut class = Vec::new();
+            let mut tree = Vec::new();
+            for r in &c.rows {
+                lo.extend(r.lo.iter().map(|&v| Json::Num(v as f64)));
+                hi.extend(r.hi.iter().map(|&v| Json::Num(v as f64)));
+                leaf.push(Json::Num(r.leaf as f64));
+                class.push(Json::Num(r.class as f64));
+                tree.push(Json::Num(r.tree as f64));
+            }
+            let mut o = Json::obj();
+            o.set("lo", Json::Arr(lo))
+                .set("hi", Json::Arr(hi))
+                .set("leaf", Json::Arr(leaf))
+                .set("class", Json::Arr(class))
+                .set("tree", Json::Arr(tree))
+                .set("trees", Json::from_usize_slice(
+                    &c.trees.iter().map(|&t| t as usize).collect::<Vec<_>>(),
+                ))
+                .set("core_class", Json::Num(c.class as f64))
+                .set("replica", Json::Num(c.replica as f64));
+            cores.push(o);
+        }
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("task", Json::Str(self.task.name()))
+            .set("n_classes", Json::Num(self.task.n_classes() as f64))
+            .set("n_features", Json::Num(self.n_features as f64))
+            .set("n_bins", Json::Num(self.n_bins as f64))
+            .set("n_bits", Json::Num(self.n_bits as f64))
+            .set("n_trees", Json::Num(self.n_trees as f64))
+            .set("n_replicas", Json::Num(self.n_replicas as f64))
+            .set("base_score", Json::from_f32_slice(&self.base_score))
+            .set("cores", Json::Arr(cores))
+            .set("quant_bits", Json::Num(self.quantizer.n_bits as f64))
+            .set(
+                "quant_edges",
+                Json::Arr(self.quantizer.edges.iter().map(|e| Json::from_f32_slice(e)).collect()),
+            );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<CamProgram, String> {
+        let task = match j.req_str("task")? {
+            "regression" => Task::Regression,
+            "binary" => Task::Binary,
+            s if s.starts_with("multiclass") => Task::MultiClass(j.req_usize("n_classes")?),
+            s => return Err(format!("unknown task `{s}`")),
+        };
+        let n_features = j.req_usize("n_features")?;
+        let mut cores = Vec::new();
+        for cj in j.req_arr("cores")? {
+            let lo = cj.req("lo")?.f64_vec()?;
+            let hi = cj.req("hi")?.f64_vec()?;
+            let leaf = cj.req("leaf")?.f32_vec()?;
+            let class = cj.req("class")?.usize_vec()?;
+            let tree = cj.req("tree")?.usize_vec()?;
+            let n_rows = leaf.len();
+            let mut rows = Vec::with_capacity(n_rows);
+            for r in 0..n_rows {
+                rows.push(CamRow {
+                    lo: lo[r * n_features..(r + 1) * n_features].iter().map(|&v| v as u16).collect(),
+                    hi: hi[r * n_features..(r + 1) * n_features].iter().map(|&v| v as u16).collect(),
+                    leaf: leaf[r],
+                    class: class[r] as u16,
+                    tree: tree[r] as u32,
+                });
+            }
+            cores.push(CoreImage {
+                rows,
+                trees: cj.req("trees")?.usize_vec()?.into_iter().map(|t| t as u32).collect(),
+                class: cj.req_usize("core_class")? as u16,
+                replica: cj.req_usize("replica")? as u32,
+            });
+        }
+        let n_replicas = j.req_usize("n_replicas")?;
+        let noc = NocConfig::build(&cores, n_replicas, CHIP_CORES);
+        let edges = j
+            .req_arr("quant_edges")?
+            .iter()
+            .map(|e| e.f32_vec())
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(CamProgram {
+            name: j.req_str("name")?.to_string(),
+            task,
+            n_features,
+            n_bins: j.req_usize("n_bins")? as u16,
+            n_bits: j.req_usize("n_bits")? as u8,
+            base_score: j.req("base_score")?.f32_vec()?,
+            cores,
+            n_replicas,
+            noc,
+            quantizer: FeatureQuantizer { n_bits: j.req_usize("quant_bits")? as u8, edges },
+            n_trees: j.req_usize("n_trees")?,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<CamProgram, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        CamProgram::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::by_name;
+    use crate::trees::{gbdt, GbdtParams};
+
+    fn small_model() -> Ensemble {
+        let d = by_name("churn").unwrap().generate_n(1200);
+        gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 12, max_leaves: 16, ..Default::default() },
+            None,
+        )
+    }
+
+    #[test]
+    fn compiles_within_capacity() {
+        let m = small_model();
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        assert_eq!(p.n_trees, 12);
+        assert!(p.cores.iter().all(|c| c.rows.len() <= CORE_ROWS));
+        // 12 trees × ≤16 leaves = ≤192 rows → fits one core.
+        assert_eq!(p.cores_per_replica(), 1);
+        assert_eq!(p.total_rows(), m.total_leaves());
+    }
+
+    #[test]
+    fn small_core_forces_spill() {
+        let m = small_model();
+        let opts = CompileOptions { core_rows: 32, ..Default::default() };
+        let p = compile(&m, &opts).unwrap();
+        assert!(p.cores_per_replica() > 1);
+        assert!(p.cores.iter().all(|c| c.rows.len() <= 32));
+        assert_eq!(p.total_rows(), m.total_leaves());
+    }
+
+    #[test]
+    fn tree_too_large_rejected() {
+        let d = by_name("churn").unwrap().generate_n(3000);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 1, max_leaves: 64, max_depth: 16, ..Default::default() },
+            None,
+        );
+        let opts = CompileOptions { core_rows: 8, ..Default::default() };
+        match compile(&m, &opts) {
+            Err(CompileError::TreeTooLarge { capacity: 8, .. }) => {}
+            other => panic!("expected TreeTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chip_overflow_rejected() {
+        let m = small_model();
+        let opts = CompileOptions { core_rows: 16, chip_cores: 2, ..Default::default() };
+        assert!(matches!(compile(&m, &opts), Err(CompileError::ChipOverflow { .. })));
+    }
+
+    #[test]
+    fn cores_are_class_uniform() {
+        let d = by_name("eye").unwrap().generate_n(1500);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 10, max_leaves: 32, ..Default::default() },
+            None,
+        );
+        let opts = CompileOptions { core_rows: 64, ..Default::default() };
+        let p = compile(&m, &opts).unwrap();
+        for c in &p.cores {
+            assert!(c.rows.iter().all(|r| r.class == c.class));
+        }
+        // All three classes present.
+        let mut classes: Vec<u16> = p.cores.iter().map(|c| c.class).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        assert_eq!(classes, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn auto_replication_fills_chip() {
+        let m = small_model();
+        let opts = CompileOptions { replicas: 0, chip_cores: 64, ..Default::default() };
+        let p = compile(&m, &opts).unwrap();
+        assert_eq!(p.cores_per_replica(), 1);
+        assert_eq!(p.n_replicas, 64);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = small_model();
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let back = CamProgram::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.n_trees, p.n_trees);
+        assert_eq!(back.cores.len(), p.cores.len());
+        for (a, b) in p.cores.iter().zip(&back.cores) {
+            assert_eq!(a.rows, b.rows);
+            assert_eq!(a.trees, b.trees);
+        }
+        assert_eq!(back.base_score, p.base_score);
+    }
+
+    #[test]
+    fn precision_guard() {
+        let d = by_name("telco").unwrap().generate_n(600);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 2, max_leaves: 4, n_bits: 11, ..Default::default() },
+            None,
+        );
+        assert!(matches!(
+            compile(&m, &CompileOptions::default()),
+            Err(CompileError::PrecisionUnsupported { n_bits: 11 })
+        ));
+    }
+}

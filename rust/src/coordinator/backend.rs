@@ -1,0 +1,166 @@
+//! Pluggable inference backends for the serving engine.
+//!
+//! Three backends implement the same contract and must agree numerically
+//! (integration-tested in `rust/tests/end_to_end.rs`):
+//!
+//! * [`CpuExactBackend`] — the reference `Ensemble` tree-walk (software
+//!   baseline);
+//! * [`FunctionalBackend`] — the analog-CAM functional model (bit-accurate
+//!   chip semantics, defect-injectable);
+//! * [`XlaBackend`] — the AOT-compiled Pallas/XLA artifact on PJRT (the
+//!   production hot path).
+
+use crate::compiler::{CamEngine, CamProgram};
+use crate::data::Task;
+use crate::runtime::XlaCamEngine;
+use crate::trees::Ensemble;
+use anyhow::Result;
+
+/// A batch inference backend. `&mut self` because backends may keep
+/// scratch state; each backend instance is owned by one worker thread.
+pub trait Backend: Send {
+    fn name(&self) -> &'static str;
+    /// Preferred device batch size.
+    fn max_batch(&self) -> usize;
+    fn task(&self) -> Task;
+    /// Logits (base score included) for a batch of quantized bin rows.
+    fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>>;
+
+    /// CP decision per row.
+    fn predict(&mut self, batch: &[Vec<u16>]) -> Result<Vec<f32>> {
+        let task = self.task();
+        Ok(self.infer(batch)?.iter().map(|l| task.decide(l)).collect())
+    }
+}
+
+/// Exact CPU tree-walk reference.
+pub struct CpuExactBackend {
+    pub model: Ensemble,
+}
+
+impl Backend for CpuExactBackend {
+    fn name(&self) -> &'static str {
+        "cpu-exact"
+    }
+
+    fn max_batch(&self) -> usize {
+        64
+    }
+
+    fn task(&self) -> Task {
+        self.model.task
+    }
+
+    fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
+        Ok(batch.iter().map(|bins| self.model.logits_bins(bins)).collect())
+    }
+}
+
+/// Analog-CAM functional model backend.
+pub struct FunctionalBackend {
+    pub engine: CamEngine,
+}
+
+impl FunctionalBackend {
+    pub fn new(program: &CamProgram) -> FunctionalBackend {
+        FunctionalBackend { engine: CamEngine::new(program) }
+    }
+}
+
+impl Backend for FunctionalBackend {
+    fn name(&self) -> &'static str {
+        "cam-functional"
+    }
+
+    fn max_batch(&self) -> usize {
+        64
+    }
+
+    fn task(&self) -> Task {
+        self.engine.task
+    }
+
+    fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
+        Ok(batch.iter().map(|bins| self.engine.infer_bins(bins)).collect())
+    }
+}
+
+/// AOT XLA artifact backend (PJRT CPU).
+pub struct XlaBackend {
+    pub engine: XlaCamEngine,
+}
+
+// SAFETY: `XlaCamEngine` is not auto-Send because the `xla` crate wraps
+// PJRT handles in `Rc` + raw pointers. Every `Rc` clone of the client
+// lives *inside* the engine struct (client + the buffers holding client
+// back-references), so moving the whole engine into exactly one worker
+// thread — the only thing `Server::start` does — transfers all owners
+// together and no cross-thread aliasing can occur. The engine is never
+// shared (&-aliased) across threads; `Backend::infer` takes `&mut self`
+// on the owning worker.
+unsafe impl Send for XlaBackend {}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-aot"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.engine.max_batch()
+    }
+
+    fn task(&self) -> Task {
+        self.engine.task
+    }
+
+    fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(batch.len());
+        for chunk in batch.chunks(self.engine.max_batch()) {
+            out.extend(self.engine.infer_bins_batch(chunk)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::data::by_name;
+    use crate::trees::{gbdt, GbdtParams};
+
+    fn setup() -> (crate::data::Dataset, Ensemble, CamProgram) {
+        let d = by_name("telco").unwrap().generate_n(700);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 6, max_leaves: 4, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        (d, m, p)
+    }
+
+    #[test]
+    fn functional_and_cpu_backends_agree() {
+        let (d, m, p) = setup();
+        let mut cpu = CpuExactBackend { model: m };
+        let mut cam = FunctionalBackend::new(&p);
+        let bins: Vec<Vec<u16>> =
+            (0..32).map(|i| p.quantizer.bin_row(d.row(i))).collect();
+        let a = cpu.predict(&bins).unwrap();
+        let b = cam.predict(&bins).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(cpu.task(), cam.task());
+    }
+
+    #[test]
+    fn default_predict_applies_decision() {
+        let (d, m, p) = setup();
+        let task = m.task;
+        let mut cpu = CpuExactBackend { model: m };
+        let bins = vec![p.quantizer.bin_row(d.row(0))];
+        let logits = cpu.infer(&bins).unwrap();
+        let preds = cpu.predict(&bins).unwrap();
+        assert_eq!(preds[0], task.decide(&logits[0]));
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 serving coordinator: pluggable inference backends, a dynamic
+//! batcher + worker server, and a multi-model request router — the
+//! host-side system for the PCIe-card deployment the paper envisions
+//! (§III-D), patterned after vLLM's router/worker split.
+
+pub mod backend;
+pub mod router;
+pub mod server;
+
+pub use backend::{Backend, CpuExactBackend, FunctionalBackend, XlaBackend};
+pub use router::Router;
+pub use server::{BatchPolicy, Reply, Server, ServerStats};

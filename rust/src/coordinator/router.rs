@@ -1,0 +1,130 @@
+//! Request router: the multi-model front end.
+//!
+//! §III-D: "multiple unique models can be mapped to the accelerator, by
+//! assigning a different batch to each model". The router owns the
+//! quantizers (the host-side "DAC"), routes raw feature rows to the right
+//! model's server, and exposes aggregate metrics.
+
+use super::server::{BatchPolicy, Reply, Server};
+use super::backend::Backend;
+use crate::data::FeatureQuantizer;
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+
+struct Route {
+    server: Server,
+    quantizer: FeatureQuantizer,
+    n_features: usize,
+}
+
+/// Routes requests by model name.
+#[derive(Default)]
+pub struct Router {
+    routes: BTreeMap<String, Route>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Register a model: its quantizer + a backend to serve it.
+    pub fn register(
+        &mut self,
+        name: &str,
+        quantizer: FeatureQuantizer,
+        backend: Box<dyn Backend>,
+        policy: BatchPolicy,
+    ) {
+        let n_features = quantizer.edges.len();
+        let server = Server::start(backend, policy, n_features);
+        self.routes.insert(name.to_string(), Route { server, quantizer, n_features });
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.routes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Async submit of a raw feature row.
+    pub fn submit(&self, model: &str, row: &[f32]) -> Result<Receiver<Reply>, String> {
+        let route = self.routes.get(model).ok_or_else(|| format!("unknown model `{model}`"))?;
+        if row.len() != route.n_features {
+            return Err(format!(
+                "model `{model}` expects {} features, got {}",
+                route.n_features,
+                row.len()
+            ));
+        }
+        Ok(route.server.submit(route.quantizer.bin_row(row)))
+    }
+
+    /// Blocking inference.
+    pub fn infer(&self, model: &str, row: &[f32]) -> Result<Reply, String> {
+        Ok(self
+            .submit(model, row)?
+            .recv()
+            .map_err(|_| format!("model `{model}` worker dropped the request"))?)
+    }
+
+    /// Per-model (requests, mean batch) metrics.
+    pub fn stats(&self) -> Vec<(String, u64, f64)> {
+        self.routes
+            .iter()
+            .map(|(name, r)| {
+                let s = r.server.stats();
+                (name.clone(), s.requests, s.mean_batch)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::coordinator::backend::FunctionalBackend;
+    use crate::data::by_name;
+    use crate::trees::{gbdt, GbdtParams};
+
+    fn add_model(router: &mut Router, dataset: &str) -> (crate::data::Dataset, crate::trees::Ensemble) {
+        let d = by_name(dataset).unwrap().generate_n(600);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 5, max_leaves: 8, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        router.register(
+            dataset,
+            p.quantizer.clone(),
+            Box::new(FunctionalBackend::new(&p)),
+            BatchPolicy::default(),
+        );
+        (d, m)
+    }
+
+    #[test]
+    fn routes_multiple_models() {
+        let mut router = Router::new();
+        let (d1, m1) = add_model(&mut router, "churn");
+        let (d2, m2) = add_model(&mut router, "telco");
+        assert_eq!(router.models(), vec!["churn", "telco"]);
+        for i in 0..20 {
+            let r1 = router.infer("churn", d1.row(i)).unwrap();
+            assert_eq!(r1.prediction, m1.predict(d1.row(i)));
+            let r2 = router.infer("telco", d2.row(i)).unwrap();
+            assert_eq!(r2.prediction, m2.predict(d2.row(i)));
+        }
+        let stats = router.stats();
+        assert_eq!(stats.len(), 2);
+        assert!(stats.iter().all(|(_, reqs, _)| *reqs == 20));
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_bad_arity() {
+        let mut router = Router::new();
+        let (d, _) = add_model(&mut router, "churn");
+        assert!(router.infer("nope", d.row(0)).is_err());
+        assert!(router.infer("churn", &[1.0, 2.0]).is_err());
+    }
+}

@@ -1,0 +1,280 @@
+//! Serving engine: dynamic batcher + worker thread owning a backend.
+//!
+//! The deployment the paper envisions (§III-D: an X-TIME PCIe card that a
+//! host CPU offloads decision-tree inference to) is a *serving* problem:
+//! requests arrive one by one, the card wants full batches. This module
+//! implements the host-side coordination: a lock-free-ish request queue,
+//! a dynamic batcher (batch up to `max_batch` or `max_wait`), and a worker
+//! thread that owns the device engine — mirroring vLLM-style router/worker
+//! separation at a single-node scale.
+
+use super::backend::Backend;
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush a partial batch after this long (µs).
+    pub max_wait_us: u64,
+    /// Cap batches at this size (0 = backend's max_batch).
+    pub max_batch: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_wait_us: 200, max_batch: 0 }
+    }
+}
+
+struct Request {
+    bins: Vec<u16>,
+    enqueued: Instant,
+    reply: Sender<Reply>,
+}
+
+/// Response to one request.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub logits: Vec<f32>,
+    pub prediction: f32,
+    /// Time spent queued + batched + inferred, as measured by the server.
+    pub latency: Duration,
+    /// Size of the device batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// Aggregated server-side counters.
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batch_rows: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// Point-in-time server statistics.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub errors: u64,
+}
+
+/// Handle to a running inference server.
+pub struct Server {
+    tx: Option<Sender<Request>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    counters: Arc<Counters>,
+    latencies: Arc<Mutex<Vec<f64>>>,
+    n_features: usize,
+}
+
+impl Server {
+    /// Spawn the worker thread owning `backend`.
+    pub fn start(mut backend: Box<dyn Backend>, policy: BatchPolicy, n_features: usize) -> Server {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let counters = Arc::new(Counters::default());
+        let latencies = Arc::new(Mutex::new(Vec::new()));
+        let c2 = counters.clone();
+        let l2 = latencies.clone();
+        let worker = std::thread::spawn(move || {
+            let max_batch = if policy.max_batch == 0 {
+                backend.max_batch()
+            } else {
+                policy.max_batch.min(backend.max_batch())
+            };
+            let wait = Duration::from_micros(policy.max_wait_us);
+            let task = backend.task();
+            while let Ok(first) = rx.recv() {
+                // Dynamic batching: collect until full or the wait expires.
+                let mut reqs = vec![first];
+                let deadline = Instant::now() + wait;
+                while reqs.len() < max_batch {
+                    match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                        Ok(r) => reqs.push(r),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                let batch: Vec<Vec<u16>> = reqs.iter().map(|r| r.bins.clone()).collect();
+                match backend.infer(&batch) {
+                    Ok(logits) => {
+                        c2.batches.fetch_add(1, Ordering::Relaxed);
+                        c2.batch_rows.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+                        let mut lat_log = l2.lock().unwrap();
+                        for (req, l) in reqs.into_iter().zip(logits) {
+                            let latency = req.enqueued.elapsed();
+                            lat_log.push(latency.as_secs_f64());
+                            let _ = req.reply.send(Reply {
+                                prediction: task.decide(&l),
+                                logits: l,
+                                latency,
+                                batch_size: batch.len(),
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        c2.errors.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+                        eprintln!("backend error: {e:#}");
+                        // Drop reply senders → callers see disconnect.
+                    }
+                }
+            }
+        });
+        Server { tx: Some(tx), worker: Some(worker), counters, latencies, n_features }
+    }
+
+    /// Submit a quantized request; returns the reply channel.
+    pub fn submit(&self, bins: Vec<u16>) -> Receiver<Reply> {
+        assert_eq!(bins.len(), self.n_features, "feature arity mismatch");
+        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        self.tx
+            .as_ref()
+            .expect("server stopped")
+            .send(Request { bins, enqueued: Instant::now(), reply: rtx })
+            .expect("worker gone");
+        rrx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer_blocking(&self, bins: Vec<u16>) -> Reply {
+        self.submit(bins).recv().expect("worker dropped request")
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let batches = self.counters.batches.load(Ordering::Relaxed);
+        let rows = self.counters.batch_rows.load(Ordering::Relaxed);
+        ServerStats {
+            requests: self.counters.requests.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { rows as f64 / batches as f64 },
+            errors: self.counters.errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Latency summary (seconds) over everything served so far.
+    pub fn latency_summary(&self) -> Option<Summary> {
+        let l = self.latencies.lock().unwrap();
+        if l.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&l))
+        }
+    }
+
+    /// Stop the worker (drains in-flight requests).
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::coordinator::backend::{CpuExactBackend, FunctionalBackend};
+    use crate::data::by_name;
+    use crate::trees::{gbdt, GbdtParams};
+
+    fn setup() -> (crate::data::Dataset, crate::trees::Ensemble, crate::compiler::CamProgram) {
+        let d = by_name("churn").unwrap().generate_n(800);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 8, max_leaves: 8, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        (d, m, p)
+    }
+
+    #[test]
+    fn serves_correct_predictions() {
+        let (d, m, p) = setup();
+        let server = Server::start(
+            Box::new(FunctionalBackend::new(&p)),
+            BatchPolicy::default(),
+            p.n_features,
+        );
+        for i in 0..40 {
+            let bins = p.quantizer.bin_row(d.row(i));
+            let reply = server.infer_blocking(bins);
+            assert_eq!(reply.prediction, m.predict(d.row(i)), "row {i}");
+            assert!(reply.batch_size >= 1);
+        }
+        let stats = server.stats();
+        assert_eq!(stats.requests, 40);
+        assert_eq!(stats.errors, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_concurrent_load() {
+        let (d, m, p) = setup();
+        let server = Arc::new(Server::start(
+            Box::new(CpuExactBackend { model: m }),
+            BatchPolicy { max_wait_us: 2_000, max_batch: 16 },
+            p.n_features,
+        ));
+        let n = 200;
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            rxs.push(server.submit(p.quantizer.bin_row(d.row(i % d.n_rows()))));
+        }
+        let mut max_batch_seen = 0;
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            max_batch_seen = max_batch_seen.max(r.batch_size);
+        }
+        // Back-to-back submissions must have been coalesced.
+        assert!(max_batch_seen > 1, "no batching happened");
+        let stats = server.stats();
+        assert!(stats.batches < n as u64);
+        assert!(stats.mean_batch > 1.0);
+    }
+
+    #[test]
+    fn latency_summary_populates() {
+        let (d, _, p) = setup();
+        let server = Server::start(
+            Box::new(FunctionalBackend::new(&p)),
+            BatchPolicy::default(),
+            p.n_features,
+        );
+        for i in 0..10 {
+            server.infer_blocking(p.quantizer.bin_row(d.row(i)));
+        }
+        let s = server.latency_summary().unwrap();
+        assert_eq!(s.n, 10);
+        assert!(s.min > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "feature arity mismatch")]
+    fn rejects_wrong_arity() {
+        let (_, _, p) = setup();
+        let server = Server::start(
+            Box::new(FunctionalBackend::new(&p)),
+            BatchPolicy::default(),
+            p.n_features,
+        );
+        server.submit(vec![0u16; 3]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Tabular dataset container and train/validation/test splitting.
+
+use crate::util::Rng;
+
+/// Learning task, mirroring the paper's three categories (§III-D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Regression,
+    Binary,
+    /// Multi-class with `k` classes.
+    MultiClass(usize),
+}
+
+impl Task {
+    /// Number of logit columns an ensemble produces for this task.
+    pub fn n_outputs(&self) -> usize {
+        match self {
+            Task::Regression | Task::Binary => 1,
+            Task::MultiClass(k) => *k,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Task::Regression => 0,
+            Task::Binary => 2,
+            Task::MultiClass(k) => *k,
+        }
+    }
+
+    pub fn is_classification(&self) -> bool {
+        !matches!(self, Task::Regression)
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Task::Regression => "regression".into(),
+            Task::Binary => "binary".into(),
+            Task::MultiClass(k) => format!("multiclass({k})"),
+        }
+    }
+
+    /// Co-processor decision rule (§III-A): identity for regression,
+    /// threshold at 0 for binary logits, argmax for multi-class.
+    pub fn decide(&self, logits: &[f32]) -> f32 {
+        match self {
+            Task::Regression => logits[0],
+            Task::Binary => (logits[0] > 0.0) as usize as f32,
+            Task::MultiClass(_) => {
+                let mut best = 0usize;
+                for c in 1..logits.len() {
+                    if logits[c] > logits[best] {
+                        best = c;
+                    }
+                }
+                best as f32
+            }
+        }
+    }
+}
+
+/// Row-major dense tabular dataset. Labels are class indices for
+/// classification (stored as f32) or targets for regression.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub task: Task,
+    pub n_features: usize,
+    /// Row-major `[n_rows × n_features]`.
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(name: &str, task: Task, n_features: usize, x: Vec<f32>, y: Vec<f32>) -> Dataset {
+        assert_eq!(x.len(), y.len() * n_features, "x/y shape mismatch");
+        Dataset { name: name.to_string(), task, n_features, x, y }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.y.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    pub fn label(&self, i: usize) -> f32 {
+        self.y[i]
+    }
+
+    pub fn class(&self, i: usize) -> usize {
+        debug_assert!(self.task.is_classification());
+        self.y[i] as usize
+    }
+
+    /// Subset by row indices (copies).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.n_features);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset { name: self.name.clone(), task: self.task, n_features: self.n_features, x, y }
+    }
+
+    /// Deterministic shuffled split into train/val/test by fractions.
+    pub fn split(&self, frac_train: f64, frac_val: f64, seed: u64) -> Split {
+        assert!(frac_train + frac_val < 1.0 + 1e-9);
+        let mut idx: Vec<usize> = (0..self.n_rows()).collect();
+        let mut rng = Rng::new(seed ^ 0x5EED_5417);
+        rng.shuffle(&mut idx);
+        let n_train = (self.n_rows() as f64 * frac_train) as usize;
+        let n_val = (self.n_rows() as f64 * frac_val) as usize;
+        Split {
+            train: self.subset(&idx[..n_train]),
+            val: self.subset(&idx[n_train..n_train + n_val]),
+            test: self.subset(&idx[n_train + n_val..]),
+        }
+    }
+
+    /// Per-class sample counts (classification only).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let k = self.task.n_classes();
+        let mut h = vec![0usize; k];
+        for i in 0..self.n_rows() {
+            h[self.class(i)] += 1;
+        }
+        h
+    }
+}
+
+/// Train/validation/test partition.
+pub struct Split {
+    pub train: Dataset,
+    pub val: Dataset,
+    pub test: Dataset,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let n = 100;
+        let x: Vec<f32> = (0..n * 3).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        Dataset::new("toy", Task::Binary, 3, x, y)
+    }
+
+    #[test]
+    fn row_access() {
+        let d = toy();
+        assert_eq!(d.n_rows(), 100);
+        assert_eq!(d.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn split_partitions_everything() {
+        let d = toy();
+        let s = d.split(0.6, 0.2, 7);
+        assert_eq!(s.train.n_rows() + s.val.n_rows() + s.test.n_rows(), 100);
+        assert_eq!(s.train.n_rows(), 60);
+        assert_eq!(s.val.n_rows(), 20);
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = toy();
+        let a = d.split(0.5, 0.25, 42);
+        let b = d.split(0.5, 0.25, 42);
+        assert_eq!(a.train.y, b.train.y);
+        assert_eq!(a.test.x, b.test.x);
+    }
+
+    #[test]
+    fn class_histogram_sums() {
+        let d = toy();
+        let h = d.class_histogram();
+        assert_eq!(h, vec![50, 50]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        Dataset::new("bad", Task::Binary, 3, vec![0.0; 7], vec![0.0; 2]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Tabular data substrate: dataset container, Table II synthetic dataset
+//! generators, splits and feature quantization.
+
+pub mod dataset;
+pub mod quantize;
+pub mod synth;
+
+pub use dataset::{Dataset, Split, Task};
+pub use quantize::FeatureQuantizer;
+pub use synth::{by_name, catalog, SynthSpec};

@@ -1,0 +1,197 @@
+//! Per-feature quantization to `2^N_bit` bins (paper §III-B, §V-A).
+//!
+//! The X-TIME chip stores thresholds as analog levels with effective 8-bit
+//! (macro-cell) or 4-bit (single-cell) precision. The compiler quantizes
+//! each feature to bin indices using quantile-based bin edges computed on
+//! the training set — the same strategy XGBoost's `hist` method and the
+//! paper's "256 bins per feature" description imply.
+
+use super::dataset::Dataset;
+
+/// Per-feature quantile bin edges mapping f32 features → small integer bins.
+#[derive(Clone, Debug)]
+pub struct FeatureQuantizer {
+    pub n_bits: u8,
+    /// `edges[f]` has `n_bins - 1` interior cut points for feature `f`.
+    pub edges: Vec<Vec<f32>>,
+}
+
+impl FeatureQuantizer {
+    pub fn n_bins(&self) -> usize {
+        1usize << self.n_bits
+    }
+
+    /// Fit quantile edges on a dataset.
+    pub fn fit(data: &Dataset, n_bits: u8) -> FeatureQuantizer {
+        assert!((1..=16).contains(&n_bits));
+        let n_bins = 1usize << n_bits;
+        let mut edges = Vec::with_capacity(data.n_features);
+        let n = data.n_rows();
+        for f in 0..data.n_features {
+            let mut col: Vec<f32> = (0..n).map(|i| data.row(i)[f]).collect();
+            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            col.dedup();
+            let mut cuts = Vec::with_capacity(n_bins - 1);
+            if col.len() <= n_bins {
+                // Few unique values: cut between consecutive uniques.
+                for w in col.windows(2) {
+                    cuts.push(0.5 * (w[0] + w[1]));
+                }
+            } else {
+                for b in 1..n_bins {
+                    let idx = (b * (col.len() - 1)) / n_bins;
+                    let cut = 0.5 * (col[idx] + col[idx + 1]);
+                    if cuts.last().map(|&c| cut > c).unwrap_or(true) {
+                        cuts.push(cut);
+                    }
+                }
+            }
+            edges.push(cuts);
+        }
+        FeatureQuantizer { n_bits, edges }
+    }
+
+    /// Bin index of a raw feature value (binary search over edges).
+    #[inline]
+    pub fn bin(&self, feature: usize, value: f32) -> u16 {
+        let cuts = &self.edges[feature];
+        // partition_point: number of cuts <= value.
+        cuts.partition_point(|&c| c <= value) as u16
+    }
+
+    /// Quantize a full row into bin indices.
+    pub fn bin_row(&self, row: &[f32]) -> Vec<u16> {
+        row.iter().enumerate().map(|(f, &v)| self.bin(f, v)).collect()
+    }
+
+    /// Quantize a threshold into the bin whose *lower edge* is the smallest
+    /// representable value ≥ comparisons against `thresh` (used when
+    /// compiling trained float thresholds into CAM bounds).
+    #[inline]
+    pub fn bin_threshold(&self, feature: usize, thresh: f32) -> u16 {
+        // A sample `v` goes right iff v >= thresh iff bin(v) >= bin_threshold.
+        let cuts = &self.edges[feature];
+        cuts.partition_point(|&c| c < thresh) as u16
+    }
+
+    /// Representative (midpoint) value of a bin, for de-quantization.
+    pub fn bin_center(&self, feature: usize, bin: u16) -> f32 {
+        let cuts = &self.edges[feature];
+        if cuts.is_empty() {
+            return 0.5;
+        }
+        let b = bin as usize;
+        if b == 0 {
+            cuts[0] - 0.5 * (cuts.get(1).copied().unwrap_or(cuts[0] + 1.0) - cuts[0]).abs()
+        } else if b >= cuts.len() {
+            let last = *cuts.last().unwrap();
+            let prev = cuts[cuts.len().saturating_sub(2)];
+            last + 0.5 * (last - prev).abs()
+        } else {
+            0.5 * (cuts[b - 1] + cuts[b])
+        }
+    }
+
+    /// Quantize an entire dataset into a row-major u16 bin matrix.
+    pub fn transform(&self, data: &Dataset) -> Vec<u16> {
+        let mut out = Vec::with_capacity(data.n_rows() * data.n_features);
+        for i in 0..data.n_rows() {
+            for (f, &v) in data.row(i).iter().enumerate() {
+                out.push(self.bin(f, v));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Task;
+    use crate::data::synth::by_name;
+    use crate::util::prop;
+
+    fn fitted(bits: u8) -> (Dataset, FeatureQuantizer) {
+        let d = by_name("churn").unwrap().generate_n(4000);
+        let q = FeatureQuantizer::fit(&d, bits);
+        (d, q)
+    }
+
+    #[test]
+    fn bins_within_range() {
+        let (d, q) = fitted(8);
+        for i in 0..d.n_rows() {
+            for (f, &v) in d.row(i).iter().enumerate() {
+                assert!((q.bin(f, v) as usize) < q.n_bins());
+            }
+        }
+    }
+
+    #[test]
+    fn bins_are_monotone_in_value() {
+        let (_, q) = fitted(8);
+        prop::check(512, 0xB125, |g| {
+            let f = g.usize_in(0, q.edges.len());
+            let a = g.f32_in(0.0, 1.0);
+            let b = g.f32_in(0.0, 1.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            prop::require(q.bin(f, lo) <= q.bin(f, hi), format!("f={f} lo={lo} hi={hi}"))
+        });
+    }
+
+    #[test]
+    fn threshold_consistency() {
+        // v >= t  ⟺  bin(v) >= bin_threshold(t) must hold whenever v and t
+        // do not fall inside the same bin (quantization can't distinguish
+        // values within a bin — that is the 8-bit accuracy loss of Fig. 9a).
+        let (_, q) = fitted(8);
+        prop::check(2048, 0x7123, |g| {
+            let f = g.usize_in(0, q.edges.len());
+            let v = g.f32_in(0.0, 1.0);
+            let t = g.f32_in(0.0, 1.0);
+            let vb = q.bin(f, v);
+            let tb = q.bin_threshold(f, t);
+            let exact = v >= t;
+            let quant = vb >= tb;
+            if vb == q.bin(f, t) {
+                // v and t share a bin: quantization legitimately can't
+                // distinguish them (that's the Fig. 9a precision loss).
+                return Ok(());
+            }
+            prop::require(exact == quant, format!("f={f} v={v} t={t} vb={vb} tb={tb}"))
+        });
+    }
+
+    #[test]
+    fn few_unique_values_get_exact_cuts() {
+        // A binary feature must quantize losslessly even at 2 bits.
+        let x: Vec<f32> = (0..100).flat_map(|i| vec![(i % 2) as f32]).collect();
+        let y: Vec<f32> = (0..100).map(|i| (i % 2) as f32).collect();
+        let d = Dataset::new("bin", Task::Binary, 1, x, y);
+        let q = FeatureQuantizer::fit(&d, 2);
+        assert_ne!(q.bin(0, 0.0), q.bin(0, 1.0));
+    }
+
+    #[test]
+    fn transform_shape() {
+        let (d, q) = fitted(4);
+        let m = q.transform(&d);
+        assert_eq!(m.len(), d.n_rows() * d.n_features);
+        assert!(m.iter().all(|&b| (b as usize) < q.n_bins()));
+    }
+
+    #[test]
+    fn bin_center_roundtrip() {
+        let (_, q) = fitted(8);
+        for f in 0..q.edges.len() {
+            for b in [0u16, 5, 100, 255] {
+                let c = q.bin_center(f, b);
+                let back = q.bin(f, c);
+                // Midpoint of a bin must land back in that bin (clamped at
+                // the extremes where the bin is a half-open ray).
+                let b_clamped = (b as usize).min(q.edges[f].len()) as u16;
+                assert_eq!(back, b_clamped, "f={f} b={b} c={c}");
+            }
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! # X-TIME — an in-memory engine for tree-based ML on tabular data
+//!
+//! Reproduction of Pedretti et al., *"X-TIME: An in-memory engine for
+//! accelerating machine learning on tabular data with CAMs"* (2023).
+//!
+//! The crate implements the complete stack described in DESIGN.md:
+//!
+//! * [`data`] — tabular dataset substrate + Table II synthetic generators;
+//! * [`trees`] — from-scratch GBDT (XGBoost-style) and random-forest
+//!   trainers with exact CPU inference (the software baseline);
+//! * [`compiler`] — the X-TIME compiler: trained ensembles → quantized CAM
+//!   threshold maps, core placement and NoC router configuration;
+//! * [`cam`] — functional analog-CAM model, including the paper's novel
+//!   two-cycle 8-bit-on-4-bit macro-cell (Eq. 3) and defect injection;
+//! * [`sim`] — SST-equivalent cycle-detailed simulator of the 4096-core
+//!   H-tree chip, plus the area/power/energy cost model (Fig. 8);
+//! * [`baselines`] — analytical V100/FIL GPU model and the Booster ASIC
+//!   model used as comparison points in Fig. 10/11;
+//! * [`runtime`] — PJRT (XLA) runtime loading AOT-compiled HLO artifacts
+//!   produced by the JAX/Pallas build pipeline under `python/`;
+//! * [`coordinator`] — the serving engine: request router, dynamic batcher
+//!   and pluggable inference backends;
+//! * [`util`] — offline substrates (PRNG, JSON, CLI, stats, prop tests).
+
+pub mod baselines;
+pub mod bench_support;
+pub mod cam;
+pub mod compiler;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod sim;
+pub mod trees;
+pub mod util;

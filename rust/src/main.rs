@@ -1,0 +1,241 @@
+//! X-TIME command-line interface.
+//!
+//! Subcommands:
+//!   train     — train a Table II model on its synthetic dataset
+//!   compile   — compile a trained model to a CAM program
+//!   simulate  — run the cycle-detailed chip simulation
+//!   serve     — demo serving loop (XLA artifact or functional backend)
+//!   report    — print the Fig. 8 area/power breakdown
+//!
+//! Example:
+//!   xtime train --dataset churn --trees 64 --out /tmp/churn.model.json
+//!   xtime compile --model /tmp/churn.model.json --out /tmp/churn.cam.json
+//!   xtime simulate --program /tmp/churn.cam.json --samples 100000
+//!   xtime serve --program /tmp/churn.cam.json --requests 1000
+
+use std::path::Path;
+use xtime::compiler::{compile, CamProgram, CompileOptions};
+use xtime::coordinator::{BatchPolicy, FunctionalBackend, Server, XlaBackend};
+use xtime::data::{by_name, catalog};
+use xtime::runtime::XlaCamEngine;
+use xtime::sim::{chip_area, chip_peak_power, simulate, ChipConfig, Workload};
+use xtime::trees::{paper_model, train_paper_model, Ensemble};
+use xtime::util::stats::{fmt_si_rate, fmt_si_time};
+use xtime::util::Args;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("usage: xtime <train|compile|simulate|serve|report> [options]");
+        eprintln!("datasets: {}", catalog().iter().map(|s| s.name).collect::<Vec<_>>().join(", "));
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    match cmd.as_str() {
+        "train" => cmd_train(&argv),
+        "compile" => cmd_compile(&argv),
+        "simulate" => cmd_simulate(&argv),
+        "serve" => cmd_serve(&argv),
+        "report" => cmd_report(),
+        other => {
+            eprintln!("unknown command `{other}`");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse(args: Args, argv: &[String]) -> Args {
+    match args.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(argv: &[String]) {
+    let a = parse(
+        Args::new("xtime train", "train a Table II model on its synthetic dataset")
+            .opt("dataset", Some("churn"), "dataset name (see Table II)")
+            .opt("trees", Some("0"), "tree count override (0 = paper topology)")
+            .opt("bits", Some("8"), "feature quantization bits (4/8)")
+            .opt("samples", Some("0"), "training rows (0 = catalog default)")
+            .opt("out", None, "output model JSON path"),
+        argv,
+    );
+    let name = a.get("dataset");
+    let spec = by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown dataset `{name}`");
+        std::process::exit(2);
+    });
+    let n = a.get_usize("samples");
+    let data = if n == 0 { spec.generate() } else { spec.generate_n(n) };
+    let model_spec = paper_model(&name).unwrap();
+    let trees = a.get_usize("trees");
+    let model = train_paper_model(
+        &data,
+        &model_spec,
+        a.get_usize("bits") as u8,
+        model_spec.n_leaves_max,
+        if trees == 0 { None } else { Some(trees) },
+    );
+    let out = a.get("out");
+    model.save(Path::new(&out)).expect("writing model");
+    println!(
+        "trained {} ({}): {} trees, max {} leaves, depth {} → {out}",
+        name,
+        model_spec.kind.name(),
+        model.n_trees(),
+        model.max_leaves(),
+        model.max_depth()
+    );
+}
+
+fn load_model(path: &str) -> Ensemble {
+    Ensemble::load(Path::new(path)).unwrap_or_else(|e| {
+        eprintln!("loading model: {e}");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_compile(argv: &[String]) {
+    let a = parse(
+        Args::new("xtime compile", "compile a trained model to a CAM program")
+            .opt("model", None, "input model JSON")
+            .opt("replicas", Some("1"), "batch replicas (0 = fill the chip)")
+            .opt("out", None, "output program JSON"),
+        argv,
+    );
+    let model = load_model(&a.get("model"));
+    let opts = CompileOptions { replicas: a.get_usize("replicas"), ..Default::default() };
+    let program = compile(&model, &opts).unwrap_or_else(|e| {
+        eprintln!("compile error: {e}");
+        std::process::exit(2);
+    });
+    let out = a.get("out");
+    program.save(Path::new(&out)).expect("writing program");
+    println!(
+        "compiled {}: {} cores/replica × {} replicas, {} rows, {} routers ({} accumulating) → {out}",
+        program.name,
+        program.cores_per_replica(),
+        program.n_replicas,
+        program.total_rows(),
+        program.noc.n_routers(),
+        program.noc.n_accumulating(),
+    );
+}
+
+fn load_program(path: &str) -> CamProgram {
+    CamProgram::load(Path::new(path)).unwrap_or_else(|e| {
+        eprintln!("loading program: {e}");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_simulate(argv: &[String]) {
+    let a = parse(
+        Args::new("xtime simulate", "cycle-detailed chip simulation")
+            .opt("program", None, "compiled CAM program JSON")
+            .opt("samples", Some("100000"), "samples to stream")
+            .opt("interval", Some("0"), "inject interval in cycles (0 = saturate)"),
+        argv,
+    );
+    let program = load_program(&a.get("program"));
+    let cfg = ChipConfig::default();
+    let wl = Workload { n_samples: a.get_usize("samples"), inject_interval: a.get_u64("interval") };
+    let rep = simulate(&program, &cfg, &wl, 0.05);
+    println!("samples           : {}", rep.n_samples);
+    println!("makespan          : {} cycles", rep.makespan_cycles);
+    println!("latency (unloaded): {}", fmt_si_time(rep.latency_ns.min * 1e-9));
+    println!("latency (mean)    : {}", fmt_si_time(rep.latency_ns.mean * 1e-9));
+    println!("throughput        : {}", fmt_si_rate(rep.throughput_msps * 1e6, "Samples"));
+    println!("energy/decision   : {:.3} nJ", rep.energy_nj_per_decision);
+    println!("bottleneck        : {}", rep.bottleneck);
+    println!(
+        "utilization       : input {:.2} core {:.2} output {:.2} cp {:.2}",
+        rep.util_input, rep.util_core, rep.util_output, rep.util_cp
+    );
+}
+
+fn cmd_serve(argv: &[String]) {
+    let a = parse(
+        Args::new("xtime serve", "demo serving loop over synthetic requests")
+            .opt("program", None, "compiled CAM program JSON")
+            .opt("requests", Some("1000"), "number of requests")
+            .opt("backend", Some("auto"), "auto | xla | functional")
+            .opt("artifacts", Some("artifacts"), "AOT artifact directory"),
+        argv,
+    );
+    let program = load_program(&a.get("program"));
+    let n = a.get_usize("requests");
+    let Some(spec) = by_name(&program.name) else {
+        eprintln!("program's dataset `{}` not in catalog", program.name);
+        std::process::exit(2);
+    };
+    let data = spec.generate_n(n.clamp(256, 10_000));
+
+    let backend_kind = a.get("backend");
+    let artifacts = a.get("artifacts");
+    let backend: Box<dyn xtime::coordinator::Backend> = match backend_kind.as_str() {
+        "functional" => {
+            println!("backend: cam-functional");
+            Box::new(FunctionalBackend::new(&program))
+        }
+        _ => match XlaCamEngine::new(&program, Path::new(&artifacts), 64) {
+            Ok(engine) => {
+                println!("backend: xla-aot (bucket {})", engine.bucket().file);
+                Box::new(XlaBackend { engine })
+            }
+            Err(e) if backend_kind == "auto" => {
+                println!("backend: cam-functional (XLA unavailable: {e})");
+                Box::new(FunctionalBackend::new(&program))
+            }
+            Err(e) => {
+                eprintln!("XLA backend: {e:#}");
+                std::process::exit(2);
+            }
+        },
+    };
+
+    let server = Server::start(backend, BatchPolicy::default(), program.n_features);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n {
+        pending.push(server.submit(program.quantizer.bin_row(data.row(i % data.n_rows()))));
+    }
+    let mut preds = 0usize;
+    for rx in pending {
+        let _ = rx.recv().expect("reply");
+        preds += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    let lat = server.latency_summary().unwrap();
+    println!("served {preds} requests in {}", fmt_si_time(dt));
+    println!("throughput : {}", fmt_si_rate(preds as f64 / dt, "req"));
+    println!(
+        "latency    : p50 {} p95 {} max {}",
+        fmt_si_time(lat.median),
+        fmt_si_time(lat.p95),
+        fmt_si_time(lat.max)
+    );
+    println!("batching   : {} batches, mean size {:.1}", stats.batches, stats.mean_batch);
+}
+
+fn cmd_report() {
+    let cfg = ChipConfig::default();
+    let area = chip_area(&cfg);
+    let power = chip_peak_power(&cfg);
+    println!("X-TIME chip @16nm, {} cores, {:.1} GHz", cfg.n_cores, cfg.clock_ghz);
+    println!("\nArea breakdown (Fig. 8a):");
+    for (name, v) in area.rows("mm²") {
+        println!("  {name:<24} {v:>8.2}");
+    }
+    println!("  {:<24} {:>8.2}", "TOTAL (mm²)", area.total());
+    println!("\nPeak power breakdown (Fig. 8b):");
+    for (name, v) in power.rows("W") {
+        println!("  {name:<24} {v:>8.2}");
+    }
+    println!("  {:<24} {:>8.2}", "TOTAL (W)", power.total());
+}

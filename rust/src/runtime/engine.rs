@@ -1,0 +1,228 @@
+//! XLA/PJRT inference engine: loads an AOT-compiled HLO bucket and serves
+//! a compiled [`CamProgram`] on the CPU PJRT client.
+//!
+//! Layer boundaries (DESIGN.md §1): Python lowered the L2 graph once at
+//! build time; this module only *loads and executes* `artifacts/*.hlo.txt`
+//! — no Python anywhere near the request path.
+//!
+//! Hot-path design: the program tensors (`lo`, `hi`, `leaf`) are uploaded
+//! to device buffers **once** at engine construction; each request batch
+//! only uploads the (tiny) query literal and executes via `execute_b`.
+
+use super::manifest::{BucketInfo, Layout, Manifest};
+use crate::compiler::CamProgram;
+use crate::data::Task;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// PJRT-backed engine for one compiled program.
+pub struct XlaCamEngine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    bucket: BucketInfo,
+    /// Program tensors resident on device.
+    lo_buf: xla::PjRtBuffer,
+    hi_buf: xla::PjRtBuffer,
+    leaf_buf: xla::PjRtBuffer,
+    pub task: Task,
+    base_score: Vec<f32>,
+    n_features: usize,
+    n_outputs: usize,
+    /// Bin-space → 8-bit scale (4-bit programs upshift by 16).
+    scale: i32,
+    layout: Layout,
+}
+
+impl XlaCamEngine {
+    /// Build from a compiled program + artifact directory, choosing the
+    /// cheapest bucket that fits (batch capacity ≥ `batch_hint` preferred).
+    pub fn new(program: &CamProgram, artifacts: &Path, batch_hint: usize) -> Result<XlaCamEngine> {
+        let manifest = Manifest::load(artifacts).map_err(|e| anyhow!(e))?;
+        Self::with_manifest(program, &manifest, batch_hint)
+    }
+
+    pub fn with_manifest(
+        program: &CamProgram,
+        manifest: &Manifest,
+        batch_hint: usize,
+    ) -> Result<XlaCamEngine> {
+        let n_rows = program.total_rows();
+        let n_outputs = program.task.n_outputs();
+        let bucket = manifest
+            .choose(program.n_features, n_rows, n_outputs, batch_hint)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact bucket fits program (F={}, N={n_rows}, K={n_outputs}); \
+                     re-run `make artifacts` with larger buckets or use the functional engine",
+                    program.n_features
+                )
+            })?
+            .clone();
+
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let path = manifest.bucket_path(&bucket);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let exe = client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .with_context(|| format!("compiling {path:?}"))?;
+
+        // Pad program tensors into the bucket's shapes (same conventions
+        // as python/compile/model.py::pad_program).
+        let scale = (256 / program.n_bins.max(1)) as i32;
+        let (nb, fb, kb) = (bucket.rows, bucket.features, bucket.classes);
+        let mut lo = vec![0i32; nb * fb];
+        let mut hi = vec![256i32; nb * fb];
+        let mut leaf = vec![0f32; nb * kb];
+        // Padding rows: never match.
+        for r in n_rows..nb {
+            for f in 0..fb {
+                lo[r * fb + f] = 256;
+                hi[r * fb + f] = 0;
+            }
+        }
+        let mut r = 0usize;
+        for core in &program.cores {
+            for row in &core.rows {
+                for f in 0..program.n_features {
+                    lo[r * fb + f] = row.lo[f] as i32 * scale;
+                    hi[r * fb + f] = row.hi[f] as i32 * scale;
+                }
+                leaf[r * kb + row.class as usize] = row.leaf;
+                r += 1;
+            }
+        }
+        debug_assert_eq!(r, n_rows);
+
+        let (lo_buf, hi_buf) = match manifest.layout {
+            Layout::TransposedU8 => {
+                // u8 packing with INCLUSIVE upper bound: hi_inc = hi - 1;
+                // never-match padding keeps lo=255 > hi_inc=0.
+                let lo8: Vec<u8> = lo.iter().map(|&v| v.min(255) as u8).collect();
+                let hi8: Vec<u8> = hi.iter().map(|&v| (v - 1).clamp(0, 255) as u8).collect();
+                (
+                    client
+                        .buffer_from_host_buffer::<u8>(&lo8, &[nb, fb], None)
+                        .context("uploading lo bounds (u8)")?,
+                    client
+                        .buffer_from_host_buffer::<u8>(&hi8, &[nb, fb], None)
+                        .context("uploading hi bounds (u8)")?,
+                )
+            }
+            Layout::BatchMajorI32 => (
+                client
+                    .buffer_from_host_buffer::<i32>(&lo, &[nb, fb], None)
+                    .context("uploading lo bounds")?,
+                client
+                    .buffer_from_host_buffer::<i32>(&hi, &[nb, fb], None)
+                    .context("uploading hi bounds")?,
+            ),
+        };
+        let leaf_buf = client
+            .buffer_from_host_buffer::<f32>(&leaf, &[nb, kb], None)
+            .context("uploading leaf table")?;
+
+        Ok(XlaCamEngine {
+            client,
+            exe,
+            bucket,
+            lo_buf,
+            hi_buf,
+            leaf_buf,
+            task: program.task,
+            base_score: program.base_score.clone(),
+            n_features: program.n_features,
+            n_outputs,
+            scale,
+            layout: manifest.layout,
+        })
+    }
+
+    pub fn bucket(&self) -> &BucketInfo {
+        &self.bucket
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.bucket.batch
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Run one padded device batch over quantized bin rows
+    /// (`rows.len() ≤ bucket.batch`). Returns logits per row.
+    pub fn infer_bins_batch(&self, rows: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
+        let b = rows.len();
+        assert!(b > 0 && b <= self.bucket.batch, "batch {b} exceeds bucket");
+        let (bb, fb) = (self.bucket.batch, self.bucket.features);
+        let q_buf = match self.layout {
+            Layout::TransposedU8 => {
+                // qt[F, B] u8 — batch innermost (perf layout).
+                let mut q = vec![0u8; fb * bb];
+                for (i, row) in rows.iter().enumerate() {
+                    assert_eq!(row.len(), self.n_features, "feature arity mismatch");
+                    for (f, &v) in row.iter().enumerate() {
+                        q[f * bb + i] = (v as i32 * self.scale).min(255) as u8;
+                    }
+                }
+                self.client
+                    .buffer_from_host_buffer::<u8>(&q, &[fb, bb], None)
+                    .context("uploading query batch (u8)")?
+            }
+            Layout::BatchMajorI32 => {
+                let mut q = vec![0i32; bb * fb];
+                for (i, row) in rows.iter().enumerate() {
+                    assert_eq!(row.len(), self.n_features, "feature arity mismatch");
+                    for (f, &v) in row.iter().enumerate() {
+                        q[i * fb + f] = v as i32 * self.scale;
+                    }
+                }
+                self.client
+                    .buffer_from_host_buffer::<i32>(&q, &[bb, fb], None)
+                    .context("uploading query batch")?
+            }
+        };
+        let result = self
+            .exe
+            .execute_b(&[&q_buf, &self.lo_buf, &self.hi_buf, &self.leaf_buf])
+            .context("executing CAM kernel")?;
+        let lit = result[0][0].to_literal_sync().context("fetching result")?;
+        let out = lit.to_tuple1().context("unwrapping 1-tuple")?;
+        let flat = out.to_vec::<f32>().context("reading logits")?;
+        let kb = self.bucket.classes;
+        let mut logits = Vec::with_capacity(b);
+        for i in 0..b {
+            let mut l: Vec<f32> = match self.layout {
+                // logits[K, B]: stride bb per class.
+                Layout::TransposedU8 => {
+                    (0..self.n_outputs).map(|k| flat[k * bb + i]).collect()
+                }
+                // logits[B, K]: contiguous per row.
+                Layout::BatchMajorI32 => flat[i * kb..i * kb + self.n_outputs].to_vec(),
+            };
+            for (v, base) in l.iter_mut().zip(&self.base_score) {
+                *v += base;
+            }
+            logits.push(l);
+        }
+        Ok(logits)
+    }
+
+    /// Quantize raw feature rows with the program's quantizer and infer.
+    pub fn infer_rows(&self, program: &CamProgram, rows: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let bins: Vec<Vec<u16>> = rows.iter().map(|r| program.quantizer.bin_row(r)).collect();
+        let mut out = Vec::with_capacity(bins.len());
+        for chunk in bins.chunks(self.bucket.batch) {
+            out.extend(self.infer_bins_batch(chunk)?);
+        }
+        Ok(out)
+    }
+
+    /// End-to-end predictions (CP decision applied).
+    pub fn predict_rows(&self, program: &CamProgram, rows: &[&[f32]]) -> Result<Vec<f32>> {
+        Ok(self.infer_rows(program, rows)?.iter().map(|l| self.task.decide(l)).collect())
+    }
+}

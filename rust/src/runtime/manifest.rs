@@ -1,0 +1,182 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Describes the shape-monomorphic HLO buckets and the
+//! padding conventions baked into them.
+
+use crate::util::Json;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled shape bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BucketInfo {
+    pub file: String,
+    pub batch: usize,
+    pub features: usize,
+    pub rows: usize,
+    pub classes: usize,
+}
+
+impl BucketInfo {
+    /// Can this bucket hold a program of the given dimensions?
+    pub fn fits(&self, n_features: usize, n_rows: usize, n_outputs: usize) -> bool {
+        self.features >= n_features && self.rows >= n_rows && self.classes >= n_outputs
+    }
+
+    /// Padded-volume cost proxy used to pick the cheapest fitting bucket.
+    pub fn volume(&self) -> usize {
+        self.rows * self.features
+    }
+}
+
+/// Input/output tensor layout baked into the artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// `qt[u8,F,B], lo[u8,N,F], hi_inc[u8,N,F] → logits[f32,K,B]` — the
+    /// perf-optimized layout (EXPERIMENTS.md §Perf).
+    TransposedU8,
+    /// `q[i32,B,F], lo[i32,N,F], hi[i32,N,F] → logits[f32,B,K]` — the
+    /// hardware-mode (direct / macro_cell) kernels.
+    BatchMajorI32,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub kernel_mode: String,
+    pub layout: Layout,
+    pub buckets: Vec<BucketInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!("{path:?}: {e} — run `make artifacts` to build the AOT bundle")
+        })?;
+        let j = Json::parse(&text)?;
+        if j.req_str("format")? != "hlo-text" {
+            return Err("unsupported artifact format".into());
+        }
+        let buckets = j
+            .req_arr("buckets")?
+            .iter()
+            .map(|b| {
+                Ok(BucketInfo {
+                    file: b.req_str("file")?.to_string(),
+                    batch: b.req_usize("batch")?,
+                    features: b.req_usize("features")?,
+                    rows: b.req_usize("rows")?,
+                    classes: b.req_usize("classes")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let layout = match j.get("layout").and_then(|l| l.as_str()) {
+            Some("transposed_u8") => Layout::TransposedU8,
+            _ => Layout::BatchMajorI32,
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            kernel_mode: j.req_str("kernel_mode")?.to_string(),
+            layout,
+            buckets,
+        })
+    }
+
+    /// Choose the cheapest bucket that fits the program, preferring batch
+    /// capacity ≥ `batch_hint` (falls back to the largest-batch fitting
+    /// bucket when no bucket reaches the hint).
+    pub fn choose(
+        &self,
+        n_features: usize,
+        n_rows: usize,
+        n_outputs: usize,
+        batch_hint: usize,
+    ) -> Option<&BucketInfo> {
+        let fitting: Vec<&BucketInfo> =
+            self.buckets.iter().filter(|b| b.fits(n_features, n_rows, n_outputs)).collect();
+        if fitting.is_empty() {
+            return None;
+        }
+        let preferred: Vec<&BucketInfo> =
+            fitting.iter().copied().filter(|b| b.batch >= batch_hint).collect();
+        let pool = if preferred.is_empty() { &fitting } else { &preferred };
+        pool.iter()
+            .copied()
+            .min_by_key(|b| (b.volume(), b.batch))
+            .or_else(|| fitting.iter().copied().max_by_key(|b| b.batch))
+    }
+
+    pub fn bucket_path(&self, b: &BucketInfo) -> PathBuf {
+        self.dir.join(&b.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> Manifest {
+        Manifest {
+            dir: PathBuf::from("/tmp"),
+            kernel_mode: "fast_u8".into(),
+            layout: Layout::TransposedU8,
+            buckets: vec![
+                BucketInfo { file: "a".into(), batch: 8, features: 16, rows: 256, classes: 8 },
+                BucketInfo { file: "b".into(), batch: 1, features: 32, rows: 2048, classes: 8 },
+                BucketInfo { file: "c".into(), batch: 64, features: 32, rows: 2048, classes: 8 },
+                BucketInfo { file: "d".into(), batch: 64, features: 130, rows: 16384, classes: 8 },
+            ],
+        }
+    }
+
+    #[test]
+    fn choose_prefers_smallest_fitting() {
+        let m = toy_manifest();
+        let b = m.choose(10, 200, 2, 8).unwrap();
+        assert_eq!(b.file, "a");
+        // More rows → next bucket up.
+        let b = m.choose(10, 1000, 2, 64).unwrap();
+        assert_eq!(b.file, "c");
+    }
+
+    #[test]
+    fn choose_honors_batch_hint() {
+        let m = toy_manifest();
+        let b1 = m.choose(20, 1000, 1, 1).unwrap();
+        assert_eq!(b1.file, "b");
+        let b64 = m.choose(20, 1000, 1, 64).unwrap();
+        assert_eq!(b64.file, "c");
+    }
+
+    #[test]
+    fn choose_falls_back_when_hint_unreachable() {
+        let m = toy_manifest();
+        let b = m.choose(100, 10_000, 7, 512).unwrap();
+        assert_eq!(b.file, "d");
+    }
+
+    #[test]
+    fn choose_rejects_oversize() {
+        let m = toy_manifest();
+        assert!(m.choose(200, 100, 1, 1).is_none());
+        assert!(m.choose(10, 100_000, 1, 1).is_none());
+        assert!(m.choose(10, 100, 9, 1).is_none());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        // Integration with the actual `make artifacts` output, skipped if
+        // the bundle has not been built in this checkout.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.buckets.is_empty());
+        assert!(m.buckets.iter().any(|b| b.features >= 130));
+        for b in &m.buckets {
+            assert!(m.bucket_path(b).exists(), "{:?} missing", b.file);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT (XLA) runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path with no
+//! Python involvement (DESIGN.md §1).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::XlaCamEngine;
+pub use manifest::{BucketInfo, Manifest};

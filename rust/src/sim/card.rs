@@ -1,0 +1,123 @@
+//! Multi-chip PCIe accelerator card (paper §III-D: "we envision a PCIe
+//! card containing multiple X-TIME chips connected to a standard server,
+//! that the CPU can use to offload the decision tree inference").
+//!
+//! The card model composes per-chip [`super::chip`] results with the host
+//! link: samples cross PCIe (feature bytes down, logits up), a card-level
+//! dispatcher round-robins chips, and throughput is the minimum of the
+//! aggregated chip rate and the PCIe payload bound.
+
+use super::chip::{simulate, SimReport, Workload};
+use super::config::ChipConfig;
+use crate::compiler::CamProgram;
+
+/// PCIe card configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CardConfig {
+    pub n_chips: usize,
+    /// Host-link payload bandwidth (bytes/s). PCIe Gen4 ×16 ≈ 25 GB/s
+    /// effective after framing.
+    pub pcie_bytes_per_s: f64,
+    /// One-way host→card DMA latency (s).
+    pub dma_latency_s: f64,
+}
+
+impl Default for CardConfig {
+    fn default() -> Self {
+        CardConfig { n_chips: 4, pcie_bytes_per_s: 25e9, dma_latency_s: 500e-9 }
+    }
+}
+
+/// Card-level simulation result.
+#[derive(Clone, Debug)]
+pub struct CardReport {
+    pub per_chip: SimReport,
+    /// End-to-end single-sample latency incl. PCIe round trip (s).
+    pub latency_s: f64,
+    /// Sustained card throughput (samples/s).
+    pub throughput_sps: f64,
+    /// Which resource bound the card: "pcie" or "chips".
+    pub bottleneck: &'static str,
+}
+
+/// Bytes crossing PCIe per sample: 8-bit features down + f32 logits up.
+pub fn bytes_per_sample(program: &CamProgram) -> f64 {
+    (program.n_features + 4 * program.task.n_outputs()) as f64
+}
+
+/// Simulate the card serving a saturating stream.
+pub fn simulate_card(
+    program: &CamProgram,
+    chip_cfg: &ChipConfig,
+    card: &CardConfig,
+    n_samples: usize,
+) -> CardReport {
+    assert!(card.n_chips >= 1);
+    let per_chip = simulate(
+        program,
+        chip_cfg,
+        &Workload::saturating(n_samples.div_ceil(card.n_chips)),
+        0.05,
+    );
+    let chip_rate = per_chip.throughput_msps * 1e6 * card.n_chips as f64;
+    let pcie_rate = card.pcie_bytes_per_s / bytes_per_sample(program);
+    let (throughput, bottleneck) =
+        if pcie_rate < chip_rate { (pcie_rate, "pcie") } else { (chip_rate, "chips") };
+    let latency = 2.0 * card.dma_latency_s
+        + bytes_per_sample(program) / card.pcie_bytes_per_s
+        + per_chip.latency_ns.min * 1e-9;
+    CardReport { per_chip, latency_s: latency, throughput_sps: throughput, bottleneck }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::data::by_name;
+    use crate::trees::{gbdt, GbdtParams};
+
+    fn program() -> CamProgram {
+        let d = by_name("churn").unwrap().generate_n(800);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 8, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        compile(&m, &CompileOptions { replicas: 0, ..Default::default() }).unwrap()
+    }
+
+    #[test]
+    fn chips_scale_until_pcie_binds() {
+        let p = program();
+        let chip = ChipConfig::default();
+        let one = simulate_card(&p, &chip, &CardConfig { n_chips: 1, ..Default::default() }, 40_000);
+        let four = simulate_card(&p, &chip, &CardConfig { n_chips: 4, ..Default::default() }, 40_000);
+        assert!(four.throughput_sps > one.throughput_sps);
+        // churn: 14 B/sample → PCIe carries ~1.8 GS/s; chips (≤500 MS/s
+        // each) bind at 1 and 2 chips.
+        assert_eq!(one.bottleneck, "chips");
+        // A narrow link flips the bottleneck.
+        let narrow = CardConfig { n_chips: 4, pcie_bytes_per_s: 1e9, ..Default::default() };
+        let pinched = simulate_card(&p, &chip, &narrow, 40_000);
+        assert_eq!(pinched.bottleneck, "pcie");
+        assert!(pinched.throughput_sps < four.throughput_sps);
+    }
+
+    #[test]
+    fn latency_includes_dma_round_trip() {
+        let p = program();
+        let chip = ChipConfig::default();
+        let card = CardConfig::default();
+        let rep = simulate_card(&p, &chip, &card, 10_000);
+        assert!(rep.latency_s >= 2.0 * card.dma_latency_s);
+        // Host-side offload latency sits in the ~1 µs decade — still far
+        // below GPU kernel-launch latency (~10 µs).
+        assert!(rep.latency_s < 5e-6, "{}", rep.latency_s);
+    }
+
+    #[test]
+    fn bytes_per_sample_accounts_output() {
+        let p = program();
+        assert_eq!(bytes_per_sample(&p), (p.n_features + 4) as f64);
+    }
+}

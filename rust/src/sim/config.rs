@@ -1,0 +1,131 @@
+//! Chip timing configuration (paper §III-C, §IV-B).
+
+/// Timing/geometry parameters of the X-TIME chip. Defaults reproduce the
+/// paper's 16 nm design point: 1 GHz clock, 4096 cores, 64-bit flits,
+/// λ_CAM = 4 cycles per queued analog CAM array (precharge, MSB search,
+/// LSB search, latch) and single-cycle buffer/MMR/SRAM/ACC stages.
+#[derive(Clone, Copy, Debug)]
+pub struct ChipConfig {
+    pub clock_ghz: f64,
+    pub n_cores: usize,
+    /// NoC flit width in bits (§III-D: S_flit = 64).
+    pub flit_bits: usize,
+    /// Feature precision in bits (8 for the macro-cell design).
+    pub feature_bits: usize,
+    /// Cycles per analog CAM array search at 8-bit (2-cycle macro-cell
+    /// search + precharge + latch).
+    pub lambda_cam_8bit: u64,
+    /// Cycles per array search at 4-bit (single search cycle).
+    pub lambda_cam_4bit: u64,
+    /// Single-cycle pipeline stages after the CAM: buffer, MMR, SRAM, ACC.
+    pub post_stages: u64,
+    /// Cycles per NoC hop (router traversal).
+    pub hop_cycles: u64,
+    /// Co-processor decision cycles (threshold compare / per-class argmax
+    /// step).
+    pub cp_cycles: u64,
+    /// Ablation switch (§III-D): when false, routers never accumulate and
+    /// every core's logit flit travels to the CP individually — isolating
+    /// the benefit of the paper's in-network computing structure.
+    pub in_network_reduction: bool,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        ChipConfig {
+            clock_ghz: 1.0,
+            n_cores: 4096,
+            flit_bits: 64,
+            feature_bits: 8,
+            lambda_cam_8bit: 4,
+            lambda_cam_4bit: 3,
+            post_stages: 4,
+            hop_cycles: 1,
+            cp_cycles: 2,
+            in_network_reduction: true,
+        }
+    }
+}
+
+impl ChipConfig {
+    /// λ_CAM for a given feature precision.
+    pub fn lambda_cam(&self, n_bits: u8) -> u64 {
+        if n_bits > 4 {
+            self.lambda_cam_8bit
+        } else {
+            self.lambda_cam_4bit
+        }
+    }
+
+    /// H-tree depth (radix-4 levels) for the core count.
+    pub fn noc_levels(&self) -> u64 {
+        let mut slots = 4usize;
+        let mut levels = 1u64;
+        while slots < self.n_cores {
+            slots *= 4;
+            levels += 1;
+        }
+        levels
+    }
+
+    /// Flits needed to broadcast one feature vector downstream.
+    pub fn input_flits(&self, n_features: usize) -> u64 {
+        ((n_features * self.feature_bits + self.flit_bits - 1) / self.flit_bits) as u64
+    }
+
+    /// Core pipeline latency λ_C for a mapped model (§III-C):
+    /// queued arrays in series, then buffer/MMR/SRAM/ACC, plus one extra
+    /// accumulation cycle per additional tree in the core.
+    pub fn core_latency(&self, n_bits: u8, n_segments: usize, n_trees_core: usize) -> u64 {
+        let cam = self.lambda_cam(n_bits) * n_segments.max(1) as u64;
+        cam + self.post_stages + n_trees_core.saturating_sub(1) as u64
+    }
+
+    /// Core initiation interval (Eq. 4/5): a new sample can enter every
+    /// `max(λ_CAM, N_trees,core)` cycles (MMR bubbles dominate past 4
+    /// trees per core).
+    pub fn core_interval(&self, n_bits: u8, n_trees_core: usize) -> u64 {
+        self.lambda_cam(n_bits).max(n_trees_core as u64)
+    }
+
+    pub fn cycle_ns(&self) -> f64 {
+        1.0 / self.clock_ghz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_design_point() {
+        let c = ChipConfig::default();
+        assert_eq!(c.noc_levels(), 6); // 4096 = 4^6
+        // λ_C = 12 for 2 queued arrays, ≤ 4 trees (paper §III-C).
+        assert_eq!(c.core_latency(8, 2, 1), 12);
+        assert_eq!(c.core_latency(8, 2, 4), 15);
+        // Eq. 4: II = 4 cycles → 250 MSamples/s at 1 GHz.
+        assert_eq!(c.core_interval(8, 1), 4);
+        // Eq. 5: 5 trees/core → II = 5 → 200 MSamples/s.
+        assert_eq!(c.core_interval(8, 5), 5);
+    }
+
+    #[test]
+    fn input_flit_counts() {
+        let c = ChipConfig::default();
+        assert_eq!(c.input_flits(8), 1); // 64 bits exactly
+        assert_eq!(c.input_flits(10), 2);
+        assert_eq!(c.input_flits(130), 17);
+    }
+
+    #[test]
+    fn eq4_eq5_throughput() {
+        // τ_C = N_s / (λ_C + II (N_s − 1)) → 250 / 200 MS/s asymptotically.
+        let c = ChipConfig::default();
+        let n_s = 1_000_000f64;
+        let tau4 = n_s / (12.0 + 4.0 * (n_s - 1.0)); // samples per cycle
+        assert!((tau4 * 1000.0 - 250.0).abs() < 1.0, "{}", tau4 * 1000.0);
+        let tau5 = n_s / (12.0 + 5.0 * (n_s - 1.0));
+        assert!((tau5 * 1000.0 - 200.0).abs() < 1.0, "{}", tau5 * 1000.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Discrete-event simulation core (SST-equivalent substrate, DESIGN.md S6).
+//!
+//! The Structural Simulation Toolkit the paper uses is a C++/MPI framework
+//! of components connected by links with delays. This module provides the
+//! same execution model in-process: a time-ordered event queue with stable
+//! FIFO ordering for simultaneous events, and a [`Resource`] helper
+//! modelling a serially-occupied unit (port, pipeline slot, link).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A scheduled event: fires at `time` carrying a payload `E`.
+#[derive(Clone, Debug)]
+struct Scheduled<E> {
+    time: u64,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// Time-ordered event queue with deterministic tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<Scheduled<E>>>,
+    seq: u64,
+    now: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0 }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute `time`. Events scheduled in the past
+    /// are clamped to `now` (zero-delay links).
+    pub fn schedule(&mut self, time: u64, payload: E) {
+        let time = time.max(self.now);
+        self.heap.push(Reverse(Scheduled { time, seq: self.seq, payload }));
+        self.seq += 1;
+    }
+
+    pub fn schedule_in(&mut self, delay: u64, payload: E) {
+        self.schedule(self.now + delay, payload);
+    }
+
+    /// Pop the next event, advancing time.
+    pub fn pop(&mut self) -> Option<(u64, E)> {
+        self.heap.pop().map(|Reverse(s)| {
+            self.now = s.time;
+            (s.time, s.payload)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// A serially-reusable resource (an input port, a NoC link, a pipeline
+/// issue slot): requests occupy it for a duration, queuing FIFO.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Resource {
+    free_at: u64,
+    /// Total busy cycles (utilization accounting).
+    pub busy: u64,
+}
+
+impl Resource {
+    pub fn new() -> Resource {
+        Resource::default()
+    }
+
+    /// Acquire at the earliest time ≥ `at`, holding for `duration`.
+    /// Returns the time service *starts*.
+    pub fn acquire(&mut self, at: u64, duration: u64) -> u64 {
+        let start = at.max(self.free_at);
+        self.free_at = start + duration;
+        self.busy += duration;
+        start
+    }
+
+    /// When the resource next becomes free.
+    pub fn free_at(&self) -> u64 {
+        self.free_at
+    }
+
+    /// Utilization over a horizon.
+    pub fn utilization(&self, horizon: u64) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            self.busy as f64 / horizon as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, "c");
+        q.schedule(10, "a");
+        q.schedule(20, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(10, "a"), (20, "b"), (30, "c")]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule(5, 1);
+        q.schedule(5, 2);
+        q.schedule(5, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule(10, "x");
+        q.pop();
+        q.schedule(3, "late");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 10);
+    }
+
+    #[test]
+    fn resource_serializes() {
+        let mut r = Resource::new();
+        assert_eq!(r.acquire(0, 4), 0);
+        assert_eq!(r.acquire(1, 4), 4); // queued behind the first
+        assert_eq!(r.acquire(100, 4), 100); // idle gap
+        assert_eq!(r.busy, 12);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut r = Resource::new();
+        r.acquire(0, 50);
+        assert!((r.utilization(100) - 0.5).abs() < 1e-12);
+    }
+}

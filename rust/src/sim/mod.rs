@@ -1,0 +1,15 @@
+//! Cycle-detailed simulator of the X-TIME chip (SST-equivalent, §IV-B):
+//! discrete-event substrate, chip timing model, and the Fig. 8
+//! area/power/energy cost model.
+
+pub mod card;
+pub mod chip;
+pub mod config;
+pub mod cost;
+pub mod event;
+
+pub use card::{simulate_card, CardConfig, CardReport};
+pub use chip::{ideal_latency_cycles, simulate, SimReport, Workload};
+pub use config::ChipConfig;
+pub use cost::{chip_area, chip_peak_power, Activity, Breakdown};
+pub use event::{EventQueue, Resource};

@@ -1,0 +1,207 @@
+//! Explainability: the "backtracking" the paper highlights as a key DT
+//! advantage (§II-A: "backtracking operations to determine why an input
+//! was placed in a given class are straightforward").
+//!
+//! On X-TIME hardware the explanation is *free*: the matched CAM row *is*
+//! the root-to-leaf path, so its non-don't-care cells are exactly the
+//! conditions that fired. This module provides:
+//!
+//! * [`explain_row`] — per-sample explanations from matched CAM rows
+//!   (feature windows + leaf contributions, ranked by |logit|);
+//! * [`gain_importance`] — global split-gain feature importance;
+//! * [`permutation_importance`] — model-agnostic validation of the above.
+
+use crate::compiler::{CamProgram, CamRow};
+use crate::data::Dataset;
+use crate::trees::tree::{Ensemble, Node};
+use crate::trees::metrics;
+use crate::util::Rng;
+
+/// One fired condition of an explanation: feature f was inside `[lo, hi)`
+/// (bin space), contributing `leaf` to class `class`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Condition {
+    pub feature: usize,
+    pub lo_bin: u16,
+    pub hi_bin: u16,
+    pub leaf: f32,
+    pub class: u16,
+    pub tree: u32,
+}
+
+/// Explanation of one prediction: every matched CAM row's constrained
+/// cells, plus per-feature aggregate attribution.
+#[derive(Clone, Debug)]
+pub struct Explanation {
+    pub prediction: f32,
+    pub conditions: Vec<Condition>,
+    /// Σ |leaf| of rows constraining each feature.
+    pub feature_attribution: Vec<f32>,
+}
+
+/// Explain a prediction by backtracking matched CAM rows (§II-A).
+pub fn explain_row(program: &CamProgram, row: &[f32]) -> Explanation {
+    let bins = program.quantizer.bin_row(row);
+    let mut conditions = Vec::new();
+    let mut attribution = vec![0f32; program.n_features];
+    let mut logits = program.base_score.clone();
+    logits.resize(program.task.n_outputs().max(1), 0.0);
+    for core in &program.cores {
+        for r in &core.rows {
+            if !r.matches(&bins) {
+                continue;
+            }
+            logits[r.class as usize] += r.leaf;
+            record_conditions(r, program.n_bins, &mut conditions, &mut attribution);
+        }
+    }
+    // Strongest contributions first.
+    conditions.sort_by(|a, b| b.leaf.abs().partial_cmp(&a.leaf.abs()).unwrap());
+    Explanation {
+        prediction: program.task.decide(&logits),
+        conditions,
+        feature_attribution: attribution,
+    }
+}
+
+fn record_conditions(
+    row: &CamRow,
+    n_bins: u16,
+    out: &mut Vec<Condition>,
+    attribution: &mut [f32],
+) {
+    for f in 0..row.lo.len() {
+        let (lo, hi) = (row.lo[f], row.hi[f]);
+        if lo == 0 && hi >= n_bins {
+            continue; // don't care
+        }
+        attribution[f] += row.leaf.abs();
+        out.push(Condition {
+            feature: f,
+            lo_bin: lo,
+            hi_bin: hi,
+            leaf: row.leaf,
+            class: row.class,
+            tree: row.tree,
+        });
+    }
+}
+
+/// Global split-gain importance: Σ over split nodes of the hessian-
+/// weighted gain proxy (XGBoost's `total_gain` analogue — here we use
+/// split counts weighted by subtree leaf mass since raw gains are not
+/// stored in the compiled model).
+pub fn gain_importance(model: &Ensemble) -> Vec<f64> {
+    let mut imp = vec![0f64; model.n_features];
+    for tree in &model.trees {
+        for node in &tree.nodes {
+            if let Node::Split { feature, .. } = node {
+                imp[*feature as usize] += 1.0;
+            }
+        }
+    }
+    let total: f64 = imp.iter().sum();
+    if total > 0.0 {
+        for v in imp.iter_mut() {
+            *v /= total;
+        }
+    }
+    imp
+}
+
+/// Permutation importance: score drop when one feature column is
+/// shuffled (model-agnostic ground truth for the split-count proxy).
+pub fn permutation_importance(model: &Ensemble, data: &Dataset, seed: u64) -> Vec<f64> {
+    let base = metrics::score(model, data);
+    let mut rng = Rng::new(seed);
+    let mut out = vec![0f64; data.n_features];
+    for f in 0..data.n_features {
+        let mut shuffled = data.clone();
+        let mut col: Vec<f32> = (0..data.n_rows()).map(|i| data.row(i)[f]).collect();
+        rng.shuffle(&mut col);
+        for i in 0..data.n_rows() {
+            shuffled.x[i * data.n_features + f] = col[i];
+        }
+        out[f] = base - metrics::score(model, &shuffled);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::data::by_name;
+    use crate::trees::{gbdt, GbdtParams};
+
+    fn setup() -> (Dataset, Ensemble, CamProgram) {
+        let d = by_name("churn").unwrap().generate_n(1500);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 12, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        (d, m, p)
+    }
+
+    #[test]
+    fn explanation_matches_prediction() {
+        let (d, m, p) = setup();
+        for i in 0..50 {
+            let e = explain_row(&p, d.row(i));
+            assert_eq!(e.prediction, m.predict(d.row(i)), "row {i}");
+        }
+    }
+
+    #[test]
+    fn one_condition_set_per_tree() {
+        let (d, m, p) = setup();
+        let e = explain_row(&p, d.row(0));
+        // Each matched row contributes its constrained features; the
+        // number of distinct trees in the conditions == n_trees (every
+        // tree matches exactly one row, and trained trees always split).
+        let mut trees: Vec<u32> = e.conditions.iter().map(|c| c.tree).collect();
+        trees.sort_unstable();
+        trees.dedup();
+        assert_eq!(trees.len(), m.n_trees());
+    }
+
+    #[test]
+    fn conditions_actually_hold() {
+        let (d, _, p) = setup();
+        let bins = p.quantizer.bin_row(d.row(3));
+        for c in explain_row(&p, d.row(3)).conditions {
+            let b = bins[c.feature];
+            assert!(c.lo_bin <= b && b < c.hi_bin, "condition does not hold: {c:?} bin {b}");
+        }
+    }
+
+    #[test]
+    fn importance_finds_informative_features() {
+        let (d, m, _) = setup();
+        // churn: 10 features, first 8 informative (catalog). Split-count
+        // importance should put most mass on informative features.
+        let gain = gain_importance(&m);
+        assert_eq!(gain.len(), 10);
+        let informative: f64 = gain[..8].iter().sum();
+        assert!(informative > 0.7, "informative mass {informative}");
+        // Permutation importance agrees on the top feature's relevance.
+        let perm = permutation_importance(&m, &d, 5);
+        let top_gain = (0..10).max_by(|&a, &b| gain[a].partial_cmp(&gain[b]).unwrap()).unwrap();
+        assert!(perm[top_gain] > 0.0, "top gain feature has no permutation impact");
+    }
+
+    #[test]
+    fn attribution_covers_used_features_only() {
+        let (d, m, p) = setup();
+        let used: Vec<u32> =
+            m.trees.iter().flat_map(|t| t.used_features()).collect();
+        let e = explain_row(&p, d.row(1));
+        for (f, &a) in e.feature_attribution.iter().enumerate() {
+            if a > 0.0 {
+                assert!(used.contains(&(f as u32)), "attribution on unused feature {f}");
+            }
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Gradient-boosted decision trees (XGBoost-style second-order boosting).
+//!
+//! Stands in for XGBoost / CatBoost / LightGBM (Table II trains one of the
+//! three per dataset). Multi-class training grows one tree per class per
+//! round against the softmax gradients — exactly the layout the X-TIME
+//! compiler wants, since every tree then carries a single `class ID`
+//! (§III-A: "class and tree ID are uniquely represented in the core
+//! address").
+
+use crate::data::{Dataset, FeatureQuantizer, Task};
+use crate::trees::grow::{grow_tree, BinnedMatrix, GrowParams, GrowScratch};
+use crate::trees::loss::{grad_hess, loss};
+use crate::trees::tree::{Ensemble, Tree};
+use crate::util::Rng;
+
+/// GBDT hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct GbdtParams {
+    /// Boosting rounds (total trees = rounds × n_outputs).
+    pub n_rounds: usize,
+    pub learning_rate: f32,
+    /// Hardware-facing cap: `N_leaves,max` (§III-C → 256 per core).
+    pub max_leaves: usize,
+    pub max_depth: usize,
+    pub lambda: f32,
+    pub gamma: f32,
+    pub min_child_weight: f64,
+    /// Row subsample fraction per tree.
+    pub subsample: f64,
+    /// Feature subsample fraction per tree.
+    pub colsample_bytree: f64,
+    /// Feature quantization bits (8 = X-TIME 8-bit, 4 = 4-bit ablation,
+    /// 11 ≈ float-precision "unconstrained" baseline).
+    pub n_bits: u8,
+    pub seed: u64,
+    /// Stop if validation loss fails to improve for this many rounds
+    /// (0 disables early stopping).
+    pub early_stop_rounds: usize,
+    /// Defect-aware co-design training (paper §V-A outlook): per round,
+    /// split finding sees feature bins jittered ±1 level with this
+    /// probability, so the learner avoids razor-thin split margins that
+    /// analog conductance variation would flip. 0.0 disables.
+    pub bin_jitter: f64,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams {
+            n_rounds: 100,
+            learning_rate: 0.15,
+            max_leaves: 256,
+            max_depth: 8,
+            lambda: 1.0,
+            gamma: 0.0,
+            min_child_weight: 1.0,
+            subsample: 0.8,
+            colsample_bytree: 0.9,
+            n_bits: 8,
+            seed: 7,
+            early_stop_rounds: 0,
+            bin_jitter: 0.0,
+        }
+    }
+}
+
+fn base_scores(task: Task, y: &[f32]) -> Vec<f32> {
+    match task {
+        Task::Regression => {
+            vec![y.iter().sum::<f32>() / y.len() as f32]
+        }
+        Task::Binary => {
+            let p = (y.iter().sum::<f32>() / y.len() as f32).clamp(1e-4, 1.0 - 1e-4);
+            vec![(p / (1.0 - p)).ln()]
+        }
+        Task::MultiClass(k) => {
+            let mut counts = vec![0f32; k];
+            for &v in y {
+                counts[v as usize] += 1.0;
+            }
+            counts.iter().map(|&c| (c.max(1.0) / y.len() as f32).ln()).collect()
+        }
+    }
+}
+
+/// Train a GBDT ensemble; if `val` is given it is used for early stopping.
+pub fn train(data: &Dataset, params: &GbdtParams, val: Option<&Dataset>) -> Ensemble {
+    let task = data.task;
+    let k = task.n_outputs();
+    let n = data.n_rows();
+    assert!(n > 1, "empty training set");
+
+    let quantizer = FeatureQuantizer::fit(data, params.n_bits);
+    let m = BinnedMatrix {
+        bins: quantizer.transform(data),
+        n_rows: n,
+        n_features: data.n_features,
+        n_bins: quantizer.n_bins(),
+    };
+    let val_bins: Option<(Vec<u16>, usize)> =
+        val.map(|v| (quantizer.transform(v), v.n_rows()));
+
+    let base = base_scores(task, &data.y);
+    let mut preds: Vec<f32> = Vec::with_capacity(n * k);
+    for _ in 0..n {
+        preds.extend_from_slice(&base);
+    }
+    let mut val_preds: Vec<f32> = val
+        .map(|v| {
+            let mut p = Vec::with_capacity(v.n_rows() * k);
+            for _ in 0..v.n_rows() {
+                p.extend_from_slice(&base);
+            }
+            p
+        })
+        .unwrap_or_default();
+
+    let grow = GrowParams {
+        max_leaves: params.max_leaves,
+        max_depth: params.max_depth,
+        lambda: params.lambda,
+        gamma: params.gamma,
+        min_child_weight: params.min_child_weight,
+        leaf_scale: params.learning_rate,
+        colsample: params.colsample_bytree,
+        col_per_split: false,
+    };
+
+    let mut rng = Rng::new(params.seed);
+    let mut scratch = GrowScratch::new(m.n_features, m.n_bins);
+    let mut trees: Vec<Tree> = Vec::new();
+    let mut tree_class: Vec<u16> = Vec::new();
+    let mut best_val = f64::INFINITY;
+    let mut best_len = 0usize;
+    let mut since_best = 0usize;
+
+    // Per-output gradient views are strided; copy into dense buffers so the
+    // grower indexes by plain row id.
+    let mut gk = vec![0f32; n];
+    let mut hk = vec![0f32; n];
+
+    // Defect-aware training: a jittered view of the binned matrix is
+    // re-drawn per round for split finding; prediction updates always use
+    // the clean bins (the deployed chip quantizes exactly).
+    let mut jittered: Option<BinnedMatrix> = None;
+
+    'rounds: for _round in 0..params.n_rounds {
+        if params.bin_jitter > 0.0 {
+            let mut bins = m.bins.clone();
+            let max_bin = (m.n_bins - 1) as u16;
+            for b in bins.iter_mut() {
+                if rng.chance(params.bin_jitter) {
+                    *b = if rng.chance(0.5) { (*b).saturating_sub(1) } else { (*b + 1).min(max_bin) };
+                }
+            }
+            jittered = Some(BinnedMatrix {
+                bins,
+                n_rows: m.n_rows,
+                n_features: m.n_features,
+                n_bins: m.n_bins,
+            });
+        }
+        let grow_m = jittered.as_ref().unwrap_or(&m);
+        let gh = grad_hess(task, &preds, &data.y);
+        for class in 0..k {
+            for i in 0..n {
+                gk[i] = gh.g[i * k + class];
+                hk[i] = gh.h[i * k + class];
+            }
+            let rows: Vec<u32> = if params.subsample < 1.0 {
+                let take = ((n as f64 * params.subsample) as usize).max(2);
+                rng.sample_indices(n, take).into_iter().map(|i| i as u32).collect()
+            } else {
+                (0..n as u32).collect()
+            };
+            let tree = grow_tree(grow_m, rows, &gk, &hk, &grow, &mut rng, &mut scratch);
+            // Update train predictions for this class column.
+            for i in 0..n {
+                preds[i * k + class] += tree.predict_bins(m.row(i));
+            }
+            if let (Some((vb, vn)), true) = (&val_bins, val.is_some()) {
+                for i in 0..*vn {
+                    val_preds[i * k + class] +=
+                        tree.predict_bins(&vb[i * data.n_features..(i + 1) * data.n_features]);
+                }
+            }
+            trees.push(tree);
+            tree_class.push(class as u16);
+        }
+        if params.early_stop_rounds > 0 {
+            if let Some(v) = val {
+                let l = loss(task, &val_preds, &v.y);
+                if l < best_val - 1e-7 {
+                    best_val = l;
+                    best_len = trees.len();
+                    since_best = 0;
+                } else {
+                    since_best += 1;
+                    if since_best >= params.early_stop_rounds {
+                        trees.truncate(best_len);
+                        tree_class.truncate(best_len);
+                        break 'rounds;
+                    }
+                }
+            }
+        }
+    }
+
+    Ensemble {
+        name: data.name.clone(),
+        task,
+        n_features: data.n_features,
+        trees,
+        tree_class,
+        base_score: base,
+        quantizer,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::by_name;
+    use crate::trees::metrics::score;
+
+    fn small_params(rounds: usize) -> GbdtParams {
+        GbdtParams {
+            n_rounds: rounds,
+            max_leaves: 16,
+            max_depth: 4,
+            learning_rate: 0.3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn learns_binary_task() {
+        let d = by_name("churn").unwrap().generate_n(2000);
+        let s = d.split(0.7, 0.0, 1);
+        let model = train(&s.train, &small_params(30), None);
+        let acc = score(&model, &s.test);
+        // Teacher noise is ~6%; anything ≥ 0.8 proves real learning
+        // (majority class is ~0.5).
+        assert!(acc > 0.8, "accuracy {acc}");
+    }
+
+    #[test]
+    fn learns_multiclass_task() {
+        let d = by_name("eye").unwrap().generate_n(2500);
+        let s = d.split(0.7, 0.0, 2);
+        let model = train(&s.train, &small_params(25), None);
+        let acc = score(&model, &s.test);
+        assert!(acc > 0.55, "accuracy {acc} (chance ≈ 0.33)");
+        // One tree per class per round.
+        assert_eq!(model.n_trees(), 25 * 3);
+        assert!(model.tree_class.iter().any(|&c| c == 2));
+    }
+
+    #[test]
+    fn learns_regression_task() {
+        let d = by_name("rossmann").unwrap().generate_n(2000);
+        let s = d.split(0.7, 0.0, 3);
+        let model = train(&s.train, &small_params(40), None);
+        let r2 = score(&model, &s.test);
+        assert!(r2 > 0.4, "R² {r2}");
+    }
+
+    #[test]
+    fn respects_leaf_cap() {
+        let d = by_name("churn").unwrap().generate_n(1500);
+        let mut p = small_params(5);
+        p.max_leaves = 8;
+        let model = train(&d, &p, None);
+        assert!(model.max_leaves() <= 8);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let d = by_name("telco").unwrap().generate_n(800);
+        let a = train(&d, &small_params(5), None);
+        let b = train(&d, &small_params(5), None);
+        assert_eq!(a.trees.len(), b.trees.len());
+        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+            assert_eq!(ta, tb);
+        }
+    }
+
+    #[test]
+    fn early_stopping_truncates() {
+        let d = by_name("telco").unwrap().generate_n(1200);
+        let s = d.split(0.6, 0.2, 4);
+        let mut p = small_params(60);
+        p.early_stop_rounds = 3;
+        let model = train(&s.train, &p, Some(&s.val));
+        assert!(model.n_trees() <= 60, "trees {}", model.n_trees());
+    }
+
+    #[test]
+    fn defect_aware_training_still_learns() {
+        let d = by_name("churn").unwrap().generate_n(1500);
+        let s = d.split(0.7, 0.0, 8);
+        let mut p = small_params(20);
+        p.bin_jitter = 0.05;
+        let robust = train(&s.train, &p, None);
+        let acc = score(&robust, &s.test);
+        assert!(acc > 0.78, "defect-aware accuracy {acc}");
+        // And it actually changes the learned trees.
+        let standard = train(&s.train, &small_params(20), None);
+        assert!(robust.trees.iter().zip(&standard.trees).any(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn more_rounds_do_not_hurt_train_fit() {
+        let d = by_name("churn").unwrap().generate_n(1000);
+        let short = train(&d, &small_params(3), None);
+        let long = train(&d, &small_params(20), None);
+        assert!(score(&long, &d) >= score(&short, &d) - 0.02);
+    }
+}

@@ -1,0 +1,389 @@
+//! Histogram-based tree grower shared by the GBDT and RF trainers.
+//!
+//! XGBoost's `hist` formulation: per-node, per-feature histograms of
+//! gradient/hessian sums over quantized feature bins; the best split
+//! maximizes the second-order gain
+//! `GL²/(HL+λ) + GR²/(HR+λ) − G²/(H+λ)`. Growth is best-first
+//! ("leaf-wise" à la LightGBM) bounded by `max_leaves` and `max_depth`,
+//! which is exactly the `N_leaves,max` constraint the X-TIME hardware
+//! imposes (§III-C: 256 addressable words per core).
+
+use crate::trees::tree::{Node, Tree};
+use crate::util::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Quantized feature matrix shared across all trees of a training run.
+pub struct BinnedMatrix {
+    /// Row-major `[n_rows × n_features]` bin indices.
+    pub bins: Vec<u16>,
+    pub n_rows: usize,
+    pub n_features: usize,
+    /// Global bin-count bound (`2^n_bits`).
+    pub n_bins: usize,
+}
+
+impl BinnedMatrix {
+    #[inline]
+    pub fn bin(&self, row: usize, feature: usize) -> u16 {
+        self.bins[row * self.n_features + feature]
+    }
+
+    pub fn row(&self, row: usize) -> &[u16] {
+        &self.bins[row * self.n_features..(row + 1) * self.n_features]
+    }
+}
+
+/// Growth hyper-parameters (shared GBDT/RF subset).
+#[derive(Clone, Debug)]
+pub struct GrowParams {
+    pub max_leaves: usize,
+    pub max_depth: usize,
+    /// L2 regularization λ on leaf weights.
+    pub lambda: f32,
+    /// Minimum split gain γ.
+    pub gamma: f32,
+    /// Minimum hessian mass per child.
+    pub min_child_weight: f64,
+    /// Scale applied to fitted leaf values (learning rate; 1.0 for RF).
+    pub leaf_scale: f32,
+    /// Fraction of features considered: per tree (GBDT) or per split (RF).
+    pub colsample: f64,
+    /// If true, re-draw the feature subset at every split (RF style).
+    pub col_per_split: bool,
+}
+
+impl Default for GrowParams {
+    fn default() -> Self {
+        GrowParams {
+            max_leaves: 256,
+            max_depth: 12,
+            lambda: 1.0,
+            gamma: 0.0,
+            min_child_weight: 1.0,
+            leaf_scale: 0.1,
+            colsample: 1.0,
+            col_per_split: false,
+        }
+    }
+}
+
+struct Candidate {
+    gain: f32,
+    node_slot: usize, // index into tree.nodes to overwrite on split
+    feature: u32,
+    threshold_bin: u16,
+    rows: Vec<u32>,
+    depth: usize,
+    g_sum: f64,
+    h_sum: f64,
+}
+
+impl PartialEq for Candidate {
+    fn eq(&self, other: &Self) -> bool {
+        self.gain == other.gain
+    }
+}
+impl Eq for Candidate {}
+impl PartialOrd for Candidate {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Candidate {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.gain.partial_cmp(&other.gain).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Scratch buffers reused across nodes/trees to avoid re-allocation on the
+/// training hot path.
+pub struct GrowScratch {
+    hist_g: Vec<f64>,
+    hist_h: Vec<f64>,
+}
+
+impl GrowScratch {
+    pub fn new(n_features: usize, n_bins: usize) -> GrowScratch {
+        GrowScratch {
+            hist_g: vec![0.0; n_features * n_bins],
+            hist_h: vec![0.0; n_features * n_bins],
+        }
+    }
+}
+
+/// Best split over the candidate feature set for one node.
+struct BestSplit {
+    gain: f32,
+    feature: u32,
+    threshold_bin: u16,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn find_best_split(
+    m: &BinnedMatrix,
+    rows: &[u32],
+    g: &[f32],
+    h: &[f32],
+    feats: &[u32],
+    g_sum: f64,
+    h_sum: f64,
+    p: &GrowParams,
+    scratch: &mut GrowScratch,
+) -> Option<BestSplit> {
+    let nb = m.n_bins;
+    // Zero only the touched feature lanes.
+    for &f in feats {
+        let base = f as usize * nb;
+        scratch.hist_g[base..base + nb].fill(0.0);
+        scratch.hist_h[base..base + nb].fill(0.0);
+    }
+    // Histogram accumulation — the training hot loop.
+    for &r in rows {
+        let r = r as usize;
+        let row_base = r * m.n_features;
+        let gr = g[r] as f64;
+        let hr = h[r] as f64;
+        for &f in feats {
+            let b = m.bins[row_base + f as usize] as usize;
+            let idx = f as usize * nb + b;
+            scratch.hist_g[idx] += gr;
+            scratch.hist_h[idx] += hr;
+        }
+    }
+    let parent_score = g_sum * g_sum / (h_sum + p.lambda as f64);
+    let mut best: Option<BestSplit> = None;
+    for &f in feats {
+        let base = f as usize * nb;
+        let mut gl = 0.0f64;
+        let mut hl = 0.0f64;
+        // Split at bin t: left = bins < t, right = bins >= t.
+        for t in 1..nb {
+            gl += scratch.hist_g[base + t - 1];
+            hl += scratch.hist_h[base + t - 1];
+            if hl < p.min_child_weight {
+                continue;
+            }
+            let gr_ = g_sum - gl;
+            let hr_ = h_sum - hl;
+            if hr_ < p.min_child_weight {
+                break;
+            }
+            let gain = (gl * gl / (hl + p.lambda as f64) + gr_ * gr_ / (hr_ + p.lambda as f64)
+                - parent_score) as f32
+                * 0.5;
+            if gain > p.gamma && best.as_ref().map(|b| gain > b.gain).unwrap_or(true) {
+                best = Some(BestSplit { gain, feature: f, threshold_bin: t as u16 });
+            }
+        }
+    }
+    best
+}
+
+fn leaf_value(g_sum: f64, h_sum: f64, p: &GrowParams) -> f32 {
+    (-(g_sum / (h_sum + p.lambda as f64)) as f32) * p.leaf_scale
+}
+
+fn draw_feats(n_features: usize, colsample: f64, rng: &mut Rng) -> Vec<u32> {
+    let k = ((n_features as f64 * colsample).ceil() as usize).clamp(1, n_features);
+    if k == n_features {
+        (0..n_features as u32).collect()
+    } else {
+        rng.sample_indices(n_features, k).into_iter().map(|i| i as u32).collect()
+    }
+}
+
+/// Grow one tree on the given sample rows with per-sample gradients `g`
+/// and hessians `h` (both indexed by absolute row id).
+pub fn grow_tree(
+    m: &BinnedMatrix,
+    rows: Vec<u32>,
+    g: &[f32],
+    h: &[f32],
+    p: &GrowParams,
+    rng: &mut Rng,
+    scratch: &mut GrowScratch,
+) -> Tree {
+    let sums = |rows: &[u32]| -> (f64, f64) {
+        let mut gs = 0.0;
+        let mut hs = 0.0;
+        for &r in rows {
+            gs += g[r as usize] as f64;
+            hs += h[r as usize] as f64;
+        }
+        (gs, hs)
+    };
+
+    let tree_feats = draw_feats(m.n_features, if p.col_per_split { 1.0 } else { p.colsample }, rng);
+
+    let mut tree = Tree::default();
+    let (g0, h0) = sums(&rows);
+    tree.nodes.push(Node::Leaf { value: leaf_value(g0, h0, p) });
+    let mut n_leaves = 1usize;
+
+    let mut heap: BinaryHeap<Candidate> = BinaryHeap::new();
+    let consider = |rows: Vec<u32>,
+                        node_slot: usize,
+                        depth: usize,
+                        g_sum: f64,
+                        h_sum: f64,
+                        heap: &mut BinaryHeap<Candidate>,
+                        rng: &mut Rng,
+                        scratch: &mut GrowScratch| {
+        if depth >= p.max_depth || rows.len() < 2 {
+            return;
+        }
+        let feats: Vec<u32> = if p.col_per_split {
+            draw_feats(m.n_features, p.colsample, rng)
+        } else {
+            tree_feats.clone()
+        };
+        if let Some(b) = find_best_split(m, &rows, g, h, &feats, g_sum, h_sum, p, scratch) {
+            heap.push(Candidate {
+                gain: b.gain,
+                node_slot,
+                feature: b.feature,
+                threshold_bin: b.threshold_bin,
+                rows,
+                depth,
+                g_sum,
+                h_sum,
+            });
+        }
+    };
+
+    consider(rows, 0, 0, g0, h0, &mut heap, rng, &mut *scratch);
+
+    while n_leaves < p.max_leaves {
+        let Some(c) = heap.pop() else { break };
+        // Partition rows by the chosen split.
+        let mut left_rows = Vec::with_capacity(c.rows.len() / 2);
+        let mut right_rows = Vec::with_capacity(c.rows.len() / 2);
+        for &r in &c.rows {
+            if m.bin(r as usize, c.feature as usize) >= c.threshold_bin {
+                right_rows.push(r);
+            } else {
+                left_rows.push(r);
+            }
+        }
+        debug_assert!(!left_rows.is_empty() && !right_rows.is_empty());
+        let (gl, hl) = sums(&left_rows);
+        let (gr_, hr_) = (c.g_sum - gl, c.h_sum - hl);
+
+        let left_slot = tree.nodes.len();
+        tree.nodes.push(Node::Leaf { value: leaf_value(gl, hl, p) });
+        let right_slot = tree.nodes.len();
+        tree.nodes.push(Node::Leaf { value: leaf_value(gr_, hr_, p) });
+        tree.nodes[c.node_slot] = Node::Split {
+            feature: c.feature,
+            threshold_bin: c.threshold_bin,
+            left: left_slot as u32,
+            right: right_slot as u32,
+        };
+        n_leaves += 1;
+
+        consider(left_rows, left_slot, c.depth + 1, gl, hl, &mut heap, rng, &mut *scratch);
+        consider(right_rows, right_slot, c.depth + 1, gr_, hr_, &mut heap, rng, &mut *scratch);
+    }
+    tree
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix(bins: Vec<u16>, n_features: usize, n_bins: usize) -> BinnedMatrix {
+        let n_rows = bins.len() / n_features;
+        BinnedMatrix { bins, n_rows, n_features, n_bins }
+    }
+
+    /// Single feature, perfectly separable step target at bin 8.
+    fn step_problem() -> (BinnedMatrix, Vec<f32>, Vec<f32>) {
+        let n = 64;
+        let bins: Vec<u16> = (0..n as u16).map(|i| i % 16).collect();
+        let target: Vec<f32> = bins.iter().map(|&b| if b >= 8 { 1.0 } else { 0.0 }).collect();
+        // Squared loss at pred=0 → g = -y, h = 1 (leaf value = mean y).
+        let g: Vec<f32> = target.iter().map(|&y| -y).collect();
+        let h = vec![1.0f32; n];
+        (matrix(bins, 1, 16), g, h)
+    }
+
+    #[test]
+    fn finds_the_planted_split() {
+        let (m, g, h) = step_problem();
+        let p = GrowParams { max_leaves: 2, leaf_scale: 1.0, lambda: 0.0, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let mut scratch = GrowScratch::new(m.n_features, m.n_bins);
+        let rows: Vec<u32> = (0..m.n_rows as u32).collect();
+        let t = grow_tree(&m, rows, &g, &h, &p, &mut rng, &mut scratch);
+        assert_eq!(t.n_leaves(), 2);
+        match t.nodes[0] {
+            Node::Split { feature, threshold_bin, .. } => {
+                assert_eq!(feature, 0);
+                assert_eq!(threshold_bin, 8);
+            }
+            _ => panic!("root is not a split"),
+        }
+        // Leaf values must be the class means (0 and 1).
+        assert!((t.predict_bins(&[0]) - 0.0).abs() < 1e-6);
+        assert!((t.predict_bins(&[15]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn respects_max_leaves() {
+        let n = 256;
+        let mut rng_data = Rng::new(9);
+        let bins: Vec<u16> = (0..n * 4).map(|_| rng_data.below(16) as u16).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng_data.f32() - 0.5).collect();
+        let h = vec![1.0f32; n];
+        let m = matrix(bins, 4, 16);
+        for max_leaves in [1usize, 2, 4, 7, 16] {
+            let p = GrowParams { max_leaves, lambda: 0.0, ..Default::default() };
+            let mut rng = Rng::new(5);
+            let mut scratch = GrowScratch::new(m.n_features, m.n_bins);
+            let t = grow_tree(&m, (0..n as u32).collect(), &g, &h, &p, &mut rng, &mut scratch);
+            assert!(t.n_leaves() <= max_leaves, "{} > {max_leaves}", t.n_leaves());
+        }
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let n = 512;
+        let mut rng_data = Rng::new(11);
+        let bins: Vec<u16> = (0..n * 8).map(|_| rng_data.below(32) as u16).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng_data.f32() - 0.5).collect();
+        let h = vec![1.0f32; n];
+        let m = matrix(bins, 8, 32);
+        let p = GrowParams { max_depth: 3, max_leaves: 256, lambda: 0.0, ..Default::default() };
+        let mut rng = Rng::new(5);
+        let mut scratch = GrowScratch::new(m.n_features, m.n_bins);
+        let t = grow_tree(&m, (0..n as u32).collect(), &g, &h, &p, &mut rng, &mut scratch);
+        assert!(t.depth() <= 3, "depth {}", t.depth());
+    }
+
+    #[test]
+    fn pure_node_stays_leaf() {
+        // Constant target → zero gain everywhere → single leaf.
+        let n = 32;
+        let bins: Vec<u16> = (0..n as u16).collect();
+        let g = vec![-1.0f32; n];
+        let h = vec![1.0f32; n];
+        let m = matrix(bins, 1, 32);
+        let p = GrowParams { lambda: 0.0, leaf_scale: 1.0, ..Default::default() };
+        let mut rng = Rng::new(2);
+        let mut scratch = GrowScratch::new(1, 32);
+        let t = grow_tree(&m, (0..n as u32).collect(), &g, &h, &p, &mut rng, &mut scratch);
+        assert_eq!(t.n_leaves(), 1);
+        assert!((t.predict_bins(&[0]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gamma_blocks_weak_splits() {
+        let (m, g, h) = step_problem();
+        let p = GrowParams { gamma: 1e9, ..Default::default() };
+        let mut rng = Rng::new(3);
+        let mut scratch = GrowScratch::new(1, 16);
+        let t = grow_tree(&m, (0..m.n_rows as u32).collect(), &g, &h, &p, &mut rng, &mut scratch);
+        assert_eq!(t.n_leaves(), 1);
+    }
+}

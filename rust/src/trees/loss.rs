@@ -1,0 +1,167 @@
+//! Training losses: gradients/hessians for second-order boosting
+//! (XGBoost's exact formulation) for squared error, logistic and softmax.
+
+use crate::data::Task;
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// In-place softmax over a small logits slice.
+pub fn softmax(logits: &mut [f32]) {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in logits.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in logits.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Per-sample gradient/hessian pairs, laid out `[n_samples × n_outputs]`.
+pub struct GradHess {
+    pub g: Vec<f32>,
+    pub h: Vec<f32>,
+    pub n_outputs: usize,
+}
+
+/// Compute gradients/hessians of the task loss at the current raw
+/// predictions `preds` (`[n × n_outputs]`, logits) against labels `y`.
+pub fn grad_hess(task: Task, preds: &[f32], y: &[f32]) -> GradHess {
+    let k = task.n_outputs();
+    let n = y.len();
+    assert_eq!(preds.len(), n * k);
+    let mut g = vec![0f32; n * k];
+    let mut h = vec![0f32; n * k];
+    match task {
+        Task::Regression => {
+            // L = 1/2 (pred - y)^2 → g = pred - y, h = 1.
+            for i in 0..n {
+                g[i] = preds[i] - y[i];
+                h[i] = 1.0;
+            }
+        }
+        Task::Binary => {
+            // Logistic loss on logits: g = p - y, h = p (1 - p).
+            for i in 0..n {
+                let p = sigmoid(preds[i]);
+                g[i] = p - y[i];
+                h[i] = (p * (1.0 - p)).max(1e-6);
+            }
+        }
+        Task::MultiClass(_) => {
+            // Softmax cross-entropy: g_k = p_k - 1[y=k], h_k = p_k (1-p_k).
+            let mut p = vec![0f32; k];
+            for i in 0..n {
+                p.copy_from_slice(&preds[i * k..(i + 1) * k]);
+                softmax(&mut p);
+                let label = y[i] as usize;
+                for c in 0..k {
+                    let target = (c == label) as u8 as f32;
+                    g[i * k + c] = p[c] - target;
+                    h[i * k + c] = (p[c] * (1.0 - p[c])).max(1e-6);
+                }
+            }
+        }
+    }
+    GradHess { g, h, n_outputs: k }
+}
+
+/// Mean task loss at raw predictions (for early-stopping / reporting).
+pub fn loss(task: Task, preds: &[f32], y: &[f32]) -> f64 {
+    let k = task.n_outputs();
+    let n = y.len();
+    let mut total = 0f64;
+    match task {
+        Task::Regression => {
+            for i in 0..n {
+                let d = (preds[i] - y[i]) as f64;
+                total += 0.5 * d * d;
+            }
+        }
+        Task::Binary => {
+            for i in 0..n {
+                let p = sigmoid(preds[i]) as f64;
+                let yy = y[i] as f64;
+                total -= yy * p.max(1e-12).ln() + (1.0 - yy) * (1.0 - p).max(1e-12).ln();
+            }
+        }
+        Task::MultiClass(_) => {
+            let mut p = vec![0f32; k];
+            for i in 0..n {
+                p.copy_from_slice(&preds[i * k..(i + 1) * k]);
+                softmax(&mut p);
+                total -= (p[y[i] as usize] as f64).max(1e-12).ln();
+            }
+        }
+    }
+    total / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_bounds() {
+        assert!(sigmoid(-100.0) >= 0.0 && sigmoid(-100.0) < 1e-6);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(100.0) <= 1.0 && sigmoid(100.0) > 1.0 - 1e-6);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut v = [1.0f32, 2.0, 3.0];
+        softmax(&mut v);
+        let sum: f32 = v.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(v[2] > v[1] && v[1] > v[0]);
+    }
+
+    #[test]
+    fn regression_grad_is_residual() {
+        let gh = grad_hess(Task::Regression, &[3.0, 1.0], &[1.0, 1.0]);
+        assert_eq!(gh.g, vec![2.0, 0.0]);
+        assert_eq!(gh.h, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn binary_grad_sign() {
+        // Positive label with negative logit → negative gradient (move up).
+        let gh = grad_hess(Task::Binary, &[-2.0], &[1.0]);
+        assert!(gh.g[0] < 0.0);
+        assert!(gh.h[0] > 0.0);
+    }
+
+    #[test]
+    fn softmax_grads_sum_to_zero() {
+        let gh = grad_hess(Task::MultiClass(3), &[0.3, -0.1, 0.5], &[2.0]);
+        let s: f32 = gh.g.iter().sum();
+        assert!(s.abs() < 1e-6);
+        assert!(gh.g[2] < 0.0, "true-class gradient must be negative");
+    }
+
+    #[test]
+    fn loss_decreases_toward_label() {
+        let far = loss(Task::Binary, &[-3.0], &[1.0]);
+        let near = loss(Task::Binary, &[3.0], &[1.0]);
+        assert!(near < far);
+    }
+
+    #[test]
+    fn numeric_gradient_check_binary() {
+        // Finite-difference check of dL/dz at a few points.
+        for &z in &[-1.5f32, 0.0, 0.7, 2.0] {
+            let y = [1.0f32];
+            let eps = 1e-3f32;
+            let l_plus = loss(Task::Binary, &[z + eps], &y);
+            let l_minus = loss(Task::Binary, &[z - eps], &y);
+            let num = ((l_plus - l_minus) / (2.0 * eps as f64)) as f32;
+            let gh = grad_hess(Task::Binary, &[z], &y);
+            assert!((num - gh.g[0]).abs() < 1e-3, "z={z} num={num} ana={}", gh.g[0]);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Evaluation metrics: accuracy for classification, RMSE / R² for
+//! regression, plus the paper's "relative accuracy" (Fig. 9b).
+
+use crate::data::{Dataset, Task};
+use crate::trees::tree::Ensemble;
+
+/// Classification accuracy of task-level predictions against labels.
+pub fn accuracy(preds: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(preds.len(), y.len());
+    let hits = preds.iter().zip(y).filter(|(p, t)| p == t).count();
+    hits as f64 / y.len() as f64
+}
+
+pub fn rmse(preds: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(preds.len(), y.len());
+    let sse: f64 = preds.iter().zip(y).map(|(p, t)| ((p - t) as f64).powi(2)).sum();
+    (sse / y.len() as f64).sqrt()
+}
+
+pub fn r2(preds: &[f32], y: &[f32]) -> f64 {
+    let mean = y.iter().map(|&v| v as f64).sum::<f64>() / y.len() as f64;
+    let ss_tot: f64 = y.iter().map(|&v| (v as f64 - mean).powi(2)).sum();
+    let ss_res: f64 = preds.iter().zip(y).map(|(p, t)| ((p - t) as f64).powi(2)).sum();
+    if ss_tot == 0.0 {
+        0.0
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Task-appropriate score: accuracy (higher better) for classification,
+/// R² (higher better) for regression — matching how Fig. 9(a) reports a
+/// single "accuracy" number per dataset.
+pub fn score(model: &Ensemble, data: &Dataset) -> f64 {
+    let preds: Vec<f32> = (0..data.n_rows()).map(|i| model.predict(data.row(i))).collect();
+    match data.task {
+        Task::Regression => r2(&preds, &data.y),
+        _ => accuracy(&preds, &data.y),
+    }
+}
+
+/// Fig. 9(b) "relative accuracy": defect-compromised score over ideal score.
+pub fn relative(ideal: f64, compromised: f64) -> f64 {
+    if ideal == 0.0 {
+        0.0
+    } else {
+        compromised / ideal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_hits() {
+        assert_eq!(accuracy(&[1.0, 0.0, 1.0, 1.0], &[1.0, 1.0, 1.0, 0.0]), 0.5);
+    }
+
+    #[test]
+    fn rmse_zero_on_exact() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn r2_perfect_is_one() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        assert!((r2(&y, &y) - 1.0).abs() < 1e-12);
+        // Predicting the mean gives R² = 0.
+        let mean = [2.5f32; 4];
+        assert!(r2(&mean, &y).abs() < 1e-9);
+    }
+
+    #[test]
+    fn relative_accuracy() {
+        assert!((relative(0.8, 0.72) - 0.9).abs() < 1e-12);
+    }
+}

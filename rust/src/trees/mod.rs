@@ -1,0 +1,137 @@
+//! Tree-based ML substrate: data structures, trainers and metrics.
+//!
+//! The paper trains with XGBoost / CatBoost / LightGBM / scikit-learn;
+//! those are unavailable offline, so [`gbdt`] and [`rf`] implement the same
+//! algorithm families from scratch (DESIGN.md §2, substitution 4).
+
+pub mod explain;
+pub mod gbdt;
+pub mod grow;
+pub mod loss;
+pub mod metrics;
+pub mod rf;
+pub mod tree;
+
+pub use gbdt::GbdtParams;
+pub use rf::RfParams;
+pub use tree::{Ensemble, Node, Tree};
+
+use crate::data::Dataset;
+
+/// Which trainer a Table II dataset uses (the paper's "Model" column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Gradient boosting (XGBoost / CatBoost / LightGBM equivalent).
+    Gbdt,
+    /// Random forest (scikit-learn equivalent).
+    RandomForest,
+}
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Gbdt => "GBDT",
+            ModelKind::RandomForest => "RandomForest",
+        }
+    }
+}
+
+/// Table II training configuration for one dataset: trainer family plus the
+/// topology targets (N_trees, N_leaves,max) the paper reports.
+#[derive(Clone, Debug)]
+pub struct PaperModelSpec {
+    pub dataset: &'static str,
+    pub kind: ModelKind,
+    /// Paper's total tree count (Table II `N_trees`).
+    pub n_trees: usize,
+    /// Paper's `N_leaves,max`.
+    pub n_leaves_max: usize,
+}
+
+/// Table II "Model / N_trees / N_leaves,max" columns.
+pub fn paper_models() -> Vec<PaperModelSpec> {
+    vec![
+        PaperModelSpec { dataset: "churn", kind: ModelKind::Gbdt, n_trees: 404, n_leaves_max: 256 },
+        PaperModelSpec { dataset: "eye", kind: ModelKind::Gbdt, n_trees: 2352, n_leaves_max: 256 },
+        PaperModelSpec { dataset: "covertype", kind: ModelKind::Gbdt, n_trees: 1351, n_leaves_max: 231 },
+        PaperModelSpec { dataset: "gas", kind: ModelKind::RandomForest, n_trees: 1356, n_leaves_max: 217 },
+        PaperModelSpec { dataset: "gesture", kind: ModelKind::Gbdt, n_trees: 1895, n_leaves_max: 256 },
+        PaperModelSpec { dataset: "telco", kind: ModelKind::Gbdt, n_trees: 159, n_leaves_max: 4 },
+        PaperModelSpec { dataset: "rossmann", kind: ModelKind::Gbdt, n_trees: 2017, n_leaves_max: 256 },
+    ]
+}
+
+pub fn paper_model(dataset: &str) -> Option<PaperModelSpec> {
+    paper_models().into_iter().find(|m| m.dataset == dataset)
+}
+
+/// Train a dataset with its Table II configuration, scaling the round count
+/// so the produced ensemble hits the paper's `N_trees` exactly.
+/// `n_bits` selects the precision regime of Fig. 9(a); `trees_override`
+/// lets callers train smaller models (fast tests).
+pub fn train_paper_model(
+    data: &Dataset,
+    spec: &PaperModelSpec,
+    n_bits: u8,
+    n_leaves_max: usize,
+    trees_override: Option<usize>,
+) -> Ensemble {
+    let n_trees = trees_override.unwrap_or(spec.n_trees);
+    let k = data.task.n_outputs();
+    match spec.kind {
+        ModelKind::Gbdt => {
+            let rounds = (n_trees / k).max(1);
+            let p = GbdtParams {
+                n_rounds: rounds,
+                max_leaves: n_leaves_max,
+                max_depth: if n_leaves_max <= 4 { 2 } else { 10 },
+                n_bits,
+                ..Default::default()
+            };
+            gbdt::train(data, &p, None)
+        }
+        ModelKind::RandomForest => {
+            let est = (n_trees / k).max(1);
+            let p = RfParams {
+                n_estimators: est,
+                max_leaves: n_leaves_max,
+                n_bits,
+                ..Default::default()
+            };
+            rf::train(data, &p)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::by_name;
+
+    #[test]
+    fn paper_models_cover_table2() {
+        let ms = paper_models();
+        assert_eq!(ms.len(), 7);
+        assert_eq!(paper_model("gas").unwrap().kind, ModelKind::RandomForest);
+        assert_eq!(paper_model("telco").unwrap().n_leaves_max, 4);
+        assert_eq!(paper_model("eye").unwrap().n_trees, 2352);
+    }
+
+    #[test]
+    fn train_paper_model_hits_topology() {
+        let d = by_name("telco").unwrap().generate_n(1000);
+        let spec = paper_model("telco").unwrap();
+        let m = train_paper_model(&d, &spec, 8, spec.n_leaves_max, Some(20));
+        assert_eq!(m.n_trees(), 20);
+        assert!(m.max_leaves() <= 4);
+    }
+
+    #[test]
+    fn multiclass_tree_count_divisible() {
+        let d = by_name("eye").unwrap().generate_n(900);
+        let spec = paper_model("eye").unwrap();
+        let m = train_paper_model(&d, &spec, 8, 16, Some(12));
+        // 12 requested → 4 rounds × 3 classes.
+        assert_eq!(m.n_trees(), 12);
+    }
+}

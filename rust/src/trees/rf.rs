@@ -1,0 +1,202 @@
+//! Random forests (scikit-learn stand-in).
+//!
+//! Each estimator is a bagged tree grown with per-split feature subsampling
+//! (√F by default). For multi-class tasks each estimator contributes one
+//! one-vs-rest tree **per class** whose leaves store class-probability
+//! votes — the exact layout Fig. 7(b) maps onto cores ("N_estimators
+//! estimators each made of N_trees, one for each class"), so the ensemble
+//! reduction is the paper's class-wise sum + CP argmax (= soft majority
+//! voting). Leaf votes are pre-scaled by 1/N_estimators so the hardware's
+//! *sum* reduction directly yields mean probabilities.
+
+use crate::data::{Dataset, FeatureQuantizer, Task};
+use crate::trees::grow::{grow_tree, BinnedMatrix, GrowParams, GrowScratch};
+use crate::trees::tree::{Ensemble, Tree};
+use crate::util::Rng;
+
+/// Random-forest hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct RfParams {
+    /// Number of bagged estimators (total trees = estimators × n_outputs).
+    pub n_estimators: usize,
+    pub max_leaves: usize,
+    pub max_depth: usize,
+    /// Per-split feature fraction; `None` = √F heuristic.
+    pub colsample: Option<f64>,
+    pub min_child_weight: f64,
+    pub n_bits: u8,
+    pub seed: u64,
+}
+
+impl Default for RfParams {
+    fn default() -> Self {
+        RfParams {
+            n_estimators: 100,
+            max_leaves: 256,
+            max_depth: 14,
+            colsample: None,
+            min_child_weight: 2.0,
+            n_bits: 8,
+            seed: 13,
+        }
+    }
+}
+
+/// Train a random forest.
+pub fn train(data: &Dataset, params: &RfParams) -> Ensemble {
+    let task = data.task;
+    let n = data.n_rows();
+    assert!(n > 1, "empty training set");
+    let k = task.n_outputs();
+
+    let quantizer = FeatureQuantizer::fit(data, params.n_bits);
+    let m = BinnedMatrix {
+        bins: quantizer.transform(data),
+        n_rows: n,
+        n_features: data.n_features,
+        n_bins: quantizer.n_bins(),
+    };
+
+    let colsample = params
+        .colsample
+        .unwrap_or_else(|| (data.n_features as f64).sqrt() / data.n_features as f64);
+    let grow = GrowParams {
+        max_leaves: params.max_leaves,
+        max_depth: params.max_depth,
+        lambda: 0.0,
+        gamma: 1e-9,
+        min_child_weight: params.min_child_weight,
+        // Mean-target leaves, scaled so the ensemble SUM is the mean vote.
+        leaf_scale: 1.0 / params.n_estimators as f32,
+        colsample,
+        col_per_split: true,
+    };
+
+    let mut rng = Rng::new(params.seed);
+    let mut scratch = GrowScratch::new(m.n_features, m.n_bins);
+    let mut trees: Vec<Tree> = Vec::new();
+    let mut tree_class: Vec<u16> = Vec::new();
+
+    // Per-class regression targets: variance reduction on one-vs-rest
+    // indicators == gini-style impurity reduction, and the fitted leaf
+    // value (mean of indicator) is the class probability.
+    let mut gk = vec![0f32; n];
+    let hk = vec![1f32; n];
+
+    for est in 0..params.n_estimators {
+        // Bootstrap sample (with replacement), shared across the per-class
+        // trees of this estimator so they see the same data view.
+        let mut erng = rng.fork(est as u64);
+        let rows: Vec<u32> = (0..n).map(|_| erng.below(n) as u32).collect();
+        for class in 0..k {
+            match task {
+                Task::Regression => {
+                    for i in 0..n {
+                        gk[i] = -data.y[i];
+                    }
+                }
+                Task::Binary => {
+                    for i in 0..n {
+                        gk[i] = -(data.y[i]);
+                    }
+                }
+                Task::MultiClass(_) => {
+                    for i in 0..n {
+                        gk[i] = -f32::from(data.y[i] as usize == class);
+                    }
+                }
+            }
+            let tree = grow_tree(&m, rows.clone(), &gk, &hk, &grow, &mut erng, &mut scratch);
+            trees.push(tree);
+            tree_class.push(class as u16);
+        }
+    }
+
+    // Base scores: regression sums mean-of-means (already folded into
+    // leaves), binary needs the -0.5 decision offset so `logit > 0`
+    // implements `mean vote > 0.5`.
+    let base = match task {
+        Task::Regression => vec![0.0],
+        Task::Binary => vec![-0.5],
+        Task::MultiClass(k) => vec![0.0; k],
+    };
+
+    Ensemble {
+        name: data.name.clone(),
+        task,
+        n_features: data.n_features,
+        trees,
+        tree_class,
+        base_score: base,
+        quantizer,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::by_name;
+    use crate::trees::metrics::score;
+
+    fn small_params(n_estimators: usize) -> RfParams {
+        RfParams { n_estimators, max_leaves: 32, max_depth: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn learns_binary_task() {
+        let d = by_name("churn").unwrap().generate_n(2000);
+        let s = d.split(0.7, 0.0, 1);
+        let model = train(&s.train, &small_params(30));
+        let acc = score(&model, &s.test);
+        assert!(acc > 0.75, "accuracy {acc}");
+    }
+
+    #[test]
+    fn learns_multiclass_task() {
+        let d = by_name("gesture").unwrap().generate_n(2500);
+        let s = d.split(0.7, 0.0, 2);
+        let model = train(&s.train, &small_params(25));
+        let acc = score(&model, &s.test);
+        assert!(acc > 0.45, "accuracy {acc} (chance = 0.2)");
+        assert_eq!(model.n_trees(), 25 * 5);
+    }
+
+    #[test]
+    fn learns_regression_task() {
+        let d = by_name("rossmann").unwrap().generate_n(1500);
+        let s = d.split(0.7, 0.0, 3);
+        let model = train(&s.train, &small_params(30));
+        let r2 = score(&model, &s.test);
+        assert!(r2 > 0.3, "R² {r2}");
+    }
+
+    #[test]
+    fn binary_votes_bounded() {
+        // Sum of per-tree probability votes must lie in [0, 1] before the
+        // -0.5 offset, i.e. logits in [-0.5, 0.5].
+        let d = by_name("telco").unwrap().generate_n(800);
+        let model = train(&d, &small_params(10));
+        for i in 0..50 {
+            let l = model.logits(d.row(i))[0];
+            assert!((-0.5 - 1e-4..=0.5 + 1e-4).contains(&l), "logit {l}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let d = by_name("telco").unwrap().generate_n(600);
+        let a = train(&d, &small_params(5));
+        let b = train(&d, &small_params(5));
+        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+            assert_eq!(ta, tb);
+        }
+    }
+
+    #[test]
+    fn bagging_diversifies_trees() {
+        let d = by_name("churn").unwrap().generate_n(800);
+        let model = train(&d, &small_params(6));
+        // At least two distinct trees (bootstrap + feature subsampling).
+        assert!(model.trees.windows(2).any(|w| w[0] != w[1]));
+    }
+}

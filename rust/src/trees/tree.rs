@@ -1,0 +1,329 @@
+//! Decision-tree and ensemble data structures.
+//!
+//! Trees are trained and evaluated over *binned* features (`u16` bin
+//! indices produced by [`crate::data::FeatureQuantizer`]); a split sends a
+//! sample right iff `bin >= threshold_bin`. This is exactly the form the
+//! X-TIME compiler needs: thresholds are already quantized to the CAM's
+//! representable levels, so compilation to CAM rows is lossless.
+
+use crate::data::{FeatureQuantizer, Task};
+use crate::util::Json;
+
+/// A tree node. Indices address the tree's `nodes` vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Node {
+    /// `bin >= threshold_bin` → right child, else left child.
+    Split { feature: u32, threshold_bin: u16, left: u32, right: u32 },
+    /// Prediction contribution (a logit for GBDT, a vote weight for RF).
+    Leaf { value: f32 },
+}
+
+/// A single binary decision tree over binned features.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+impl Tree {
+    pub fn leaf(value: f32) -> Tree {
+        Tree { nodes: vec![Node::Leaf { value }] }
+    }
+
+    /// Evaluate on a binned row; returns the matched leaf's value.
+    #[inline]
+    pub fn predict_bins(&self, bins: &[u16]) -> f32 {
+        let mut i = 0u32;
+        loop {
+            match self.nodes[i as usize] {
+                Node::Leaf { value } => return value,
+                Node::Split { feature, threshold_bin, left, right } => {
+                    i = if bins[feature as usize] >= threshold_bin { right } else { left };
+                }
+            }
+        }
+    }
+
+    /// Index of the matched leaf (used to cross-check CAM row matching).
+    pub fn matched_leaf(&self, bins: &[u16]) -> u32 {
+        let mut i = 0u32;
+        loop {
+            match self.nodes[i as usize] {
+                Node::Leaf { .. } => return i,
+                Node::Split { feature, threshold_bin, left, right } => {
+                    i = if bins[feature as usize] >= threshold_bin { right } else { left };
+                }
+            }
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Leaf { .. })).count()
+    }
+
+    /// Maximum root-to-leaf depth (leaf at root = depth 0).
+    pub fn depth(&self) -> usize {
+        fn walk(t: &Tree, i: u32) -> usize {
+            match t.nodes[i as usize] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + walk(t, left).max(walk(t, right)),
+            }
+        }
+        walk(self, 0)
+    }
+
+    /// All features referenced by split nodes.
+    pub fn used_features(&self) -> Vec<u32> {
+        let mut f: Vec<u32> = self
+            .nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::Split { feature, .. } => Some(*feature),
+                _ => None,
+            })
+            .collect();
+        f.sort_unstable();
+        f.dedup();
+        f
+    }
+
+    // ---- JSON (model files) -------------------------------------------
+    pub fn to_json(&self) -> Json {
+        // Flat encoding: kind 0 = split, 1 = leaf.
+        let mut kind = Vec::new();
+        let mut a = Vec::new(); // feature / value
+        let mut b = Vec::new(); // threshold_bin
+        let mut l = Vec::new();
+        let mut r = Vec::new();
+        for n in &self.nodes {
+            match *n {
+                Node::Split { feature, threshold_bin, left, right } => {
+                    kind.push(Json::Num(0.0));
+                    a.push(Json::Num(feature as f64));
+                    b.push(Json::Num(threshold_bin as f64));
+                    l.push(Json::Num(left as f64));
+                    r.push(Json::Num(right as f64));
+                }
+                Node::Leaf { value } => {
+                    kind.push(Json::Num(1.0));
+                    a.push(Json::Num(value as f64));
+                    b.push(Json::Num(0.0));
+                    l.push(Json::Num(0.0));
+                    r.push(Json::Num(0.0));
+                }
+            }
+        }
+        let mut o = Json::obj();
+        o.set("kind", Json::Arr(kind))
+            .set("a", Json::Arr(a))
+            .set("b", Json::Arr(b))
+            .set("l", Json::Arr(l))
+            .set("r", Json::Arr(r));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Tree, String> {
+        let kind = j.req("kind")?.f64_vec()?;
+        let a = j.req("a")?.f64_vec()?;
+        let b = j.req("b")?.f64_vec()?;
+        let l = j.req("l")?.f64_vec()?;
+        let r = j.req("r")?.f64_vec()?;
+        let mut nodes = Vec::with_capacity(kind.len());
+        for i in 0..kind.len() {
+            nodes.push(if kind[i] == 0.0 {
+                Node::Split {
+                    feature: a[i] as u32,
+                    threshold_bin: b[i] as u16,
+                    left: l[i] as u32,
+                    right: r[i] as u32,
+                }
+            } else {
+                Node::Leaf { value: a[i] as f32 }
+            });
+        }
+        Ok(Tree { nodes })
+    }
+}
+
+/// A trained ensemble: trees plus the quantizer that maps raw features to
+/// bins and metadata needed for reduction.
+#[derive(Clone, Debug)]
+pub struct Ensemble {
+    pub name: String,
+    pub task: Task,
+    pub n_features: usize,
+    pub trees: Vec<Tree>,
+    /// Class each tree contributes to (always 0 for regression/binary).
+    pub tree_class: Vec<u16>,
+    /// Additive prior per output column.
+    pub base_score: Vec<f32>,
+    pub quantizer: FeatureQuantizer,
+}
+
+impl Ensemble {
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    pub fn max_leaves(&self) -> usize {
+        self.trees.iter().map(|t| t.n_leaves()).max().unwrap_or(0)
+    }
+
+    pub fn total_leaves(&self) -> usize {
+        self.trees.iter().map(|t| t.n_leaves()).sum()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.trees.iter().map(|t| t.depth()).max().unwrap_or(0)
+    }
+
+    /// Raw logit accumulation: bins the row, sums each tree's matched leaf
+    /// into its class column, adds the base score. This is the *reference
+    /// semantics* every backend (CAM functional model, cycle simulator,
+    /// XLA artifact) must agree with exactly.
+    pub fn logits(&self, row: &[f32]) -> Vec<f32> {
+        let bins = self.quantizer.bin_row(row);
+        self.logits_bins(&bins)
+    }
+
+    pub fn logits_bins(&self, bins: &[u16]) -> Vec<f32> {
+        let mut out = self.base_score.clone();
+        for (t, tree) in self.trees.iter().enumerate() {
+            out[self.tree_class[t] as usize] += tree.predict_bins(bins);
+        }
+        out
+    }
+
+    /// Task-level prediction: regression value, or class index.
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        let logits = self.logits(row);
+        match self.task {
+            Task::Regression => logits[0],
+            Task::Binary => (logits[0] > 0.0) as usize as f32,
+            Task::MultiClass(_) => {
+                let mut best = 0usize;
+                for c in 1..logits.len() {
+                    if logits[c] > logits[best] {
+                        best = c;
+                    }
+                }
+                best as f32
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("task", Json::Str(self.task.name()))
+            .set("n_classes", Json::Num(self.task.n_classes() as f64))
+            .set("n_features", Json::Num(self.n_features as f64))
+            .set("trees", Json::Arr(self.trees.iter().map(|t| t.to_json()).collect()))
+            .set(
+                "tree_class",
+                Json::Arr(self.tree_class.iter().map(|&c| Json::Num(c as f64)).collect()),
+            )
+            .set("base_score", Json::from_f32_slice(&self.base_score))
+            .set("quant_bits", Json::Num(self.quantizer.n_bits as f64))
+            .set(
+                "quant_edges",
+                Json::Arr(self.quantizer.edges.iter().map(|e| Json::from_f32_slice(e)).collect()),
+            );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Ensemble, String> {
+        let task = match j.req_str("task")? {
+            "regression" => Task::Regression,
+            "binary" => Task::Binary,
+            s if s.starts_with("multiclass") => Task::MultiClass(j.req_usize("n_classes")?),
+            s => return Err(format!("unknown task `{s}`")),
+        };
+        let trees = j
+            .req_arr("trees")?
+            .iter()
+            .map(Tree::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let tree_class = j
+            .req_arr("tree_class")?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as u16).ok_or("bad tree_class".to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        let edges = j
+            .req_arr("quant_edges")?
+            .iter()
+            .map(|e| e.f32_vec())
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Ensemble {
+            name: j.req_str("name")?.to_string(),
+            task,
+            n_features: j.req_usize("n_features")?,
+            trees,
+            tree_class,
+            base_score: j.req("base_score")?.f32_vec()?,
+            quantizer: FeatureQuantizer { n_bits: j.req_usize("quant_bits")? as u8, edges },
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Ensemble, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Ensemble::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// f0 >= 3 ? (f1 >= 7 ? 3.0 : 2.0) : 1.0
+    fn sample_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Split { feature: 0, threshold_bin: 3, left: 1, right: 2 },
+                Node::Leaf { value: 1.0 },
+                Node::Split { feature: 1, threshold_bin: 7, left: 3, right: 4 },
+                Node::Leaf { value: 2.0 },
+                Node::Leaf { value: 3.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn predict_routes_correctly() {
+        let t = sample_tree();
+        assert_eq!(t.predict_bins(&[0, 0]), 1.0);
+        assert_eq!(t.predict_bins(&[3, 0]), 2.0);
+        assert_eq!(t.predict_bins(&[5, 7]), 3.0);
+        assert_eq!(t.predict_bins(&[2, 200]), 1.0);
+    }
+
+    #[test]
+    fn structure_stats() {
+        let t = sample_tree();
+        assert_eq!(t.n_leaves(), 3);
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.used_features(), vec![0, 1]);
+    }
+
+    #[test]
+    fn tree_json_roundtrip() {
+        let t = sample_tree();
+        let back = Tree::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn matched_leaf_agrees_with_value() {
+        let t = sample_tree();
+        for bins in [[0u16, 0], [3, 0], [5, 9]] {
+            let leaf = t.matched_leaf(&bins);
+            match t.nodes[leaf as usize] {
+                Node::Leaf { value } => assert_eq!(value, t.predict_bins(&bins)),
+                _ => panic!("matched_leaf returned a split node"),
+            }
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument set. Build with [`Args::new`], describe options with
+/// [`Args::opt`]/[`Args::flag`], then [`Args::parse`].
+#[derive(Clone, Debug)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Args {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default (None = required).
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Args {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Args {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <value>", spec.name)
+            };
+            let def = match &spec.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if spec.is_flag => String::new(),
+                None => " [required]".to_string(),
+            };
+            s.push_str(&format!("{head:<28} {}{def}\n", spec.help));
+        }
+        s
+    }
+
+    /// Parse a raw token list (without argv[0]).
+    pub fn parse(mut self, argv: &[String]) -> Result<Args, String> {
+        let known = |name: &str| self.specs.iter().find(|s| s.name == name);
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = known(&name)
+                    .ok_or_else(|| format!("unknown option `--{name}`\n\n{}", self.usage()))?
+                    .clone();
+                let value = if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag `--{name}` does not take a value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("option `--{name}` needs a value"))?
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Check required options.
+        for spec in &self.specs {
+            if !spec.is_flag && spec.default.is_none() && !self.values.contains_key(&spec.name) {
+                return Err(format!("missing required option `--{}`\n\n{}", spec.name, self.usage()));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from the process environment, exiting with usage on error.
+    pub fn parse_env(self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    fn raw(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.raw(name)
+            .unwrap_or_else(|| panic!("undeclared or missing option `{name}`"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("option `--{name}` is not an integer: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("option `--{name}` is not an integer: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("option `--{name}` is not a number: {e}"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::new("t", "test")
+            .opt("dataset", Some("churn"), "dataset name")
+            .opt("batch", None, "batch size")
+            .flag("verbose", "chatty")
+            .parse(&argv(&["--batch", "64", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("dataset"), "churn");
+        assert_eq!(a.get_usize("batch"), 64);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::new("t", "test")
+            .opt("seed", Some("1"), "")
+            .parse(&argv(&["--seed=99"]))
+            .unwrap();
+        assert_eq!(a.get_u64("seed"), 99);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let r = Args::new("t", "test").opt("x", None, "").parse(&argv(&[]));
+        assert!(r.unwrap_err().contains("--x"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Args::new("t", "test").parse(&argv(&["--nope"]));
+        assert!(r.unwrap_err().contains("nope"));
+    }
+
+    #[test]
+    fn flag_rejects_value() {
+        let r = Args::new("t", "test").flag("v", "").parse(&argv(&["--v=1"]));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! Bench harness (criterion is not vendored offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`time_fn`] /
+//! [`Table`] to produce the same rows/series the paper reports.
+
+use super::stats::{fmt_si_rate, fmt_si_time, Summary};
+use std::time::Instant;
+
+/// Time `f` with `warmup` discarded runs then `runs` measured runs;
+/// returns per-run wall time statistics in seconds.
+pub fn time_fn<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// Time `f` until at least `min_time` seconds of measurement accumulate
+/// (minimum 5 runs), like criterion's auto-sampling.
+pub fn time_auto<F: FnMut()>(min_time: f64, mut f: F) -> Summary {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 5 || start.elapsed().as_secs_f64() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    Summary::of(&samples)
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Plain-text aligned table writer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Convenience formatters re-exported for bench binaries.
+pub fn t(seconds: f64) -> String {
+    fmt_si_time(seconds)
+}
+
+pub fn rate(per_second: f64, unit: &str) -> String {
+    fmt_si_rate(per_second, unit)
+}
+
+/// `ratio(a, b)` as a "×" string, e.g. `9740×`.
+pub fn times(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{:.0}×", x)
+    } else if x >= 10.0 {
+        format!("{:.1}×", x)
+    } else {
+        format!("{:.2}×", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_runs() {
+        let mut n = 0;
+        let s = time_fn(2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(s.n, 10);
+        assert!(s.min >= 0.0 && s.min <= s.max);
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()])
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn times_formatting() {
+        assert_eq!(times(9740.0), "9740×");
+        assert_eq!(times(19.3), "19.3×");
+        assert_eq!(times(1.5), "1.50×");
+    }
+}

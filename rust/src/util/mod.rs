@@ -1,0 +1,13 @@
+//! Utility substrates built from scratch for the offline image: PRNG, JSON,
+//! CLI parsing, statistics, a property-test harness and a bench harness.
+
+pub mod argparse;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use argparse::Args;
+pub use json::Json;
+pub use rng::Rng;

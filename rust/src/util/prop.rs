@@ -1,0 +1,137 @@
+//! Mini property-testing harness (proptest is not vendored offline).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(256, 0xBEEF, |g| {
+//!     let q = g.u8();
+//!     let (lo, hi) = (g.u8(), g.u8());
+//!     prop::require(macro_cell(q, lo, hi) == ((lo..hi).contains(&q)),
+//!                   format!("q={q} lo={lo} hi={hi}"))
+//! });
+//! ```
+//! On failure the harness reports the iteration index, seed and the
+//! user-supplied witness string so the case can be replayed with
+//! `Gen::replay(seed, index)`.
+
+use super::rng::Rng;
+
+/// Value generator handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    fn new(seed: u64, iteration: u64) -> Gen {
+        let mut root = Rng::new(seed);
+        Gen { rng: root.fork(iteration) }
+    }
+
+    /// Rebuild the generator used in a given failing iteration.
+    pub fn replay(seed: u64, iteration: u64) -> Gen {
+        Gen::new(seed, iteration)
+    }
+
+    pub fn u8(&mut self) -> u8 {
+        (self.rng.next_u64() & 0xFF) as u8
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_u8(&mut self, len: usize) -> Vec<u8> {
+        (0..len).map(|_| self.u8()).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of one property iteration.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper: `Ok` when `cond`, otherwise `Err(witness)`.
+pub fn require(cond: bool, witness: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(witness.into())
+    }
+}
+
+/// Run `iters` iterations of `prop` with independent generators derived
+/// from `seed`. Panics with a replayable report on the first failure.
+pub fn check<F>(iters: u64, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    for it in 0..iters {
+        let mut g = Gen::new(seed, it);
+        if let Err(witness) = prop(&mut g) {
+            panic!(
+                "property failed at iteration {it} (seed {seed:#x}).\n  witness: {witness}\n  \
+                 replay: Gen::replay({seed:#x}, {it})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iterations() {
+        let mut count = 0;
+        check(64, 1, |g| {
+            count += 1;
+            require(g.usize_in(0, 10) < 10, "bound")
+        });
+        assert_eq!(count, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "witness: boom")]
+    fn failing_property_reports_witness() {
+        check(8, 2, |_g| require(false, "boom"));
+    }
+
+    #[test]
+    fn replay_reproduces_values() {
+        let mut seen = Vec::new();
+        check(4, 3, |g| {
+            seen.push(g.u64());
+            Ok(())
+        });
+        for (it, expect) in seen.iter().enumerate() {
+            let mut g = Gen::replay(3, it as u64);
+            assert_eq!(g.u64(), *expect);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Small statistics helpers shared by benches, the simulator and metrics.
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Summary of a sample: min/median/mean/p95/max. Used by the bench harness.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub p95: f64,
+    pub max: f64,
+    pub std: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut w = Welford::new();
+        for &x in &s {
+            w.push(x);
+        }
+        Summary {
+            n: s.len(),
+            min: s[0],
+            median: percentile_sorted(&s, 50.0),
+            mean: w.mean(),
+            p95: percentile_sorted(&s, 95.0),
+            max: *s.last().unwrap(),
+            std: w.std(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, `p` in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Arithmetic mean; returns 0 on empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Geometric mean of strictly positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs.iter().map(|x| x.ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Format a duration in seconds with an adaptive SI unit (ns/µs/ms/s).
+pub fn fmt_si_time(seconds: f64) -> String {
+    let abs = seconds.abs();
+    if abs == 0.0 {
+        "0 s".to_string()
+    } else if abs < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if abs < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if abs < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{:.2} s", seconds)
+    }
+}
+
+/// Format a rate with adaptive SI unit (K/M/G per second).
+pub fn fmt_si_rate(per_second: f64, unit: &str) -> String {
+    let abs = per_second.abs();
+    if abs >= 1e9 {
+        format!("{:.2} G{unit}/s", per_second / 1e9)
+    } else if abs >= 1e6 {
+        format!("{:.2} M{unit}/s", per_second / 1e6)
+    } else if abs >= 1e3 {
+        format!("{:.2} K{unit}/s", per_second / 1e3)
+    } else {
+        format!("{:.1} {unit}/s", per_second)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 4.0).abs() < 1e-12);
+        let direct_var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((w.variance() - direct_var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&s, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile_sorted(&s, 100.0) - 100.0).abs() < 1e-9);
+        let med = percentile_sorted(&s, 50.0);
+        assert!((med - 50.5).abs() < 1e-9, "median={med}");
+    }
+
+    #[test]
+    fn summary_ordering() {
+        let s = Summary::of(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+        assert!(s.min <= s.median && s.median <= s.p95 && s.p95 <= s.max);
+    }
+
+    #[test]
+    fn geomean_simple() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_si_time(1.5e-7), "150.0 ns");
+        assert_eq!(fmt_si_time(2.5e-4), "250.00 µs");
+        assert_eq!(fmt_si_time(0.012), "12.00 ms");
+        assert_eq!(fmt_si_time(2.0), "2.00 s");
+    }
+}

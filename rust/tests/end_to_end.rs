@@ -1,0 +1,131 @@
+//! End-to-end integration: train → compile → serve, across backends; the
+//! whole Table II catalog at reduced tree counts; serialization round
+//! trips.
+
+use std::path::{Path, PathBuf};
+use xtime::compiler::{compile, CamEngine, CompileOptions};
+use xtime::coordinator::{BatchPolicy, CpuExactBackend, FunctionalBackend, Server, XlaBackend};
+use xtime::data::{catalog, Task};
+use xtime::runtime::XlaCamEngine;
+use xtime::trees::{metrics, paper_model, train_paper_model, Ensemble};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping XLA parts: run `make artifacts` first");
+        None
+    }
+}
+
+/// Train every Table II dataset (reduced trees), compile, and verify the
+/// functional CAM engine reproduces CPU predictions sample-for-sample.
+#[test]
+fn whole_catalog_compiles_and_agrees() {
+    for spec in catalog() {
+        let data = spec.generate_n(1200);
+        let mspec = paper_model(spec.name).unwrap();
+        let trees = if data.task.n_outputs() > 1 { 3 * data.task.n_outputs() } else { 8 };
+        let model = train_paper_model(&data, &mspec, 8, mspec.n_leaves_max.min(32), Some(trees));
+        let program = compile(&model, &CompileOptions::default())
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        let engine = CamEngine::new(&program);
+        for i in 0..100 {
+            let row = data.row(i);
+            let got = engine.predict(&program, row);
+            let want = model.predict(row);
+            if data.task == Task::Regression {
+                // Regression outputs are raw sums; the engine accumulates
+                // in f64 vs the reference's f32 tree order — identical up
+                // to rounding.
+                assert!(
+                    (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "{}: row {i}: {got} vs {want}",
+                    spec.name
+                );
+            } else {
+                assert_eq!(got, want, "{}: row {i} disagrees", spec.name);
+            }
+        }
+        // Accuracy sanity: the model must beat chance on its own data.
+        let score = metrics::score(&model, &data);
+        let chance = match data.task {
+            Task::Regression => 0.2,
+            Task::Binary => 0.6,
+            Task::MultiClass(k) => 1.5 / k as f64,
+        };
+        assert!(score > chance, "{}: score {score} ≤ chance {chance}", spec.name);
+    }
+}
+
+/// The three backends must serve identical predictions through the
+/// dynamic-batching server.
+#[test]
+fn all_backends_serve_identically() {
+    let spec = xtime::data::by_name("churn").unwrap();
+    let data = spec.generate_n(1000);
+    let mspec = paper_model("churn").unwrap();
+    let model = train_paper_model(&data, &mspec, 8, 16, Some(10));
+    let program = compile(&model, &CompileOptions::default()).unwrap();
+
+    let mut backends: Vec<Box<dyn xtime::coordinator::Backend>> = vec![
+        Box::new(CpuExactBackend { model: model.clone() }),
+        Box::new(FunctionalBackend::new(&program)),
+    ];
+    if let Some(dir) = artifacts() {
+        backends.push(Box::new(XlaBackend {
+            engine: XlaCamEngine::new(&program, &dir, 8).expect("xla engine"),
+        }));
+    }
+
+    let mut all_preds: Vec<Vec<f32>> = Vec::new();
+    for backend in backends {
+        let name = backend.name();
+        let server = Server::start(backend, BatchPolicy::default(), program.n_features);
+        let preds: Vec<f32> = (0..60)
+            .map(|i| server.infer_blocking(program.quantizer.bin_row(data.row(i))).prediction)
+            .collect();
+        eprintln!("{name}: served 60");
+        all_preds.push(preds);
+    }
+    for w in all_preds.windows(2) {
+        assert_eq!(w[0], w[1], "backends disagree");
+    }
+}
+
+/// Model JSON round trip preserves predictions exactly.
+#[test]
+fn model_serialization_roundtrip() {
+    let spec = xtime::data::by_name("eye").unwrap();
+    let data = spec.generate_n(800);
+    let mspec = paper_model("eye").unwrap();
+    let model = train_paper_model(&data, &mspec, 8, 16, Some(9));
+    let tmp = std::env::temp_dir().join("xtime_e2e_model.json");
+    model.save(&tmp).unwrap();
+    let back = Ensemble::load(&tmp).unwrap();
+    for i in 0..100 {
+        assert_eq!(model.predict(data.row(i)), back.predict(data.row(i)), "row {i}");
+    }
+    let _ = std::fs::remove_file(&tmp);
+}
+
+/// Program JSON round trip preserves the functional engine's outputs.
+#[test]
+fn program_serialization_roundtrip() {
+    let spec = xtime::data::by_name("telco").unwrap();
+    let data = spec.generate_n(700);
+    let mspec = paper_model("telco").unwrap();
+    let model = train_paper_model(&data, &mspec, 8, 4, Some(12));
+    let program = compile(&model, &CompileOptions::default()).unwrap();
+    let tmp = std::env::temp_dir().join("xtime_e2e_program.json");
+    program.save(&tmp).unwrap();
+    let back = xtime::compiler::CamProgram::load(&tmp).unwrap();
+    let e1 = CamEngine::new(&program);
+    let e2 = CamEngine::new(&back);
+    for i in 0..60 {
+        let row = data.row(i);
+        assert_eq!(e1.infer_row(&program, row), e2.infer_row(&back, row), "row {i}");
+    }
+    let _ = std::fs::remove_file(&tmp);
+}

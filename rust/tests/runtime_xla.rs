@@ -1,0 +1,116 @@
+//! Integration: the XLA/PJRT artifact path must agree with the functional
+//! CAM engine and the exact CPU reference on real trained models.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use std::path::{Path, PathBuf};
+use xtime::compiler::{compile, CamEngine, CompileOptions};
+use xtime::data::by_name;
+use xtime::runtime::XlaCamEngine;
+use xtime::trees::{gbdt, rf, GbdtParams, RfParams};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-3 * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn xla_matches_functional_and_cpu_binary() {
+    let Some(dir) = artifacts() else { return };
+    let d = by_name("churn").unwrap().generate_n(1200);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 12, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    let xla = XlaCamEngine::new(&p, &dir, 8).expect("engine");
+    let cam = CamEngine::new(&p);
+
+    let rows: Vec<&[f32]> = (0..64).map(|i| d.row(i)).collect();
+    let got = xla.infer_rows(&p, &rows).unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        let want_cpu = m.logits(row);
+        let want_cam = cam.infer_row(&p, row);
+        assert!(close(got[i][0], want_cpu[0]), "row {i}: xla {} cpu {}", got[i][0], want_cpu[0]);
+        assert!(close(got[i][0], want_cam[0]), "row {i}: xla {} cam {}", got[i][0], want_cam[0]);
+    }
+    let preds = xla.predict_rows(&p, &rows).unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(preds[i], m.predict(row), "decision mismatch at {i}");
+    }
+}
+
+#[test]
+fn xla_matches_reference_multiclass_rf() {
+    let Some(dir) = artifacts() else { return };
+    let d = by_name("eye").unwrap().generate_n(900);
+    let m = rf::train(&d, &RfParams { n_estimators: 6, max_leaves: 32, ..Default::default() });
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    let xla = XlaCamEngine::new(&p, &dir, 1).expect("engine");
+
+    let rows: Vec<&[f32]> = (0..40).map(|i| d.row(i)).collect();
+    let got = xla.infer_rows(&p, &rows).unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        let want = m.logits(row);
+        assert_eq!(got[i].len(), 3);
+        for k in 0..3 {
+            assert!(close(got[i][k], want[k]), "row {i} class {k}: {} vs {}", got[i][k], want[k]);
+        }
+    }
+}
+
+#[test]
+fn xla_handles_max_feature_dataset() {
+    let Some(dir) = artifacts() else { return };
+    // gas: 129 features — exercises the F=130 bucket.
+    let d = by_name("gas").unwrap().generate_n(700);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 3, max_leaves: 8, ..Default::default() },
+        None,
+    );
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    let xla = XlaCamEngine::new(&p, &dir, 64).expect("engine");
+    assert!(xla.bucket().features >= 129);
+
+    let rows: Vec<&[f32]> = (0..32).map(|i| d.row(i)).collect();
+    let got = xla.infer_rows(&p, &rows).unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        let want = m.logits(row);
+        for k in 0..want.len() {
+            assert!(close(got[i][k], want[k]), "row {i} class {k}");
+        }
+    }
+}
+
+#[test]
+fn batch_chunking_is_transparent() {
+    let Some(dir) = artifacts() else { return };
+    let d = by_name("telco").unwrap().generate_n(600);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 5, max_leaves: 4, ..Default::default() },
+        None,
+    );
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    let xla = XlaCamEngine::new(&p, &dir, 8).expect("engine");
+    let cap = xla.max_batch();
+    // Request more rows than one device batch: results must equal the
+    // row-by-row path.
+    let rows: Vec<&[f32]> = (0..cap * 2 + 3).map(|i| d.row(i % d.n_rows())).collect();
+    let batched = xla.infer_rows(&p, &rows).unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        let single = xla.infer_rows(&p, &[row]).unwrap();
+        assert_eq!(batched[i], single[0], "row {i}");
+    }
+}
