@@ -14,19 +14,29 @@
 //! output is recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example fraud_serving`
+//!
+//! `--shards N` (default 4) sizes the sharded multi-card demo: a
+//! 1024-tree ensemble is partitioned into N shard programs served by a
+//! pool of per-shard workers, and throughput is compared against the same
+//! ensemble on a single worker (§III-D scale-out; ADR-001).
 
 use std::path::Path;
 use std::time::Instant;
 use xtime::baselines::cpu_measure;
-use xtime::compiler::{compile, CompileOptions};
+use xtime::bench_support::{random_ensemble, sharded_functional_pool};
+use xtime::compiler::{compile, partition, CamEngine, CompileOptions, PartitionOptions};
 use xtime::coordinator::{Backend, BatchPolicy, FunctionalBackend, Server, XlaBackend};
-use xtime::data::by_name;
+use xtime::data::{by_name, Task};
 use xtime::runtime::XlaCamEngine;
-use xtime::sim::{simulate, ChipConfig, Workload};
+use xtime::sim::{simulate, CardConfig, ChipConfig, SimCardBackend, Workload};
 use xtime::trees::{gbdt, metrics, GbdtParams};
-use xtime::util::bench::{rate, t, Table};
+use xtime::util::bench::{rate, t, times, Table};
+use xtime::util::{Args, Rng};
 
 const N_REQUESTS: usize = 20_000;
+/// Requests for the sharded demo (functional backend is ~1 ms/req on the
+/// 1024-tree model, so this keeps the demo under a minute).
+const N_SHARD_REQUESTS: usize = 2_000;
 
 fn serve(
     name: &str,
@@ -60,7 +70,110 @@ fn serve(
     server.shutdown();
 }
 
+/// Serve the same request stream through a 1-shard and an N-shard pool of
+/// functional backends and report the scaling, then print the simulated
+/// N-card projection.
+fn shard_demo(n_shards: usize) -> anyhow::Result<()> {
+    println!("\n=== sharded multi-card serving (1024-tree ensemble, {n_shards} shards) ===");
+    // Exact-topology synthetic ensemble: serving scalability depends only
+    // on topology, and 1024 trees is the paper-scale regime (Table II).
+    let model = random_ensemble(1024, 4, 32, Task::Binary, 99);
+    let program = compile(&model, &CompileOptions::default())?;
+    println!(
+        "compiled: {} trees, {} rows, {} cores",
+        program.n_trees,
+        program.total_rows(),
+        program.cores_per_replica()
+    );
+
+    // Pre-generate the request stream once so both pools see equal work.
+    let mut rng = Rng::new(4242);
+    let rows: Vec<Vec<f32>> = (0..N_SHARD_REQUESTS)
+        .map(|_| (0..program.n_features).map(|_| rng.f32()).collect())
+        .collect();
+    let bins: Vec<Vec<u16>> = rows.iter().map(|r| program.quantizer.bin_row(r)).collect();
+
+    // Correctness spot check: sharded logits must be bit-identical to the
+    // unsharded functional engine (full test in rust/tests/sharding.rs).
+    let reference = CamEngine::new(&program);
+
+    let mut table = Table::new(&["shards", "throughput", "p50 latency", "speedup", "shard rows"]);
+    let mut base_tput = 0.0f64;
+    let mut sharded_plan = None;
+    for &n in &[1usize, n_shards] {
+        let plan = partition(&program, n, &PartitionOptions::default())?;
+        let server =
+            sharded_functional_pool(&plan, BatchPolicy { max_wait_us: 200, max_batch: 64 });
+        for (b, r) in bins.iter().take(50).zip(&rows) {
+            let reply = server.infer_blocking(b.clone());
+            assert_eq!(reply.logits, reference.infer_row(&program, r), "shard aggregation drifted");
+        }
+        let t0 = Instant::now();
+        let pending: Vec<_> = bins.iter().map(|b| server.submit(b.clone())).collect();
+        for rx in pending {
+            rx.recv().expect("reply");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tput = N_SHARD_REQUESTS as f64 / wall;
+        if n == 1 {
+            base_tput = tput;
+        }
+        let lat = server.latency_summary().unwrap();
+        let stats = server.stats();
+        let rows_per_shard: Vec<String> =
+            plan.shards.iter().map(|s| format!("{}", s.total_rows())).collect();
+        table.row(&[
+            format!("{n}"),
+            rate(tput, "req"),
+            t(lat.median),
+            times(tput / base_tput),
+            rows_per_shard.join("/"),
+        ]);
+        assert_eq!(stats.errors, 0);
+        server.shutdown();
+        if n == n_shards {
+            sharded_plan = Some(plan);
+        }
+    }
+    table.print(&format!("sharded serving, {N_SHARD_REQUESTS} requests (+50 verified)"));
+    println!("logits bit-identical to the unsharded engine on all verified rows ✓");
+
+    // Silicon projection: N independent simulated cards, one per shard
+    // (reusing the N-shard plan from the loop above).
+    let plan = sharded_plan.expect("loop always builds the n_shards plan");
+    let cards: Vec<SimCardBackend> = plan
+        .shards
+        .iter()
+        .map(|s| SimCardBackend::new(s, &ChipConfig::default(), &CardConfig::default()))
+        .collect();
+    // Every request visits every card (partial-sum sharding), so the pool
+    // runs at the slowest card's rate — which rises with N because each
+    // card holds ~1/N of the rows.
+    let pool = cards
+        .iter()
+        .map(|c| c.projected_throughput_sps())
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "simulated {}-card projection: {} (slowest card bounds the lock-step pool)",
+        n_shards,
+        rate(pool, "req"),
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::new("fraud_serving", "end-to-end serving driver")
+        .opt("shards", Some("4"), "shard count for the multi-card demo (≥ 2)")
+        .parse(&argv)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let n_shards = args.get_usize("shards");
+    if n_shards < 2 {
+        return Err(anyhow::anyhow!(
+            "--shards must be ≥ 2 (got {n_shards}); the demo compares N shards against 1"
+        ));
+    }
+
     println!("=== X-TIME end-to-end serving driver (fraud/churn detection) ===\n");
 
     // Train at a Table-II-like topology (404 trees in the paper; 128 here
@@ -126,5 +239,8 @@ fn main() -> anyhow::Result<()> {
         "\nX-TIME chip projection: {:.0} ns unloaded latency, {:.0} MS/s ({} replicas, bound {}), {:.2} nJ/dec",
         rep.latency_ns.min, rep.throughput_msps, rep.n_replicas, rep.bottleneck, rep.energy_nj_per_decision
     );
+
+    // --- sharded multi-card scale-out ----------------------------------------
+    shard_demo(n_shards)?;
     Ok(())
 }

@@ -1,7 +1,10 @@
 //! Shared helpers for the `rust/benches/` harnesses: a trained-model cache
-//! (benches share Table II models instead of retraining) and synthetic
-//! ensemble generators for the Fig. 11 sweeps.
+//! (benches share Table II models instead of retraining), synthetic
+//! ensemble generators for the Fig. 11 sweeps, and the sharded-pool
+//! builder the scaling bench/example/tests share.
 
+use crate::compiler::ShardPlan;
+use crate::coordinator::{Backend, BatchPolicy, FunctionalBackend, Server};
 use crate::data::{by_name, Dataset, FeatureQuantizer, Task};
 use crate::trees::{paper_model, train_paper_model, Ensemble, Node, Tree};
 use crate::util::Rng;
@@ -96,6 +99,20 @@ pub fn random_ensemble(
         base_score: vec![0.0; k],
         quantizer: FeatureQuantizer { n_bits: 8, edges },
     }
+}
+
+/// Build a serving pool with one functional backend per shard of `plan` —
+/// the software stand-in for one PCIe card per shard. Shared by
+/// `benches/shard_scaling.rs`, `examples/fraud_serving.rs` and
+/// `rust/tests/sharding.rs` so the measured configuration cannot drift
+/// between them.
+pub fn sharded_functional_pool(plan: &ShardPlan, policy: BatchPolicy) -> Server {
+    let backends: Vec<Box<dyn Backend>> = plan
+        .shards
+        .iter()
+        .map(|s| Box::new(FunctionalBackend::new(s)) as Box<dyn Backend>)
+        .collect();
+    Server::start_sharded(backends, plan.base_score.clone(), policy, plan.n_features)
 }
 
 fn random_tree(depth: usize, n_features: usize, n_bins: usize, rng: &mut Rng) -> Tree {

@@ -98,6 +98,24 @@ impl CamEngine {
 
     /// Inference + search statistics.
     pub fn infer_bins_stats(&self, bins: &[u16]) -> (Vec<f32>, SearchStats) {
+        let (acc, stats) = self.partials_bins_stats(bins);
+        let logits: Vec<f32> = acc
+            .iter()
+            .zip(self.base_score.iter().chain(std::iter::repeat(&0.0)))
+            .map(|(&a, &b)| a as f32 + b)
+            .collect();
+        (logits, stats)
+    }
+
+    /// Base-free per-class partial sums in f64 — the shard-aggregation
+    /// contract: summing each shard engine's `partials_bins` and then
+    /// applying `base` exactly as [`CamEngine::infer_bins`] does
+    /// (`partial as f32 + base`) reproduces the unsharded logits.
+    pub fn partials_bins(&self, bins: &[u16]) -> Vec<f64> {
+        self.partials_bins_stats(bins).0
+    }
+
+    fn partials_bins_stats(&self, bins: &[u16]) -> (Vec<f64>, SearchStats) {
         assert_eq!(bins.len(), self.n_features, "feature arity mismatch");
         // Queries are scaled into the same 8-bit level space as the
         // programmed bounds, modelling the DAC's full-scale mapping.
@@ -125,12 +143,7 @@ impl CamEngine {
             }
             stats.matches += taken;
         }
-        let logits: Vec<f32> = acc
-            .iter()
-            .zip(self.base_score.iter().chain(std::iter::repeat(&0.0)))
-            .map(|(&a, &b)| a as f32 + b)
-            .collect();
-        (logits, stats)
+        (acc, stats)
     }
 
     /// Quantize a raw feature row with the program's quantizer, then infer.

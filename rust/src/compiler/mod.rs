@@ -5,10 +5,12 @@
 
 pub mod engine;
 pub mod noc;
+pub mod partition;
 pub mod paths;
 pub mod program;
 
 pub use engine::{CamEngine, SearchStats};
 pub use noc::{NocConfig, Router};
+pub use partition::{partition, PartitionError, PartitionOptions, ShardPlan, ShardStrategy};
 pub use paths::{extract_rows, CamRow};
 pub use program::{compile, CamProgram, CompileError, CompileOptions, CoreImage, CHIP_CORES};

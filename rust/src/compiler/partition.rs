@@ -1,0 +1,396 @@
+//! Shard partitioner: one compiled ensemble → N self-contained programs.
+//!
+//! The paper's deployment (§III-D) is a host CPU offloading inference to
+//! X-TIME PCIe cards. A single card caps capacity at 4096 cores and
+//! throughput at one device's rate; spreading the trees of a large
+//! ensemble across N cards is the scale-out lever (cf. RETENTION's
+//! ensemble partitioning and MonoSparse-CAM's placement results). Because
+//! tree ensembles reduce by *summation*, trees can be split arbitrarily
+//! across devices: each shard computes a partial per-class sum and the
+//! host aggregates `Σ_shards partials + base_score`.
+//!
+//! Each shard is a complete [`CamProgram`] — it repacks its trees into
+//! class-uniform cores and rebuilds its own NoC configuration — so every
+//! existing consumer (functional engine, cycle simulator, XLA runtime)
+//! runs a shard unmodified. The full base score is carried by shard 0 and
+//! zeroed elsewhere, so summing *standalone* shard logits is also correct.
+//!
+//! See `docs/adr/001-shard-placement.md` for why balanced-leaf-rows is the
+//! default strategy.
+
+use super::program::{pack_class_cores, CamProgram, CoreImage};
+use super::noc::NocConfig;
+use super::paths::CamRow;
+use crate::cam::CORE_ROWS;
+use std::collections::HashMap;
+
+/// How trees are distributed across shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Round-robin by tree id: shard tree counts differ by at most one.
+    /// Ignores tree size, so leaf-heavy trees can skew per-shard work.
+    BalancedTrees,
+    /// Longest-processing-time greedy on CAM row (≈ leaf) counts: each
+    /// tree goes to the currently lightest shard. Rows drive both CAM
+    /// search energy and functional-model cost, so this balances *work*.
+    BalancedRows,
+}
+
+impl ShardStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardStrategy::BalancedTrees => "balanced-trees",
+            ShardStrategy::BalancedRows => "balanced-rows",
+        }
+    }
+}
+
+/// Partitioning options.
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionOptions {
+    pub strategy: ShardStrategy,
+    /// Core word capacity used when repacking shard cores.
+    pub core_rows: usize,
+    /// Per-card core budget each shard must fit.
+    pub chip_cores: usize,
+}
+
+impl Default for PartitionOptions {
+    fn default() -> Self {
+        PartitionOptions {
+            strategy: ShardStrategy::BalancedRows,
+            core_rows: CORE_ROWS,
+            chip_cores: super::program::CHIP_CORES,
+        }
+    }
+}
+
+/// Partitioning error.
+#[derive(Debug, PartialEq)]
+pub enum PartitionError {
+    /// `n_shards` was zero.
+    NoShards,
+    /// More shards requested than trees available to spread.
+    TooManyShards { requested: usize, trees: usize },
+    /// A single tree exceeds the repack core capacity.
+    TreeTooLarge { tree: u32, leaves: usize, capacity: usize },
+    /// A shard needs more cores than one card provides.
+    ShardOverflow { shard: usize, needed: usize, available: usize },
+}
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::NoShards => write!(f, "cannot partition into 0 shards"),
+            PartitionError::TooManyShards { requested, trees } => {
+                write!(f, "{requested} shards requested but only {trees} trees to spread")
+            }
+            PartitionError::TreeTooLarge { tree, leaves, capacity } => {
+                write!(f, "tree {tree} has {leaves} leaves > shard core capacity {capacity}")
+            }
+            PartitionError::ShardOverflow { shard, needed, available } => {
+                write!(f, "shard {shard} needs {needed} cores > {available} per card")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+/// The result of partitioning: per-shard programs plus the aggregation
+/// metadata the serving engine needs.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// One self-contained program per shard.
+    pub shards: Vec<CamProgram>,
+    /// Tree ids assigned to each shard (sorted ascending).
+    pub assignment: Vec<Vec<u32>>,
+    pub strategy: ShardStrategy,
+    /// The source ensemble's additive prior, applied **once** when the
+    /// host aggregates partial sums (shard 0 also carries it for
+    /// standalone use; shards 1.. carry zeros).
+    pub base_score: Vec<f32>,
+    pub task: crate::data::Task,
+    pub n_features: usize,
+}
+
+impl ShardPlan {
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// CAM rows per shard — the balance the strategies optimize.
+    pub fn rows_per_shard(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.total_rows()).collect()
+    }
+
+    /// Trees per shard.
+    pub fn trees_per_shard(&self) -> Vec<usize> {
+        self.assignment.iter().map(|a| a.len()).collect()
+    }
+
+    /// Max/min row-count ratio across shards (1.0 = perfectly balanced).
+    pub fn row_imbalance(&self) -> f64 {
+        let rows = self.rows_per_shard();
+        let max = *rows.iter().max().unwrap_or(&0) as f64;
+        let min = *rows.iter().min().unwrap_or(&0) as f64;
+        if min == 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
+    }
+}
+
+/// One tree's rows, recovered from a compiled program.
+struct TreeRows {
+    id: u32,
+    class: u16,
+    rows: Vec<CamRow>,
+}
+
+/// Recover per-tree row groups from the compiled core images. Row order
+/// within each tree is preserved (it matches extraction order), so shard
+/// programs reproduce the original rows exactly.
+fn trees_of(program: &CamProgram) -> Vec<TreeRows> {
+    let mut index: HashMap<u32, usize> = HashMap::new();
+    let mut trees: Vec<TreeRows> = Vec::new();
+    for core in &program.cores {
+        for row in &core.rows {
+            let at = *index.entry(row.tree).or_insert_with(|| {
+                trees.push(TreeRows { id: row.tree, class: core.class, rows: Vec::new() });
+                trees.len() - 1
+            });
+            trees[at].rows.push(row.clone());
+        }
+    }
+    trees.sort_by_key(|t| t.id);
+    trees
+}
+
+/// Split `program`'s trees into `n_shards` self-contained programs.
+///
+/// Correctness invariant (tested in `rust/tests/sharding.rs`): for every
+/// input, summing the shards' base-free partial sums in shard order and
+/// adding `base_score` reproduces the unsharded functional engine's
+/// logits exactly.
+pub fn partition(
+    program: &CamProgram,
+    n_shards: usize,
+    options: &PartitionOptions,
+) -> Result<ShardPlan, PartitionError> {
+    if n_shards == 0 {
+        return Err(PartitionError::NoShards);
+    }
+    let trees = trees_of(program);
+    if n_shards > trees.len() {
+        return Err(PartitionError::TooManyShards { requested: n_shards, trees: trees.len() });
+    }
+    for t in &trees {
+        if t.rows.len() > options.core_rows {
+            return Err(PartitionError::TreeTooLarge {
+                tree: t.id,
+                leaves: t.rows.len(),
+                capacity: options.core_rows,
+            });
+        }
+    }
+
+    // Assign trees to shards.
+    let mut shard_of = vec![0usize; trees.len()];
+    match options.strategy {
+        ShardStrategy::BalancedTrees => {
+            for (i, s) in shard_of.iter_mut().enumerate() {
+                *s = i % n_shards;
+            }
+        }
+        ShardStrategy::BalancedRows => {
+            // LPT: biggest trees first, each to the lightest shard.
+            let mut order: Vec<usize> = (0..trees.len()).collect();
+            order.sort_by_key(|&i| (std::cmp::Reverse(trees[i].rows.len()), trees[i].id));
+            let mut load = vec![0usize; n_shards];
+            for i in order {
+                let lightest = (0..n_shards).min_by_key(|&s| (load[s], s)).unwrap();
+                shard_of[i] = lightest;
+                load[lightest] += trees[i].rows.len();
+            }
+        }
+    }
+
+    // Build each shard as a complete program.
+    let k = program.task.n_outputs().max(1);
+    let mut shards = Vec::with_capacity(n_shards);
+    let mut assignment = vec![Vec::new(); n_shards];
+    for s in 0..n_shards {
+        let mut class_trees: Vec<Vec<(u32, Vec<CamRow>)>> = vec![Vec::new(); k];
+        for (i, t) in trees.iter().enumerate() {
+            if shard_of[i] == s {
+                class_trees[t.class as usize].push((t.id, t.rows.clone()));
+                assignment[s].push(t.id);
+            }
+        }
+        let mut cores: Vec<CoreImage> = Vec::new();
+        for (class, ct) in class_trees.iter().enumerate() {
+            cores.extend(pack_class_cores(class as u16, ct, options.core_rows));
+        }
+        if cores.len() > options.chip_cores {
+            return Err(PartitionError::ShardOverflow {
+                shard: s,
+                needed: cores.len(),
+                available: options.chip_cores,
+            });
+        }
+        // Preserve the source's within-card replication (Fig. 7c input
+        // batching) as far as the shard's spare cores allow — sharding is
+        // the capacity lever, replication stays the batching lever.
+        let max_replicas = (options.chip_cores / cores.len()).max(1);
+        let n_replicas = program.n_replicas.clamp(1, max_replicas);
+        let noc = NocConfig::build(&cores, n_replicas, options.chip_cores);
+        let base_score = if s == 0 {
+            program.base_score.clone()
+        } else {
+            vec![0.0; program.base_score.len()]
+        };
+        let n_trees = assignment[s].len();
+        shards.push(CamProgram {
+            name: format!("{}::shard{}of{}", program.name, s, n_shards),
+            task: program.task,
+            n_features: program.n_features,
+            n_bins: program.n_bins,
+            n_bits: program.n_bits,
+            base_score,
+            cores,
+            n_replicas,
+            noc,
+            quantizer: program.quantizer.clone(),
+            n_trees,
+        });
+    }
+
+    Ok(ShardPlan {
+        shards,
+        assignment,
+        strategy: options.strategy,
+        base_score: program.base_score.clone(),
+        task: program.task,
+        n_features: program.n_features,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::data::by_name;
+    use crate::trees::{gbdt, GbdtParams};
+
+    fn program(rounds: usize) -> CamProgram {
+        let d = by_name("churn").unwrap().generate_n(900);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: rounds, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        compile(&m, &CompileOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn covers_all_trees_disjointly() {
+        let p = program(12);
+        for strategy in [ShardStrategy::BalancedTrees, ShardStrategy::BalancedRows] {
+            let plan = partition(
+                &p,
+                3,
+                &PartitionOptions { strategy, ..Default::default() },
+            )
+            .unwrap();
+            let mut all: Vec<u32> = plan.assignment.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..12u32).collect::<Vec<_>>(), "{strategy:?}");
+            assert_eq!(
+                plan.shards.iter().map(|s| s.total_rows()).sum::<usize>(),
+                p.total_rows()
+            );
+        }
+    }
+
+    #[test]
+    fn balanced_trees_within_one() {
+        let p = program(13);
+        let plan = partition(
+            &p,
+            4,
+            &PartitionOptions { strategy: ShardStrategy::BalancedTrees, ..Default::default() },
+        )
+        .unwrap();
+        let counts = plan.trees_per_shard();
+        let (mi, ma) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(ma - mi <= 1, "{counts:?}");
+    }
+
+    #[test]
+    fn balanced_rows_meets_greedy_bound() {
+        let p = program(16);
+        let plan = partition(
+            &p,
+            4,
+            &PartitionOptions { strategy: ShardStrategy::BalancedRows, ..Default::default() },
+        )
+        .unwrap();
+        // Greedy-lightest bound: worst shard ≤ mean load + biggest tree.
+        let rows = plan.rows_per_shard();
+        let total: usize = rows.iter().sum();
+        let biggest_tree = {
+            let mut sizes: HashMap<u32, usize> = HashMap::new();
+            for c in &p.cores {
+                for r in &c.rows {
+                    *sizes.entry(r.tree).or_insert(0) += 1;
+                }
+            }
+            *sizes.values().max().unwrap()
+        };
+        assert!(
+            *rows.iter().max().unwrap() <= total.div_ceil(4) + biggest_tree,
+            "{rows:?} vs bound {} + {biggest_tree}",
+            total.div_ceil(4)
+        );
+        assert!(plan.row_imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn base_score_on_shard_zero_only() {
+        let p = program(8);
+        let plan = partition(&p, 2, &PartitionOptions::default()).unwrap();
+        assert_eq!(plan.shards[0].base_score, p.base_score);
+        assert!(plan.shards[1].base_score.iter().all(|&b| b == 0.0));
+        assert_eq!(plan.base_score, p.base_score);
+    }
+
+    #[test]
+    fn rejects_degenerate_requests() {
+        let p = program(4);
+        assert!(matches!(
+            partition(&p, 0, &PartitionOptions::default()),
+            Err(PartitionError::NoShards)
+        ));
+        assert!(matches!(
+            partition(&p, 5, &PartitionOptions::default()),
+            Err(PartitionError::TooManyShards { requested: 5, trees: 4 })
+        ));
+    }
+
+    #[test]
+    fn shard_programs_are_self_contained() {
+        let p = program(10);
+        let plan = partition(&p, 2, &PartitionOptions::default()).unwrap();
+        for (s, shard) in plan.shards.iter().enumerate() {
+            assert_eq!(shard.n_features, p.n_features);
+            assert_eq!(shard.n_trees, plan.assignment[s].len());
+            assert!(shard.cores.iter().all(|c| c.rows.iter().all(|r| r.class == c.class)));
+            // The engine can run a shard directly.
+            let e = crate::compiler::CamEngine::new(shard);
+            let bins = vec![0u16; shard.n_features];
+            assert_eq!(e.infer_bins(&bins).len(), p.task.n_outputs());
+        }
+    }
+}

@@ -129,42 +129,7 @@ pub fn compile(model: &Ensemble, options: &CompileOptions) -> Result<CamProgram,
     // Per class: round-robin packing over the minimal core count.
     let mut cores: Vec<CoreImage> = Vec::new();
     for (class, trees) in class_trees.iter().enumerate() {
-        if trees.is_empty() {
-            continue;
-        }
-        let total: usize = trees.iter().map(|(_, r)| r.len()).sum();
-        let mut n_cores = total.div_ceil(capacity).max(1);
-        'retry: loop {
-            let mut imgs: Vec<CoreImage> = (0..n_cores)
-                .map(|_| CoreImage {
-                    rows: Vec::new(),
-                    trees: Vec::new(),
-                    class: class as u16,
-                    replica: 0,
-                })
-                .collect();
-            for (i, (tid, rows)) in trees.iter().enumerate() {
-                // Round-robin with first-fit fallback.
-                let start = i % n_cores;
-                let mut placed = false;
-                for off in 0..n_cores {
-                    let c = (start + off) % n_cores;
-                    if imgs[c].rows.len() + rows.len() <= capacity {
-                        imgs[c].rows.extend(rows.iter().cloned());
-                        imgs[c].trees.push(*tid);
-                        placed = true;
-                        break;
-                    }
-                }
-                if !placed {
-                    // Fragmentation: grow the core count and repack.
-                    n_cores += 1;
-                    continue 'retry;
-                }
-            }
-            cores.extend(imgs);
-            break;
-        }
+        cores.extend(pack_class_cores(class as u16, trees, capacity));
     }
 
     let model_cores = cores.len();
@@ -197,6 +162,49 @@ pub fn compile(model: &Ensemble, options: &CompileOptions) -> Result<CamProgram,
         quantizer: model.quantizer.clone(),
         n_trees: model.n_trees(),
     })
+}
+
+/// Pack one class's trees into the minimum number of class-uniform cores
+/// (round-robin with first-fit fallback; grows the core count and repacks
+/// when fragmentation blocks a placement). Shared by [`compile`] and the
+/// shard partitioner ([`super::partition`]).
+///
+/// Every tree must individually fit `capacity` (checked by callers).
+pub(crate) fn pack_class_cores(
+    class: u16,
+    trees: &[(u32, Vec<CamRow>)],
+    capacity: usize,
+) -> Vec<CoreImage> {
+    if trees.is_empty() {
+        return Vec::new();
+    }
+    let total: usize = trees.iter().map(|(_, r)| r.len()).sum();
+    let mut n_cores = total.div_ceil(capacity).max(1);
+    loop {
+        let mut imgs: Vec<CoreImage> = (0..n_cores)
+            .map(|_| CoreImage { rows: Vec::new(), trees: Vec::new(), class, replica: 0 })
+            .collect();
+        let mut packed = true;
+        'place: for (i, (tid, rows)) in trees.iter().enumerate() {
+            // Round-robin with first-fit fallback.
+            let start = i % n_cores;
+            for off in 0..n_cores {
+                let c = (start + off) % n_cores;
+                if imgs[c].rows.len() + rows.len() <= capacity {
+                    imgs[c].rows.extend(rows.iter().cloned());
+                    imgs[c].trees.push(*tid);
+                    continue 'place;
+                }
+            }
+            // Fragmentation: grow the core count and repack.
+            n_cores += 1;
+            packed = false;
+            break;
+        }
+        if packed {
+            return imgs;
+        }
+    }
 }
 
 impl CamProgram {

@@ -26,6 +26,24 @@ pub trait Backend: Send {
     /// Logits (base score included) for a batch of quantized bin rows.
     fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>>;
 
+    /// Base-free per-class partial sums in f64, for shard aggregation:
+    /// the sharded server sums these across shards in shard order, then
+    /// applies the plan's base score once (`sum as f32 + base`).
+    ///
+    /// No default lift of [`Backend::infer`] is provided on purpose:
+    /// `infer` folds the program's base score into its logits, and shard 0
+    /// of a [`crate::compiler::ShardPlan`] carries the full base — a
+    /// lifted default would silently double-count it. Backends that want
+    /// to serve as shards must implement a genuinely base-free path (all
+    /// built-in backends do); the default fails loudly instead.
+    fn infer_partials(&mut self, _batch: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
+        Err(anyhow::anyhow!(
+            "backend `{}` does not implement base-free partial sums \
+             (required for sharded serving)",
+            self.name()
+        ))
+    }
+
     /// CP decision per row.
     fn predict(&mut self, batch: &[Vec<u16>]) -> Result<Vec<f32>> {
         let task = self.task();
@@ -53,6 +71,15 @@ impl Backend for CpuExactBackend {
 
     fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
         Ok(batch.iter().map(|bins| self.model.logits_bins(bins)).collect())
+    }
+
+    /// Deliberately uses the CAM engines' arithmetic (f64 accumulation,
+    /// single final rounding), *not* `logits_bins`' f32 running sum: a
+    /// sharded pool must be bit-identical across backend kinds, so CPU
+    /// shards match functional shards exactly — at the cost of a ≤ 1 ulp
+    /// difference vs this backend's own unsharded `infer`.
+    fn infer_partials(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
+        Ok(batch.iter().map(|bins| self.model.partial_sums_bins(bins)).collect())
     }
 }
 
@@ -82,6 +109,10 @@ impl Backend for FunctionalBackend {
 
     fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
         Ok(batch.iter().map(|bins| self.engine.infer_bins(bins)).collect())
+    }
+
+    fn infer_partials(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
+        Ok(batch.iter().map(|bins| self.engine.partials_bins(bins)).collect())
     }
 }
 
@@ -120,6 +151,27 @@ impl Backend for XlaBackend {
         }
         Ok(out)
     }
+
+    /// The XLA kernel only produces f32 logits with the base already
+    /// folded in, so partials are recovered by subtracting the base.
+    /// `(partial + base) - base` is *not* exact under f32 rounding (error
+    /// up to ½ ulp of the base per class), so an XLA shard is near-exact
+    /// rather than bit-exact — consistent with the kernel's own 1e-3
+    /// agreement contract (tests/runtime_xla.rs). Bit-identical sharding
+    /// is guaranteed for the functional/CPU/sim-card backends only.
+    fn infer_partials(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
+        let base = self.engine.base_score().to_vec();
+        Ok(self
+            .infer(batch)?
+            .into_iter()
+            .map(|l| {
+                l.into_iter()
+                    .enumerate()
+                    .map(|(k, v)| (v - base.get(k).copied().unwrap_or(0.0)) as f64)
+                    .collect()
+            })
+            .collect())
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +203,19 @@ mod tests {
         let b = cam.predict(&bins).unwrap();
         assert_eq!(a, b);
         assert_eq!(cpu.task(), cam.task());
+    }
+
+    #[test]
+    fn partials_plus_base_reproduce_infer() {
+        let (d, _, p) = setup();
+        let mut cam = FunctionalBackend::new(&p);
+        let bins = vec![p.quantizer.bin_row(d.row(3))];
+        let logits = cam.infer(&bins).unwrap();
+        let partials = cam.infer_partials(&bins).unwrap();
+        for (k, &l) in logits[0].iter().enumerate() {
+            let b = p.base_score.get(k).copied().unwrap_or(0.0);
+            assert_eq!(l, partials[0][k] as f32 + b, "class {k}");
+        }
     }
 
     #[test]

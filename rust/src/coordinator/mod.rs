@@ -1,7 +1,8 @@
 //! L3 serving coordinator: pluggable inference backends, a dynamic
-//! batcher + worker server, and a multi-model request router — the
-//! host-side system for the PCIe-card deployment the paper envisions
-//! (§III-D), patterned after vLLM's router/worker split.
+//! batcher feeding a pool of per-shard worker threads, and a multi-model
+//! request router — the host-side system for the multi-card PCIe
+//! deployment the paper envisions (§III-D), patterned after vLLM's
+//! router/worker split. See DESIGN.md §"Sharded serving".
 
 pub mod backend;
 pub mod router;
@@ -9,4 +10,4 @@ pub mod server;
 
 pub use backend::{Backend, CpuExactBackend, FunctionalBackend, XlaBackend};
 pub use router::Router;
-pub use server::{BatchPolicy, Reply, Server, ServerStats};
+pub use server::{BatchPolicy, Reply, Server, ServerStats, ShardStats};

@@ -1,12 +1,25 @@
-//! Serving engine: dynamic batcher + worker thread owning a backend.
+//! Serving engine: dynamic batcher + a pool of per-shard worker threads.
 //!
-//! The deployment the paper envisions (§III-D: an X-TIME PCIe card that a
+//! The deployment the paper envisions (§III-D: X-TIME PCIe cards that a
 //! host CPU offloads decision-tree inference to) is a *serving* problem:
-//! requests arrive one by one, the card wants full batches. This module
-//! implements the host-side coordination: a lock-free-ish request queue,
-//! a dynamic batcher (batch up to `max_batch` or `max_wait`), and a worker
-//! thread that owns the device engine — mirroring vLLM-style router/worker
-//! separation at a single-node scale.
+//! requests arrive one by one, the cards want full batches, and one card
+//! caps throughput. This module implements the host-side coordination:
+//!
+//! * a dynamic batcher (batch up to `max_batch` or `max_wait`);
+//! * **single-card mode** ([`Server::start`]) — one worker thread owns one
+//!   [`Backend`] and serves whole batches, exactly the paper's single-card
+//!   deployment;
+//! * **sharded mode** ([`Server::start_sharded`]) — each batch fans out to
+//!   N shard workers (one `Backend` each, e.g. one per PCIe card holding a
+//!   [`crate::compiler::ShardPlan`] shard). Workers return base-free f64
+//!   partial class sums; the dispatcher sums them in shard order and
+//!   applies the base score once — the functional engine's exact
+//!   arithmetic (`sum as f32 + base`), so a sharded pool is bit-identical
+//!   to the unsharded *functional* engine (`rust/tests/sharding.rs`).
+//!   The CPU backend's own `infer` walks trees in f32 and may differ from
+//!   both by ≤ 1 ulp; XLA shards are near-exact (see `backend.rs`).
+//!
+//! Mirrors vLLM-style router/worker separation, scaled out to a card pool.
 
 use super::backend::Backend;
 use crate::util::stats::Summary;
@@ -56,6 +69,60 @@ struct Counters {
     errors: AtomicU64,
 }
 
+/// Per-shard-worker counters (one per backend in the pool).
+struct ShardCounter {
+    name: String,
+    batches: AtomicU64,
+    rows: AtomicU64,
+    errors: AtomicU64,
+    busy_us: AtomicU64,
+}
+
+impl ShardCounter {
+    fn new(name: String) -> ShardCounter {
+        ShardCounter {
+            name,
+            batches: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            busy_us: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, t0: Instant, rows: usize, ok: bool) {
+        self.busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        if ok {
+            self.batches.fetch_add(1, Ordering::Relaxed);
+            self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        } else {
+            self.errors.fetch_add(rows as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn snapshot(&self) -> ShardStats {
+        ShardStats {
+            name: self.name.clone(),
+            batches: self.batches.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            busy_us: self.busy_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time statistics of one shard worker.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    /// `<backend name>#<shard index>`.
+    pub name: String,
+    pub batches: u64,
+    /// Rows inferred (each shard sees every batch row).
+    pub rows: u64,
+    pub errors: u64,
+    /// Wall time spent inside the backend (µs) — utilization numerator.
+    pub busy_us: u64,
+}
+
 /// Point-in-time server statistics.
 #[derive(Clone, Debug)]
 pub struct ServerStats {
@@ -63,70 +130,244 @@ pub struct ServerStats {
     pub batches: u64,
     pub mean_batch: f64,
     pub errors: u64,
+    /// One entry per worker in the pool (a single entry in unsharded mode).
+    pub shards: Vec<ShardStats>,
+}
+
+/// A batch job broadcast to every shard worker.
+struct ShardJob {
+    batch: Arc<Vec<Vec<u16>>>,
+    reply: Sender<(usize, anyhow::Result<Vec<Vec<f64>>>)>,
 }
 
 /// Handle to a running inference server.
 pub struct Server {
     tx: Option<Sender<Request>>,
     worker: Option<std::thread::JoinHandle<()>>,
+    shard_workers: Vec<std::thread::JoinHandle<()>>,
     counters: Arc<Counters>,
+    shard_counters: Arc<Vec<ShardCounter>>,
     latencies: Arc<Mutex<Vec<f64>>>,
     n_features: usize,
 }
 
+/// Collect a batch: `first` plus whatever arrives before `max_batch` fills
+/// or `wait` expires.
+fn collect_batch(
+    rx: &Receiver<Request>,
+    first: Request,
+    max_batch: usize,
+    wait: Duration,
+) -> Vec<Request> {
+    let mut reqs = vec![first];
+    let deadline = Instant::now() + wait;
+    while reqs.len() < max_batch {
+        match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+            Ok(r) => reqs.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    reqs
+}
+
 impl Server {
-    /// Spawn the worker thread owning `backend`.
-    pub fn start(mut backend: Box<dyn Backend>, policy: BatchPolicy, n_features: usize) -> Server {
+    /// Spawn a single worker thread owning `backend` (the paper's
+    /// one-card deployment).
+    pub fn start(backend: Box<dyn Backend>, policy: BatchPolicy, n_features: usize) -> Server {
+        Server::start_sharded(vec![backend], Vec::new(), policy, n_features)
+    }
+
+    /// Spawn a pool of per-shard workers (one `Backend` each) fed by a
+    /// dispatcher that fans every batch out and aggregates partial sums.
+    ///
+    /// `base_score` is the *source ensemble's* additive prior, applied
+    /// once after cross-shard summation (pass
+    /// [`crate::compiler::ShardPlan::base_score`]; ignored for a pool of
+    /// one, where the backend's own `infer` handles it). All backends
+    /// must serve the same task.
+    ///
+    /// Panics if `backends` is empty or tasks disagree.
+    pub fn start_sharded(
+        mut backends: Vec<Box<dyn Backend>>,
+        base_score: Vec<f32>,
+        policy: BatchPolicy,
+        n_features: usize,
+    ) -> Server {
+        assert!(!backends.is_empty(), "need at least one backend");
+        let task = backends[0].task();
+        assert!(
+            backends.iter().all(|b| b.task() == task),
+            "all shard backends must serve the same task"
+        );
+        let cap = backends.iter().map(|b| b.max_batch()).min().unwrap();
+        let max_batch = if policy.max_batch == 0 {
+            cap
+        } else {
+            policy.max_batch.min(cap)
+        };
+        let wait = Duration::from_micros(policy.max_wait_us);
+
         let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
         let counters = Arc::new(Counters::default());
+        let shard_counters: Arc<Vec<ShardCounter>> = Arc::new(
+            backends
+                .iter()
+                .enumerate()
+                .map(|(i, b)| ShardCounter::new(format!("{}#{i}", b.name())))
+                .collect(),
+        );
         let latencies = Arc::new(Mutex::new(Vec::new()));
+
         let c2 = counters.clone();
+        let s2 = shard_counters.clone();
         let l2 = latencies.clone();
-        let worker = std::thread::spawn(move || {
-            let max_batch = if policy.max_batch == 0 {
-                backend.max_batch()
-            } else {
-                policy.max_batch.min(backend.max_batch())
-            };
-            let wait = Duration::from_micros(policy.max_wait_us);
-            let task = backend.task();
-            while let Ok(first) = rx.recv() {
-                // Dynamic batching: collect until full or the wait expires.
-                let mut reqs = vec![first];
-                let deadline = Instant::now() + wait;
-                while reqs.len() < max_batch {
-                    match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
-                        Ok(r) => reqs.push(r),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-                let batch: Vec<Vec<u16>> = reqs.iter().map(|r| r.bins.clone()).collect();
-                match backend.infer(&batch) {
-                    Ok(logits) => {
-                        c2.batches.fetch_add(1, Ordering::Relaxed);
-                        c2.batch_rows.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-                        let mut lat_log = l2.lock().unwrap();
-                        for (req, l) in reqs.into_iter().zip(logits) {
-                            let latency = req.enqueued.elapsed();
-                            lat_log.push(latency.as_secs_f64());
-                            let _ = req.reply.send(Reply {
-                                prediction: task.decide(&l),
-                                logits: l,
-                                latency,
-                                batch_size: batch.len(),
-                            });
+
+        if backends.len() == 1 {
+            // Single-card fast path: the worker owns the backend and
+            // serves logits directly (backend applies any base score).
+            let mut backend = backends.pop().unwrap();
+            let worker = std::thread::spawn(move || {
+                while let Ok(first) = rx.recv() {
+                    let reqs = collect_batch(&rx, first, max_batch, wait);
+                    let batch: Vec<Vec<u16>> = reqs.iter().map(|r| r.bins.clone()).collect();
+                    let t0 = Instant::now();
+                    let result = backend.infer(&batch);
+                    s2[0].record(t0, batch.len(), result.is_ok());
+                    match result {
+                        Ok(logits) => {
+                            c2.batches.fetch_add(1, Ordering::Relaxed);
+                            c2.batch_rows.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+                            let mut lat_log = l2.lock().unwrap();
+                            for (req, l) in reqs.into_iter().zip(logits) {
+                                let latency = req.enqueued.elapsed();
+                                lat_log.push(latency.as_secs_f64());
+                                let _ = req.reply.send(Reply {
+                                    prediction: task.decide(&l),
+                                    logits: l,
+                                    latency,
+                                    batch_size: batch.len(),
+                                });
+                            }
+                        }
+                        Err(e) => {
+                            c2.errors.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+                            eprintln!("backend error: {e:#}");
+                            // Drop reply senders → callers see disconnect.
                         }
                     }
-                    Err(e) => {
-                        c2.errors.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-                        eprintln!("backend error: {e:#}");
-                        // Drop reply senders → callers see disconnect.
+                }
+            });
+            return Server {
+                tx: Some(tx),
+                worker: Some(worker),
+                shard_workers: Vec::new(),
+                counters,
+                shard_counters,
+                latencies,
+                n_features,
+            };
+        }
+
+        // Sharded mode: one worker per backend plus a dispatcher.
+        let n_shards = backends.len();
+        let mut job_txs: Vec<Sender<ShardJob>> = Vec::with_capacity(n_shards);
+        let mut shard_workers = Vec::with_capacity(n_shards);
+        for (idx, mut backend) in backends.into_iter().enumerate() {
+            let (jtx, jrx): (Sender<ShardJob>, Receiver<ShardJob>) = channel();
+            job_txs.push(jtx);
+            let sc = shard_counters.clone();
+            shard_workers.push(std::thread::spawn(move || {
+                while let Ok(job) = jrx.recv() {
+                    let t0 = Instant::now();
+                    let result = backend.infer_partials(&job.batch);
+                    sc[idx].record(t0, job.batch.len(), result.is_ok());
+                    let _ = job.reply.send((idx, result));
+                }
+            }));
+        }
+
+        let dispatcher = std::thread::spawn(move || {
+            while let Ok(first) = rx.recv() {
+                let reqs = collect_batch(&rx, first, max_batch, wait);
+                let n_rows = reqs.len();
+                let batch: Arc<Vec<Vec<u16>>> =
+                    Arc::new(reqs.iter().map(|r| r.bins.clone()).collect());
+
+                // Fan out, then collect exactly one reply per live shard.
+                let (ptx, prx) = channel();
+                let mut dead_shard = false;
+                for jtx in &job_txs {
+                    if jtx
+                        .send(ShardJob { batch: batch.clone(), reply: ptx.clone() })
+                        .is_err()
+                    {
+                        dead_shard = true;
                     }
                 }
+                drop(ptx);
+                let mut partials: Vec<Option<Vec<Vec<f64>>>> = vec![None; n_shards];
+                let mut failed = dead_shard;
+                while let Ok((s, result)) = prx.recv() {
+                    match result {
+                        Ok(p) => partials[s] = Some(p),
+                        Err(e) => {
+                            failed = true;
+                            eprintln!("shard {s} backend error: {e:#}");
+                        }
+                    }
+                }
+                if failed || partials.iter().any(|p| p.is_none()) {
+                    c2.errors.fetch_add(n_rows as u64, Ordering::Relaxed);
+                    continue; // Drop reply senders → callers see disconnect.
+                }
+
+                // Aggregate: Σ shards (f64, shard order), then base —
+                // `sum as f32 + base`, the same arithmetic as the
+                // unsharded functional engine.
+                c2.batches.fetch_add(1, Ordering::Relaxed);
+                c2.batch_rows.fetch_add(n_rows as u64, Ordering::Relaxed);
+                let n_outputs = partials[0].as_ref().unwrap()[0].len();
+                let mut lat_log = l2.lock().unwrap();
+                for (i, req) in reqs.into_iter().enumerate() {
+                    let mut total = vec![0f64; n_outputs];
+                    for p in partials.iter() {
+                        for (k, v) in p.as_ref().unwrap()[i].iter().enumerate() {
+                            total[k] += v;
+                        }
+                    }
+                    let logits: Vec<f32> = total
+                        .iter()
+                        .zip(base_score.iter().chain(std::iter::repeat(&0.0)))
+                        .map(|(&t, &b)| t as f32 + b)
+                        .collect();
+                    let latency = req.enqueued.elapsed();
+                    lat_log.push(latency.as_secs_f64());
+                    let _ = req.reply.send(Reply {
+                        prediction: task.decide(&logits),
+                        logits,
+                        latency,
+                        batch_size: n_rows,
+                    });
+                }
             }
+            // rx closed: dropping job_txs here stops the shard workers.
         });
-        Server { tx: Some(tx), worker: Some(worker), counters, latencies, n_features }
+
+        Server {
+            tx: Some(tx),
+            worker: Some(dispatcher),
+            shard_workers,
+            counters,
+            shard_counters,
+            latencies,
+            n_features,
+        }
+    }
+
+    /// Number of worker backends in the pool.
+    pub fn n_shards(&self) -> usize {
+        self.shard_counters.len()
     }
 
     /// Submit a quantized request; returns the reply channel.
@@ -155,6 +396,7 @@ impl Server {
             batches,
             mean_batch: if batches == 0 { 0.0 } else { rows as f64 / batches as f64 },
             errors: self.counters.errors.load(Ordering::Relaxed),
+            shards: self.shard_counters.iter().map(|c| c.snapshot()).collect(),
         }
     }
 
@@ -168,10 +410,17 @@ impl Server {
         }
     }
 
-    /// Stop the worker (drains in-flight requests).
+    /// Stop the workers (drains in-flight requests).
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
         drop(self.tx.take());
         if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        for w in self.shard_workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -179,17 +428,14 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::{compile, CompileOptions};
+    use crate::compiler::{compile, partition, CompileOptions, PartitionOptions};
     use crate::coordinator::backend::{CpuExactBackend, FunctionalBackend};
     use crate::data::by_name;
     use crate::trees::{gbdt, GbdtParams};
@@ -276,5 +522,87 @@ mod tests {
             p.n_features,
         );
         server.submit(vec![0u16; 3]);
+    }
+
+    /// Satellite: a partial batch must flush after `max_wait_us` even
+    /// though `max_batch` never fills.
+    #[test]
+    fn partial_batch_flushes_on_max_wait() {
+        let (d, _, p) = setup();
+        let server = Server::start(
+            Box::new(FunctionalBackend::new(&p)),
+            BatchPolicy { max_wait_us: 30_000, max_batch: 64 },
+            p.n_features,
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> =
+            (0..3).map(|i| server.submit(p.quantizer.bin_row(d.row(i)))).collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).expect("flush never happened");
+            // Far fewer rows than max_batch rode together.
+            assert!(r.batch_size <= 3);
+        }
+        // Replies arrived without anything close to 64 requests: the wait
+        // timer — not batch fill — triggered the flush.
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        let stats = server.stats();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.errors, 0);
+        server.shutdown();
+    }
+
+    /// Satellite: `max_batch` caps device batches even under backlog.
+    #[test]
+    fn max_batch_caps_batch_size() {
+        let (d, m, p) = setup();
+        let server = Server::start(
+            Box::new(CpuExactBackend { model: m }),
+            BatchPolicy { max_wait_us: 20_000, max_batch: 4 },
+            p.n_features,
+        );
+        let rxs: Vec<_> = (0..32)
+            .map(|i| server.submit(p.quantizer.bin_row(d.row(i % d.n_rows()))))
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.batch_size <= 4, "batch {} exceeds cap", r.batch_size);
+        }
+        let stats = server.stats();
+        assert!(stats.batches >= 8, "32 requests / cap 4 needs ≥ 8 batches");
+        assert!(stats.mean_batch <= 4.0);
+        server.shutdown();
+    }
+
+    /// Satellite: per-shard counters populate and every shard sees every
+    /// batch row.
+    #[test]
+    fn shard_counters_populate() {
+        let (d, _, p) = setup();
+        let plan = partition(&p, 2, &PartitionOptions::default()).unwrap();
+        let backends: Vec<Box<dyn crate::coordinator::Backend>> = plan
+            .shards
+            .iter()
+            .map(|s| Box::new(FunctionalBackend::new(s)) as Box<dyn crate::coordinator::Backend>)
+            .collect();
+        let server = Server::start_sharded(
+            backends,
+            plan.base_score.clone(),
+            BatchPolicy::default(),
+            p.n_features,
+        );
+        assert_eq!(server.n_shards(), 2);
+        for i in 0..20 {
+            server.infer_blocking(p.quantizer.bin_row(d.row(i)));
+        }
+        let stats = server.stats();
+        assert_eq!(stats.requests, 20);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.shards.len(), 2);
+        for s in &stats.shards {
+            assert!(s.batches > 0, "{} served no batches", s.name);
+            assert_eq!(s.rows, 20, "{} must see every row", s.name);
+            assert_eq!(s.errors, 0);
+        }
+        server.shutdown();
     }
 }

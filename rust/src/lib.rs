@@ -9,7 +9,8 @@
 //! * [`trees`] — from-scratch GBDT (XGBoost-style) and random-forest
 //!   trainers with exact CPU inference (the software baseline);
 //! * [`compiler`] — the X-TIME compiler: trained ensembles → quantized CAM
-//!   threshold maps, core placement and NoC router configuration;
+//!   threshold maps, core placement and NoC router configuration, plus the
+//!   shard partitioner that splits a compiled program across cards;
 //! * [`cam`] — functional analog-CAM model, including the paper's novel
 //!   two-cycle 8-bit-on-4-bit macro-cell (Eq. 3) and defect injection;
 //! * [`sim`] — SST-equivalent cycle-detailed simulator of the 4096-core
@@ -18,8 +19,8 @@
 //!   model used as comparison points in Fig. 10/11;
 //! * [`runtime`] — PJRT (XLA) runtime loading AOT-compiled HLO artifacts
 //!   produced by the JAX/Pallas build pipeline under `python/`;
-//! * [`coordinator`] — the serving engine: request router, dynamic batcher
-//!   and pluggable inference backends;
+//! * [`coordinator`] — the serving engine: request router, dynamic batcher,
+//!   sharded multi-card worker pool and pluggable inference backends;
 //! * [`util`] — offline substrates (PRNG, JSON, CLI, stats, prop tests).
 
 pub mod baselines;

@@ -152,6 +152,12 @@ impl XlaCamEngine {
         self.n_features
     }
 
+    /// The program's additive prior (folded into `infer_bins_batch`
+    /// outputs); sharded serving subtracts it to recover partial sums.
+    pub fn base_score(&self) -> &[f32] {
+        &self.base_score
+    }
+
     /// Run one padded device batch over quantized bin rows
     /// (`rows.len() ≤ bucket.batch`). Returns logits per row.
     pub fn infer_bins_batch(&self, rows: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {

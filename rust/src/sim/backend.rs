@@ -1,0 +1,170 @@
+//! Simulated-card serving backend: one virtual X-TIME PCIe card.
+//!
+//! Bridges the cycle-detailed card model (§III-D / §IV-B) into the
+//! serving engine: each [`SimCardBackend`] owns a functional engine for
+//! *numerics* (bit-accurate logits) and the card cost model for *timing*
+//! (projected service rate and unloaded latency). A sharded server built
+//! from N of these models an N-card host — the scale-out deployment the
+//! paper sketches — while staying runnable on any dev machine.
+
+use super::card::{simulate_card, CardConfig};
+use super::config::ChipConfig;
+use crate::compiler::{CamEngine, CamProgram};
+use crate::coordinator::Backend;
+use crate::data::Task;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Simulated-device counters, shared out via [`SimCardBackend::counters`]
+/// so they stay readable after the backend moves into a worker thread.
+#[derive(Default)]
+pub struct SimCardCounters {
+    samples: AtomicU64,
+    /// Simulated device-busy time, picoseconds (integer for atomics).
+    busy_ps: AtomicU64,
+}
+
+impl SimCardCounters {
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::Relaxed)
+    }
+
+    /// Simulated seconds the card spent serving.
+    pub fn busy_s(&self) -> f64 {
+        self.busy_ps.load(Ordering::Relaxed) as f64 * 1e-12
+    }
+
+    fn accrue(&self, n: usize, service_s: f64) {
+        self.samples.fetch_add(n as u64, Ordering::Relaxed);
+        self.busy_ps.fetch_add((service_s * n as f64 * 1e12) as u64, Ordering::Relaxed);
+    }
+}
+
+/// A serving [`Backend`] over one simulated PCIe card.
+pub struct SimCardBackend {
+    engine: CamEngine,
+    /// Simulated per-sample service time (s) at saturation.
+    service_s: f64,
+    /// Simulated unloaded end-to-end latency (s), incl. PCIe round trip.
+    latency_s: f64,
+    counters: Arc<SimCardCounters>,
+}
+
+impl SimCardBackend {
+    /// Build a card for `program` (typically one shard of a
+    /// [`crate::compiler::ShardPlan`]): runs the cycle-detailed card
+    /// simulation once to calibrate timing, then serves numerics through
+    /// the functional engine.
+    pub fn new(program: &CamProgram, chip: &ChipConfig, card: &CardConfig) -> SimCardBackend {
+        let rep = simulate_card(program, chip, card, 20_000);
+        SimCardBackend {
+            engine: CamEngine::new(program),
+            service_s: 1.0 / rep.throughput_sps.max(1.0),
+            latency_s: rep.latency_s,
+            counters: Arc::new(SimCardCounters::default()),
+        }
+    }
+
+    /// Handle to the simulated-device counters.
+    pub fn counters(&self) -> Arc<SimCardCounters> {
+        self.counters.clone()
+    }
+
+    /// Calibrated card throughput (samples/s) at saturation.
+    pub fn projected_throughput_sps(&self) -> f64 {
+        1.0 / self.service_s
+    }
+
+    /// Calibrated unloaded latency (s).
+    pub fn projected_latency_s(&self) -> f64 {
+        self.latency_s
+    }
+}
+
+impl Backend for SimCardBackend {
+    fn name(&self) -> &'static str {
+        "sim-card"
+    }
+
+    fn max_batch(&self) -> usize {
+        64
+    }
+
+    fn task(&self) -> Task {
+        self.engine.task
+    }
+
+    fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
+        self.counters.accrue(batch.len(), self.service_s);
+        Ok(batch.iter().map(|bins| self.engine.infer_bins(bins)).collect())
+    }
+
+    fn infer_partials(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
+        self.counters.accrue(batch.len(), self.service_s);
+        Ok(batch.iter().map(|bins| self.engine.partials_bins(bins)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, partition, CompileOptions, PartitionOptions};
+    use crate::coordinator::{BatchPolicy, Server};
+    use crate::data::by_name;
+    use crate::trees::{gbdt, GbdtParams};
+
+    fn program() -> (crate::data::Dataset, CamProgram) {
+        let d = by_name("churn").unwrap().generate_n(800);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 8, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        (d, compile(&m, &CompileOptions::default()).unwrap())
+    }
+
+    #[test]
+    fn card_backend_serves_and_accrues_sim_time() {
+        let (d, p) = program();
+        let mut backend = SimCardBackend::new(&p, &ChipConfig::default(), &CardConfig::default());
+        assert!(backend.projected_throughput_sps() > 0.0);
+        assert!(backend.projected_latency_s() > 0.0);
+        let counters = backend.counters();
+        let bins: Vec<Vec<u16>> = (0..16).map(|i| p.quantizer.bin_row(d.row(i))).collect();
+        let logits = backend.infer(&bins).unwrap();
+        assert_eq!(logits.len(), 16);
+        assert_eq!(counters.samples(), 16);
+        assert!(counters.busy_s() > 0.0);
+    }
+
+    #[test]
+    fn per_shard_cards_serve_through_the_pool() {
+        let (d, p) = program();
+        let plan = partition(&p, 2, &PartitionOptions::default()).unwrap();
+        let cards: Vec<SimCardBackend> = plan
+            .shards
+            .iter()
+            .map(|s| SimCardBackend::new(s, &ChipConfig::default(), &CardConfig::default()))
+            .collect();
+        let counters: Vec<_> = cards.iter().map(|c| c.counters()).collect();
+        let backends: Vec<Box<dyn Backend>> =
+            cards.into_iter().map(|c| Box::new(c) as Box<dyn Backend>).collect();
+        let server = Server::start_sharded(
+            backends,
+            plan.base_score.clone(),
+            BatchPolicy::default(),
+            p.n_features,
+        );
+        let unsharded = CamEngine::new(&p);
+        for i in 0..12 {
+            let bins = p.quantizer.bin_row(d.row(i));
+            let reply = server.infer_blocking(bins.clone());
+            assert_eq!(reply.logits, unsharded.infer_bins(&bins), "row {i}");
+        }
+        server.shutdown();
+        for c in &counters {
+            assert_eq!(c.samples(), 12);
+        }
+    }
+}

@@ -2,12 +2,14 @@
 //! discrete-event substrate, chip timing model, and the Fig. 8
 //! area/power/energy cost model.
 
+pub mod backend;
 pub mod card;
 pub mod chip;
 pub mod config;
 pub mod cost;
 pub mod event;
 
+pub use backend::{SimCardBackend, SimCardCounters};
 pub use card::{simulate_card, CardConfig, CardReport};
 pub use chip::{ideal_latency_cycles, simulate, SimReport, Workload};
 pub use config::ChipConfig;

@@ -193,6 +193,17 @@ impl Ensemble {
         out
     }
 
+    /// Base-free per-class leaf sums accumulated in f64 — the partial-sum
+    /// form a sharded serving pool aggregates across shards (the host adds
+    /// `base_score` once after summation).
+    pub fn partial_sums_bins(&self, bins: &[u16]) -> Vec<f64> {
+        let mut out = vec![0f64; self.base_score.len()];
+        for (t, tree) in self.trees.iter().enumerate() {
+            out[self.tree_class[t] as usize] += tree.predict_bins(bins) as f64;
+        }
+        out
+    }
+
     /// Task-level prediction: regression value, or class index.
     pub fn predict(&self, row: &[f32]) -> f32 {
         let logits = self.logits(row);

@@ -1,0 +1,138 @@
+//! Integration: sharded serving must reproduce the unsharded path
+//! exactly — same logits, same predictions — on paper-scale ensembles
+//! (the acceptance bar for the multi-card serving engine).
+//!
+//! Why `assert_eq!` on f32 logits is sound here: leaf payloads are f32
+//! (24-bit significands) of similar magnitude, so every f64 addition in
+//! both the unsharded accumulation and the per-shard partial sums is
+//! *exact* (a sum of ~2^14 such values needs well under f64's 53 bits).
+//! Exact additions make the total independent of grouping, so splitting
+//! the sum across shards and re-summing in shard order yields the same
+//! f64 value, and the single final rounding (`sum as f32 + base`) is
+//! shared by both paths. This holds for the functional/CPU/sim-card
+//! backends; the XLA backend reduces in f32 and is only near-exact.
+
+use xtime::bench_support::{random_ensemble, sharded_functional_pool};
+use xtime::compiler::{
+    compile, partition, CamEngine, CompileOptions, PartitionOptions, ShardStrategy,
+};
+use xtime::coordinator::{BatchPolicy, Server};
+use xtime::data::{by_name, Task};
+use xtime::trees::{gbdt, GbdtParams};
+use xtime::util::Rng;
+
+fn shard_servers(
+    program: &xtime::compiler::CamProgram,
+    n_shards: usize,
+    strategy: ShardStrategy,
+) -> Server {
+    let plan = partition(
+        program,
+        n_shards,
+        &PartitionOptions { strategy, ..Default::default() },
+    )
+    .expect("partition");
+    sharded_functional_pool(&plan, BatchPolicy { max_wait_us: 200, max_batch: 32 })
+}
+
+/// The acceptance criterion: on a 1024-tree ensemble, sharded logits are
+/// bit-identical to the unsharded functional engine for every shard count
+/// and both placement strategies.
+#[test]
+fn sharded_logits_match_unsharded_1024_trees() {
+    let model = random_ensemble(1024, 4, 16, Task::Binary, 21);
+    let program = compile(&model, &CompileOptions::default()).unwrap();
+    assert_eq!(program.n_trees, 1024);
+    let reference = CamEngine::new(&program);
+
+    let mut rng = Rng::new(77);
+    let queries: Vec<Vec<u16>> = (0..24)
+        .map(|_| {
+            let row: Vec<f32> = (0..program.n_features).map(|_| rng.f32()).collect();
+            program.quantizer.bin_row(&row)
+        })
+        .collect();
+
+    for strategy in [ShardStrategy::BalancedRows, ShardStrategy::BalancedTrees] {
+        for n_shards in [2usize, 3, 5] {
+            let server = shard_servers(&program, n_shards, strategy);
+            for (i, bins) in queries.iter().enumerate() {
+                let reply = server.infer_blocking(bins.clone());
+                let want = reference.infer_bins(bins);
+                assert_eq!(
+                    reply.logits, want,
+                    "{strategy:?} × {n_shards} shards, query {i}: logits drifted"
+                );
+                assert_eq!(reply.prediction, reference.decide(&want));
+            }
+            let stats = server.stats();
+            assert_eq!(stats.errors, 0);
+            assert_eq!(stats.shards.len(), n_shards);
+            server.shutdown();
+        }
+    }
+}
+
+/// Multiclass: per-class partial sums must aggregate without mixing
+/// classes, and the argmax decision must survive sharding.
+#[test]
+fn sharded_multiclass_matches_unsharded() {
+    let model = random_ensemble(48, 3, 8, Task::MultiClass(3), 5);
+    let program = compile(&model, &CompileOptions::default()).unwrap();
+    let reference = CamEngine::new(&program);
+
+    let mut rng = Rng::new(9);
+    let server = shard_servers(&program, 3, ShardStrategy::BalancedRows);
+    for i in 0..30 {
+        let row: Vec<f32> = (0..program.n_features).map(|_| rng.f32()).collect();
+        let bins = program.quantizer.bin_row(&row);
+        let reply = server.infer_blocking(bins.clone());
+        let want = reference.infer_bins(&bins);
+        assert_eq!(reply.logits.len(), 3);
+        assert_eq!(reply.logits, want, "query {i}");
+        assert_eq!(reply.prediction, reference.decide(&want), "query {i}");
+    }
+    server.shutdown();
+}
+
+/// On a *trained* model (non-zero base score), sharded serving must still
+/// reproduce the CPU reference's predictions sample-for-sample.
+#[test]
+fn sharded_predictions_match_trained_model() {
+    let d = by_name("churn").unwrap().generate_n(1000);
+    let model = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 32, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    let program = compile(&model, &CompileOptions::default()).unwrap();
+    let server = shard_servers(&program, 4, ShardStrategy::BalancedRows);
+    for i in 0..100 {
+        let bins = program.quantizer.bin_row(d.row(i));
+        let reply = server.infer_blocking(bins);
+        assert_eq!(reply.prediction, model.predict(d.row(i)), "row {i}");
+    }
+    server.shutdown();
+}
+
+/// Shards cover every tree exactly once and preserve total CAM rows at
+/// paper scale.
+#[test]
+fn shard_plans_preserve_the_ensemble() {
+    let model = random_ensemble(1024, 4, 16, Task::Binary, 3);
+    let program = compile(&model, &CompileOptions::default()).unwrap();
+    for n_shards in [2usize, 4, 8] {
+        let plan = partition(&program, n_shards, &PartitionOptions::default()).unwrap();
+        let mut all: Vec<u32> = plan.assignment.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 1024);
+        assert_eq!(all, (0..1024u32).collect::<Vec<_>>());
+        assert_eq!(
+            plan.shards.iter().map(|s| s.total_rows()).sum::<usize>(),
+            program.total_rows()
+        );
+        // Equal-topology trees → balanced-rows is perfectly even here.
+        let rows = plan.rows_per_shard();
+        assert_eq!(rows.iter().min(), rows.iter().max(), "{rows:?}");
+    }
+}

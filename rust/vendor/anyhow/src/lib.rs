@@ -1,0 +1,141 @@
+//! Minimal offline shim of the `anyhow` API surface this repository uses:
+//! [`Error`], [`Result`], [`Context`] and the [`anyhow!`] macro.
+//!
+//! The build image has no crates.io access, so instead of the real crate we
+//! vendor the ~100 lines the codebase actually needs. Semantics match
+//! anyhow closely enough for error *reporting*: contexts chain outermost
+//! first and both `{}` and `{:#}` render the full chain.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A chained error: a message plus the contexts wrapped around it.
+pub struct Error {
+    /// Outermost context first; the root cause is last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context (what `Context::context` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which keeps the blanket `From` below coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Fold `source()` links into the chain so `?` loses nothing.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(|| ...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let base: std::result::Result<(), String> = Err("root".to_string());
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn macro_forms() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("x = {}", 3).to_string(), "x = 3");
+        let s = String::from("owned");
+        assert_eq!(anyhow!(s).to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_folds_sources() {
+        fn inner() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().root_cause(), "boom");
+    }
+}
