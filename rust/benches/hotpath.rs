@@ -3,29 +3,34 @@
 //! target of EXPERIMENTS.md §Perf).
 //!
 //! Reports per-batch and per-sample times for:
-//!   * the XLA AOT artifact (PJRT CPU, `fast_u8` layout),
-//!   * the functional CAM engine,
+//!   * the functional CAM engine — scalar (row-at-a-time) reference path
+//!     vs the batched feature-major interval index (`infer_batch`),
 //!   * the exact CPU tree-walk,
-//! plus the end-to-end dynamic-batching server throughput.
+//!   * the XLA AOT artifact (PJRT CPU, `fast_u8` layout) when built,
+//! plus the end-to-end dynamic-batching server throughput, and a
+//! dedicated scalar-vs-batched table on the 1024-tree acceptance model
+//! (record its rows/s in CHANGES.md when the hot path changes).
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench hotpath` (XTIME_FAST=1 shrinks for CI)
 
 use std::path::Path;
-use xtime::bench_support::cached_model;
+use xtime::bench_support::{cached_model, fast_mode, random_ensemble, random_query_bins};
 use xtime::compiler::{compile, CamEngine, CompileOptions};
 use xtime::coordinator::{BatchPolicy, Server, XlaBackend};
-use xtime::data::by_name;
+use xtime::data::{by_name, Task};
 use xtime::runtime::XlaCamEngine;
-use xtime::util::bench::{rate, t, time_fn, Table};
+use xtime::util::bench::{rate, t, time_fn, times, Table};
 
 fn main() {
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let fast = fast_mode();
     // 64 trees × ~130 leaves ≈ 8k CAM rows → fits the n16384 bucket.
-    let model = cached_model("churn", 8, 1, Some(64));
+    let model = cached_model("churn", 8, 1, Some(if fast { 16 } else { 64 }));
     let program = compile(&model, &CompileOptions::default()).unwrap();
-    let data = by_name("churn").unwrap().generate_n(4096);
+    let n_data = if fast { 512 } else { 4096 };
+    let data = by_name("churn").unwrap().generate_n(n_data);
     let bins: Vec<Vec<u16>> =
-        (0..4096).map(|i| program.quantizer.bin_row(data.row(i))).collect();
+        (0..n_data).map(|i| program.quantizer.bin_row(data.row(i))).collect();
 
     println!(
         "hot-path bench: churn model, {} trees, {} CAM rows, {} features",
@@ -37,41 +42,63 @@ fn main() {
     let mut table = Table::new(&["path", "batch", "per batch", "per sample", "rate"]);
 
     // Exact CPU tree-walk (single thread).
+    let cpu_rows = if fast { 64 } else { 256 };
     let s = time_fn(3, 20, || {
-        for b in bins.iter().take(256) {
+        for b in bins.iter().take(cpu_rows) {
             std::hint::black_box(model.logits_bins(b));
         }
     });
     table.row(&[
         "cpu tree-walk".into(),
         "1".into(),
-        t(s.median / 256.0),
-        t(s.median / 256.0),
-        rate(256.0 / s.median, "S"),
+        t(s.median / cpu_rows as f64),
+        t(s.median / cpu_rows as f64),
+        rate(cpu_rows as f64 / s.median, "S"),
     ]);
 
-    // Functional CAM engine.
+    // Functional CAM engine — scalar reference path (per-cell scan).
     let cam = CamEngine::new(&program);
+    let scalar_rows = if fast { 16 } else { 64 };
     let s = time_fn(1, 5, || {
-        for b in bins.iter().take(64) {
+        for b in bins.iter().take(scalar_rows) {
             std::hint::black_box(cam.infer_bins(b));
         }
     });
+    let churn_scalar_rate = scalar_rows as f64 / s.median;
     table.row(&[
-        "cam-functional".into(),
+        "cam-functional (scalar)".into(),
         "1".into(),
-        t(s.median / 64.0),
-        t(s.median / 64.0),
-        rate(64.0 / s.median, "S"),
+        t(s.median / scalar_rows as f64),
+        t(s.median / scalar_rows as f64),
+        rate(churn_scalar_rate, "S"),
     ]);
+
+    // Functional CAM engine — batched interval index.
+    let batch_rows = if fast { 64 } else { 256 };
+    let batch: Vec<Vec<u16>> = bins.iter().take(batch_rows).cloned().collect();
+    let s = time_fn(1, 5, || {
+        std::hint::black_box(cam.infer_batch(&batch));
+    });
+    let churn_batch_rate = batch_rows as f64 / s.median;
+    table.row(&[
+        "cam-functional (batched)".into(),
+        format!("{batch_rows}"),
+        t(s.median),
+        t(s.median / batch_rows as f64),
+        rate(churn_batch_rate, "S"),
+    ]);
+    println!(
+        "batched/scalar on churn: {}",
+        times(churn_batch_rate / churn_scalar_rate)
+    );
 
     // XLA artifact, per device batch.
     if artifacts.join("manifest.json").exists() {
         let xla = XlaCamEngine::new(&program, &artifacts, 64).expect("xla engine");
         let cap = xla.max_batch();
-        let batch: Vec<Vec<u16>> = bins.iter().take(cap).cloned().collect();
+        let xbatch: Vec<Vec<u16>> = bins.iter().take(cap).cloned().collect();
         let s = time_fn(2, 10, || {
-            std::hint::black_box(xla.infer_bins_batch(&batch).unwrap());
+            std::hint::black_box(xla.infer_bins_batch(&xbatch).unwrap());
         });
         table.row(&[
             format!("xla-aot ({})", xla.bucket().file),
@@ -104,7 +131,7 @@ fn main() {
             BatchPolicy::default(),
             program.n_features,
         );
-        let n = 4096;
+        let n = n_data;
         let t0 = std::time::Instant::now();
         let pending: Vec<_> = (0..n).map(|i| server.submit(bins[i % bins.len()].clone())).collect();
         for rx in pending {
@@ -123,4 +150,46 @@ fn main() {
     }
 
     table.print("serving hot path on this machine");
+
+    // The batched-vs-scalar lever at acceptance scale: the same
+    // 1024-tree topology the sharding tests and shard_scaling bench use.
+    // This is the number to record in CHANGES.md.
+    let n_trees = 1024;
+    let big = random_ensemble(n_trees, 4, 32, Task::Binary, 7);
+    let big_prog = compile(&big, &CompileOptions::default()).expect("compile 1024-tree model");
+    let engine = CamEngine::new(&big_prog);
+    let n_queries = if fast { 128 } else { 512 };
+    let qbins = random_query_bins(&big_prog, n_queries, 0xB16);
+
+    let big_scalar_rows = if fast { 8 } else { 32 };
+    let s_scalar = time_fn(1, 5, || {
+        for b in qbins.iter().take(big_scalar_rows) {
+            std::hint::black_box(engine.infer_bins(b));
+        }
+    });
+    let s_batch = time_fn(1, 5, || {
+        std::hint::black_box(engine.infer_batch(&qbins));
+    });
+    let scalar_rate = big_scalar_rows as f64 / s_scalar.median;
+    let batch_rate = n_queries as f64 / s_batch.median;
+
+    let mut big_table = Table::new(&["path", "batch", "per sample", "rows/s", "speedup"]);
+    big_table.row(&[
+        "scalar (per-cell scan)".into(),
+        "1".into(),
+        t(s_scalar.median / big_scalar_rows as f64),
+        rate(scalar_rate, "row"),
+        times(1.0),
+    ]);
+    big_table.row(&[
+        "batched (interval index)".into(),
+        format!("{n_queries}"),
+        t(s_batch.median / n_queries as f64),
+        rate(batch_rate, "row"),
+        times(batch_rate / scalar_rate),
+    ]);
+    big_table.print(&format!(
+        "functional engine scalar vs batched — {n_trees}-tree model, {} CAM rows",
+        big_prog.total_rows()
+    ));
 }

@@ -9,15 +9,21 @@
 //! until host cores or the batcher bind; the simulated-card aggregate
 //! rises ~linearly until PCIe binds per card.
 //!
+//! Shard workers serve whole device batches through the functional
+//! engine's batched interval index (`CamEngine::partials_batch` via
+//! `FunctionalBackend`), so this sweep measures the batched hot path —
+//! bit-identical to the scalar engine (`rust/tests/batch_agreement.rs`).
+//!
 //! Run: `cargo bench --bench shard_scaling` (XTIME_FAST=1 to shrink)
 
-use xtime::bench_support::{fast_mode, random_ensemble, sharded_functional_pool};
+use xtime::bench_support::{
+    fast_mode, random_ensemble, random_query_bins, sharded_functional_pool,
+};
 use xtime::compiler::{compile, partition, CompileOptions, PartitionOptions};
 use xtime::coordinator::BatchPolicy;
 use xtime::data::Task;
 use xtime::sim::{CardConfig, ChipConfig, SimCardBackend};
 use xtime::util::bench::{rate, times, Table};
-use xtime::util::Rng;
 
 fn main() {
     let n_trees = 1024;
@@ -34,13 +40,7 @@ fn main() {
         n_requests
     );
 
-    let mut rng = Rng::new(1234);
-    let bins: Vec<Vec<u16>> = (0..n_requests)
-        .map(|_| {
-            let row: Vec<f32> = (0..program.n_features).map(|_| rng.f32()).collect();
-            program.quantizer.bin_row(&row)
-        })
-        .collect();
+    let bins = random_query_bins(&program, n_requests, 1234);
 
     let mut table = Table::new(&[
         "shards",

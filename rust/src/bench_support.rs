@@ -3,7 +3,7 @@
 //! ensemble generators for the Fig. 11 sweeps, and the sharded-pool
 //! builder the scaling bench/example/tests share.
 
-use crate::compiler::ShardPlan;
+use crate::compiler::{CamProgram, ShardPlan};
 use crate::coordinator::{Backend, BatchPolicy, FunctionalBackend, Server};
 use crate::data::{by_name, Dataset, FeatureQuantizer, Task};
 use crate::trees::{paper_model, train_paper_model, Ensemble, Node, Tree};
@@ -101,6 +101,21 @@ pub fn random_ensemble(
     }
 }
 
+/// A quantized query batch for bench/test harnesses: `n` rows drawn
+/// uniformly from the program's feature space and binned with its
+/// quantizer. Shared by `benches/hotpath.rs`, `benches/shard_scaling.rs`
+/// and `rust/tests/batch_agreement.rs` so measured and tested query
+/// distributions cannot drift apart.
+pub fn random_query_bins(program: &CamProgram, n: usize, seed: u64) -> Vec<Vec<u16>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let row: Vec<f32> = (0..program.n_features).map(|_| rng.f32()).collect();
+            program.quantizer.bin_row(&row)
+        })
+        .collect()
+}
+
 /// Build a serving pool with one functional backend per shard of `plan` —
 /// the software stand-in for one PCIe card per shard. Shared by
 /// `benches/shard_scaling.rs`, `examples/fraud_serving.rs` and
@@ -122,7 +137,13 @@ fn random_tree(depth: usize, n_features: usize, n_bins: usize, rng: &mut Rng) ->
     tree
 }
 
-fn build_node(tree: &mut Tree, depth: usize, n_features: usize, n_bins: usize, rng: &mut Rng) -> u32 {
+fn build_node(
+    tree: &mut Tree,
+    depth: usize,
+    n_features: usize,
+    n_bins: usize,
+    rng: &mut Rng,
+) -> u32 {
     let idx = tree.nodes.len() as u32;
     if depth == 0 {
         tree.nodes.push(Node::Leaf { value: rng.f32() - 0.5 });

@@ -10,8 +10,23 @@
 //! The functional semantics is a row-wise interval match over the full
 //! word; the queued decomposition matters for the latency/energy model
 //! (only matched rows of array `i+1` are charged).
+//!
+//! Every search entry point converts query levels through [`dac_level`]:
+//! the DAC saturates at full scale, so a level past the top 8-bit level
+//! (e.g. 256 from a +1 DAC perturbation of 255, or an 8-bit-scaled
+//! out-of-range bin) drives level 255 — it must never wrap to level 0.
+//! All three search variants share this conversion so they stay
+//! mutually equivalent on every input.
 
-use super::cell::MacroCell;
+use super::cell::{MacroCell, MACRO_BINS};
+
+/// DAC input conversion: query levels saturate at the top 8-bit level.
+/// (A bare `as u8` cast here once wrapped level 256 to level 0 and
+/// silently matched low windows instead of top windows.)
+#[inline]
+fn dac_level(q: u16) -> u16 {
+    q.min(MACRO_BINS - 1)
+}
 
 /// Physical array geometry at 16 nm (paper §III-C, ref [38]).
 pub const ARRAY_ROWS: usize = 128;
@@ -64,7 +79,7 @@ impl CamArray {
             let base = r * self.n_cols;
             let mut m = true;
             for (c, q) in query.iter().take(w).enumerate() {
-                if !self.cells[base + c].matches_ideal(*q) {
+                if !self.cells[base + c].matches_ideal(dac_level(*q)) {
                     m = false;
                     break;
                 }
@@ -74,7 +89,7 @@ impl CamArray {
     }
 
     /// Two-cycle macro-cell search (the hardware path). Equivalent to
-    /// [`CamArray::search_ideal`] for 8-bit queries — asserted by tests.
+    /// [`CamArray::search_ideal`] on every input — asserted by tests.
     pub fn search_two_cycle(&self, query: &[u16], out: &mut Vec<bool>) {
         out.clear();
         let w = query.len().min(self.n_cols);
@@ -83,7 +98,7 @@ impl CamArray {
             // MAL precharged high; both cycles must hold on every cell.
             let mut mal = true;
             for (c, q) in query.iter().take(w).enumerate() {
-                let (c1, c2) = self.cells[base + c].search_cycles(*q as u8);
+                let (c1, c2) = self.cells[base + c].search_cycles(dac_level(*q) as u8);
                 if !(c1 && c2) {
                     mal = false;
                     break;
@@ -106,7 +121,7 @@ impl CamArray {
             let base = r * self.n_cols;
             let mut m = true;
             for (c, q) in query.iter().take(w).enumerate() {
-                if !self.cells[base + c].matches_ideal(*q) {
+                if !self.cells[base + c].matches_ideal(dac_level(*q)) {
                     m = false;
                     break;
                 }
@@ -205,6 +220,31 @@ mod tests {
             a.search_two_cycle(&q, &mut twoc);
             prop::require(ideal == twoc, format!("rows={rows} cols={cols}"))
         });
+    }
+
+    #[test]
+    fn queries_saturate_at_full_scale_on_every_search_path() {
+        // Regression: a query level of 256 — e.g. a +1 DAC perturbation
+        // of level 255, or an 8-bit-scaled out-of-range bin of a 4-bit
+        // program — used to alias to level 0 through a wrapping `as u8`
+        // cast in `search_two_cycle` and silently match low windows. The
+        // DAC saturates instead (level 256 behaves as the top level 255),
+        // and all three search variants must agree on it.
+        let mut a = CamArray::dont_care(2, 1);
+        *a.cell_mut(0, 0) = MacroCell::new(0, 10); // only low levels
+        *a.cell_mut(1, 0) = MacroCell::new(200, MACRO_BINS); // top window
+        let mut ideal = Vec::new();
+        let mut twoc = Vec::new();
+        let mut gated = Vec::new();
+        // 255 (in range), 256 (the boundary) and one past it.
+        for q in [MACRO_BINS - 1, MACRO_BINS, MACRO_BINS + 1] {
+            a.search_ideal(&[q], &mut ideal);
+            a.search_two_cycle(&[q], &mut twoc);
+            a.search_gated(&[q], &[true, true], &mut gated);
+            assert_eq!(ideal, vec![false, true], "q={q} must saturate, not wrap to 0");
+            assert_eq!(twoc, ideal, "q={q}: two-cycle diverged from ideal");
+            assert_eq!(gated, ideal, "q={q}: gated diverged from ideal");
+        }
     }
 
     #[test]

@@ -7,15 +7,108 @@
 //! reference the cycle simulator and the XLA backend are validated
 //! against; absent defects it must agree with [`Ensemble::logits`]
 //! (`trees` module) exactly up to summation order.
+//!
+//! Two query paths share the same semantics:
+//!
+//! * the **scalar path** ([`CamEngine::partials_bins`]) walks every CAM
+//!   cell per query — the literal hardware model, retained as the
+//!   defect-injection reference;
+//! * the **batched path** ([`CamEngine::partials_batch`]) answers whole
+//!   batches through a per-core, feature-major interval index built at
+//!   engine construction: each feature column's distinct bound levels
+//!   partition the 8-bit query space into elementary intervals whose
+//!   matching row set is precomputed as u64 bitset words, so a query
+//!   costs one binary search + a word-wide AND per feature instead of a
+//!   per-cell scan. The batched path is bit-identical to the scalar path
+//!   (same f64 accumulation order, same MMR truncation, same
+//!   [`SearchStats`] counts) — property-tested in
+//!   `rust/tests/batch_agreement.rs`.
 
 use super::program::CamProgram;
-use crate::cam::{inject_memristor_defects, CoreCam, DacErrors, DefectSpec, MacroCell};
+use crate::cam::{inject_memristor_defects, CoreCam, DacErrors, DefectSpec, MacroCell, ARRAY_COLS};
 use crate::data::Task;
 use crate::util::Rng;
+
+/// Interval index of one feature column: the column's distinct bound
+/// levels split the query space into elementary intervals on which the
+/// set of matching rows is constant.
+struct FeatureIndex {
+    /// Ascending distinct non-zero bound levels. Elementary interval `i`
+    /// spans `[bounds[i-1], bounds[i])`; interval 0 starts at level 0 and
+    /// the last interval is unbounded above.
+    bounds: Vec<u16>,
+    /// `bounds.len() + 1` row bitsets of `n_words` words each,
+    /// concatenated in interval order.
+    words: Vec<u64>,
+}
+
+/// Feature-major interval index over one core's programmed (possibly
+/// defect-perturbed) cells — the batched query path.
+struct BatchIndex {
+    n_words: usize,
+    features: Vec<FeatureIndex>,
+    /// All-rows mask (the last word is partially filled).
+    full: Vec<u64>,
+}
+
+impl BatchIndex {
+    /// Build from a row-major `[n_rows × n_features]` cell matrix. Must
+    /// be built *after* defect injection so batched queries see the same
+    /// programmed levels as the scalar path.
+    fn build(n_rows: usize, n_features: usize, cells: &[MacroCell]) -> BatchIndex {
+        debug_assert_eq!(cells.len(), n_rows * n_features);
+        let n_words = n_rows.div_ceil(64).max(1);
+        let mut full = vec![u64::MAX; n_words];
+        let spare = n_words * 64 - n_rows;
+        if n_rows == 0 {
+            full = vec![0; n_words];
+        } else if spare > 0 {
+            full[n_words - 1] = u64::MAX >> spare;
+        }
+        let mut features = Vec::with_capacity(n_features);
+        for f in 0..n_features {
+            let mut bounds: Vec<u16> = Vec::with_capacity(2 * n_rows);
+            for r in 0..n_rows {
+                let c = cells[r * n_features + f];
+                bounds.push(c.lo);
+                bounds.push(c.hi);
+            }
+            // Level 0 is the query floor: an interval boundary there is
+            // vacuous (no query lies below it).
+            bounds.retain(|&b| b > 0);
+            bounds.sort_unstable();
+            bounds.dedup();
+            // Within an elementary interval no bound level is crossed, so
+            // row membership is constant; evaluate it once at the
+            // interval's lower endpoint.
+            let mut words = vec![0u64; (bounds.len() + 1) * n_words];
+            for (i, w) in words.chunks_mut(n_words).enumerate() {
+                let rep = if i == 0 { 0 } else { bounds[i - 1] };
+                for r in 0..n_rows {
+                    if cells[r * n_features + f].matches_ideal(rep) {
+                        w[r / 64] |= 1u64 << (r % 64);
+                    }
+                }
+            }
+            features.push(FeatureIndex { bounds, words });
+        }
+        BatchIndex { n_words, features, full }
+    }
+
+    /// Bitset of rows whose window on feature `f` contains query level `q`.
+    #[inline]
+    fn rows_matching(&self, f: usize, q: u16) -> &[u64] {
+        let fi = &self.features[f];
+        let iv = fi.bounds.partition_point(|&b| b <= q);
+        &fi.words[iv * self.n_words..(iv + 1) * self.n_words]
+    }
+}
 
 /// Per-core compiled search state.
 struct EngineCore {
     cam: CoreCam,
+    /// Batched-path index over the same programmed cells as `cam`.
+    index: BatchIndex,
     /// Leaf payloads per row.
     leaf: Vec<f32>,
     class: Vec<u16>,
@@ -33,6 +126,17 @@ pub struct CamEngine {
     n_features: usize,
     /// Bin-space → 8-bit macro-cell level scale (`256 / n_bins`).
     scale: u16,
+}
+
+/// The single rounding of the bit-identity contract (DESIGN.md §5):
+/// `partial as f32 + base`, with missing trailing base entries treated
+/// as 0. Shared by both engine query paths and the sharded dispatcher's
+/// cross-shard aggregation so the arithmetic cannot drift between them.
+pub fn apply_base(acc: &[f64], base: &[f32]) -> Vec<f32> {
+    acc.iter()
+        .zip(base.iter().chain(std::iter::repeat(&0.0)))
+        .map(|(&a, &b)| a as f32 + b)
+        .collect()
 }
 
 /// Statistics of one inference (feeds the energy model).
@@ -69,8 +173,10 @@ impl CamEngine {
             let mut crng = rng.fork(ci as u64);
             inject_memristor_defects(&mut cells, defects.memristor_pct, &mut crng);
             let dac = DacErrors::draw(program.n_features, defects.dac_pct, &mut crng);
+            let index = BatchIndex::build(n_rows, program.n_features, &cells);
             cores.push(EngineCore {
                 cam: CoreCam::from_cells(n_rows, program.n_features, cells),
+                index,
                 leaf: c.rows.iter().map(|r| r.leaf).collect(),
                 class: c.rows.iter().map(|r| r.class).collect(),
                 n_trees_core: c.n_trees_core(),
@@ -99,12 +205,7 @@ impl CamEngine {
     /// Inference + search statistics.
     pub fn infer_bins_stats(&self, bins: &[u16]) -> (Vec<f32>, SearchStats) {
         let (acc, stats) = self.partials_bins_stats(bins);
-        let logits: Vec<f32> = acc
-            .iter()
-            .zip(self.base_score.iter().chain(std::iter::repeat(&0.0)))
-            .map(|(&a, &b)| a as f32 + b)
-            .collect();
-        (logits, stats)
+        (apply_base(&acc, &self.base_score), stats)
     }
 
     /// Base-free per-class partial sums in f64 — the shard-aggregation
@@ -142,6 +243,96 @@ impl CamEngine {
                 acc[core.class[row] as usize] += core.leaf[row] as f64;
             }
             stats.matches += taken;
+        }
+        (acc, stats)
+    }
+
+    /// Batched inference over quantized bins; logits per row.
+    /// Bit-identical to mapping [`CamEngine::infer_bins`] over the batch.
+    pub fn infer_batch(&self, batch: &[Vec<u16>]) -> Vec<Vec<f32>> {
+        self.infer_batch_stats(batch).0
+    }
+
+    /// Batched inference + search statistics summed over the batch.
+    pub fn infer_batch_stats(&self, batch: &[Vec<u16>]) -> (Vec<Vec<f32>>, SearchStats) {
+        let (accs, stats) = self.partials_batch_stats(batch);
+        let logits = accs.iter().map(|acc| apply_base(acc, &self.base_score)).collect();
+        (logits, stats)
+    }
+
+    /// Batched base-free partial sums — the batched form of
+    /// [`CamEngine::partials_bins`], bit-identical per row.
+    pub fn partials_batch(&self, batch: &[Vec<u16>]) -> Vec<Vec<f64>> {
+        self.partials_batch_stats(batch).0
+    }
+
+    /// The batched hot path: per core, intersect per-feature match sets
+    /// from the interval index as u64 bitset words instead of scanning
+    /// every cell per row. The queued-segment gating of
+    /// [`CoreCam::search`] is reproduced by snapshotting the active-set
+    /// population at each segment boundary (`charged_rows`), and MMR
+    /// consumes set bits in ascending row order under the same
+    /// `n_trees_core` budget — so partials, logits and [`SearchStats`]
+    /// (summed over the batch) are bit-identical to the scalar path.
+    pub fn partials_batch_stats(&self, batch: &[Vec<u16>]) -> (Vec<Vec<f64>>, SearchStats) {
+        let mut acc = vec![vec![0f64; self.n_outputs]; batch.len()];
+        let mut stats = SearchStats::default();
+        if batch.is_empty() {
+            return (acc, stats);
+        }
+        // Same DAC full-scale mapping as the scalar path.
+        let scaled: Vec<Vec<u16>> = batch
+            .iter()
+            .map(|bins| {
+                assert_eq!(bins.len(), self.n_features, "feature arity mismatch");
+                bins.iter().map(|&b| b * self.scale).collect()
+            })
+            .collect();
+        let n_segments = self.n_features.div_ceil(ARRAY_COLS).max(1);
+        let mut active: Vec<u64> = Vec::new();
+        // Cores outer, batch rows inner: one core's index stays cache-hot
+        // across the whole batch, and each row still accumulates its
+        // per-core contributions in core order (the scalar f64 order).
+        for core in &self.cores {
+            let idx = &core.index;
+            for (q, row_acc) in scaled.iter().zip(acc.iter_mut()) {
+                active.clear();
+                active.extend_from_slice(&idx.full);
+                for s in 0..n_segments {
+                    // Queued gating: segment s charges the rows still
+                    // active after the previous segments' features.
+                    let live: usize = active.iter().map(|w| w.count_ones() as usize).sum();
+                    stats.charged_rows += live;
+                    let c0 = s * ARRAY_COLS;
+                    let c1 = ((s + 1) * ARRAY_COLS).min(self.n_features);
+                    for f in c0..c1 {
+                        let m = idx.rows_matching(f, core.dac.apply(f, q[f]));
+                        for (a, &w) in active.iter_mut().zip(m) {
+                            *a &= w;
+                        }
+                    }
+                    // Later segments would charge popcount(∅) = 0 rows.
+                    if active.iter().all(|&w| w == 0) {
+                        break;
+                    }
+                }
+                // MMR over set bits in ascending row order, bounded by
+                // the core's iteration budget — the scalar loop exactly.
+                let mut taken = 0usize;
+                'mmr: for (w, &word0) in active.iter().enumerate() {
+                    let mut word = word0;
+                    while word != 0 {
+                        if taken >= core.n_trees_core {
+                            break 'mmr;
+                        }
+                        let row = w * 64 + word.trailing_zeros() as usize;
+                        taken += 1;
+                        row_acc[core.class[row] as usize] += core.leaf[row] as f64;
+                        word &= word - 1;
+                    }
+                }
+                stats.matches += taken;
+            }
         }
         (acc, stats)
     }
@@ -301,6 +492,38 @@ mod tests {
             agree += (clean.predict(&p, row) == dirty.predict(&p, row)) as usize;
         }
         assert!(agree as f64 / n as f64 > 0.97, "agreement {}", agree as f64 / n as f64);
+    }
+
+    /// Cheap in-module smoke of the batched/scalar bit-identity contract
+    /// (the exhaustive property suite — tasks × precisions × defects ×
+    /// shard plans — lives in `rust/tests/batch_agreement.rs`).
+    #[test]
+    fn batched_path_smoke_bit_identical() {
+        let d = by_name("telco").unwrap().generate_n(700);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 4, max_leaves: 4, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let e = CamEngine::new(&p);
+        let batch: Vec<Vec<u16>> = (0..32).map(|i| p.quantizer.bin_row(d.row(i))).collect();
+        let (partials, stats) = e.partials_batch_stats(&batch);
+        let logits = e.infer_batch(&batch);
+        let (mut charged, mut matches) = (0usize, 0usize);
+        for (i, bins) in batch.iter().enumerate() {
+            assert_eq!(partials[i], e.partials_bins(bins), "row {i} partials");
+            let (want, s) = e.infer_bins_stats(bins);
+            assert_eq!(logits[i], want, "row {i} logits");
+            charged += s.charged_rows;
+            matches += s.matches;
+        }
+        assert_eq!(stats.charged_rows, charged, "charged_rows drifted");
+        assert_eq!(stats.matches, matches, "matches drifted");
+        // Empty batches are a no-op, not a panic.
+        let (empty, zero) = e.partials_batch_stats(&[]);
+        assert!(empty.is_empty());
+        assert_eq!((zero.charged_rows, zero.matches), (0, 0));
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod partition;
 pub mod paths;
 pub mod program;
 
-pub use engine::{CamEngine, SearchStats};
+pub use engine::{apply_base, CamEngine, SearchStats};
 pub use noc::{NocConfig, Router};
 pub use partition::{partition, PartitionError, PartitionOptions, ShardPlan, ShardStrategy};
 pub use paths::{extract_rows, CamRow};

@@ -24,6 +24,11 @@ pub trait Backend: Send {
     fn max_batch(&self) -> usize;
     fn task(&self) -> Task;
     /// Logits (base score included) for a batch of quantized bin rows.
+    /// Implementations should serve the whole batch through their
+    /// engine's batched path (e.g. [`CamEngine::infer_batch`]) rather
+    /// than looping rows — the worker threads hand over full device
+    /// batches and the batched/scalar agreement contract (DESIGN.md §5)
+    /// guarantees identical results.
     fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>>;
 
     /// Base-free per-class partial sums in f64, for shard aggregation:
@@ -107,12 +112,15 @@ impl Backend for FunctionalBackend {
         self.engine.task
     }
 
+    /// Serves through [`CamEngine::infer_batch`] — the feature-major
+    /// interval-index hot path, bit-identical to the row-at-a-time
+    /// scalar engine (property-tested in `rust/tests/batch_agreement.rs`).
     fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
-        Ok(batch.iter().map(|bins| self.engine.infer_bins(bins)).collect())
+        Ok(self.engine.infer_batch(batch))
     }
 
     fn infer_partials(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
-        Ok(batch.iter().map(|bins| self.engine.partials_bins(bins)).collect())
+        Ok(self.engine.partials_batch(batch))
     }
 }
 
@@ -216,6 +224,32 @@ mod tests {
             let b = p.base_score.get(k).copied().unwrap_or(0.0);
             assert_eq!(l, partials[0][k] as f32 + b, "class {k}");
         }
+    }
+
+    #[test]
+    fn functional_backend_batch_is_bit_identical_to_scalar_engine() {
+        // The backend serves through the batched interval index; its
+        // output must equal the row-at-a-time scalar engine bit for bit.
+        let (d, _, p) = setup();
+        let mut cam = FunctionalBackend::new(&p);
+        let scalar = CamEngine::new(&p);
+        let bins: Vec<Vec<u16>> = (0..48).map(|i| p.quantizer.bin_row(d.row(i))).collect();
+        let logits = cam.infer(&bins).unwrap();
+        let partials = cam.infer_partials(&bins).unwrap();
+        for (i, b) in bins.iter().enumerate() {
+            assert_eq!(logits[i], scalar.infer_bins(b), "row {i} logits");
+            assert_eq!(partials[i], scalar.partials_bins(b), "row {i} partials");
+        }
+    }
+
+    #[test]
+    fn empty_batch_serves_empty() {
+        let (_, m, p) = setup();
+        let mut cam = FunctionalBackend::new(&p);
+        let mut cpu = CpuExactBackend { model: m };
+        assert!(cam.infer(&[]).unwrap().is_empty());
+        assert!(cam.infer_partials(&[]).unwrap().is_empty());
+        assert!(cpu.predict(&[]).unwrap().is_empty());
     }
 
     #[test]

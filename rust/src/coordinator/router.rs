@@ -58,12 +58,18 @@ impl Router {
         Ok(route.server.submit(route.quantizer.bin_row(row)))
     }
 
-    /// Blocking inference.
+    /// Blocking inference. Backend/shard failures surface in the `Err`
+    /// arm (the server sends an error [`Reply`] rather than hanging up),
+    /// so `Ok` always carries a served prediction.
     pub fn infer(&self, model: &str, row: &[f32]) -> Result<Reply, String> {
-        Ok(self
+        let reply = self
             .submit(model, row)?
             .recv()
-            .map_err(|_| format!("model `{model}` worker dropped the request"))?)
+            .map_err(|_| format!("model `{model}` worker dropped the request"))?;
+        match reply.error {
+            Some(e) => Err(format!("model `{model}` inference failed: {e}")),
+            None => Ok(reply),
+        }
     }
 
     /// Per-model (requests, mean batch) metrics.
@@ -86,7 +92,10 @@ mod tests {
     use crate::data::by_name;
     use crate::trees::{gbdt, GbdtParams};
 
-    fn add_model(router: &mut Router, dataset: &str) -> (crate::data::Dataset, crate::trees::Ensemble) {
+    fn add_model(
+        router: &mut Router,
+        dataset: &str,
+    ) -> (crate::data::Dataset, crate::trees::Ensemble) {
         let d = by_name(dataset).unwrap().generate_n(600);
         let m = gbdt::train(
             &d,
@@ -126,5 +135,37 @@ mod tests {
         let (d, _) = add_model(&mut router, "churn");
         assert!(router.infer("nope", d.row(0)).is_err());
         assert!(router.infer("churn", &[1.0, 2.0]).is_err());
+    }
+
+    /// Regression: the server reports backend failures via an error
+    /// `Reply` (it no longer hangs up), so `Router::infer` must fold
+    /// that into its `Err` arm rather than returning an `Ok` carrying
+    /// NaN/empty logits.
+    #[test]
+    fn backend_failure_surfaces_as_err() {
+        struct FailingBackend;
+        impl Backend for FailingBackend {
+            fn name(&self) -> &'static str {
+                "always-fails"
+            }
+            fn max_batch(&self) -> usize {
+                8
+            }
+            fn task(&self) -> crate::data::Task {
+                crate::data::Task::Binary
+            }
+            fn infer(&mut self, _batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f32>>> {
+                Err(anyhow::anyhow!("injected fault"))
+            }
+        }
+        let mut router = Router::new();
+        router.register(
+            "flaky",
+            FeatureQuantizer { n_bits: 1, edges: vec![vec![0.5]] },
+            Box::new(FailingBackend),
+            BatchPolicy::default(),
+        );
+        let err = router.infer("flaky", &[0.3]).unwrap_err();
+        assert!(err.contains("injected fault"), "got `{err}`");
     }
 }

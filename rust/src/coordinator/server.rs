@@ -19,9 +19,16 @@
 //!   The CPU backend's own `infer` walks trees in f32 and may differ from
 //!   both by ≤ 1 ulp; XLA shards are near-exact (see `backend.rs`).
 //!
+//! Fault containment: a backend/shard error fails only the batch it was
+//! serving — every affected request receives a [`Reply`] with `error`
+//! set (empty logits, NaN prediction), the failure is recorded on the
+//! shard's [`ShardStats`] (`errors`, `last_error`), and the server keeps
+//! serving subsequent batches.
+//!
 //! Mirrors vLLM-style router/worker separation, scaled out to a card pool.
 
 use super::backend::Backend;
+use crate::compiler::apply_base;
 use crate::util::stats::Summary;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -58,6 +65,16 @@ pub struct Reply {
     pub latency: Duration,
     /// Size of the device batch this request rode in.
     pub batch_size: usize,
+    /// `Some` when the backing batch failed (a backend/shard error):
+    /// `logits` is empty and `prediction` is NaN. The server stays up —
+    /// subsequent requests are served normally.
+    pub error: Option<String>,
+}
+
+impl Reply {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
 }
 
 /// Aggregated server-side counters.
@@ -76,6 +93,7 @@ struct ShardCounter {
     rows: AtomicU64,
     errors: AtomicU64,
     busy_us: AtomicU64,
+    last_error: Mutex<Option<String>>,
 }
 
 impl ShardCounter {
@@ -86,6 +104,7 @@ impl ShardCounter {
             rows: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             busy_us: AtomicU64::new(0),
+            last_error: Mutex::new(None),
         }
     }
 
@@ -99,6 +118,17 @@ impl ShardCounter {
         }
     }
 
+    fn set_last_error(&self, msg: String) {
+        *self.last_error.lock().unwrap() = Some(msg);
+    }
+
+    /// A failure observed by the dispatcher rather than the worker
+    /// itself (e.g. the worker thread is gone).
+    fn fail(&self, rows: usize, msg: &str) {
+        self.errors.fetch_add(rows as u64, Ordering::Relaxed);
+        self.set_last_error(msg.to_string());
+    }
+
     fn snapshot(&self) -> ShardStats {
         ShardStats {
             name: self.name.clone(),
@@ -106,6 +136,7 @@ impl ShardCounter {
             rows: self.rows.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             busy_us: self.busy_us.load(Ordering::Relaxed),
+            last_error: self.last_error.lock().unwrap().clone(),
         }
     }
 }
@@ -121,6 +152,8 @@ pub struct ShardStats {
     pub errors: u64,
     /// Wall time spent inside the backend (µs) — utilization numerator.
     pub busy_us: u64,
+    /// Most recent backend error on this shard, if any.
+    pub last_error: Option<String>,
 }
 
 /// Point-in-time server statistics.
@@ -232,7 +265,18 @@ impl Server {
                     let reqs = collect_batch(&rx, first, max_batch, wait);
                     let batch: Vec<Vec<u16>> = reqs.iter().map(|r| r.bins.clone()).collect();
                     let t0 = Instant::now();
-                    let result = backend.infer(&batch);
+                    let result = backend.infer(&batch).and_then(|l| {
+                        if l.len() == batch.len() {
+                            Ok(l)
+                        } else {
+                            Err(anyhow::anyhow!(
+                                "backend `{}` returned {} rows for a batch of {}",
+                                backend.name(),
+                                l.len(),
+                                batch.len()
+                            ))
+                        }
+                    });
                     s2[0].record(t0, batch.len(), result.is_ok());
                     match result {
                         Ok(logits) => {
@@ -247,13 +291,26 @@ impl Server {
                                     logits: l,
                                     latency,
                                     batch_size: batch.len(),
+                                    error: None,
                                 });
                             }
                         }
                         Err(e) => {
+                            // Error replies, not a dead server: callers
+                            // see what failed and the worker keeps going.
+                            let msg = format!("{e:#}");
                             c2.errors.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-                            eprintln!("backend error: {e:#}");
-                            // Drop reply senders → callers see disconnect.
+                            s2[0].set_last_error(msg.clone());
+                            eprintln!("backend error (batch dropped): {msg}");
+                            for req in reqs {
+                                let _ = req.reply.send(Reply {
+                                    logits: Vec::new(),
+                                    prediction: f32::NAN,
+                                    latency: req.enqueued.elapsed(),
+                                    batch_size: batch.len(),
+                                    error: Some(msg.clone()),
+                                });
+                            }
                         }
                     }
                 }
@@ -280,8 +337,24 @@ impl Server {
             shard_workers.push(std::thread::spawn(move || {
                 while let Ok(job) = jrx.recv() {
                     let t0 = Instant::now();
-                    let result = backend.infer_partials(&job.batch);
+                    // A short result would desynchronize row aggregation;
+                    // surface it as a shard error instead.
+                    let result = backend.infer_partials(&job.batch).and_then(|p| {
+                        if p.len() == job.batch.len() {
+                            Ok(p)
+                        } else {
+                            Err(anyhow::anyhow!(
+                                "backend `{}` returned {} rows for a batch of {}",
+                                backend.name(),
+                                p.len(),
+                                job.batch.len()
+                            ))
+                        }
+                    });
                     sc[idx].record(t0, job.batch.len(), result.is_ok());
+                    if let Err(e) = &result {
+                        sc[idx].set_last_error(format!("{e:#}"));
+                    }
                     let _ = job.reply.send((idx, result));
                 }
             }));
@@ -296,51 +369,81 @@ impl Server {
 
                 // Fan out, then collect exactly one reply per live shard.
                 let (ptx, prx) = channel();
-                let mut dead_shard = false;
-                for jtx in &job_txs {
-                    if jtx
-                        .send(ShardJob { batch: batch.clone(), reply: ptx.clone() })
-                        .is_err()
-                    {
-                        dead_shard = true;
+                let mut failures: Vec<String> = Vec::new();
+                // Shards whose failure is already accounted for (send
+                // error or an Err reply); the sweep below catches workers
+                // that died silently mid-batch.
+                let mut noted = vec![false; n_shards];
+                for (i, jtx) in job_txs.iter().enumerate() {
+                    let job = ShardJob { batch: batch.clone(), reply: ptx.clone() };
+                    if jtx.send(job).is_err() {
+                        s2[i].fail(n_rows, "shard worker disconnected");
+                        failures.push(format!("shard {i}: worker disconnected"));
+                        noted[i] = true;
                     }
                 }
                 drop(ptx);
                 let mut partials: Vec<Option<Vec<Vec<f64>>>> = vec![None; n_shards];
-                let mut failed = dead_shard;
                 while let Ok((s, result)) = prx.recv() {
                     match result {
                         Ok(p) => partials[s] = Some(p),
                         Err(e) => {
-                            failed = true;
-                            eprintln!("shard {s} backend error: {e:#}");
+                            failures.push(format!("shard {s}: {e:#}"));
+                            noted[s] = true;
                         }
                     }
                 }
-                if failed || partials.iter().any(|p| p.is_none()) {
-                    c2.errors.fetch_add(n_rows as u64, Ordering::Relaxed);
-                    continue; // Drop reply senders → callers see disconnect.
+                for s in 0..n_shards {
+                    if partials[s].is_none() && !noted[s] {
+                        s2[s].fail(n_rows, "shard worker exited without replying");
+                        failures.push(format!("shard {s}: worker exited without replying"));
+                    }
                 }
+
+                let collected: Option<Vec<Vec<Vec<f64>>>> = partials.into_iter().collect();
+                let shard_partials = match collected {
+                    Some(p) if failures.is_empty() => p,
+                    _ => {
+                        // One failed shard must not take the server (or
+                        // even this batch's callers) down: every affected
+                        // request gets an error reply and the dispatcher
+                        // moves on to the next batch.
+                        let msg = failures.join("; ");
+                        c2.errors.fetch_add(n_rows as u64, Ordering::Relaxed);
+                        eprintln!("sharded batch failed ({msg}); returning error replies");
+                        for req in reqs {
+                            let _ = req.reply.send(Reply {
+                                logits: Vec::new(),
+                                prediction: f32::NAN,
+                                latency: req.enqueued.elapsed(),
+                                batch_size: n_rows,
+                                error: Some(msg.clone()),
+                            });
+                        }
+                        continue;
+                    }
+                };
 
                 // Aggregate: Σ shards (f64, shard order), then base —
                 // `sum as f32 + base`, the same arithmetic as the
                 // unsharded functional engine.
                 c2.batches.fetch_add(1, Ordering::Relaxed);
                 c2.batch_rows.fetch_add(n_rows as u64, Ordering::Relaxed);
-                let n_outputs = partials[0].as_ref().unwrap()[0].len();
                 let mut lat_log = l2.lock().unwrap();
                 for (i, req) in reqs.into_iter().enumerate() {
-                    let mut total = vec![0f64; n_outputs];
-                    for p in partials.iter() {
-                        for (k, v) in p.as_ref().unwrap()[i].iter().enumerate() {
+                    let mut total: Vec<f64> = Vec::new();
+                    for p in shard_partials.iter() {
+                        let row = &p[i];
+                        if row.len() > total.len() {
+                            total.resize(row.len(), 0.0);
+                        }
+                        for (k, v) in row.iter().enumerate() {
                             total[k] += v;
                         }
                     }
-                    let logits: Vec<f32> = total
-                        .iter()
-                        .zip(base_score.iter().chain(std::iter::repeat(&0.0)))
-                        .map(|(&t, &b)| t as f32 + b)
-                        .collect();
+                    // The engine's exact rounding — shared helper so the
+                    // sharded path cannot drift from the unsharded one.
+                    let logits = apply_base(&total, &base_score);
                     let latency = req.enqueued.elapsed();
                     lat_log.push(latency.as_secs_f64());
                     let _ = req.reply.send(Reply {
@@ -348,6 +451,7 @@ impl Server {
                         logits,
                         latency,
                         batch_size: n_rows,
+                        error: None,
                     });
                 }
             }
@@ -400,14 +504,10 @@ impl Server {
         }
     }
 
-    /// Latency summary (seconds) over everything served so far.
+    /// Latency summary (seconds) over everything served successfully so
+    /// far; `None` before any traffic (or if every batch failed).
     pub fn latency_summary(&self) -> Option<Summary> {
-        let l = self.latencies.lock().unwrap();
-        if l.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&l))
-        }
+        Summary::try_of(&self.latencies.lock().unwrap())
     }
 
     /// Stop the workers (drains in-flight requests).
@@ -435,10 +535,70 @@ impl Drop for Server {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::{compile, partition, CompileOptions, PartitionOptions};
+    use crate::compiler::{compile, partition, CamEngine, CompileOptions, PartitionOptions};
     use crate::coordinator::backend::{CpuExactBackend, FunctionalBackend};
-    use crate::data::by_name;
+    use crate::data::{by_name, Task};
     use crate::trees::{gbdt, GbdtParams};
+
+    /// Fault injection: fails every batch.
+    struct FailingBackend {
+        task: Task,
+    }
+
+    impl Backend for FailingBackend {
+        fn name(&self) -> &'static str {
+            "always-fails"
+        }
+
+        fn max_batch(&self) -> usize {
+            64
+        }
+
+        fn task(&self) -> Task {
+            self.task
+        }
+
+        fn infer(&mut self, _batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f32>>> {
+            Err(anyhow::anyhow!("injected fault"))
+        }
+
+        fn infer_partials(&mut self, _batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f64>>> {
+            Err(anyhow::anyhow!("injected fault"))
+        }
+    }
+
+    /// Fault injection: fails the first `remaining_failures` partial
+    /// batches, then serves through a healthy functional engine.
+    struct FlakyBackend {
+        inner: FunctionalBackend,
+        remaining_failures: usize,
+    }
+
+    impl Backend for FlakyBackend {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+
+        fn max_batch(&self) -> usize {
+            self.inner.max_batch()
+        }
+
+        fn task(&self) -> Task {
+            self.inner.task()
+        }
+
+        fn infer(&mut self, batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f32>>> {
+            self.inner.infer(batch)
+        }
+
+        fn infer_partials(&mut self, batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f64>>> {
+            if self.remaining_failures > 0 {
+                self.remaining_failures -= 1;
+                return Err(anyhow::anyhow!("transient fault"));
+            }
+            self.inner.infer_partials(batch)
+        }
+    }
 
     fn setup() -> (crate::data::Dataset, crate::trees::Ensemble, crate::compiler::CamProgram) {
         let d = by_name("churn").unwrap().generate_n(800);
@@ -570,6 +730,97 @@ mod tests {
         let stats = server.stats();
         assert!(stats.batches >= 8, "32 requests / cap 4 needs ≥ 8 batches");
         assert!(stats.mean_batch <= 4.0);
+        server.shutdown();
+    }
+
+    /// Regression: a failing shard used to hit
+    /// `partials[0].as_ref().unwrap()` / drop reply senders, killing the
+    /// callers (`infer_blocking` panicked on the closed channel). Now
+    /// every affected request gets an error `Reply`, the failure lands in
+    /// `ServerStats.shards`, and the server keeps serving.
+    #[test]
+    fn failed_shard_returns_error_replies_and_server_survives() {
+        let (d, _, p) = setup();
+        let plan = partition(&p, 2, &PartitionOptions::default()).unwrap();
+        let backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(FunctionalBackend::new(&plan.shards[0])),
+            Box::new(FailingBackend { task: p.task }),
+        ];
+        let server = Server::start_sharded(
+            backends,
+            plan.base_score.clone(),
+            BatchPolicy::default(),
+            p.n_features,
+        );
+        for i in 0..5 {
+            let reply = server.infer_blocking(p.quantizer.bin_row(d.row(i)));
+            assert!(!reply.is_ok(), "request {i} should carry the shard error");
+            let msg = reply.error.as_deref().unwrap_or("");
+            assert!(msg.contains("injected fault"), "unexpected error `{msg}`");
+            assert!(reply.logits.is_empty());
+            assert!(reply.prediction.is_nan());
+        }
+        let stats = server.stats();
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.errors, 5);
+        assert_eq!(stats.shards[1].errors, 5, "failing shard must be identified");
+        assert!(stats.shards[1].last_error.is_some());
+        assert_eq!(stats.shards[0].errors, 0, "healthy shard must stay clean");
+        // No successful rows → no latency samples, and no panic either.
+        assert!(server.latency_summary().is_none());
+        server.shutdown();
+    }
+
+    /// After a transient shard failure the pool must resume serving
+    /// bit-correct results.
+    #[test]
+    fn pool_recovers_after_transient_shard_failure() {
+        let (d, _, p) = setup();
+        let reference = CamEngine::new(&p);
+        let plan = partition(&p, 2, &PartitionOptions::default()).unwrap();
+        let backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(FunctionalBackend::new(&plan.shards[0])),
+            Box::new(FlakyBackend {
+                inner: FunctionalBackend::new(&plan.shards[1]),
+                remaining_failures: 1,
+            }),
+        ];
+        let server = Server::start_sharded(
+            backends,
+            plan.base_score.clone(),
+            BatchPolicy::default(),
+            p.n_features,
+        );
+        let first = server.infer_blocking(p.quantizer.bin_row(d.row(0)));
+        assert!(!first.is_ok(), "first batch rides the injected fault");
+        for i in 0..10 {
+            let bins = p.quantizer.bin_row(d.row(i));
+            let reply = server.infer_blocking(bins.clone());
+            assert!(reply.is_ok(), "row {i}: {:?}", reply.error);
+            assert_eq!(reply.logits, reference.infer_bins(&bins), "row {i}");
+        }
+        let stats = server.stats();
+        assert_eq!(stats.errors, 1);
+        assert!(stats.shards[1].last_error.is_some());
+        server.shutdown();
+    }
+
+    /// The single-backend path also degrades to error replies instead of
+    /// hanging up on callers.
+    #[test]
+    fn single_backend_error_becomes_error_reply() {
+        let (d, _, p) = setup();
+        let server = Server::start(
+            Box::new(FailingBackend { task: p.task }),
+            BatchPolicy::default(),
+            p.n_features,
+        );
+        let reply = server.infer_blocking(p.quantizer.bin_row(d.row(0)));
+        assert!(!reply.is_ok());
+        assert!(reply.prediction.is_nan());
+        let stats = server.stats();
+        assert_eq!(stats.errors, 1);
+        assert!(stats.shards[0].last_error.is_some());
         server.shutdown();
     }
 

@@ -29,6 +29,11 @@ impl FeatureQuantizer {
         let n = data.n_rows();
         for f in 0..data.n_features {
             let mut col: Vec<f32> = (0..n).map(|i| data.row(i)[f]).collect();
+            // NaN carries no ordering information and must not poison the
+            // edges (the `partial_cmp(..).unwrap()` below panicked on the
+            // first NaN); missing values are routed at query time instead
+            // — see [`FeatureQuantizer::bin`].
+            col.retain(|v| !v.is_nan());
             col.sort_by(|a, b| a.partial_cmp(b).unwrap());
             col.dedup();
             let mut cuts = Vec::with_capacity(n_bins - 1);
@@ -52,8 +57,13 @@ impl FeatureQuantizer {
     }
 
     /// Bin index of a raw feature value (binary search over edges).
+    /// NaN routes to bin 0 — the XGBoost-hist missing-value convention
+    /// (a default direction rather than an arbitrary comparison result).
     #[inline]
     pub fn bin(&self, feature: usize, value: f32) -> u16 {
+        if value.is_nan() {
+            return 0;
+        }
         let cuts = &self.edges[feature];
         // partition_point: number of cuts <= value.
         cuts.partition_point(|&c| c <= value) as u16
@@ -170,6 +180,54 @@ mod tests {
         let d = Dataset::new("bin", Task::Binary, 1, x, y);
         let q = FeatureQuantizer::fit(&d, 2);
         assert_ne!(q.bin(0, 0.0), q.bin(0, 1.0));
+    }
+
+    #[test]
+    fn fit_survives_nan_features() {
+        // Regression: a single NaN in a training column used to panic
+        // `fit` via `partial_cmp(..).unwrap()`. NaNs must be dropped
+        // before sorting and the resulting edges stay finite.
+        let n = 200;
+        let x: Vec<f32> = (0..n)
+            .flat_map(|i| {
+                let a = if i % 7 == 0 { f32::NAN } else { i as f32 / n as f32 };
+                let b = (i % 13) as f32;
+                vec![a, b]
+            })
+            .collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let d = Dataset::new("nan", Task::Binary, 2, x, y);
+        let q = FeatureQuantizer::fit(&d, 4);
+        assert!(q.edges.iter().flatten().all(|c| c.is_finite()), "NaN leaked into edges");
+        // The non-NaN values of the poisoned column still quantize
+        // monotonically.
+        assert!(q.bin(0, 0.1) <= q.bin(0, 0.9));
+    }
+
+    #[test]
+    fn all_nan_column_fits_with_no_cuts() {
+        let n = 50;
+        let x: Vec<f32> = (0..n).flat_map(|i| vec![f32::NAN, i as f32]).collect();
+        let y: Vec<f32> = vec![0.0; n];
+        let d = Dataset::new("allnan", Task::Binary, 2, x, y);
+        let q = FeatureQuantizer::fit(&d, 4);
+        assert!(q.edges[0].is_empty(), "an all-NaN column has no information to cut on");
+        assert_eq!(q.bin(0, 0.5), 0);
+    }
+
+    #[test]
+    fn nan_routes_to_bin_zero_at_query_time() {
+        let (_, q) = fitted(8);
+        for f in 0..q.edges.len() {
+            assert_eq!(q.bin(f, f32::NAN), 0, "feature {f}");
+        }
+        // Through the row path too (serving uses `bin_row`).
+        let n_features = q.edges.len();
+        let mut row = vec![0.7f32; n_features];
+        row[0] = f32::NAN;
+        let bins = q.bin_row(&row);
+        assert_eq!(bins[0], 0);
+        assert!(bins[1..].iter().all(|&b| (b as usize) < q.n_bins()));
     }
 
     #[test]

@@ -95,14 +95,16 @@ impl Backend for SimCardBackend {
         self.engine.task
     }
 
+    /// Numerics through the batched interval-index engine (bit-identical
+    /// to the scalar path); timing through the calibrated card model.
     fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
         self.counters.accrue(batch.len(), self.service_s);
-        Ok(batch.iter().map(|bins| self.engine.infer_bins(bins)).collect())
+        Ok(self.engine.infer_batch(batch))
     }
 
     fn infer_partials(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
         self.counters.accrue(batch.len(), self.service_s);
-        Ok(batch.iter().map(|bins| self.engine.partials_bins(bins)).collect())
+        Ok(self.engine.partials_batch(batch))
     }
 }
 

@@ -54,6 +54,17 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Like [`Summary::of`] but `None` on an empty sample instead of
+    /// panicking — for always-on paths (e.g. server latency logs) that
+    /// may legitimately have seen no traffic yet.
+    pub fn try_of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            None
+        } else {
+            Some(Summary::of(samples))
+        }
+    }
+
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of on empty sample");
         let mut s = samples.to_vec();
@@ -167,6 +178,17 @@ mod tests {
         assert_eq!(s.max, 5.0);
         assert_eq!(s.median, 3.0);
         assert!(s.min <= s.median && s.median <= s.p95 && s.p95 <= s.max);
+    }
+
+    #[test]
+    fn try_of_guards_empty_samples() {
+        // `Summary::of`/`percentile_sorted` index into the slice; the
+        // fallible constructor is the safe entry for maybe-empty logs.
+        assert!(Summary::try_of(&[]).is_none());
+        let s = Summary::try_of(&[2.0, 1.0]).unwrap();
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 2.0);
+        assert_eq!(s.n, 2);
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Batched-vs-scalar bit-identity: the feature-major interval index
+//! (`CamEngine::partials_batch` / `infer_batch`) must reproduce the
+//! row-at-a-time scalar engine *exactly* — f64 partials, f32 logits,
+//! decisions and `SearchStats` counts — across tasks, program precisions,
+//! defect draws and sharded plans. This is the contract every serving
+//! backend now rides on (DESIGN.md §5), so the comparison is `assert_eq!`
+//! on raw floats, not a tolerance.
+
+use xtime::bench_support::{random_ensemble, random_query_bins, sharded_functional_pool};
+use xtime::cam::DefectSpec;
+use xtime::compiler::{compile, partition, CamEngine, CompileOptions, PartitionOptions};
+use xtime::coordinator::{Backend, BatchPolicy, CpuExactBackend, FunctionalBackend};
+use xtime::data::{by_name, Task};
+use xtime::sim::{CardConfig, ChipConfig, SimCardBackend};
+use xtime::trees::{gbdt, rf, GbdtParams, RfParams};
+use xtime::util::prop;
+
+/// Exact agreement of one engine's batched and scalar paths on `batch`.
+/// Returns an `Err` witness for `prop::check` instead of asserting, so
+/// failures report the replayable iteration.
+fn batch_agrees(e: &CamEngine, batch: &[Vec<u16>], label: &str) -> prop::PropResult {
+    let (partials, stats) = e.partials_batch_stats(batch);
+    let logits = e.infer_batch(batch);
+    let (mut charged, mut matches) = (0usize, 0usize);
+    for (i, bins) in batch.iter().enumerate() {
+        prop::require(
+            partials[i] == e.partials_bins(bins),
+            format!("{label}: row {i} partials diverged"),
+        )?;
+        let (want, s) = e.infer_bins_stats(bins);
+        prop::require(logits[i] == want, format!("{label}: row {i} logits diverged"))?;
+        prop::require(
+            e.decide(&logits[i]) == e.decide(&want),
+            format!("{label}: row {i} decision diverged"),
+        )?;
+        charged += s.charged_rows;
+        matches += s.matches;
+    }
+    prop::require(
+        stats.charged_rows == charged,
+        format!("{label}: charged_rows {} vs scalar {charged}", stats.charged_rows),
+    )?;
+    prop::require(
+        stats.matches == matches,
+        format!("{label}: matches {} vs scalar {matches}", stats.matches),
+    )
+}
+
+/// Random bin batch straight from the generator — exercises bin-space
+/// edges (0 and n_bins−1) more aggressively than data-driven rows.
+fn random_bin_batch(
+    g: &mut prop::Gen,
+    n_features: usize,
+    n_bins: usize,
+    rows: usize,
+) -> Vec<Vec<u16>> {
+    (0..rows)
+        .map(|_| (0..n_features).map(|_| g.usize_in(0, n_bins) as u16).collect())
+        .collect()
+}
+
+#[test]
+fn batched_equals_scalar_binary_8bit() {
+    let d = by_name("churn").unwrap().generate_n(1200);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 12, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    let e = CamEngine::new(&p);
+    prop::check(40, 0xBA7C4ED, |g| {
+        let batch = random_bin_batch(g, p.n_features, p.n_bins as usize, g.usize_in(1, 17));
+        batch_agrees(&e, &batch, "binary-8bit")
+    });
+}
+
+#[test]
+fn batched_equals_scalar_multiclass_multicore() {
+    let d = by_name("eye").unwrap().generate_n(1000);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 9, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    // Small cores force multi-core placement and in-network reduction.
+    let p = compile(&m, &CompileOptions { core_rows: 48, ..Default::default() }).unwrap();
+    assert!(p.cores_per_replica() > 1);
+    let e = CamEngine::new(&p);
+    prop::check(30, 0xEE7E, |g| {
+        let batch = random_bin_batch(g, p.n_features, p.n_bins as usize, g.usize_in(1, 13));
+        batch_agrees(&e, &batch, "multiclass")
+    });
+}
+
+#[test]
+fn batched_equals_scalar_regression_rf() {
+    let d = by_name("rossmann").unwrap().generate_n(900);
+    let m = rf::train(&d, &RfParams { n_estimators: 8, max_leaves: 32, ..Default::default() });
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    let e = CamEngine::new(&p);
+    prop::check(30, 0x2E62E55, |g| {
+        let batch = random_bin_batch(g, p.n_features, p.n_bins as usize, g.usize_in(1, 13));
+        batch_agrees(&e, &batch, "regression")
+    });
+}
+
+#[test]
+fn batched_equals_scalar_4bit_program() {
+    let d = by_name("telco").unwrap().generate_n(800);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 6, max_leaves: 8, n_bits: 4, ..Default::default() },
+        None,
+    );
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    assert_eq!(p.n_bins, 16);
+    let e = CamEngine::new(&p);
+    prop::check(40, 0x4B17, |g| {
+        let batch = random_bin_batch(g, p.n_features, p.n_bins as usize, g.usize_in(1, 17));
+        batch_agrees(&e, &batch, "4bit")
+    });
+}
+
+#[test]
+fn batched_equals_scalar_under_defects() {
+    // The interval index is built from the defect-perturbed cells and
+    // applies the same per-core DAC offsets, so bit-identity must hold
+    // for every defect draw, not just clean engines.
+    let d = by_name("churn").unwrap().generate_n(1000);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 10, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    prop::check(12, 0xDEFEC7ED, |g| {
+        let spec = DefectSpec {
+            memristor_pct: g.f64_unit() * 0.3,
+            dac_pct: g.f64_unit() * 0.2,
+        };
+        let e = CamEngine::with_defects(&p, spec, g.u64());
+        let batch = random_bin_batch(g, p.n_features, p.n_bins as usize, 8);
+        batch_agrees(&e, &batch, "defects")
+    });
+}
+
+#[test]
+fn batched_shards_reproduce_unsharded_logits() {
+    // Shard engines answer batched; summing their f64 partials in shard
+    // order and applying the base once must equal the unsharded engine
+    // bit for bit (the sharding contract now served by the batched path).
+    let model = random_ensemble(256, 4, 16, Task::Binary, 11);
+    let program = compile(&model, &CompileOptions::default()).unwrap();
+    let reference = CamEngine::new(&program);
+    let plan = partition(&program, 3, &PartitionOptions::default()).unwrap();
+    let shard_engines: Vec<CamEngine> = plan.shards.iter().map(CamEngine::new).collect();
+
+    let batch = random_query_bins(&program, 32, 0x5AFE);
+    // Per-shard batched partials, then the dispatcher's aggregation.
+    let per_shard: Vec<Vec<Vec<f64>>> =
+        shard_engines.iter().map(|e| e.partials_batch(&batch)).collect();
+    for (i, bins) in batch.iter().enumerate() {
+        let mut total = vec![0f64; reference.n_outputs];
+        for shard in &per_shard {
+            for (k, v) in shard[i].iter().enumerate() {
+                total[k] += v;
+            }
+        }
+        let logits: Vec<f32> = total
+            .iter()
+            .zip(plan.base_score.iter().chain(std::iter::repeat(&0.0)))
+            .map(|(&t, &b)| t as f32 + b)
+            .collect();
+        assert_eq!(logits, reference.infer_bins(bins), "row {i}");
+    }
+    // And each shard engine itself is batched-vs-scalar clean.
+    for (s, e) in shard_engines.iter().enumerate() {
+        batch_agrees(e, &batch, &format!("shard {s}")).unwrap();
+    }
+}
+
+#[test]
+fn backends_agree_through_the_batched_path() {
+    // CPU-exact, functional and sim-card backends (all now serving whole
+    // batches) must agree: decisions across all three, and bit-identical
+    // logits/partials between the two CamEngine-backed ones.
+    let d = by_name("churn").unwrap().generate_n(1000);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 10, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    let bins: Vec<Vec<u16>> = (0..40).map(|i| p.quantizer.bin_row(d.row(i))).collect();
+
+    let mut cpu = CpuExactBackend { model: m };
+    let mut cam = FunctionalBackend::new(&p);
+    let mut card = SimCardBackend::new(&p, &ChipConfig::default(), &CardConfig::default());
+
+    let cam_logits = cam.infer(&bins).unwrap();
+    let card_logits = card.infer(&bins).unwrap();
+    assert_eq!(cam_logits, card_logits, "functional vs sim-card logits");
+    assert_eq!(
+        cam.infer_partials(&bins).unwrap(),
+        card.infer_partials(&bins).unwrap(),
+        "functional vs sim-card partials"
+    );
+    assert_eq!(
+        cpu.predict(&bins).unwrap(),
+        cam.predict(&bins).unwrap(),
+        "cpu vs functional decisions"
+    );
+}
+
+#[test]
+fn empty_batch_and_empty_latency_summary_are_guarded() {
+    // `Summary::of`/`percentile_sorted` index into their slice; the
+    // serving path must never feed them an empty one.
+    let d = by_name("telco").unwrap().generate_n(600);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 4, max_leaves: 4, ..Default::default() },
+        None,
+    );
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+
+    // Engine level.
+    let e = CamEngine::new(&p);
+    let (partials, stats) = e.partials_batch_stats(&[]);
+    assert!(partials.is_empty());
+    assert_eq!((stats.charged_rows, stats.matches), (0, 0));
+    assert!(e.infer_batch(&[]).is_empty());
+
+    // Backend level.
+    let mut cam = FunctionalBackend::new(&p);
+    assert!(cam.infer(&[]).unwrap().is_empty());
+    assert!(cam.infer_partials(&[]).unwrap().is_empty());
+
+    // Server level: a pool that has served nothing reports no latency
+    // summary instead of panicking on an empty sample.
+    let plan = partition(&p, 2, &PartitionOptions::default()).unwrap();
+    let server = sharded_functional_pool(&plan, BatchPolicy::default());
+    assert!(server.latency_summary().is_none());
+    assert_eq!(server.stats().requests, 0);
+    server.shutdown();
+}
