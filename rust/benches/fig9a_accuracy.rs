@@ -1,17 +1,31 @@
-//! Regenerates **Fig. 9(a)**: model score per dataset under the four
-//! training regimes —
+//! Regenerates **Fig. 9(a)**: model score per dataset under five
+//! training/deployment regimes —
 //!   Unconstrained      (float-grade 11-bit thresholds, free topology),
-//!   X-TIME 8bit        (≤4096 trees, ≤256 leaves, 8-bit bins),
-//!   X-TIME 4bit        (4-bit bins, 2× leaves for iso-area),
-//!   Only RF            (random forests only, 4-bit quantized) —
-//! reproducing the claims that 8-bit matches the unconstrained baseline,
-//! 4-bit loses noticeably on regression/wide-multiclass, and RF-only
-//! degrades further.
+//!   HAT 8bit           (hardware-aware training on the 8-bit grid:
+//!                       grid-aligned thresholds + variation-aware
+//!                       scoring; ≤4096 trees, ≤256 leaves),
+//!   PTQ 4bit           (the unconstrained model post-training-quantized
+//!                       onto the 4-bit grid — the naive deployment whose
+//!                       accuracy cliff Fig. 9a measures),
+//!   HAT 4bit           (hardware-aware training directly on the 4-bit
+//!                       grid, 2× leaves for iso-area, capped at the
+//!                       256-word core),
+//!   Only RF            (random forests only, 4-bit grid) —
+//! reproducing the claims that 8-bit matches the unconstrained baseline
+//! and that hardware-aware training recovers most of the 4-bit loss that
+//! post-training quantization suffers.
+//!
+//! Every HAT model is additionally compiled with
+//! `compile_for_deploy`, and the lossless-snapping assertion (DESIGN.md
+//! §5, contract 5) is enforced: a HAT-trained ensemble must map onto the
+//! CAM grid with zero threshold error.
 //!
 //! Run: `cargo bench --bench fig9a_accuracy` (XTIME_FAST=1 to smoke-test)
 
-use xtime::bench_support::{bench_dataset, fast_mode};  // fig9a trains its own regimes
+use xtime::bench_support::{bench_dataset, fast_mode}; // fig9a trains its own regimes
+use xtime::compiler::{compile_for_deploy, requantize, CompileOptions};
 use xtime::data::Task;
+use xtime::trees::hat::{self, HatParams};
 use xtime::trees::{gbdt, metrics, paper_model, rf, GbdtParams, ModelKind, RfParams};
 use xtime::util::bench::Table;
 
@@ -20,8 +34,16 @@ fn main() {
     let trees_cap = if fast_mode() { 48 } else { 256 };
     println!("Fig. 9(a) reproduction (≤{trees_cap} trees per config):");
 
-    let mut table =
-        Table::new(&["dataset", "Unconstrained", "X-TIME 8bit", "X-TIME 4bit", "Only RF"]);
+    let mut table = Table::new(&[
+        "dataset",
+        "Unconstrained",
+        "HAT 8bit",
+        "PTQ 4bit",
+        "HAT 4bit",
+        "Only RF",
+        "HAT recovery",
+    ]);
+    let mut recovered = 0usize;
     for name in datasets {
         let data = bench_dataset(name);
         let split = data.split(0.8, 0.0, 17);
@@ -29,34 +51,73 @@ fn main() {
         let k = data.task.n_outputs();
         let rounds = (trees_cap / k).max(2);
 
-        let mut scores = Vec::new();
         // Unconstrained: 11-bit bins ≈ float thresholds, generous leaves.
-        for (bits, leaves) in [(11u8, 512usize), (8, spec.n_leaves_max), (4, spec.n_leaves_max * 2)]
-        {
-            let model = match spec.kind {
-                ModelKind::Gbdt => gbdt::train(
-                    &split.train,
-                    &GbdtParams {
-                        n_rounds: rounds,
-                        max_leaves: leaves,
-                        n_bits: bits,
-                        ..Default::default()
-                    },
-                    None,
-                ),
-                ModelKind::RandomForest => rf::train(
-                    &split.train,
-                    &RfParams {
-                        n_estimators: rounds,
-                        max_leaves: leaves,
-                        n_bits: bits,
-                        ..Default::default()
-                    },
-                ),
+        let uncon = match spec.kind {
+            ModelKind::Gbdt => gbdt::train(
+                &split.train,
+                &GbdtParams {
+                    n_rounds: rounds,
+                    max_leaves: 512,
+                    n_bits: 11,
+                    ..Default::default()
+                },
+                None,
+            ),
+            ModelKind::RandomForest => rf::train(
+                &split.train,
+                &RfParams {
+                    n_estimators: rounds,
+                    max_leaves: 512,
+                    n_bits: 11,
+                    ..Default::default()
+                },
+            ),
+        };
+        let s_uncon = metrics::score(&uncon, &split.test);
+
+        // Hardware-aware training at deployment precision: thresholds on
+        // the exact deploy grid + variation-aware split scoring.
+        let hat_train = |bits: u8, leaves: usize| {
+            let params = HatParams {
+                deploy_bits: bits,
+                kind: spec.kind,
+                gbdt: GbdtParams {
+                    n_rounds: rounds,
+                    max_leaves: leaves,
+                    ..Default::default()
+                },
+                rf: RfParams {
+                    n_estimators: rounds,
+                    max_leaves: leaves,
+                    ..Default::default()
+                },
+                ..Default::default()
             };
-            scores.push(metrics::score(&model, &split.test));
+            hat::train(&split.train, &params, None)
+        };
+        let hat8 = hat_train(8, spec.n_leaves_max);
+        // 4-bit: 2× leaves for iso-area, capped by the 256-word core.
+        let hat4 = hat_train(4, (spec.n_leaves_max * 2).min(256));
+        let s_hat8 = metrics::score(&hat8, &split.test);
+        let s_hat4 = metrics::score(&hat4, &split.test);
+
+        // Contract 5: HAT models must compile with zero snapping error.
+        for (m, bits) in [(&hat8, 8u8), (&hat4, 4u8)] {
+            let (_, report) = compile_for_deploy(m, bits, &CompileOptions::default())
+                .unwrap_or_else(|e| panic!("{name} HAT {bits}bit failed to compile: {e}"));
+            report.assert_lossless(&format!("{name} HAT {bits}bit"));
         }
-        // Only RF @4 bits (the paper's post-training-quantized RF case).
+
+        // Post-training quantization of the unconstrained model onto the
+        // 4-bit grid — the lossy baseline HAT recovers from.
+        let (ptq4, ptq_report) = requantize(&uncon, 4);
+        let s_ptq4 = metrics::score(&ptq4, &split.test);
+        assert!(
+            ptq_report.n_thresholds > 0,
+            "{name}: PTQ saw no thresholds — nothing was measured"
+        );
+
+        // Only RF @4 bits (the paper's RF-only case).
         let rf_model = rf::train(
             &split.train,
             &RfParams {
@@ -66,22 +127,57 @@ fn main() {
                 ..Default::default()
             },
         );
-        scores.push(metrics::score(&rf_model, &split.test));
+        let s_rf = metrics::score(&rf_model, &split.test);
+
+        // The Fig. 9a recovery shape: HAT-4bit strictly above PTQ-4bit
+        // and within ~1 point of the 8-bit baseline.
+        let recovery = s_hat4 > s_ptq4 && s_hat4 >= s_hat8 - 0.01;
+        recovered += recovery as usize;
 
         table.row(&[
+            format!("{name}{}", if data.task == Task::Regression { " (R²)" } else { "" }),
+            format!("{s_uncon:.3}"),
+            format!("{s_hat8:.3}"),
             format!(
-                "{name}{}",
-                if data.task == Task::Regression { " (R²)" } else { "" }
+                "{s_ptq4:.3} ({}/{} off-grid, mean err {:.4})",
+                ptq_report.n_thresholds - ptq_report.n_exact,
+                ptq_report.n_thresholds,
+                ptq_report.mean_snap_err()
             ),
-            format!("{:.3}", scores[0]),
-            format!("{:.3}", scores[1]),
-            format!("{:.3}", scores[2]),
-            format!("{:.3}", scores[3]),
+            format!("{s_hat4:.3}"),
+            format!("{s_rf:.3}"),
+            if recovery { "yes".into() } else { format!("no (Δptq {:+.3})", s_hat4 - s_ptq4) },
         ]);
     }
-    table.print("Fig. 9(a) — score by training constraint");
+    table.print("Fig. 9(a) — score by training/deployment regime");
     println!(
-        "\npaper claims: 8-bit ≈ unconstrained; 4-bit loses ~20% on rossmann\n\
-         and ~18% on gas; RF-only significantly degrades several datasets."
+        "\nHAT recovery (4-bit HAT > 4-bit PTQ, within ~1 point of 8-bit): \
+         {recovered}/{} datasets.",
+        datasets.len()
     );
+    println!(
+        "paper claims: 8-bit ≈ unconstrained; naive 4-bit deployment loses\n\
+         noticeably on regression/wide-multiclass; hardware-aware training\n\
+         (grid-aligned thresholds + variation-aware splits) recovers it;\n\
+         RF-only degrades several datasets. Contract 5 held: every HAT\n\
+         model compiled with zero threshold-snapping error."
+    );
+    // The recovery-shape acceptance check is an empirical claim about the
+    // full-size models; the XTIME_FAST smoke run (CI) trains 8×-smaller
+    // ensembles where the shape is not guaranteed, so there it only warns.
+    if fast_mode() {
+        if recovered < 3 {
+            println!(
+                "warning: recovery shape held on only {recovered}/{} datasets in FAST mode \
+                 (acceptance needs ≥3; not a failure here — rerun without XTIME_FAST \
+                 for the real check)",
+                datasets.len()
+            );
+        }
+    } else {
+        assert!(
+            recovered >= 3,
+            "HAT recovery shape must hold on at least 3 Table II datasets (got {recovered})"
+        );
+    }
 }

@@ -49,10 +49,27 @@ fn flip_level(level: u16, up: bool) -> u16 {
 /// one level, alternating up/down draws (half up, half down in
 /// expectation, as in the paper).
 pub fn inject_memristor_defects(cells: &mut [MacroCell], pct: f64, rng: &mut Rng) {
+    let _ = inject_memristor_defects_tracked(cells, pct, rng);
+}
+
+/// Like [`inject_memristor_defects`] but also reports *which* cells ended
+/// up with different stored bounds (indices into `cells`). A selected
+/// device whose flip clamps to a no-op (already at the range edge) is not
+/// reported — only cells whose programmed window actually changed. Both
+/// functions consume the identical `rng` stream, so a tracked replay of
+/// an engine's defect draw identifies exactly the rows that engine
+/// perturbed — the basis of `compiler::defect_affected_trees` and the
+/// defect-aware retrain loop (`trees::hat`).
+pub fn inject_memristor_defects_tracked(
+    cells: &mut [MacroCell],
+    pct: f64,
+    rng: &mut Rng,
+) -> Vec<usize> {
     if pct <= 0.0 {
-        return;
+        return Vec::new();
     }
-    for cell in cells.iter_mut() {
+    let mut changed = Vec::new();
+    for (idx, cell) in cells.iter_mut().enumerate() {
         let [(mut lm, mut ll), (mut hm, mut hl)] = cell.sub_cells();
         for dev in 0..4u8 {
             if rng.chance(pct) {
@@ -65,8 +82,13 @@ pub fn inject_memristor_defects(cells: &mut [MacroCell], pct: f64, rng: &mut Rng
                 }
             }
         }
-        *cell = MacroCell::from_levels(lm, ll, hm, hl);
+        let perturbed = MacroCell::from_levels(lm, ll, hm, hl);
+        if perturbed != *cell {
+            changed.push(idx);
+        }
+        *cell = perturbed;
     }
+    changed
 }
 
 /// Per-column DAC error table for one core: offset applied to the query's
@@ -188,6 +210,32 @@ mod tests {
         for _ in 0..50 {
             inject_memristor_defects(&mut cells, 1.0, &mut rng);
             assert!(cells[0].lo <= MACRO_BINS && cells[0].hi <= MACRO_BINS);
+        }
+    }
+
+    #[test]
+    fn tracked_injection_matches_untracked_stream() {
+        // Tracked and untracked injection must perturb identically from
+        // the same seed (tracked is the replay tool for engine draws).
+        let mk = |tracked: bool| {
+            let mut cells = vec![MacroCell::new(40, 120); 256];
+            let mut rng = Rng::new(2024);
+            if tracked {
+                let changed = inject_memristor_defects_tracked(&mut cells, 0.2, &mut rng);
+                (cells, changed)
+            } else {
+                inject_memristor_defects(&mut cells, 0.2, &mut rng);
+                (cells, Vec::new())
+            }
+        };
+        let (a, changed) = mk(true);
+        let (b, _) = mk(false);
+        assert_eq!(a, b, "tracked injection drifted from the untracked stream");
+        // The report lists exactly the cells that differ from the original.
+        assert!(!changed.is_empty());
+        for (i, c) in a.iter().enumerate() {
+            let is_changed = *c != MacroCell::new(40, 120);
+            assert_eq!(changed.contains(&i), is_changed, "cell {i}");
         }
     }
 

@@ -24,9 +24,13 @@
 //!   [`SearchStats`] counts) — property-tested in
 //!   `rust/tests/batch_agreement.rs`.
 
-use super::program::CamProgram;
-use crate::cam::{inject_memristor_defects, CoreCam, DacErrors, DefectSpec, MacroCell, ARRAY_COLS};
-use crate::data::Task;
+use super::program::{compile, CamProgram, CompileError, CompileOptions};
+use crate::cam::{
+    inject_memristor_defects_tracked, CoreCam, DacErrors, DefectSpec, MacroCell, ARRAY_COLS,
+};
+use crate::data::{Dataset, Task};
+use crate::trees::hat::{defect_aware_retrain, HatParams, RetrainReport};
+use crate::trees::{metrics, Ensemble};
 use crate::util::Rng;
 
 /// Interval index of one feature column: the column's distinct bound
@@ -161,18 +165,8 @@ impl CamEngine {
         let mut cores = Vec::with_capacity(program.cores.len());
         for (ci, c) in program.cores.iter().enumerate() {
             let n_rows = c.rows.len();
-            let mut cells = Vec::with_capacity(n_rows * program.n_features);
-            for r in &c.rows {
-                for f in 0..program.n_features {
-                    // Bounds are scaled into the 8-bit macro-cell level
-                    // space so 4-bit programs exercise the same hardware
-                    // path with coarser levels.
-                    cells.push(MacroCell::new(r.lo[f] * scale, r.hi[f] * scale));
-                }
-            }
             let mut crng = rng.fork(ci as u64);
-            inject_memristor_defects(&mut cells, defects.memristor_pct, &mut crng);
-            let dac = DacErrors::draw(program.n_features, defects.dac_pct, &mut crng);
+            let (cells, _, dac) = core_defect_draw(program, c, defects, scale, &mut crng);
             let index = BatchIndex::build(n_rows, program.n_features, &cells);
             cores.push(EngineCore {
                 cam: CoreCam::from_cells(n_rows, program.n_features, cells),
@@ -367,6 +361,126 @@ impl CamEngine {
     }
 }
 
+/// One core's defect draw: scaled cell image + perturbation + DAC error
+/// table, consumed from `crng` in a single canonical order. This is the
+/// **only** definition of the per-core defect stream — both
+/// [`CamEngine::with_defects`] (which keeps the cells/DAC) and
+/// [`defect_affected_trees`] (which keeps the changed-cell report) call
+/// it, so the replay can never desynchronize from the engine.
+fn core_defect_draw(
+    program: &CamProgram,
+    core: &super::program::CoreImage,
+    defects: DefectSpec,
+    scale: u16,
+    crng: &mut Rng,
+) -> (Vec<MacroCell>, Vec<usize>, DacErrors) {
+    let mut cells = Vec::with_capacity(core.rows.len() * program.n_features);
+    for r in &core.rows {
+        for f in 0..program.n_features {
+            // Bounds are scaled into the 8-bit macro-cell level space so
+            // 4-bit programs exercise the same hardware path with coarser
+            // levels.
+            cells.push(MacroCell::new(r.lo[f] * scale, r.hi[f] * scale));
+        }
+    }
+    let changed = inject_memristor_defects_tracked(&mut cells, defects.memristor_pct, crng);
+    let dac = DacErrors::draw(program.n_features, defects.dac_pct, crng);
+    (cells, changed, dac)
+}
+
+/// Tree ids whose CAM rows land on cells perturbed by the defect draw
+/// `(defects, seed)` — replayed over the *identical* rng stream
+/// [`CamEngine::with_defects`] consumes (shared `core_defect_draw`), so
+/// the returned set is exactly the set of trees whose deployed rows
+/// differ from their ideal programming in that engine. This is the
+/// "known defect map" oracle of the defect-aware retrain loop
+/// (`trees::hat::defect_aware_retrain`).
+pub fn defect_affected_trees(program: &CamProgram, defects: DefectSpec, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed ^ 0xDEFEC7);
+    let scale = (crate::cam::MACRO_BINS / program.n_bins.max(1)) as u16;
+    let mut affected: Vec<u32> = Vec::new();
+    for (ci, c) in program.cores.iter().enumerate() {
+        let mut crng = rng.fork(ci as u64);
+        let (_, changed, _) = core_defect_draw(program, c, defects, scale, &mut crng);
+        for idx in changed {
+            affected.push(c.rows[idx / program.n_features].tree);
+        }
+    }
+    affected.sort_unstable();
+    affected.dedup();
+    affected
+}
+
+/// Task score (accuracy, or R² for regression) of `program` served
+/// through a *defective* engine — the deployment-side objective the
+/// defect-aware retrain loop maximizes. Rows go through the batched
+/// interval-index path (bit-identical to the scalar path, contract 4),
+/// which is what makes per-pass probing over a large eval set cheap.
+pub fn defective_score(
+    program: &CamProgram,
+    defects: DefectSpec,
+    seed: u64,
+    data: &Dataset,
+) -> f64 {
+    let engine = CamEngine::with_defects(program, defects, seed);
+    let batch: Vec<Vec<u16>> =
+        (0..data.n_rows()).map(|i| program.quantizer.bin_row(data.row(i))).collect();
+    let preds: Vec<f32> =
+        engine.infer_batch(&batch).iter().map(|logits| engine.decide(logits)).collect();
+    match data.task {
+        Task::Regression => metrics::r2(&preds, &data.y),
+        _ => metrics::accuracy(&preds, &data.y),
+    }
+}
+
+/// Pre-wired defect-aware HAT retraining: compiles each candidate model
+/// with `options`, identifies the trees whose rows land on the chip's
+/// known defect draw `(defects, seed)` and re-fits them
+/// ([`crate::trees::hat::refit_trees`]), keeping the pass that scores
+/// best on `eval` through the defective engine. An input model that does
+/// not compile is an `Err`; mid-loop compile failures of *retrained*
+/// candidates score `-inf` so an earlier pass wins instead of
+/// panicking. Exactly one compile per probe (= per retrain pass, plus
+/// one for the input model).
+pub fn hat_defect_retrain(
+    train: &Dataset,
+    eval: &Dataset,
+    model: Ensemble,
+    params: &HatParams,
+    options: &CompileOptions,
+    defects: DefectSpec,
+    seed: u64,
+) -> Result<(Ensemble, RetrainReport), CompileError> {
+    // The input model's compile error (if any) surfaces from its own
+    // probe — no separate validation compile.
+    let first_compile_error: std::cell::RefCell<Option<CompileError>> =
+        std::cell::RefCell::new(None);
+    let probe = |m: &Ensemble| match compile(m, options) {
+        Ok(p) => {
+            (defect_affected_trees(&p, defects, seed), defective_score(&p, defects, seed, eval))
+        }
+        Err(e) => {
+            let mut slot = first_compile_error.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+            (Vec::new(), f64::NEG_INFINITY)
+        }
+    };
+    let (best, report) = defect_aware_retrain(train, model, params, &probe);
+    // The first probe is always the input model; if *it* failed to
+    // compile, the loop never ran (empty affected set ⇒ zero passes) and
+    // the stashed error is the input's. With passes > 0 the input
+    // compiled, and any stashed error came from a discarded retrain
+    // candidate — already handled by its -inf score.
+    if report.passes == 0 {
+        if let Some(e) = first_compile_error.borrow_mut().take() {
+            return Err(e);
+        }
+    }
+    Ok((best, report))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -524,6 +638,100 @@ mod tests {
         let (empty, zero) = e.partials_batch_stats(&[]);
         assert!(empty.is_empty());
         assert_eq!((zero.charged_rows, zero.matches), (0, 0));
+    }
+
+    #[test]
+    fn defect_affected_trees_replays_the_engine_draw() {
+        let d = by_name("churn").unwrap().generate_n(900);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 4, max_leaves: 4, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        // No defects → nothing affected.
+        assert!(defect_affected_trees(&p, DefectSpec::NONE, 3).is_empty());
+        // Saturated defects → (essentially) every tree affected.
+        let all = defect_affected_trees(&p, DefectSpec::memristor(1.0), 3);
+        assert_eq!(all.len(), p.n_trees, "pct=1 must touch every tree");
+        assert!(all.iter().all(|&t| (t as usize) < p.n_trees));
+        // Deterministic replay.
+        let a = defect_affected_trees(&p, DefectSpec::memristor(0.05), 11);
+        let b = defect_affected_trees(&p, DefectSpec::memristor(0.05), 11);
+        assert_eq!(a, b);
+        // When the replay says "no tree affected", the defective engine
+        // must be bit-identical to the clean one (the whole point of
+        // replaying the engine's exact rng stream).
+        let clean = CamEngine::new(&p);
+        let spec = DefectSpec::memristor(0.001);
+        let mut verified = false;
+        for seed in 0..64u64 {
+            if !defect_affected_trees(&p, spec, seed).is_empty() {
+                continue;
+            }
+            let dirty = CamEngine::with_defects(&p, spec, seed);
+            for i in 0..100 {
+                let bins = p.quantizer.bin_row(d.row(i));
+                assert_eq!(clean.infer_bins(&bins), dirty.infer_bins(&bins), "seed {seed} row {i}");
+            }
+            verified = true;
+            break;
+        }
+        assert!(verified, "no defect-free draw found in 64 seeds — shrink the program");
+    }
+
+    #[test]
+    fn defective_score_matches_clean_engine_without_defects() {
+        let d = by_name("telco").unwrap().generate_n(700);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 6, max_leaves: 8, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let s = defective_score(&p, DefectSpec::NONE, 0, &d);
+        assert!((0.0..=1.0).contains(&s));
+        let e = CamEngine::new(&p);
+        let mut hits = 0usize;
+        for i in 0..d.n_rows() {
+            hits += (e.predict(&p, d.row(i)) == d.y[i]) as usize;
+        }
+        assert!((s - hits as f64 / d.n_rows() as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hat_defect_retrain_end_to_end_never_degrades() {
+        use crate::trees::hat::{self, HatParams};
+        let d = by_name("churn").unwrap().generate_n(1500);
+        let split = d.split(0.7, 0.0, 23);
+        let params = HatParams {
+            deploy_bits: 4,
+            gbdt: GbdtParams { n_rounds: 10, max_leaves: 8, ..Default::default() },
+            retrain_passes: 2,
+            ..Default::default()
+        };
+        let model = hat::train(&split.train, &params, None);
+        let spec = DefectSpec::memristor(0.1);
+        let (better, report) = hat_defect_retrain(
+            &split.train,
+            &split.test,
+            model,
+            &params,
+            &CompileOptions::default(),
+            spec,
+            7,
+        )
+        .unwrap();
+        assert!(report.passes <= 2);
+        assert!(
+            report.final_score >= report.initial_score,
+            "retrain degraded the deployed score: {report:?}"
+        );
+        // The returned model still compiles and deploys losslessly.
+        let (_, hat_report) =
+            crate::compiler::program::compile_for_deploy(&better, 4, &CompileOptions::default())
+                .unwrap();
+        hat_report.assert_lossless("retrained model");
     }
 
     #[test]

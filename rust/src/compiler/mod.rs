@@ -9,8 +9,14 @@ pub mod partition;
 pub mod paths;
 pub mod program;
 
-pub use engine::{apply_base, CamEngine, SearchStats};
+pub use engine::{
+    apply_base, defect_affected_trees, defective_score, hat_defect_retrain, CamEngine,
+    SearchStats,
+};
 pub use noc::{NocConfig, Router};
 pub use partition::{partition, PartitionError, PartitionOptions, ShardPlan, ShardStrategy};
-pub use paths::{extract_rows, CamRow};
-pub use program::{compile, CamProgram, CompileError, CompileOptions, CoreImage, CHIP_CORES};
+pub use paths::{extract_rows, snap_threshold, snap_tree, CamRow, HatReport};
+pub use program::{
+    compile, compile_for_deploy, requantize, CamProgram, CompileError, CompileOptions, CoreImage,
+    CHIP_CORES,
+};

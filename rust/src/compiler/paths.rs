@@ -6,6 +6,7 @@
 //! imposes `bin >= t` (lower bound). Features never tested on the path
 //! keep the full "don't care" range.
 
+use crate::data::FeatureQuantizer;
 use crate::trees::{Node, Tree};
 
 /// One CAM row: per-feature half-open windows `[lo, hi)` in bin space plus
@@ -41,6 +42,123 @@ impl CamRow {
             .filter(|&(&lo, &hi)| lo != 0 || hi < n_bins)
             .count()
     }
+}
+
+/// Fidelity report of mapping a model's split thresholds onto a
+/// deployment grid (DESIGN.md §5, contract 5). Produced by
+/// [`crate::compiler::requantize`] / [`crate::compiler::compile_for_deploy`].
+///
+/// A hardware-aware-trained model (`trees::hat`) already lives on the
+/// deployment grid, so every threshold maps exactly (`lossless()`); a
+/// post-training-quantized high-precision model generally does not — the
+/// per-threshold displacement recorded here is precisely the Fig. 9a
+/// low-precision accuracy loss.
+#[derive(Clone, Debug, Default)]
+pub struct HatReport {
+    /// Precision of the deployment grid actually used.
+    pub deploy_bits: u8,
+    /// Split thresholds examined across the ensemble.
+    pub n_thresholds: usize,
+    /// Thresholds that landed exactly on a deployment-grid cut.
+    pub n_exact: usize,
+    /// Largest |raw threshold − snapped grid cut| in raw feature units.
+    pub max_snap_err: f32,
+    /// Sum of absolute snap errors (see [`HatReport::mean_snap_err`]).
+    pub sum_snap_err: f64,
+}
+
+impl HatReport {
+    /// True iff every threshold mapped onto the grid with zero error —
+    /// the hardware-aware-training deployment contract.
+    pub fn lossless(&self) -> bool {
+        self.n_exact == self.n_thresholds
+    }
+
+    /// Mean absolute snap error in raw feature units.
+    pub fn mean_snap_err(&self) -> f32 {
+        if self.n_thresholds == 0 {
+            0.0
+        } else {
+            (self.sum_snap_err / self.n_thresholds as f64) as f32
+        }
+    }
+
+    /// Contract 5: hardware-aware-trained models must deploy losslessly.
+    /// Panics with the offending statistics otherwise.
+    pub fn assert_lossless(&self, context: &str) {
+        assert!(
+            self.lossless(),
+            "{context}: threshold snapping lost precision — {}/{} thresholds off-grid \
+             (max err {}, mean err {}); HAT-trained models must map losslessly \
+             (DESIGN.md §5 contract 5)",
+            self.n_thresholds - self.n_exact,
+            self.n_thresholds,
+            self.max_snap_err,
+            self.mean_snap_err()
+        );
+    }
+}
+
+/// Snap one fine-grid threshold onto the deployment grid: the coarse cut
+/// nearest to the threshold's raw cut value wins (ties resolve to the
+/// lower cut). Returns the coarse threshold bin and the absolute snap
+/// error in raw feature units — 0.0 exactly when the threshold already
+/// lies on the deployment grid, which [`FeatureQuantizer::coarsen`]
+/// guarantees for grids derived from the model's own (cut subsets).
+pub fn snap_threshold(fine_cuts: &[f32], coarse_cuts: &[f32], threshold_bin: u16) -> (u16, f32) {
+    if coarse_cuts.is_empty() {
+        // The deployment grid has no cut on this feature (constant in
+        // training data): the split cannot discriminate post-deploy.
+        // Bin 1 sends every query left (all queries bin to 0).
+        return (1, 0.0);
+    }
+    debug_assert!(threshold_bin >= 1, "threshold bins start at 1");
+    // A trained threshold bin t corresponds to the fine cut below it;
+    // clamp defensively for synthetic trees with out-of-range bins.
+    let idx = (threshold_bin as usize - 1).min(fine_cuts.len().saturating_sub(1));
+    let Some(&c) = fine_cuts.get(idx) else {
+        return (1, 0.0);
+    };
+    let j = coarse_cuts.partition_point(|&x| x < c);
+    let lower = j.checked_sub(1).map(|l| (l, (c - coarse_cuts[l]).abs()));
+    let upper = coarse_cuts.get(j).map(|&u| (j, (u - c).abs()));
+    let (k, err) = match (lower, upper) {
+        (Some((l, dl)), Some((_, du))) if dl <= du => (l, dl),
+        (_, Some((u, du))) => (u, du),
+        (Some((l, dl)), None) => (l, dl),
+        (None, None) => unreachable!("coarse_cuts checked non-empty"),
+    };
+    ((k + 1) as u16, err)
+}
+
+/// Remap every split threshold of `tree` from the `fine` grid onto the
+/// `coarse` deployment grid, accumulating fidelity statistics into
+/// `report`. Leaves, topology and feature ids are untouched.
+pub fn snap_tree(
+    tree: &Tree,
+    fine: &FeatureQuantizer,
+    coarse: &FeatureQuantizer,
+    report: &mut HatReport,
+) -> Tree {
+    let nodes = tree
+        .nodes
+        .iter()
+        .map(|n| match *n {
+            Node::Leaf { value } => Node::Leaf { value },
+            Node::Split { feature, threshold_bin, left, right } => {
+                let f = feature as usize;
+                let (t, err) = snap_threshold(&fine.edges[f], &coarse.edges[f], threshold_bin);
+                report.n_thresholds += 1;
+                if err == 0.0 {
+                    report.n_exact += 1;
+                }
+                report.max_snap_err = report.max_snap_err.max(err);
+                report.sum_snap_err += err as f64;
+                Node::Split { feature, threshold_bin: t, left, right }
+            }
+        })
+        .collect();
+    Tree { nodes }
 }
 
 /// Extract all root-to-leaf paths of `tree` as CAM rows.
@@ -180,6 +298,74 @@ mod tests {
                 format!("leaf {} != predict {}", matched[0].leaf, tree.predict_bins(&q)),
             )
         });
+    }
+
+    #[test]
+    fn snap_threshold_picks_nearest_coarse_cut() {
+        let fine = [0.1f32, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7];
+        let coarse = [0.2f32, 0.5];
+        // t=1 → cut 0.1 → nearest 0.2 (coarse bin 1), err 0.1.
+        let (t, e) = snap_threshold(&fine, &coarse, 1);
+        assert_eq!(t, 1);
+        assert!((e - 0.1).abs() < 1e-6);
+        // t=4 → cut 0.4 → nearest 0.5 (coarse bin 2), err 0.1.
+        let (t, e) = snap_threshold(&fine, &coarse, 4);
+        assert_eq!(t, 2);
+        assert!((e - 0.1).abs() < 1e-6);
+        // t=7 → cut 0.7 → nearest 0.5, err 0.2.
+        let (t, e) = snap_threshold(&fine, &coarse, 7);
+        assert_eq!(t, 2);
+        assert!((e - 0.2).abs() < 1e-6);
+        // A threshold already on the grid maps exactly.
+        let (t, e) = snap_threshold(&fine, &coarse, 2);
+        assert_eq!(t, 1);
+        assert_eq!(e, 0.0);
+        let (t, e) = snap_threshold(&fine, &coarse, 5);
+        assert_eq!(t, 2);
+        assert_eq!(e, 0.0);
+        // Equidistant ties go to the lower cut: 0.35 is synthetic here,
+        // use cut 0.3/0.4 vs grid {0.2, 0.5}: 0.3→0.2 (dl=0.1 ≤ du=0.2).
+        let (t, _) = snap_threshold(&fine, &coarse, 3);
+        assert_eq!(t, 1);
+    }
+
+    #[test]
+    fn snap_tree_identity_on_shared_grid() {
+        use crate::data::FeatureQuantizer;
+        let q = FeatureQuantizer {
+            n_bits: 4,
+            edges: vec![vec![0.25, 0.5, 0.75], vec![0.1, 0.9]],
+        };
+        let mut report = HatReport { deploy_bits: 4, ..Default::default() };
+        let t2 = Tree {
+            nodes: vec![
+                Node::Split { feature: 0, threshold_bin: 2, left: 1, right: 2 },
+                Node::Leaf { value: 1.0 },
+                Node::Split { feature: 1, threshold_bin: 1, left: 3, right: 4 },
+                Node::Leaf { value: 2.0 },
+                Node::Leaf { value: 3.0 },
+            ],
+        };
+        let snapped = snap_tree(&t2, &q, &q, &mut report);
+        assert_eq!(snapped, t2, "same-grid snap must be the identity");
+        assert_eq!(report.n_thresholds, 2);
+        assert_eq!(report.n_exact, 2);
+        assert!(report.lossless());
+        assert_eq!(report.max_snap_err, 0.0);
+        report.assert_lossless("identity snap");
+    }
+
+    #[test]
+    #[should_panic(expected = "contract 5")]
+    fn assert_lossless_panics_on_lossy_report() {
+        let report = HatReport {
+            deploy_bits: 4,
+            n_thresholds: 10,
+            n_exact: 9,
+            max_snap_err: 0.05,
+            sum_snap_err: 0.05,
+        };
+        report.assert_lossless("test");
     }
 
     #[test]

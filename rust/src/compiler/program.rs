@@ -2,10 +2,10 @@
 //! replication and NoC configuration (paper §III-A, §III-D).
 
 use super::noc::NocConfig;
-use super::paths::{extract_rows, CamRow};
+use super::paths::{extract_rows, snap_tree, CamRow, HatReport};
 use crate::cam::CORE_ROWS;
 use crate::data::{FeatureQuantizer, Task};
-use crate::trees::Ensemble;
+use crate::trees::{Ensemble, Node};
 use crate::util::Json;
 
 /// Chip capacity (paper: 4096 cores, 256 words × 130 features per core).
@@ -162,6 +162,75 @@ pub fn compile(model: &Ensemble, options: &CompileOptions) -> Result<CamProgram,
         quantizer: model.quantizer.clone(),
         n_trees: model.n_trees(),
     })
+}
+
+/// Post-training quantization: remap a trained ensemble onto the
+/// `deploy_bits` grid derived from its own quantizer
+/// ([`FeatureQuantizer::coarsen`]), recording per-threshold snap fidelity
+/// in the returned [`HatReport`].
+///
+/// * A model already at (or below) `deploy_bits` — notably anything from
+///   `trees::hat::train` — round-trips **losslessly**: the coarse grid's
+///   cuts are a subset of its own, so every threshold maps exactly.
+/// * A higher-precision model (e.g. the 11-bit "unconstrained" baseline)
+///   gets the classic lossy PTQ treatment whose accuracy cliff Fig. 9a
+///   measures; the report quantifies the displacement.
+pub fn requantize(model: &Ensemble, deploy_bits: u8) -> (Ensemble, HatReport) {
+    assert!(deploy_bits >= 1, "deploy grid needs at least 1 bit");
+    if model.quantizer.n_bits <= deploy_bits {
+        // Already representable on the deployment grid: identity.
+        let n: usize = model
+            .trees
+            .iter()
+            .map(|t| t.nodes.iter().filter(|n| matches!(n, Node::Split { .. })).count())
+            .sum();
+        let report = HatReport {
+            deploy_bits: model.quantizer.n_bits,
+            n_thresholds: n,
+            n_exact: n,
+            ..Default::default()
+        };
+        return (model.clone(), report);
+    }
+    let grid = model.quantizer.coarsen(deploy_bits);
+    let mut report = HatReport { deploy_bits, ..Default::default() };
+    let trees =
+        model.trees.iter().map(|t| snap_tree(t, &model.quantizer, &grid, &mut report)).collect();
+    let snapped = Ensemble {
+        name: model.name.clone(),
+        task: model.task,
+        n_features: model.n_features,
+        trees,
+        tree_class: model.tree_class.clone(),
+        base_score: model.base_score.clone(),
+        quantizer: grid,
+    };
+    (snapped, report)
+}
+
+/// Compile for an n-bit deployment: [`requantize`] onto the deployment
+/// grid (a no-op for models already on it), then [`compile`]. Returns the
+/// program together with the snap-fidelity [`HatReport`] — callers
+/// deploying hardware-aware-trained models assert
+/// [`HatReport::assert_lossless`] (DESIGN.md §5, contract 5); callers
+/// deploying post-training-quantized models read the loss they accepted.
+///
+/// `deploy_bits` is the hardware precision *ceiling*: a model trained on
+/// a coarser grid deploys on its own grid unchanged (the CAM's finer
+/// levels trivially represent it), and `HatReport::deploy_bits` /
+/// `CamProgram::n_bins` report that **effective** grid — check the
+/// report, not the requested ceiling, when asserting precision.
+pub fn compile_for_deploy(
+    model: &Ensemble,
+    deploy_bits: u8,
+    options: &CompileOptions,
+) -> Result<(CamProgram, HatReport), CompileError> {
+    if deploy_bits == 0 || deploy_bits > 8 {
+        return Err(CompileError::PrecisionUnsupported { n_bits: deploy_bits });
+    }
+    let (snapped, report) = requantize(model, deploy_bits);
+    let program = compile(&snapped, options)?;
+    Ok((program, report))
 }
 
 /// Pack one class's trees into the minimum number of class-uniform cores
@@ -440,6 +509,94 @@ mod tests {
             assert_eq!(a.trees, b.trees);
         }
         assert_eq!(back.base_score, p.base_score);
+    }
+
+    #[test]
+    fn requantize_is_identity_for_hat_models() {
+        // A model trained on the 4-bit deploy grid (hardware-aware
+        // training) must requantize losslessly and tree-identically.
+        let d = by_name("telco").unwrap().generate_n(800);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 6, max_leaves: 8, n_bits: 4, ..Default::default() },
+            None,
+        );
+        let (snapped, report) = requantize(&m, 4);
+        assert!(report.lossless(), "{report:?}");
+        assert!(report.n_thresholds > 0, "model has no splits to check");
+        assert_eq!(snapped.trees, m.trees);
+        assert_eq!(snapped.quantizer.edges, m.quantizer.edges);
+        report.assert_lossless("hat identity");
+    }
+
+    #[test]
+    fn requantize_snaps_high_precision_models_lossily() {
+        // 11-bit ≈ float thresholds onto the 4-bit grid: the classic PTQ
+        // cliff. With dozens of splits over a 2047-cut grid snapped onto
+        // 15 cuts, off-grid thresholds are certain.
+        let d = by_name("churn").unwrap().generate_n(2000);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 10, max_leaves: 32, n_bits: 11, ..Default::default() },
+            None,
+        );
+        let (snapped, report) = requantize(&m, 4);
+        assert_eq!(report.deploy_bits, 4);
+        assert_eq!(snapped.quantizer.n_bits, 4);
+        assert!(report.n_thresholds > 50, "want a meaningful threshold count");
+        assert!(!report.lossless(), "11→4-bit PTQ cannot be lossless: {report:?}");
+        assert!(report.max_snap_err > 0.0);
+        assert!(report.mean_snap_err() > 0.0);
+        // Thresholds stay inside the coarse grid's bin range.
+        let nb = snapped.quantizer.n_bins() as u16;
+        for t in &snapped.trees {
+            for node in &t.nodes {
+                if let Node::Split { threshold_bin, .. } = node {
+                    assert!(*threshold_bin >= 1 && *threshold_bin < nb);
+                }
+            }
+        }
+        // The snapped model still compiles and predicts sanely.
+        let p = compile(&snapped, &CompileOptions::default()).unwrap();
+        assert_eq!(p.n_bins, 16);
+    }
+
+    #[test]
+    fn compile_for_deploy_reports_and_compiles() {
+        let d = by_name("churn").unwrap().generate_n(1200);
+        // HAT path: trained at 4 bits, deployed at 4 bits — lossless.
+        let hat = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 8, max_leaves: 16, n_bits: 4, ..Default::default() },
+            None,
+        );
+        let (p, report) = compile_for_deploy(&hat, 4, &CompileOptions::default()).unwrap();
+        assert_eq!(p.n_bins, 16);
+        report.assert_lossless("compile_for_deploy(hat)");
+        // PTQ path: trained at 11 bits, deployed at 4 — compiles, lossy.
+        let uncon = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 8, max_leaves: 16, n_bits: 11, ..Default::default() },
+            None,
+        );
+        let (p, report) = compile_for_deploy(&uncon, 4, &CompileOptions::default()).unwrap();
+        assert_eq!(p.n_bins, 16);
+        assert!(!report.lossless());
+        // A coarser model under a finer ceiling deploys on its own
+        // *effective* grid: report/program say 4-bit, not the ceiling.
+        let (p, report) = compile_for_deploy(&hat, 8, &CompileOptions::default()).unwrap();
+        assert_eq!(p.n_bins, 16);
+        assert_eq!(report.deploy_bits, 4);
+        assert!(report.lossless());
+        // Guard: out-of-range deployments are errors, not panics.
+        assert!(matches!(
+            compile_for_deploy(&uncon, 11, &CompileOptions::default()),
+            Err(CompileError::PrecisionUnsupported { n_bits: 11 })
+        ));
+        assert!(matches!(
+            compile_for_deploy(&uncon, 0, &CompileOptions::default()),
+            Err(CompileError::PrecisionUnsupported { n_bits: 0 })
+        ));
     }
 
     #[test]

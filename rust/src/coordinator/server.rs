@@ -510,7 +510,19 @@ impl Server {
         Summary::try_of(&self.latencies.lock().unwrap())
     }
 
-    /// Stop the workers (drains in-flight requests).
+    /// Stop the workers.
+    ///
+    /// **Drain contract:** every request already `submit`ted — including
+    /// ones still queued in the channel, not yet picked up by a batcher —
+    /// receives a [`Reply`] (successful or error) before the workers
+    /// exit; no reply sender is ever dropped unanswered, so a caller
+    /// blocked in [`Server::infer_blocking`] can never panic on a closed
+    /// reply channel because of a shutdown. This works because dropping
+    /// the submit side only *closes* the request channel: the worker's
+    /// `recv` keeps returning queued requests until the channel is empty,
+    /// and only then observes the disconnect and exits (same for the
+    /// dispatcher → shard-worker job channels). Regression-tested by
+    /// `stop_under_load_drains_queued_requests` (single and sharded).
     pub fn shutdown(mut self) {
         self.stop();
     }
@@ -596,6 +608,37 @@ mod tests {
                 self.remaining_failures -= 1;
                 return Err(anyhow::anyhow!("transient fault"));
             }
+            self.inner.infer_partials(batch)
+        }
+    }
+
+    /// Wraps a healthy backend with a per-batch delay so a shutdown can
+    /// race a backlog of queued requests.
+    struct SlowBackend {
+        inner: FunctionalBackend,
+        delay: Duration,
+    }
+
+    impl Backend for SlowBackend {
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+
+        fn max_batch(&self) -> usize {
+            self.inner.max_batch()
+        }
+
+        fn task(&self) -> Task {
+            self.inner.task()
+        }
+
+        fn infer(&mut self, batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f32>>> {
+            std::thread::sleep(self.delay);
+            self.inner.infer(batch)
+        }
+
+        fn infer_partials(&mut self, batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f64>>> {
+            std::thread::sleep(self.delay);
             self.inner.infer_partials(batch)
         }
     }
@@ -731,6 +774,74 @@ mod tests {
         assert!(stats.batches >= 8, "32 requests / cap 4 needs ≥ 8 batches");
         assert!(stats.mean_batch <= 4.0);
         server.shutdown();
+    }
+
+    /// Regression (ISSUE 3 satellite): requests still queued in the
+    /// channel when `stop()` runs must receive replies — never a dropped
+    /// reply sender that panics the caller. A slow backend guarantees a
+    /// deep backlog when shutdown starts.
+    #[test]
+    fn stop_under_load_drains_queued_requests() {
+        let (d, m, p) = setup();
+        let reference = m;
+        let server = Server::start(
+            Box::new(SlowBackend {
+                inner: FunctionalBackend::new(&p),
+                delay: Duration::from_millis(15),
+            }),
+            BatchPolicy { max_wait_us: 0, max_batch: 4 },
+            p.n_features,
+        );
+        let n = 32;
+        let rows: Vec<usize> = (0..n).map(|i| i % d.n_rows()).collect();
+        let rxs: Vec<_> =
+            rows.iter().map(|&i| server.submit(p.quantizer.bin_row(d.row(i)))).collect();
+        // Shut down while most of the backlog is still queued (the first
+        // batch alone takes 15 ms). `shutdown` must block until the
+        // worker drained everything.
+        server.shutdown();
+        for (req, &i) in rxs.into_iter().zip(&rows) {
+            let reply = req
+                .recv()
+                .unwrap_or_else(|_| panic!("request for row {i} was dropped at shutdown"));
+            assert!(reply.is_ok(), "row {i}: {:?}", reply.error);
+            assert_eq!(reply.prediction, reference.predict(d.row(i)), "row {i}");
+        }
+    }
+
+    /// Same drain contract for the sharded dispatcher: queued requests
+    /// flow through the fan-out/aggregate path before the pool exits.
+    #[test]
+    fn sharded_stop_under_load_drains_queued_requests() {
+        let (d, _, p) = setup();
+        let reference = CamEngine::new(&p);
+        let plan = partition(&p, 2, &PartitionOptions::default()).unwrap();
+        let backends: Vec<Box<dyn Backend>> = plan
+            .shards
+            .iter()
+            .map(|s| {
+                Box::new(SlowBackend {
+                    inner: FunctionalBackend::new(s),
+                    delay: Duration::from_millis(10),
+                }) as Box<dyn Backend>
+            })
+            .collect();
+        let server = Server::start_sharded(
+            backends,
+            plan.base_score.clone(),
+            BatchPolicy { max_wait_us: 0, max_batch: 4 },
+            p.n_features,
+        );
+        let n = 24;
+        let bins: Vec<Vec<u16>> =
+            (0..n).map(|i| p.quantizer.bin_row(d.row(i % d.n_rows()))).collect();
+        let rxs: Vec<_> = bins.iter().map(|b| server.submit(b.clone())).collect();
+        server.shutdown();
+        for (req, b) in rxs.into_iter().zip(&bins) {
+            let reply = req.recv().expect("queued request dropped at sharded shutdown");
+            assert!(reply.is_ok(), "{:?}", reply.error);
+            assert_eq!(reply.logits, reference.infer_bins(b));
+        }
     }
 
     /// Regression: a failing shard used to hit

@@ -17,8 +17,22 @@ pub struct FeatureQuantizer {
 }
 
 impl FeatureQuantizer {
+    /// Grid *capacity*: `2^n_bits` bins. Low-cardinality features use
+    /// fewer — see [`FeatureQuantizer::n_bins_used`].
     pub fn n_bins(&self) -> usize {
         1usize << self.n_bits
+    }
+
+    /// Bins a feature actually resolves: distinct cut count + 1. For a
+    /// constant feature this is 1, for a binary feature 2 — the honest
+    /// resolution, as opposed to the `n_bins()` capacity.
+    pub fn n_bins_used(&self, feature: usize) -> usize {
+        self.edges[feature].len() + 1
+    }
+
+    /// Largest per-feature [`FeatureQuantizer::n_bins_used`].
+    pub fn max_bins_used(&self) -> usize {
+        self.edges.iter().map(|e| e.len() + 1).max().unwrap_or(1)
     }
 
     /// Fit quantile edges on a dataset.
@@ -37,22 +51,77 @@ impl FeatureQuantizer {
             col.sort_by(|a, b| a.partial_cmp(b).unwrap());
             col.dedup();
             let mut cuts = Vec::with_capacity(n_bins - 1);
+            // An f32 midpoint of two near-adjacent values can round onto
+            // the *lower* value, producing a cut that fails to separate
+            // the pair (and, chained, duplicate cuts that silently
+            // collapse bins: `n_bins()` then overstates the usable
+            // resolution and `bin_center` maps distinct bins to the same
+            // center). Every cut is therefore forced into the half-open
+            // separating interval `(lo, hi]` and kept strictly increasing.
+            let separating_cut = |lo: f32, hi: f32| {
+                let mid = 0.5 * (lo + hi);
+                if mid > lo {
+                    mid
+                } else {
+                    hi
+                }
+            };
             if col.len() <= n_bins {
                 // Few unique values: cut between consecutive uniques.
                 for w in col.windows(2) {
-                    cuts.push(0.5 * (w[0] + w[1]));
+                    let cut = separating_cut(w[0], w[1]);
+                    if cuts.last().map(|&c| cut > c).unwrap_or(true) {
+                        cuts.push(cut);
+                    }
                 }
             } else {
                 for b in 1..n_bins {
                     let idx = (b * (col.len() - 1)) / n_bins;
-                    let cut = 0.5 * (col[idx] + col[idx + 1]);
+                    let cut = separating_cut(col[idx], col[idx + 1]);
                     if cuts.last().map(|&c| cut > c).unwrap_or(true) {
                         cuts.push(cut);
                     }
                 }
             }
+            debug_assert!(cuts.windows(2).all(|w| w[0] < w[1]), "cuts must strictly increase");
             edges.push(cuts);
         }
+        FeatureQuantizer { n_bits, edges }
+    }
+
+    /// Derive the deployment grid for a coarser bit width: a
+    /// quantile-spaced *subset* of this quantizer's cut points. Because
+    /// every coarse cut is exactly one of the fine cuts, a threshold that
+    /// lies on the coarse grid is representable in both — the shared-grid
+    /// contract that hardware-aware training (`trees::hat`) and the
+    /// compiler's deployment snapping (`compiler::requantize`) rely on.
+    /// Coarsening to `self.n_bits` is the identity.
+    pub fn coarsen(&self, n_bits: u8) -> FeatureQuantizer {
+        assert!(
+            (1..=self.n_bits).contains(&n_bits),
+            "coarsen target {n_bits} bits must not exceed the source {} bits",
+            self.n_bits
+        );
+        let nb = 1usize << n_bits;
+        let edges: Vec<Vec<f32>> = self
+            .edges
+            .iter()
+            .map(|cuts| {
+                if cuts.len() < nb {
+                    // Already at or below the coarse resolution.
+                    cuts.clone()
+                } else {
+                    let mut picked = Vec::with_capacity(nb - 1);
+                    for b in 1..nb {
+                        let c = cuts[b * cuts.len() / nb];
+                        if picked.last().map(|&p| c > p).unwrap_or(true) {
+                            picked.push(c);
+                        }
+                    }
+                    picked
+                }
+            })
+            .collect();
         FeatureQuantizer { n_bits, edges }
     }
 
@@ -228,6 +297,99 @@ mod tests {
         let bins = q.bin_row(&row);
         assert_eq!(bins[0], 0);
         assert!(bins[1..].iter().all(|&b| (b as usize) < q.n_bins()));
+    }
+
+    #[test]
+    fn constant_feature_reports_one_usable_bin() {
+        // Regression (ISSUE 3 satellite): a constant feature has nothing
+        // to cut on; the reported usable resolution must say so instead
+        // of pretending to 2^n_bits bins.
+        let n = 120;
+        let x: Vec<f32> = (0..n).flat_map(|i| vec![3.25f32, i as f32]).collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let d = Dataset::new("const", Task::Binary, 2, x, y);
+        let q = FeatureQuantizer::fit(&d, 4);
+        assert!(q.edges[0].is_empty(), "constant feature grew cuts: {:?}", q.edges[0]);
+        assert_eq!(q.n_bins_used(0), 1);
+        assert_eq!(q.bin(0, 3.25), 0);
+        assert_eq!(q.bin(0, -100.0), 0);
+        assert!(q.n_bins_used(1) > 1);
+        assert_eq!(q.max_bins_used(), q.n_bins_used(1));
+    }
+
+    #[test]
+    fn two_valued_feature_reports_two_usable_bins() {
+        let n = 100;
+        let x: Vec<f32> = (0..n).map(|i| (i % 2) as f32 * 7.0).collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let d = Dataset::new("twoval", Task::Binary, 1, x, y);
+        let q = FeatureQuantizer::fit(&d, 8);
+        assert_eq!(q.edges[0].len(), 1, "two values need exactly one cut");
+        assert_eq!(q.n_bins_used(0), 2);
+        assert_ne!(q.bin(0, 0.0), q.bin(0, 7.0));
+        // Distinct usable bins must have distinct centers.
+        assert_ne!(q.bin_center(0, 0), q.bin_center(0, 1));
+    }
+
+    #[test]
+    fn adjacent_float_values_do_not_collapse_cuts() {
+        // Regression: midpoints of consecutive f32 values at large
+        // magnitude round back onto the lower value (ulp(2^23) = 1, so
+        // 0.5·(8388608 + 8388609) rounds to 8388608.0). The old fit
+        // emitted that collapsed cut, silently merging two bins.
+        let vals = [8388608.0f32, 8388609.0, 8388610.0, 8388611.0];
+        let x: Vec<f32> = (0..200).map(|i| vals[i % vals.len()]).collect();
+        let y: Vec<f32> = (0..200).map(|i| (i % 2) as f32).collect();
+        let d = Dataset::new("ulp", Task::Binary, 1, x, y);
+        let q = FeatureQuantizer::fit(&d, 4);
+        assert!(
+            q.edges[0].windows(2).all(|w| w[0] < w[1]),
+            "duplicate cuts survived: {:?}",
+            q.edges[0]
+        );
+        assert_eq!(q.n_bins_used(0), vals.len(), "cuts: {:?}", q.edges[0]);
+        // Every distinct value lands in its own bin.
+        let bins: Vec<u16> = vals.iter().map(|&v| q.bin(0, v)).collect();
+        let mut uniq = bins.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), vals.len(), "bins collapsed: {bins:?}");
+    }
+
+    #[test]
+    fn coarsen_cuts_are_a_subset_of_fine_cuts() {
+        let (_, q) = fitted(8);
+        let c = q.coarsen(4);
+        assert_eq!(c.n_bits, 4);
+        for f in 0..q.edges.len() {
+            assert!(c.edges[f].len() < c.n_bins());
+            assert!(
+                c.edges[f].iter().all(|cut| q.edges[f].contains(cut)),
+                "feature {f}: coarse cut not on the fine grid"
+            );
+            assert!(c.edges[f].windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn coarsen_to_same_bits_is_identity() {
+        let (_, q) = fitted(6);
+        let c = q.coarsen(6);
+        assert_eq!(c.edges, q.edges);
+        assert_eq!(c.n_bits, q.n_bits);
+    }
+
+    #[test]
+    fn coarsen_preserves_bin_monotonicity() {
+        let (_, q) = fitted(8);
+        let c = q.coarsen(3);
+        prop::check(512, 0xC0A5, |g| {
+            let f = g.usize_in(0, c.edges.len());
+            let a = g.f32_in(0.0, 1.0);
+            let b = g.f32_in(0.0, 1.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            prop::require(c.bin(f, lo) <= c.bin(f, hi), format!("f={f} lo={lo} hi={hi}"))
+        });
     }
 
     #[test]

@@ -134,16 +134,12 @@ pub fn simulate(
     let util_core = replicas.iter().map(|r| r.utilization(makespan)).fold(0.0, f64::max);
     let util_output = output.utilization(makespan);
     let util_cp = cp.utilization(makespan);
-    let bottleneck = [
+    let bottleneck = attribute_bottleneck(&[
         ("input-bw", util_input),
         ("core", util_core),
         ("output-bw", util_output),
         ("cp", util_cp),
-    ]
-    .iter()
-    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-    .unwrap()
-    .0;
+    ]);
 
     let energy = Activity::estimate(program, cfg, avg_charged_frac).energy_nj();
 
@@ -160,6 +156,33 @@ pub fn simulate(
         util_cp,
         n_replicas: program.n_replicas,
     }
+}
+
+/// Deterministic bottleneck attribution: the stage with the highest
+/// utilization wins; exact ties resolve to the *earliest* stage in
+/// pipeline order (stable across runs — the previous
+/// `max_by(partial_cmp().unwrap())` panicked on NaN and flipped between
+/// equally-utilized stages because `max_by` keeps the *last* maximum).
+/// Comparison uses `f64::total_cmp`; NaN utilizations (degenerate
+/// workloads) are measurement artifacts, never a bottleneck, and are
+/// skipped — unless every stage is NaN, in which case the first stage is
+/// reported.
+pub fn attribute_bottleneck(stages: &[(&'static str, f64)]) -> &'static str {
+    assert!(!stages.is_empty(), "no stages to attribute");
+    let mut best: Option<(&'static str, f64)> = None;
+    for &(name, util) in stages {
+        if util.is_nan() {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((_, b)) => util.total_cmp(&b) == std::cmp::Ordering::Greater,
+        };
+        if better {
+            best = Some((name, util));
+        }
+    }
+    best.map(|(name, _)| name).unwrap_or(stages[0].0)
 }
 
 /// Analytic single-sample latency in cycles (no queuing): broadcast +
@@ -309,6 +332,48 @@ mod tests {
         let rep = simulate(&p, &cfg, &Workload::saturating(10_000), 0.05);
         let class_bound = cfg.clock_ghz * 1e3 / 7.0; // 7 classes
         assert!(rep.throughput_msps <= class_bound * 1.001, "{}", rep.throughput_msps);
+    }
+
+    #[test]
+    fn bottleneck_ties_resolve_to_first_stage() {
+        // Regression (ISSUE 3 satellite): `max_by` kept the *last*
+        // maximum, so attribution flipped between equally-utilized
+        // stages. Ties must deterministically name the earliest stage.
+        assert_eq!(
+            attribute_bottleneck(&[("input-bw", 0.5), ("core", 0.5), ("output-bw", 0.5)]),
+            "input-bw"
+        );
+        assert_eq!(
+            attribute_bottleneck(&[("input-bw", 0.2), ("core", 0.9), ("output-bw", 0.9)]),
+            "core"
+        );
+        assert_eq!(attribute_bottleneck(&[("input-bw", 0.0), ("core", 0.0)]), "input-bw");
+    }
+
+    #[test]
+    fn bottleneck_survives_nan_utilization() {
+        // Regression: `partial_cmp().unwrap()` panicked on NaN. NaN is a
+        // degenerate measurement, never a bottleneck.
+        assert_eq!(attribute_bottleneck(&[("input-bw", f64::NAN), ("core", 0.1)]), "core");
+        assert_eq!(attribute_bottleneck(&[("input-bw", 0.1), ("core", f64::NAN)]), "input-bw");
+        // All-NaN degenerates to the first stage instead of panicking.
+        assert_eq!(
+            attribute_bottleneck(&[("input-bw", f64::NAN), ("core", f64::NAN)]),
+            "input-bw"
+        );
+        // Negative-zero / zero ties stay deterministic under total_cmp.
+        assert_eq!(attribute_bottleneck(&[("input-bw", -0.0), ("core", 0.0)]), "core");
+    }
+
+    #[test]
+    fn degenerate_single_sample_workload_attributes_cleanly() {
+        // The smallest possible workload must simulate and attribute one
+        // of the four pipeline stages without panicking.
+        let p = small_program(1);
+        let cfg = ChipConfig::default();
+        let rep = simulate(&p, &cfg, &Workload::saturating(1), 0.0);
+        assert!(["input-bw", "core", "output-bw", "cp"].contains(&rep.bottleneck));
+        assert!(rep.util_input >= 0.0 && rep.util_input <= 1.0);
     }
 
     #[test]

@@ -41,6 +41,12 @@ pub struct GbdtParams {
     /// probability, so the learner avoids razor-thin split margins that
     /// analog conductance variation would flip. 0.0 disables.
     pub bin_jitter: f64,
+    /// Variation-aware split scoring (hardware-aware training, see
+    /// [`crate::trees::hat`]): probability that a programmed threshold
+    /// drifts ±1 bin; candidate splits are scored by expected gain under
+    /// that drift so chosen splits carry margin against conductance
+    /// noise. 0.0 disables (exact classic scoring).
+    pub variation_flip_prob: f64,
 }
 
 impl Default for GbdtParams {
@@ -59,6 +65,27 @@ impl Default for GbdtParams {
             seed: 7,
             early_stop_rounds: 0,
             bin_jitter: 0.0,
+            variation_flip_prob: 0.0,
+        }
+    }
+}
+
+impl GbdtParams {
+    /// The grower-facing subset of these params — the single source of
+    /// truth shared by [`train`] and `hat::refit_trees`, so replacement
+    /// trees are grown under exactly the regime of the trees they
+    /// replace.
+    pub(crate) fn grow_params(&self) -> GrowParams {
+        GrowParams {
+            max_leaves: self.max_leaves,
+            max_depth: self.max_depth,
+            lambda: self.lambda,
+            gamma: self.gamma,
+            min_child_weight: self.min_child_weight,
+            leaf_scale: self.learning_rate,
+            colsample: self.colsample_bytree,
+            col_per_split: false,
+            variation_flip_prob: self.variation_flip_prob,
         }
     }
 }
@@ -114,16 +141,7 @@ pub fn train(data: &Dataset, params: &GbdtParams, val: Option<&Dataset>) -> Ense
         })
         .unwrap_or_default();
 
-    let grow = GrowParams {
-        max_leaves: params.max_leaves,
-        max_depth: params.max_depth,
-        lambda: params.lambda,
-        gamma: params.gamma,
-        min_child_weight: params.min_child_weight,
-        leaf_scale: params.learning_rate,
-        colsample: params.colsample_bytree,
-        col_per_split: false,
-    };
+    let grow = params.grow_params();
 
     let mut rng = Rng::new(params.seed);
     let mut scratch = GrowScratch::new(m.n_features, m.n_bins);

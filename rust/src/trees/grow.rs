@@ -51,6 +51,14 @@ pub struct GrowParams {
     pub colsample: f64,
     /// If true, re-draw the feature subset at every split (RF style).
     pub col_per_split: bool,
+    /// Variation-aware split scoring (hardware-aware training): the
+    /// probability that a programmed CAM threshold drifts one bin in a
+    /// given direction (the ±1-level conductance-flip model derived in
+    /// `cam::analog`). When > 0 every candidate threshold is scored by
+    /// its *expected* gain under that drift, so razor-thin splits whose
+    /// gain evaporates one bin away are discounted in favour of splits
+    /// that carry margin. 0.0 keeps the exact classic scoring.
+    pub variation_flip_prob: f64,
 }
 
 impl Default for GrowParams {
@@ -64,6 +72,7 @@ impl Default for GrowParams {
             leaf_scale: 0.1,
             colsample: 1.0,
             col_per_split: false,
+            variation_flip_prob: 0.0,
         }
     }
 }
@@ -101,6 +110,12 @@ impl Ord for Candidate {
 pub struct GrowScratch {
     hist_g: Vec<f64>,
     hist_h: Vec<f64>,
+    /// Per-threshold raw gains of one feature (variation-aware scoring);
+    /// index = threshold bin, with the degenerate all-right (0) and
+    /// all-left (n_bins) ends pinned to gain 0.
+    gain: Vec<f32>,
+    /// Whether a threshold satisfies the `min_child_weight` constraint.
+    valid: Vec<bool>,
 }
 
 impl GrowScratch {
@@ -108,6 +123,8 @@ impl GrowScratch {
         GrowScratch {
             hist_g: vec![0.0; n_features * n_bins],
             hist_h: vec![0.0; n_features * n_bins],
+            gain: vec![0.0; n_bins + 1],
+            valid: vec![false; n_bins + 1],
         }
     }
 }
@@ -132,11 +149,12 @@ fn find_best_split(
     scratch: &mut GrowScratch,
 ) -> Option<BestSplit> {
     let nb = m.n_bins;
+    let GrowScratch { hist_g, hist_h, gain, valid } = scratch;
     // Zero only the touched feature lanes.
     for &f in feats {
         let base = f as usize * nb;
-        scratch.hist_g[base..base + nb].fill(0.0);
-        scratch.hist_h[base..base + nb].fill(0.0);
+        hist_g[base..base + nb].fill(0.0);
+        hist_h[base..base + nb].fill(0.0);
     }
     // Histogram accumulation — the training hot loop.
     for &r in rows {
@@ -147,20 +165,68 @@ fn find_best_split(
         for &f in feats {
             let b = m.bins[row_base + f as usize] as usize;
             let idx = f as usize * nb + b;
-            scratch.hist_g[idx] += gr;
-            scratch.hist_h[idx] += hr;
+            hist_g[idx] += gr;
+            hist_h[idx] += hr;
         }
     }
     let parent_score = g_sum * g_sum / (h_sum + p.lambda as f64);
     let mut best: Option<BestSplit> = None;
+
+    if p.variation_flip_prob > 0.0 {
+        // Variation-aware scoring (hardware-aware training): the deployed
+        // threshold drifts one bin down/up with probability `fp` each, so
+        // a threshold is scored by its expected gain
+        //   E = (1 − 2·fp)·gain(t) + fp·gain(t−1) + fp·gain(t+1),
+        // with the degenerate ends (t = 0: everything right, t = n_bins:
+        // everything left) contributing gain 0. Splits only eligible when
+        // the *nominal* threshold satisfies `min_child_weight`.
+        let fp = p.variation_flip_prob as f32;
+        for &f in feats {
+            let base = f as usize * nb;
+            gain[0] = 0.0;
+            gain[nb] = 0.0;
+            let mut gl = 0.0f64;
+            let mut hl = 0.0f64;
+            for t in 1..nb {
+                gl += hist_g[base + t - 1];
+                hl += hist_h[base + t - 1];
+                let gr_ = g_sum - gl;
+                let hr_ = h_sum - hl;
+                // An empty child means the drifted threshold is no split
+                // at all: gain 0 (also dodges 0/0 when λ = 0).
+                gain[t] = if hl <= 0.0 || hr_ <= 0.0 {
+                    0.0
+                } else {
+                    (gl * gl / (hl + p.lambda as f64) + gr_ * gr_ / (hr_ + p.lambda as f64)
+                        - parent_score) as f32
+                        * 0.5
+                };
+                // Both children non-empty (hessians are strictly positive
+                // for every loss here) and heavy enough.
+                valid[t] =
+                    hl > 0.0 && hr_ > 0.0 && hl >= p.min_child_weight && hr_ >= p.min_child_weight;
+            }
+            for t in 1..nb {
+                if !valid[t] {
+                    continue;
+                }
+                let e = (1.0 - 2.0 * fp) * gain[t] + fp * (gain[t - 1] + gain[t + 1]);
+                if e > p.gamma && best.as_ref().map(|b| e > b.gain).unwrap_or(true) {
+                    best = Some(BestSplit { gain: e, feature: f, threshold_bin: t as u16 });
+                }
+            }
+        }
+        return best;
+    }
+
     for &f in feats {
         let base = f as usize * nb;
         let mut gl = 0.0f64;
         let mut hl = 0.0f64;
         // Split at bin t: left = bins < t, right = bins >= t.
         for t in 1..nb {
-            gl += scratch.hist_g[base + t - 1];
-            hl += scratch.hist_h[base + t - 1];
+            gl += hist_g[base + t - 1];
+            hl += hist_h[base + t - 1];
             if hl < p.min_child_weight {
                 continue;
             }
@@ -375,6 +441,104 @@ mod tests {
         let t = grow_tree(&m, (0..n as u32).collect(), &g, &h, &p, &mut rng, &mut scratch);
         assert_eq!(t.n_leaves(), 1);
         assert!((t.predict_bins(&[0]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn variation_aware_prefers_wide_margin_split() {
+        // Feature 0 separates the classes perfectly but only at t = 8:
+        // all mass sits on bins 7 and 8, so one bin of threshold drift
+        // destroys the split entirely. Feature 1 separates *almost*
+        // perfectly (a few noisy rows) with class mass spread over bins
+        // 0..8 and 8..16, so one bin of drift misroutes only 1/8 of one
+        // class. The plain scorer takes the razor-thin feature 0; the
+        // variation-aware scorer must pay the drift penalty and take the
+        // wide-margin feature 1.
+        let n = 128usize;
+        let mut bins: Vec<u16> = Vec::with_capacity(n * 2);
+        let mut g: Vec<f32> = Vec::with_capacity(n);
+        for i in 0..n {
+            let y = (i % 2) as u16;
+            let f0 = 7 + y;
+            let noisy = i % 32 == 0; // 4 of 128 rows on f1's wrong side
+            let side = if noisy { 1 - y } else { y };
+            let f1 = side * 8 + ((i / 2) % 8) as u16;
+            bins.push(f0);
+            bins.push(f1);
+            g.push(-(y as f32));
+        }
+        let h = vec![1.0f32; n];
+        let m = matrix(bins, 2, 16);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let grow_with = |flip: f64| {
+            let p = GrowParams {
+                max_leaves: 2,
+                leaf_scale: 1.0,
+                variation_flip_prob: flip,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(21);
+            let mut scratch = GrowScratch::new(m.n_features, m.n_bins);
+            grow_tree(&m, rows.clone(), &g, &h, &p, &mut rng, &mut scratch)
+        };
+        let plain = grow_with(0.0);
+        match plain.nodes[0] {
+            Node::Split { feature, threshold_bin, .. } => {
+                assert_eq!(feature, 0, "plain scorer should take the perfect separator");
+                assert_eq!(threshold_bin, 8);
+            }
+            _ => panic!("plain root is not a split"),
+        }
+        let robust = grow_with(0.2);
+        match robust.nodes[0] {
+            Node::Split { feature, .. } => {
+                assert_eq!(feature, 1, "variation-aware scorer should take the wide margin");
+            }
+            _ => panic!("variation-aware root is not a split"),
+        }
+    }
+
+    #[test]
+    fn zero_variation_prob_is_exactly_classic_scoring() {
+        // The variation path must be a strict opt-in: flip prob 0.0 goes
+        // through the untouched classic scorer, so trees are identical.
+        let (m, g, h) = step_problem();
+        let p = GrowParams { max_leaves: 4, lambda: 0.0, leaf_scale: 1.0, ..Default::default() };
+        let mut rng_a = Rng::new(5);
+        let mut rng_b = Rng::new(5);
+        let mut sa = GrowScratch::new(m.n_features, m.n_bins);
+        let mut sb = GrowScratch::new(m.n_features, m.n_bins);
+        let rows: Vec<u32> = (0..m.n_rows as u32).collect();
+        let a = grow_tree(&m, rows.clone(), &g, &h, &p, &mut rng_a, &mut sa);
+        let pb = GrowParams { variation_flip_prob: 0.0, ..p };
+        let b = grow_tree(&m, rows, &g, &h, &pb, &mut rng_b, &mut sb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn variation_aware_rf_params_survive_zero_lambda() {
+        // RF grows with λ = 0; the variation path must not leak NaNs from
+        // empty-child thresholds (0/0) into the scores.
+        let n = 64;
+        let mut rng_data = Rng::new(31);
+        let bins: Vec<u16> = (0..n * 3).map(|_| rng_data.below(8) as u16).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng_data.f32() - 0.5).collect();
+        let h = vec![1.0f32; n];
+        let m = matrix(bins, 3, 8);
+        let p = GrowParams {
+            lambda: 0.0,
+            gamma: 1e-9,
+            leaf_scale: 1.0,
+            variation_flip_prob: 0.1,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(9);
+        let mut scratch = GrowScratch::new(m.n_features, m.n_bins);
+        let t = grow_tree(&m, (0..n as u32).collect(), &g, &h, &p, &mut rng, &mut scratch);
+        for node in &t.nodes {
+            if let Node::Leaf { value } = node {
+                assert!(value.is_finite(), "NaN leaked into a leaf value");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! Hardware-aware training (HAT): GBDT/RF training that targets the CAM
+//! deployment grid *during* learning instead of snapping afterwards.
+//!
+//! The paper's headline accuracy claim ("thanks to hardware-aware
+//! training, X-TIME reaches state-of-the-art accuracy") rests on three
+//! mechanisms, all implemented here and in [`crate::trees::grow`]:
+//!
+//! 1. **Grid-aligned thresholds** — the trainer quantizes features with
+//!    the *same* `deploy_bits` grid the compiler programs into the CAM
+//!    (`FeatureQuantizer` is shared between trainer and compiler, and
+//!    [`crate::data::FeatureQuantizer::coarsen`] derives coarse grids as
+//!    cut subsets of fine ones). Compile-time threshold snapping is then
+//!    lossless by
+//!    construction — `compiler::compile_for_deploy` asserts this via its
+//!    `HatReport` (DESIGN.md §5, contract 5). Post-training quantization
+//!    (`compiler::requantize` of a high-precision model) is the lossy
+//!    baseline this recovers from — the Fig. 9a accuracy cliff.
+//! 2. **Variation-aware split scoring** — candidate thresholds are scored
+//!    by expected gain under ±1-bin threshold drift (the conductance
+//!    programming-noise model of `cam::analog`), so chosen splits carry
+//!    margin against analog variation
+//!    (`GrowParams::variation_flip_prob`).
+//! 3. **Defect-aware retraining** — given a known defect map (a
+//!    `cam::DefectSpec` draw for a specific chip), trees whose CAM rows
+//!    land on defective cells are re-fit against the residuals of the
+//!    healthy trees, keeping the best-scoring pass
+//!    ([`defect_aware_retrain`]). The compile/deploy oracles are injected
+//!    as closures so this L1 module does not depend upward on the
+//!    compiler; `compiler::hat_defect_retrain` provides the wiring.
+//!
+//! Prior art: Pedretti et al.'s analog-CAM decision-tree work
+//! (arXiv:2103.08986) and RETENTION (arXiv:2506.05994) both show that
+//! making the trainer aware of CAM precision/cell constraints is what
+//! recovers accuracy at 4–6 bits.
+
+use crate::data::{Dataset, Task};
+use crate::trees::gbdt::{self, GbdtParams};
+use crate::trees::grow::{grow_tree, BinnedMatrix, GrowScratch};
+use crate::trees::loss::grad_hess;
+use crate::trees::rf::{self, RfParams};
+use crate::trees::tree::Ensemble;
+use crate::trees::ModelKind;
+use crate::util::Rng;
+use std::collections::HashSet;
+
+/// §V-A operating point of the analog programming-noise model: with
+/// σ = 1 µS on the 1–100 µS window a stored level flips with ≈ 0.2%
+/// probability (`cam::analog::analytic_flip_probability()`). Kept as a
+/// literal so L1 does not depend upward on the device layer; callers with
+/// a calibrated device model can pass the measured figure instead.
+pub const DEFAULT_VARIATION_FLIP_PROB: f64 = 0.002;
+
+/// Hardware-aware training configuration.
+#[derive(Clone, Debug)]
+pub struct HatParams {
+    /// Deployment precision: the CAM grid the compiler will program
+    /// (1..=8 bits; 8 = macro-cell, 4 = single-cell mode).
+    pub deploy_bits: u8,
+    /// Trainer family (Table II's "Model" column).
+    pub kind: ModelKind,
+    /// Base GBDT hyper-parameters. `n_bits` and `variation_flip_prob`
+    /// are overridden by `deploy_bits` / `variation_flip_prob` below.
+    pub gbdt: GbdtParams,
+    /// Base RF hyper-parameters (same overrides).
+    pub rf: RfParams,
+    /// ±1-bin threshold-drift probability used for variation-aware split
+    /// scoring. 0.0 disables.
+    pub variation_flip_prob: f64,
+    /// Maximum defect-aware retrain passes ([`defect_aware_retrain`]).
+    pub retrain_passes: usize,
+}
+
+impl Default for HatParams {
+    fn default() -> Self {
+        HatParams {
+            deploy_bits: 8,
+            kind: ModelKind::Gbdt,
+            gbdt: GbdtParams::default(),
+            rf: RfParams::default(),
+            variation_flip_prob: DEFAULT_VARIATION_FLIP_PROB,
+            retrain_passes: 2,
+        }
+    }
+}
+
+impl HatParams {
+    /// Effective GBDT params: deploy grid + variation scoring applied.
+    fn effective_gbdt(&self) -> GbdtParams {
+        GbdtParams {
+            n_bits: self.deploy_bits,
+            variation_flip_prob: self.variation_flip_prob,
+            ..self.gbdt.clone()
+        }
+    }
+
+    /// Effective RF params: deploy grid + variation scoring applied.
+    fn effective_rf(&self) -> RfParams {
+        RfParams {
+            n_bits: self.deploy_bits,
+            variation_flip_prob: self.variation_flip_prob,
+            ..self.rf.clone()
+        }
+    }
+}
+
+/// Train a hardware-aware ensemble: split thresholds are restricted to
+/// the exact `deploy_bits` quantizer grid the compiler deploys (so
+/// threshold snapping is lossless by construction) and splits are scored
+/// variation-aware. The returned model's `quantizer` *is* the deployment
+/// grid.
+pub fn train(data: &Dataset, params: &HatParams, val: Option<&Dataset>) -> Ensemble {
+    assert!(
+        (1..=8).contains(&params.deploy_bits),
+        "deploy grid is 1..=8 bits (got {})",
+        params.deploy_bits
+    );
+    match params.kind {
+        ModelKind::Gbdt => gbdt::train(data, &params.effective_gbdt(), val),
+        ModelKind::RandomForest => rf::train(data, &params.effective_rf()),
+    }
+}
+
+/// Re-fit the given trees in place — same slot, same class, same deploy
+/// grid (the model's own quantizer is reused, so the result stays
+/// grid-aligned by construction):
+///
+/// * GBDT: each affected tree is regrown against the boosting residuals
+///   of the kept trees (predictions of unaffected trees are frozen,
+///   gradients recomputed before each replacement tree);
+/// * RF: each affected tree is regrown on a fresh bootstrap draw with
+///   the forest's usual one-vs-rest targets.
+pub fn refit_trees(
+    data: &Dataset,
+    model: &Ensemble,
+    affected: &[u32],
+    params: &HatParams,
+    seed: u64,
+) -> Ensemble {
+    if affected.is_empty() {
+        return model.clone();
+    }
+    let n = data.n_rows();
+    let k = model.task.n_outputs();
+    let m = BinnedMatrix {
+        bins: model.quantizer.transform(data),
+        n_rows: n,
+        n_features: data.n_features,
+        n_bins: model.quantizer.n_bins(),
+    };
+    let affected: HashSet<u32> = affected.iter().copied().collect();
+    let mut out = model.clone();
+    let mut rng = Rng::new(seed ^ 0x4A77_EA17);
+    let mut scratch = GrowScratch::new(m.n_features, m.n_bins);
+
+    match params.kind {
+        ModelKind::Gbdt => {
+            let gp = params.effective_gbdt();
+            // Same grower regime as `gbdt::train` (shared mapping).
+            let grow = gp.grow_params();
+            // Frozen predictions of base score + kept trees.
+            let mut preds = vec![0f32; n * k];
+            for i in 0..n {
+                preds[i * k..(i + 1) * k].copy_from_slice(&model.base_score);
+            }
+            for (ti, tree) in model.trees.iter().enumerate() {
+                if affected.contains(&(ti as u32)) {
+                    continue;
+                }
+                let c = model.tree_class[ti] as usize;
+                for i in 0..n {
+                    preds[i * k + c] += tree.predict_bins(m.row(i));
+                }
+            }
+            let mut gk = vec![0f32; n];
+            let mut hk = vec![0f32; n];
+            for ti in 0..model.trees.len() {
+                if !affected.contains(&(ti as u32)) {
+                    continue;
+                }
+                let class = model.tree_class[ti] as usize;
+                let gh = grad_hess(model.task, &preds, &data.y);
+                for i in 0..n {
+                    gk[i] = gh.g[i * k + class];
+                    hk[i] = gh.h[i * k + class];
+                }
+                let rows: Vec<u32> = if gp.subsample < 1.0 {
+                    let take = ((n as f64 * gp.subsample) as usize).max(2);
+                    rng.sample_indices(n, take).into_iter().map(|i| i as u32).collect()
+                } else {
+                    (0..n as u32).collect()
+                };
+                // Defect-aware bin jitter, exactly as `gbdt::train`: grow
+                // on a jittered view, update predictions on clean bins.
+                let jittered: Option<BinnedMatrix> = if gp.bin_jitter > 0.0 {
+                    let max_bin = (m.n_bins - 1) as u16;
+                    let mut bins = m.bins.clone();
+                    for b in bins.iter_mut() {
+                        if rng.chance(gp.bin_jitter) {
+                            *b = if rng.chance(0.5) {
+                                (*b).saturating_sub(1)
+                            } else {
+                                (*b + 1).min(max_bin)
+                            };
+                        }
+                    }
+                    Some(BinnedMatrix {
+                        bins,
+                        n_rows: m.n_rows,
+                        n_features: m.n_features,
+                        n_bins: m.n_bins,
+                    })
+                } else {
+                    None
+                };
+                let grow_m = jittered.as_ref().unwrap_or(&m);
+                let tree = grow_tree(grow_m, rows, &gk, &hk, &grow, &mut rng, &mut scratch);
+                for i in 0..n {
+                    preds[i * k + class] += tree.predict_bins(m.row(i));
+                }
+                out.trees[ti] = tree;
+            }
+        }
+        ModelKind::RandomForest => {
+            let rp = params.effective_rf();
+            let n_estimators = (model.n_trees() / k).max(1);
+            // Same grower regime as `rf::train` (shared mapping).
+            let grow = rp.grow_params(data.n_features, n_estimators);
+            let hk = vec![1f32; n];
+            let mut gk = vec![0f32; n];
+            for ti in 0..model.trees.len() {
+                if !affected.contains(&(ti as u32)) {
+                    continue;
+                }
+                let class = model.tree_class[ti] as usize;
+                let mut erng = rng.fork(ti as u64);
+                let rows: Vec<u32> = (0..n).map(|_| erng.below(n) as u32).collect();
+                match model.task {
+                    Task::Regression | Task::Binary => {
+                        for i in 0..n {
+                            gk[i] = -data.y[i];
+                        }
+                    }
+                    Task::MultiClass(_) => {
+                        for i in 0..n {
+                            gk[i] = -f32::from(data.y[i] as usize == class);
+                        }
+                    }
+                }
+                out.trees[ti] = grow_tree(&m, rows, &gk, &hk, &grow, &mut erng, &mut scratch);
+            }
+        }
+    }
+    out
+}
+
+/// Outcome of one [`defect_aware_retrain`] run.
+#[derive(Clone, Debug, Default)]
+pub struct RetrainReport {
+    /// Refit passes actually executed (≤ `HatParams::retrain_passes`).
+    pub passes: usize,
+    /// Trees whose rows landed on defective cells before retraining.
+    pub initial_affected: usize,
+    /// Same count for the returned model.
+    pub final_affected: usize,
+    /// Deployed (defective) score before retraining.
+    pub initial_score: f64,
+    /// Deployed score of the returned model (≥ `initial_score` — the
+    /// best pass is kept, falling back to the input model).
+    pub final_score: f64,
+}
+
+/// Defect-aware retrain loop (paper §V-A outlook; RETENTION-style): given
+/// the known defect map of a specific chip, repeatedly re-fit the trees
+/// whose CAM rows land on defective cells and keep the best pass by
+/// deployed score.
+///
+/// The deployment oracle is injected so this module stays below the
+/// compiler in the layer map: `probe` compiles the model **once** and
+/// returns `(affected_tree_ids, deployed_score)` — the tree ids whose
+/// rows land on defective cells under the chip's defect draw
+/// (`compiler::defect_affected_trees`) and the task score served through
+/// the *defective* engine (`compiler::defective_score`). One probe per
+/// pass is the loop's entire compile cost.
+///
+/// Use [`crate::compiler::hat_defect_retrain`] for the pre-wired version.
+/// The returned model never scores below the input model under the probe
+/// (the input is the fallback best).
+pub fn defect_aware_retrain(
+    data: &Dataset,
+    model: Ensemble,
+    params: &HatParams,
+    probe: &dyn Fn(&Ensemble) -> (Vec<u32>, f64),
+) -> (Ensemble, RetrainReport) {
+    let (mut cur_affected, initial_score) = probe(&model);
+    let initial_affected = cur_affected.len();
+    let mut report = RetrainReport {
+        passes: 0,
+        initial_affected,
+        final_affected: initial_affected,
+        initial_score,
+        final_score: initial_score,
+    };
+    let mut best = model.clone();
+    let mut best_score = initial_score;
+    let mut best_affected = initial_affected;
+    let mut cur = model;
+    for pass in 0..params.retrain_passes {
+        if cur_affected.is_empty() {
+            break;
+        }
+        cur = refit_trees(data, &cur, &cur_affected, params, 0x9E77_0000 + pass as u64);
+        report.passes = pass + 1;
+        let (affected, s) = probe(&cur);
+        if s > best_score {
+            best_score = s;
+            best = cur.clone();
+            best_affected = affected.len();
+        }
+        cur_affected = affected;
+    }
+    report.final_affected = best_affected;
+    report.final_score = best_score;
+    (best, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::by_name;
+    use crate::trees::metrics::score;
+
+    fn small_hat(bits: u8) -> HatParams {
+        HatParams {
+            deploy_bits: bits,
+            gbdt: GbdtParams {
+                n_rounds: 20,
+                max_leaves: 16,
+                max_depth: 4,
+                learning_rate: 0.3,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn hat_model_lives_on_the_deploy_grid() {
+        let d = by_name("churn").unwrap().generate_n(1500);
+        for bits in [4u8, 6, 8] {
+            let m = train(&d, &small_hat(bits), None);
+            assert_eq!(m.quantizer.n_bits, bits);
+            // Every threshold is a bin index on that grid (< 2^bits).
+            let nb = 1u16 << bits;
+            for t in &m.trees {
+                for node in &t.nodes {
+                    if let crate::trees::Node::Split { threshold_bin, .. } = node {
+                        assert!(*threshold_bin >= 1 && *threshold_bin < nb);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hat_still_learns_at_four_bits() {
+        let d = by_name("churn").unwrap().generate_n(2000);
+        let s = d.split(0.7, 0.0, 5);
+        let m = train(&s.train, &small_hat(4), None);
+        let acc = score(&m, &s.test);
+        assert!(acc > 0.72, "4-bit HAT accuracy {acc}");
+    }
+
+    #[test]
+    fn hat_rf_trains_on_the_deploy_grid() {
+        let d = by_name("gas").unwrap().generate_n(1500);
+        let p = HatParams {
+            deploy_bits: 4,
+            kind: ModelKind::RandomForest,
+            rf: RfParams { n_estimators: 10, max_leaves: 32, ..Default::default() },
+            ..Default::default()
+        };
+        let m = train(&d, &p, None);
+        assert_eq!(m.quantizer.n_bits, 4);
+        assert!(score(&m, &d) > 0.4, "in-sample RF score too low");
+    }
+
+    #[test]
+    fn refit_replaces_only_affected_trees() {
+        let d = by_name("telco").unwrap().generate_n(1000);
+        let p = small_hat(6);
+        let m = train(&d, &p, None);
+        let affected = vec![1u32, 3];
+        let r = refit_trees(&d, &m, &affected, &p, 99);
+        assert_eq!(r.n_trees(), m.n_trees());
+        assert_eq!(r.tree_class, m.tree_class);
+        assert_eq!(r.base_score, m.base_score);
+        assert_eq!(r.quantizer.edges, m.quantizer.edges, "deploy grid must be reused");
+        for ti in 0..m.n_trees() {
+            if affected.contains(&(ti as u32)) {
+                continue;
+            }
+            assert_eq!(r.trees[ti], m.trees[ti], "unaffected tree {ti} changed");
+        }
+        // Refit keeps the model functional.
+        let before = score(&m, &d);
+        let after = score(&r, &d);
+        assert!(after > before - 0.1, "refit collapsed: {before} → {after}");
+    }
+
+    #[test]
+    fn refit_with_empty_set_is_identity() {
+        let d = by_name("telco").unwrap().generate_n(600);
+        let p = small_hat(8);
+        let m = train(&d, &p, None);
+        let r = refit_trees(&d, &m, &[], &p, 1);
+        assert_eq!(r.trees, m.trees);
+    }
+
+    #[test]
+    fn refit_rf_trees() {
+        let d = by_name("gas").unwrap().generate_n(1000);
+        let p = HatParams {
+            deploy_bits: 6,
+            kind: ModelKind::RandomForest,
+            rf: RfParams { n_estimators: 6, max_leaves: 16, ..Default::default() },
+            ..Default::default()
+        };
+        let m = train(&d, &p, None);
+        let k = m.task.n_outputs();
+        let affected = vec![0u32, (k as u32) + 1];
+        let r = refit_trees(&d, &m, &affected, &p, 7);
+        assert_eq!(r.n_trees(), m.n_trees());
+        for ti in 0..m.n_trees() {
+            if !affected.contains(&(ti as u32)) {
+                assert_eq!(r.trees[ti], m.trees[ti]);
+            }
+        }
+        assert!(score(&r, &d) > 0.3);
+    }
+
+    #[test]
+    fn retrain_loop_never_returns_a_worse_model() {
+        // Synthetic probe: tree 0 is "always on a defective cell"; the
+        // score is plain in-sample accuracy. The loop must keep whichever
+        // pass scores best — never below the input model.
+        let d = by_name("churn").unwrap().generate_n(1200);
+        let mut p = small_hat(6);
+        p.retrain_passes = 2;
+        let m = train(&d, &p, None);
+        let probe = |m: &Ensemble| (vec![0u32], score(m, &d));
+        let (best, report) = defect_aware_retrain(&d, m.clone(), &p, &probe);
+        assert_eq!(report.initial_affected, 1);
+        assert_eq!(report.passes, 2);
+        assert!(report.final_score >= report.initial_score, "{report:?}");
+        assert!(score(&best, &d) >= score(&m, &d) - 1e-12);
+    }
+
+    #[test]
+    fn retrain_loop_stops_when_nothing_is_affected() {
+        let d = by_name("telco").unwrap().generate_n(600);
+        let p = small_hat(8);
+        let m = train(&d, &p, None);
+        let probe = |m: &Ensemble| (Vec::new(), score(m, &d));
+        let (best, report) = defect_aware_retrain(&d, m.clone(), &p, &probe);
+        assert_eq!(report.passes, 0);
+        assert_eq!(report.initial_affected, 0);
+        assert_eq!(report.final_affected, 0);
+        assert_eq!(best.trees, m.trees);
+    }
+}

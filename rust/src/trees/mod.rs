@@ -7,12 +7,14 @@
 pub mod explain;
 pub mod gbdt;
 pub mod grow;
+pub mod hat;
 pub mod loss;
 pub mod metrics;
 pub mod rf;
 pub mod tree;
 
 pub use gbdt::GbdtParams;
+pub use hat::{HatParams, RetrainReport, DEFAULT_VARIATION_FLIP_PROB};
 pub use rf::RfParams;
 pub use tree::{Ensemble, Node, Tree};
 

@@ -26,6 +26,9 @@ pub struct RfParams {
     pub min_child_weight: f64,
     pub n_bits: u8,
     pub seed: u64,
+    /// Variation-aware split scoring (hardware-aware training): see
+    /// [`crate::trees::gbdt::GbdtParams::variation_flip_prob`].
+    pub variation_flip_prob: f64,
 }
 
 impl Default for RfParams {
@@ -38,6 +41,32 @@ impl Default for RfParams {
             min_child_weight: 2.0,
             n_bits: 8,
             seed: 13,
+            variation_flip_prob: 0.0,
+        }
+    }
+}
+
+impl RfParams {
+    /// Effective per-split feature fraction (√F heuristic by default).
+    pub(crate) fn effective_colsample(&self, n_features: usize) -> f64 {
+        self.colsample.unwrap_or_else(|| (n_features as f64).sqrt() / n_features as f64)
+    }
+
+    /// The grower-facing subset of these params — the single source of
+    /// truth shared by [`train`] and `hat::refit_trees`.
+    pub(crate) fn grow_params(&self, n_features: usize, n_estimators: usize) -> GrowParams {
+        GrowParams {
+            max_leaves: self.max_leaves,
+            max_depth: self.max_depth,
+            lambda: 0.0,
+            gamma: 1e-9,
+            min_child_weight: self.min_child_weight,
+            // Mean-target leaves, scaled so the ensemble SUM is the mean
+            // vote.
+            leaf_scale: 1.0 / n_estimators as f32,
+            colsample: self.effective_colsample(n_features),
+            col_per_split: true,
+            variation_flip_prob: self.variation_flip_prob,
         }
     }
 }
@@ -57,20 +86,7 @@ pub fn train(data: &Dataset, params: &RfParams) -> Ensemble {
         n_bins: quantizer.n_bins(),
     };
 
-    let colsample = params
-        .colsample
-        .unwrap_or_else(|| (data.n_features as f64).sqrt() / data.n_features as f64);
-    let grow = GrowParams {
-        max_leaves: params.max_leaves,
-        max_depth: params.max_depth,
-        lambda: 0.0,
-        gamma: 1e-9,
-        min_child_weight: params.min_child_weight,
-        // Mean-target leaves, scaled so the ensemble SUM is the mean vote.
-        leaf_scale: 1.0 / params.n_estimators as f32,
-        colsample,
-        col_per_split: true,
-    };
+    let grow = params.grow_params(data.n_features, params.n_estimators);
 
     let mut rng = Rng::new(params.seed);
     let mut scratch = GrowScratch::new(m.n_features, m.n_bins);

@@ -1,0 +1,146 @@
+//! Contract 5 (DESIGN.md §5): hardware-aware-trained ensembles deploy
+//! losslessly — across deployment precisions (4/6/8 bits), task families
+//! (binary / multi-class / regression Table II generators) and both
+//! trainer families:
+//!
+//! 1. `compile_for_deploy` reports **zero threshold-snapping error**
+//!    (every trained threshold lies exactly on the CAM grid), and
+//! 2. the compiled program's decisions agree with `Ensemble::logits`
+//!    (the training-side reference) on held-out rows, with logits equal
+//!    to the f64-vs-f32 summation-order tolerance of contract 1.
+
+use xtime::compiler::{compile_for_deploy, requantize, CamEngine, CompileOptions};
+use xtime::data::{by_name, Task};
+use xtime::trees::hat::{self, HatParams};
+use xtime::trees::{gbdt, GbdtParams, ModelKind, RfParams};
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Decision agreement under contract 1's numeric slack: decisions must
+/// match exactly unless the reference's decision itself hinges on a
+/// near-tie finer than the f64-vs-f32 summation-order difference.
+fn decisions_agree(task: Task, cam_logits: &[f32], cpu_logits: &[f32]) -> bool {
+    match task {
+        Task::Regression => close(cam_logits[0], cpu_logits[0]),
+        Task::Binary => {
+            // Mirror `Task::decide`: class = logit > 0.
+            (cam_logits[0] > 0.0) == (cpu_logits[0] > 0.0) || cpu_logits[0].abs() < 1e-4
+        }
+        Task::MultiClass(_) => {
+            let argmax = |l: &[f32]| {
+                let mut best = 0usize;
+                for c in 1..l.len() {
+                    if l[c] > l[best] {
+                        best = c;
+                    }
+                }
+                best
+            };
+            let (ca, cb) = (argmax(cam_logits), argmax(cpu_logits));
+            if ca == cb {
+                return true;
+            }
+            // Near-tie: the two top reference logits are closer than the
+            // representable summation-order difference.
+            let mut sorted: Vec<f32> = cpu_logits.to_vec();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            (sorted[0] - sorted[1]).abs() < 1e-4
+        }
+    }
+}
+
+fn check_deployment(name: &str, n: usize, bits: u8, params: &HatParams) {
+    let data = by_name(name).unwrap().generate_n(n);
+    let split = data.split(0.8, 0.0, 41);
+    let model = hat::train(&split.train, params, None);
+    assert_eq!(model.quantizer.n_bits, bits, "{name}@{bits}: model not on the deploy grid");
+
+    let (program, report) = compile_for_deploy(&model, bits, &CompileOptions::default())
+        .unwrap_or_else(|e| panic!("{name}@{bits}: compile failed: {e}"));
+    assert!(report.n_thresholds > 0, "{name}@{bits}: no thresholds checked");
+    assert_eq!(
+        report.n_exact, report.n_thresholds,
+        "{name}@{bits}: off-grid thresholds in a HAT model: {report:?}"
+    );
+    report.assert_lossless(&format!("{name}@{bits}"));
+    assert_eq!(program.n_bins, 1u16 << bits);
+
+    // Numeric agreement: engine vs training-side reference.
+    let engine = CamEngine::new(&program);
+    let rows = split.test.n_rows().min(250);
+    for i in 0..rows {
+        let row = split.test.row(i);
+        let cam = engine.infer_row(&program, row);
+        let cpu = model.logits(row);
+        for c in 0..cam.len() {
+            assert!(
+                close(cam[c], cpu[c]),
+                "{name}@{bits} row {i} class {c}: {} vs {}",
+                cam[c],
+                cpu[c]
+            );
+        }
+        assert!(
+            decisions_agree(program.task, &cam, &cpu),
+            "{name}@{bits} row {i}: decisions diverged beyond numeric slack"
+        );
+    }
+}
+
+#[test]
+fn hat_gbdt_deploys_losslessly_across_bits_and_tasks() {
+    // 4/6/8 bits × binary (churn) / multi-class (eye) / regression
+    // (rossmann) Table II generators.
+    for &bits in &[4u8, 6, 8] {
+        for &(name, n) in &[("churn", 1200usize), ("eye", 1200), ("rossmann", 1000)] {
+            let params = HatParams {
+                deploy_bits: bits,
+                kind: ModelKind::Gbdt,
+                gbdt: GbdtParams { n_rounds: 6, max_leaves: 16, ..Default::default() },
+                ..Default::default()
+            };
+            check_deployment(name, n, bits, &params);
+        }
+    }
+}
+
+#[test]
+fn hat_rf_deploys_losslessly() {
+    // The paper's RF dataset (gas) through the RF trainer at both
+    // hardware precisions.
+    for &bits in &[4u8, 8] {
+        let params = HatParams {
+            deploy_bits: bits,
+            kind: ModelKind::RandomForest,
+            rf: RfParams { n_estimators: 5, max_leaves: 16, ..Default::default() },
+            ..Default::default()
+        };
+        check_deployment("gas", 1200, bits, &params);
+    }
+}
+
+#[test]
+fn ptq_of_high_precision_model_is_measurably_lossy() {
+    // The contrast that motivates HAT: the same architecture trained at
+    // 11 bits and snapped to 4 reports off-grid thresholds, while the
+    // HAT model reports none (asserted above). This is the Fig. 9a
+    // story at test scale.
+    let data = by_name("churn").unwrap().generate_n(2000);
+    let split = data.split(0.8, 0.0, 41);
+    let uncon = gbdt::train(
+        &split.train,
+        &GbdtParams { n_rounds: 10, max_leaves: 32, n_bits: 11, ..Default::default() },
+        None,
+    );
+    let (snapped, report) = requantize(&uncon, 4);
+    assert!(!report.lossless(), "11→4-bit PTQ reported lossless: {report:?}");
+    assert!(report.max_snap_err > 0.0);
+    // The snapped model deploys on the 4-bit grid and its *own* redeploy
+    // is lossless (idempotence of grid alignment).
+    let (_, second) = requantize(&snapped, 4);
+    assert!(second.lossless(), "re-snapping an on-grid model must be exact: {second:?}");
+    let (program, _) = compile_for_deploy(&snapped, 4, &CompileOptions::default()).unwrap();
+    assert_eq!(program.n_bins, 16);
+}
