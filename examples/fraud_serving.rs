@@ -19,6 +19,10 @@
 //! 1024-tree ensemble is partitioned into N shard programs served by a
 //! pool of per-shard workers, and throughput is compared against the same
 //! ensemble on a single worker (§III-D scale-out; ADR-001).
+//!
+//! `--threads N` (default 0 = one per CPU) sets the planned-execution
+//! worker count inside each CamEngine-backed backend (ADR-002). Results
+//! are bit-identical for every value — it is purely a throughput knob.
 
 use std::path::Path;
 use std::time::Instant;
@@ -41,11 +45,16 @@ const N_SHARD_REQUESTS: usize = 2_000;
 fn serve(
     name: &str,
     backend: Box<dyn Backend>,
+    threads: Option<usize>,
     program: &xtime::compiler::CamProgram,
     data: &xtime::data::Dataset,
     table: &mut Table,
 ) {
-    let server = Server::start(backend, BatchPolicy { max_wait_us: 200, max_batch: 0 }, program.n_features);
+    let server = Server::start(
+        backend,
+        BatchPolicy { max_wait_us: 200, max_batch: 0, threads },
+        program.n_features,
+    );
     // Pre-quantize requests so the measured path is submit→reply.
     let bins: Vec<Vec<u16>> =
         (0..N_REQUESTS).map(|i| program.quantizer.bin_row(data.row(i % data.n_rows()))).collect();
@@ -73,7 +82,7 @@ fn serve(
 /// Serve the same request stream through a 1-shard and an N-shard pool of
 /// functional backends and report the scaling, then print the simulated
 /// N-card projection.
-fn shard_demo(n_shards: usize) -> anyhow::Result<()> {
+fn shard_demo(n_shards: usize, threads: Option<usize>) -> anyhow::Result<()> {
     println!("\n=== sharded multi-card serving (1024-tree ensemble, {n_shards} shards) ===");
     // Exact-topology synthetic ensemble: serving scalability depends only
     // on topology, and 1024 trees is the paper-scale regime (Table II).
@@ -102,8 +111,10 @@ fn shard_demo(n_shards: usize) -> anyhow::Result<()> {
     let mut sharded_plan = None;
     for &n in &[1usize, n_shards] {
         let plan = partition(&program, n, &PartitionOptions::default())?;
-        let server =
-            sharded_functional_pool(&plan, BatchPolicy { max_wait_us: 200, max_batch: 64 });
+        let server = sharded_functional_pool(
+            &plan,
+            BatchPolicy { max_wait_us: 200, max_batch: 64, threads },
+        );
         for (b, r) in bins.iter().take(50).zip(&rows) {
             let reply = server.infer_blocking(b.clone());
             assert_eq!(reply.logits, reference.infer_row(&program, r), "shard aggregation drifted");
@@ -165,6 +176,7 @@ fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::new("fraud_serving", "end-to-end serving driver")
         .opt("shards", Some("4"), "shard count for the multi-card demo (≥ 2)")
+        .opt("threads", Some("0"), "planned-execution workers per backend (0 = one per CPU)")
         .parse(&argv)
         .map_err(|e| anyhow::anyhow!(e))?;
     let n_shards = args.get_usize("shards");
@@ -173,6 +185,16 @@ fn main() -> anyhow::Result<()> {
             "--shards must be ≥ 2 (got {n_shards}); the demo compares N shards against 1"
         ));
     }
+    // 0 = auto (one planned worker per CPU); bit-identical either way.
+    let n_threads = args.get_usize("threads");
+    let threads = Some(n_threads);
+    println!(
+        "planned-execution workers per backend: {}",
+        match n_threads {
+            0 => "auto (one per CPU)".to_string(),
+            n => n.to_string(),
+        }
+    );
 
     println!("=== X-TIME end-to-end serving driver (fraud/churn detection) ===\n");
 
@@ -215,11 +237,19 @@ fn main() -> anyhow::Result<()> {
     if artifacts.join("manifest.json").exists() {
         let engine = XlaCamEngine::new(&program, &artifacts, 64)?;
         println!("XLA bucket: {} (batch {})", engine.bucket().file, engine.max_batch());
-        serve("xla-aot (PJRT)", Box::new(XlaBackend { engine }), &program, &data, &mut table);
+        let backend = Box::new(XlaBackend { engine });
+        serve("xla-aot (PJRT)", backend, threads, &program, &data, &mut table);
     } else {
         println!("artifacts missing — run `make artifacts` for the XLA row");
     }
-    serve("cam-functional", Box::new(FunctionalBackend::new(&program)), &program, &data, &mut table);
+    serve(
+        "cam-functional (planned)",
+        Box::new(FunctionalBackend::new(&program)),
+        threads,
+        &program,
+        &data,
+        &mut table,
+    );
 
     // Measured CPU baseline on the same machine (exact tree walk).
     let cpu = cpu_measure(&model, &data, N_REQUESTS);
@@ -241,6 +271,6 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- sharded multi-card scale-out ----------------------------------------
-    shard_demo(n_shards)?;
+    shard_demo(n_shards, threads)?;
     Ok(())
 }

@@ -3,27 +3,63 @@
 //! target of EXPERIMENTS.md §Perf).
 //!
 //! Reports per-batch and per-sample times for:
-//!   * the functional CAM engine — scalar (row-at-a-time) reference path
-//!     vs the batched feature-major interval index (`infer_batch`),
+//!   * the functional CAM engine — scalar (row-at-a-time) reference
+//!     path, the indexed batch path (binary-search interval
+//!     resolution), and the planned path (LUT + arena + query
+//!     blocking) at 1 and N worker threads,
 //!   * the exact CPU tree-walk,
 //!   * the XLA AOT artifact (PJRT CPU, `fast_u8` layout) when built,
 //! plus the end-to-end dynamic-batching server throughput, and a
-//! dedicated scalar-vs-batched table on the 1024-tree acceptance model
-//! (record its rows/s in CHANGES.md when the hot path changes).
+//! dedicated scalar/indexed/planned(1T)/planned(NT) table on the
+//! 1024-tree acceptance model whose rows/s are also written to
+//! `BENCH_hotpath.json` at the repo root (the perf trajectory CI
+//! uploads; record headline numbers in CHANGES.md too).
+//!
+//! This bench doubles as the CI agreement gate: before timing anything
+//! it asserts the planned path (1T and NT) is bit-identical to the
+//! scalar path on the smoke model and exits non-zero otherwise.
 //!
 //! Run: `cargo bench --bench hotpath` (XTIME_FAST=1 shrinks for CI)
 
 use std::path::Path;
-use xtime::bench_support::{cached_model, fast_mode, random_ensemble, random_query_bins};
+use xtime::bench_support::{
+    cached_model, fast_mode, random_ensemble, random_query_bins, write_bench_json,
+};
 use xtime::compiler::{compile, CamEngine, CompileOptions};
 use xtime::coordinator::{BatchPolicy, Server, XlaBackend};
 use xtime::data::{by_name, Task};
 use xtime::runtime::XlaCamEngine;
 use xtime::util::bench::{rate, t, time_fn, times, Table};
+use xtime::util::Json;
+
+/// CI gate: planned (1T and NT) must reproduce the scalar path bit for
+/// bit — partials, logits and `SearchStats` — on `batch`. Panics (→
+/// non-zero bench exit, failing the CI job) on any divergence.
+fn assert_planned_agrees(engine: &CamEngine, batch: &[Vec<u16>], nt: usize, label: &str) {
+    let mut want_stats = (0usize, 0usize);
+    let mut want: Vec<Vec<f64>> = Vec::with_capacity(batch.len());
+    for bins in batch {
+        let (p, s) = engine.partials_bins_stats(bins);
+        want_stats.0 += s.charged_rows;
+        want_stats.1 += s.matches;
+        want.push(p);
+    }
+    for threads in [1, nt] {
+        let (got, stats) = engine.partials_planned_stats(batch, threads);
+        assert_eq!(got, want, "{label}: planned({threads}T) partials diverged from scalar");
+        assert_eq!(
+            (stats.charged_rows, stats.matches),
+            want_stats,
+            "{label}: planned({threads}T) SearchStats diverged from scalar"
+        );
+    }
+    println!("planned/scalar agreement on {label}: ✓ (1T and {nt}T)");
+}
 
 fn main() {
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let fast = fast_mode();
+    let nt = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(2, 8);
     // 64 trees × ~130 leaves ≈ 8k CAM rows → fits the n16384 bucket.
     let model = cached_model("churn", 8, 1, Some(if fast { 16 } else { 64 }));
     let program = compile(&model, &CompileOptions::default()).unwrap();
@@ -73,22 +109,42 @@ fn main() {
         rate(churn_scalar_rate, "S"),
     ]);
 
-    // Functional CAM engine — batched interval index.
+    // Functional CAM engine — indexed batch path (binary-search interval
+    // resolution over the plan arena).
     let batch_rows = if fast { 64 } else { 256 };
     let batch: Vec<Vec<u16>> = bins.iter().take(batch_rows).cloned().collect();
+
+    // CI agreement gate on the smoke model, before anything is timed.
+    let smoke: Vec<Vec<u16>> = batch.iter().take(32).cloned().collect();
+    assert_planned_agrees(&cam, &smoke, nt, "churn smoke model");
+
     let s = time_fn(1, 5, || {
         std::hint::black_box(cam.infer_batch(&batch));
     });
     let churn_batch_rate = batch_rows as f64 / s.median;
     table.row(&[
-        "cam-functional (batched)".into(),
+        "cam-functional (indexed)".into(),
         format!("{batch_rows}"),
         t(s.median),
         t(s.median / batch_rows as f64),
         rate(churn_batch_rate, "S"),
     ]);
+
+    // Planned path: LUT + arena + query blocking, 1 and N threads.
+    for threads in [1usize, nt] {
+        let s = time_fn(1, 5, || {
+            std::hint::black_box(cam.infer_planned(&batch, threads));
+        });
+        table.row(&[
+            format!("cam-functional (planned, {threads}T)"),
+            format!("{batch_rows}"),
+            t(s.median),
+            t(s.median / batch_rows as f64),
+            rate(batch_rows as f64 / s.median, "S"),
+        ]);
+    }
     println!(
-        "batched/scalar on churn: {}",
+        "indexed/scalar on churn: {}",
         times(churn_batch_rate / churn_scalar_rate)
     );
 
@@ -151,9 +207,9 @@ fn main() {
 
     table.print("serving hot path on this machine");
 
-    // The batched-vs-scalar lever at acceptance scale: the same
-    // 1024-tree topology the sharding tests and shard_scaling bench use.
-    // This is the number to record in CHANGES.md.
+    // The execution-path lever at acceptance scale: the same 1024-tree
+    // topology the sharding tests and shard_scaling bench use. These
+    // rows/s go to BENCH_hotpath.json (and CHANGES.md headlines).
     let n_trees = 1024;
     let big = random_ensemble(n_trees, 4, 32, Task::Binary, 7);
     let big_prog = compile(&big, &CompileOptions::default()).expect("compile 1024-tree model");
@@ -161,35 +217,94 @@ fn main() {
     let n_queries = if fast { 128 } else { 512 };
     let qbins = random_query_bins(&big_prog, n_queries, 0xB16);
 
+    // Agreement gate at acceptance scale too (small slice — the scalar
+    // path is slow).
+    let gate: Vec<Vec<u16>> = qbins.iter().take(8).cloned().collect();
+    assert_planned_agrees(&engine, &gate, nt, "1024-tree model");
+
     let big_scalar_rows = if fast { 8 } else { 32 };
     let s_scalar = time_fn(1, 5, || {
         for b in qbins.iter().take(big_scalar_rows) {
             std::hint::black_box(engine.infer_bins(b));
         }
     });
-    let s_batch = time_fn(1, 5, || {
+    let s_index = time_fn(1, 5, || {
         std::hint::black_box(engine.infer_batch(&qbins));
     });
+    let s_planned1 = time_fn(1, 5, || {
+        std::hint::black_box(engine.infer_planned(&qbins, 1));
+    });
+    let s_plannedn = time_fn(1, 5, || {
+        std::hint::black_box(engine.infer_planned(&qbins, nt));
+    });
     let scalar_rate = big_scalar_rows as f64 / s_scalar.median;
-    let batch_rate = n_queries as f64 / s_batch.median;
+    let index_rate = n_queries as f64 / s_index.median;
+    let planned1_rate = n_queries as f64 / s_planned1.median;
+    let plannedn_rate = n_queries as f64 / s_plannedn.median;
 
     let mut big_table = Table::new(&["path", "batch", "per sample", "rows/s", "speedup"]);
-    big_table.row(&[
+    let mut push = |name: String, batch: String, sec_per: f64, r: f64| {
+        big_table.row(&[name, batch, t(sec_per), rate(r, "row"), times(r / scalar_rate)]);
+    };
+    push(
         "scalar (per-cell scan)".into(),
         "1".into(),
-        t(s_scalar.median / big_scalar_rows as f64),
-        rate(scalar_rate, "row"),
-        times(1.0),
-    ]);
-    big_table.row(&[
-        "batched (interval index)".into(),
+        s_scalar.median / big_scalar_rows as f64,
+        scalar_rate,
+    );
+    push(
+        "indexed (binary search)".into(),
         format!("{n_queries}"),
-        t(s_batch.median / n_queries as f64),
-        rate(batch_rate, "row"),
-        times(batch_rate / scalar_rate),
-    ]);
+        s_index.median / n_queries as f64,
+        index_rate,
+    );
+    push(
+        "planned (LUT+arena, 1T)".into(),
+        format!("{n_queries}"),
+        s_planned1.median / n_queries as f64,
+        planned1_rate,
+    );
+    push(
+        format!("planned (LUT+arena, {nt}T)"),
+        format!("{n_queries}"),
+        s_plannedn.median / n_queries as f64,
+        plannedn_rate,
+    );
     big_table.print(&format!(
-        "functional engine scalar vs batched — {n_trees}-tree model, {} CAM rows",
+        "functional engine scalar vs indexed vs planned — {n_trees}-tree model, {} CAM rows",
         big_prog.total_rows()
     ));
+
+    // Machine-readable trajectory datapoint at the repo root.
+    let mut paths = Json::obj();
+    let path_row = |rate_rps: f64, threads: usize| {
+        let mut o = Json::obj();
+        o.set("rows_per_s", Json::Num(rate_rps)).set("threads", Json::Num(threads as f64));
+        o
+    };
+    paths
+        .set("scalar", path_row(scalar_rate, 1))
+        .set("indexed", path_row(index_rate, 1))
+        .set("planned_1t", path_row(planned1_rate, 1))
+        .set("planned_nt", path_row(plannedn_rate, nt));
+    let mut model = Json::obj();
+    model
+        .set("trees", Json::Num(n_trees as f64))
+        .set("cam_rows", Json::Num(big_prog.total_rows() as f64))
+        .set("features", Json::Num(big_prog.n_features as f64))
+        .set("cores", Json::Num(engine.n_cores() as f64));
+    let mut speedup = Json::obj();
+    speedup
+        .set("indexed_vs_scalar", Json::Num(index_rate / scalar_rate))
+        .set("planned_1t_vs_scalar", Json::Num(planned1_rate / scalar_rate))
+        .set("planned_nt_vs_scalar", Json::Num(plannedn_rate / scalar_rate))
+        .set("planned_nt_vs_indexed", Json::Num(plannedn_rate / index_rate));
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("hotpath".into()))
+        .set("fast_mode", Json::Bool(fast))
+        .set("n_queries", Json::Num(n_queries as f64))
+        .set("model", model)
+        .set("paths", paths)
+        .set("speedup", speedup);
+    write_bench_json("hotpath", &j);
 }

@@ -17,13 +17,14 @@
 //! Run: `cargo bench --bench shard_scaling` (XTIME_FAST=1 to shrink)
 
 use xtime::bench_support::{
-    fast_mode, random_ensemble, random_query_bins, sharded_functional_pool,
+    fast_mode, random_ensemble, random_query_bins, sharded_functional_pool, write_bench_json,
 };
 use xtime::compiler::{compile, partition, CompileOptions, PartitionOptions};
 use xtime::coordinator::BatchPolicy;
 use xtime::data::Task;
 use xtime::sim::{CardConfig, ChipConfig, SimCardBackend};
 use xtime::util::bench::{rate, times, Table};
+use xtime::util::Json;
 
 fn main() {
     let n_trees = 1024;
@@ -51,12 +52,15 @@ fn main() {
         "sim N-card",
     ]);
     let mut base_tput = 0.0f64;
+    let mut json_points: Vec<Json> = Vec::new();
     for &n in shard_counts {
         let plan = partition(&program, n, &PartitionOptions::default()).expect("partition");
 
         // Wall-clock serving throughput through the worker pool.
-        let server =
-            sharded_functional_pool(&plan, BatchPolicy { max_wait_us: 200, max_batch: 64 });
+        let server = sharded_functional_pool(
+            &plan,
+            BatchPolicy { max_wait_us: 200, max_batch: 64, threads: None },
+        );
         let t0 = std::time::Instant::now();
         let pending: Vec<_> = bins.iter().map(|b| server.submit(b.clone())).collect();
         for rx in pending {
@@ -95,8 +99,31 @@ fn main() {
             format!("{max_busy_ms:.0}"),
             rate(sim_agg, "req"),
         ]);
+        let mut point = Json::obj();
+        point
+            .set("shards", Json::Num(n as f64))
+            .set("throughput_rps", Json::Num(tput))
+            .set("speedup_vs_1", Json::Num(tput / base_tput))
+            .set("mean_batch", Json::Num(stats.mean_batch))
+            .set("max_shard_busy_ms", Json::Num(max_busy_ms))
+            .set("sim_card_rps", Json::Num(sim_agg));
+        json_points.push(point);
     }
     table.print(&format!("sharded serving scaling — {n_trees}-tree ensemble"));
+
+    // Machine-readable trajectory datapoint at the repo root.
+    let mut model = Json::obj();
+    model
+        .set("trees", Json::Num(n_trees as f64))
+        .set("cam_rows", Json::Num(program.total_rows() as f64))
+        .set("cores", Json::Num(program.cores_per_replica() as f64));
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("shard_scaling".into()))
+        .set("fast_mode", Json::Bool(fast_mode()))
+        .set("n_requests", Json::Num(n_requests as f64))
+        .set("model", model)
+        .set("points", Json::Arr(json_points));
+    write_bench_json("shard_scaling", &j);
     println!(
         "shape: wall throughput grows with shards (per-shard work = rows/N);\n\
          `sim N-card` is the slowest simulated card's rate — the pool's\n\

@@ -7,7 +7,7 @@ use crate::compiler::{CamProgram, ShardPlan};
 use crate::coordinator::{Backend, BatchPolicy, FunctionalBackend, Server};
 use crate::data::{by_name, Dataset, FeatureQuantizer, Task};
 use crate::trees::{paper_model, train_paper_model, Ensemble, Node, Tree};
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 use std::path::PathBuf;
 
 /// `XTIME_FAST=1` shrinks bench workloads ~8× (CI-friendly smoke runs).
@@ -22,6 +22,18 @@ pub fn tree_scale() -> f64 {
     } else {
         1.0
     }
+}
+
+/// Write `BENCH_<name>.json` at the repo root: the machine-readable perf
+/// trajectory next to `CHANGES.md`. Benches call this so every run
+/// leaves a datapoint CI can upload as an artifact; keys should be
+/// stable across PRs so the files diff meaningfully.
+pub fn write_bench_json(name: &str, json: &Json) -> PathBuf {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, format!("{json}\n"))
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+    path
 }
 
 fn cache_dir() -> PathBuf {

@@ -22,9 +22,14 @@ use super::cell::{MacroCell, MACRO_BINS};
 
 /// DAC input conversion: query levels saturate at the top 8-bit level.
 /// (A bare `as u8` cast here once wrapped level 256 to level 0 and
-/// silently matched low windows instead of top windows.)
+/// silently matched low windows instead of top windows.) Public because
+/// the functional engine's bin→level scaling shares it
+/// (`CamEngine::scale_bin`): every path that turns a quantizer bin or a
+/// scaled query into a DAC level must use this one conversion so the
+/// scalar, indexed and planned paths stay mutually equivalent on every
+/// input, including out-of-range bins.
 #[inline]
-fn dac_level(q: u16) -> u16 {
+pub fn dac_level(q: u16) -> u16 {
     q.min(MACRO_BINS - 1)
 }
 

@@ -7,7 +7,9 @@ pub mod array;
 pub mod cell;
 pub mod defects;
 
-pub use array::{CamArray, CoreCam, CoreSearch, ARRAY_COLS, ARRAY_ROWS, CORE_COLS, CORE_ROWS};
+pub use array::{
+    dac_level, CamArray, CoreCam, CoreSearch, ARRAY_COLS, ARRAY_ROWS, CORE_COLS, CORE_ROWS,
+};
 pub use cell::{Cell4, MacroCell, SubCell, MACRO_BINS, SUB_LEVELS};
 pub use defects::{
     inject_memristor_defects, inject_memristor_defects_tracked, DacErrors, DefectSpec,

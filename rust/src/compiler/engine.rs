@@ -8,58 +8,83 @@
 //! against; absent defects it must agree with [`Ensemble::logits`]
 //! (`trees` module) exactly up to summation order.
 //!
-//! Two query paths share the same semantics:
+//! Three query paths share the same semantics:
 //!
 //! * the **scalar path** ([`CamEngine::partials_bins`]) walks every CAM
 //!   cell per query — the literal hardware model, retained as the
 //!   defect-injection reference;
-//! * the **batched path** ([`CamEngine::partials_batch`]) answers whole
-//!   batches through a per-core, feature-major interval index built at
-//!   engine construction: each feature column's distinct bound levels
-//!   partition the 8-bit query space into elementary intervals whose
-//!   matching row set is precomputed as u64 bitset words, so a query
-//!   costs one binary search + a word-wide AND per feature instead of a
-//!   per-cell scan. The batched path is bit-identical to the scalar path
-//!   (same f64 accumulation order, same MMR truncation, same
-//!   [`SearchStats`] counts) — property-tested in
-//!   `rust/tests/batch_agreement.rs`.
+//! * the **indexed path** ([`CamEngine::partials_batch`]) answers whole
+//!   batches through the per-core [`CorePlan`]'s interval bounds: each
+//!   feature column's distinct bound levels partition the 8-bit query
+//!   space into elementary intervals whose matching row set is
+//!   precomputed as u64 bitset words, so a query costs one binary search
+//!   + a word-wide AND per feature instead of a per-cell scan;
+//! * the **planned path** ([`CamEngine::partials_planned`]) executes the
+//!   same [`CorePlan`] flat-out: the binary search becomes one load from
+//!   a per-feature 256-entry level→interval LUT (the DAC space is
+//!   8-bit), interval bitsets live in a single per-core arena (one
+//!   allocation, offset-addressed, cache-local), traversal is
+//!   query-blocked (a block of rows ANDs against the same feature's
+//!   match words before moving on), and cores can be partitioned across
+//!   a deterministic thread pool.
+//!
+//! All three are bit-identical — same f64 accumulation order, same MMR
+//! truncation, same [`SearchStats`] counts — for every thread count
+//! (property-tested in `rust/tests/batch_agreement.rs`; determinism
+//! contract in `docs/adr/002-planned-execution.md`).
 
 use super::program::{compile, CamProgram, CompileError, CompileOptions};
 use crate::cam::{
-    inject_memristor_defects_tracked, CoreCam, DacErrors, DefectSpec, MacroCell, ARRAY_COLS,
+    dac_level, inject_memristor_defects_tracked, CoreCam, DacErrors, DefectSpec, MacroCell,
+    ARRAY_COLS, MACRO_BINS,
 };
 use crate::data::{Dataset, Task};
 use crate::trees::hat::{defect_aware_retrain, HatParams, RetrainReport};
 use crate::trees::{metrics, Ensemble};
 use crate::util::Rng;
 
-/// Interval index of one feature column: the column's distinct bound
-/// levels split the query space into elementary intervals on which the
-/// set of matching rows is constant.
-struct FeatureIndex {
-    /// Ascending distinct non-zero bound levels. Elementary interval `i`
-    /// spans `[bounds[i-1], bounds[i])`; interval 0 starts at level 0 and
-    /// the last interval is unbounded above.
+/// Rows the planned path traverses together before moving to the next
+/// feature: all rows of a block reuse the feature's (cache-hot) interval
+/// slices in the arena.
+const QUERY_BLOCK: usize = 8;
+
+/// Per-feature view into a [`CorePlan`]: the ascending distinct non-zero
+/// bound levels (the indexed path's binary-search key; elementary
+/// interval `i` spans `[bounds[i-1], bounds[i])`, interval 0 starts at
+/// level 0 and the last interval is unbounded above) plus the word
+/// offset of this feature's interval slices in the core's shared arena.
+struct PlanFeature {
     bounds: Vec<u16>,
-    /// `bounds.len() + 1` row bitsets of `n_words` words each,
-    /// concatenated in interval order.
-    words: Vec<u64>,
+    /// Word offset of interval 0 in [`CorePlan::arena`].
+    off: usize,
 }
 
-/// Feature-major interval index over one core's programmed (possibly
-/// defect-perturbed) cells — the batched query path.
-struct BatchIndex {
+/// Compiled execution plan of one core's programmed (possibly
+/// defect-perturbed) cells — the flat data structure both batched query
+/// paths run on:
+///
+/// * `lut` — per feature, a 256-entry level→interval-id table (one entry
+///   per 8-bit DAC level), making interval resolution a single array
+///   load on the planned path;
+/// * `arena` — one contiguous allocation holding every feature's
+///   interval row-bitsets back to back (`PlanFeature::off` addresses a
+///   feature's slice), replacing per-feature `Vec<u64>`s.
+struct CorePlan {
     n_words: usize,
-    features: Vec<FeatureIndex>,
+    features: Vec<PlanFeature>,
+    /// Flattened `[n_features × 256]` level→interval-id lookup table.
+    lut: Vec<u16>,
+    /// All interval bitsets of all features, `n_words` words each.
+    arena: Vec<u64>,
     /// All-rows mask (the last word is partially filled).
     full: Vec<u64>,
 }
 
-impl BatchIndex {
+impl CorePlan {
     /// Build from a row-major `[n_rows × n_features]` cell matrix. Must
     /// be built *after* defect injection so batched queries see the same
     /// programmed levels as the scalar path.
-    fn build(n_rows: usize, n_features: usize, cells: &[MacroCell]) -> BatchIndex {
+    fn build(n_rows: usize, n_features: usize, cells: &[MacroCell]) -> CorePlan {
         debug_assert_eq!(cells.len(), n_rows * n_features);
         let n_words = n_rows.div_ceil(64).max(1);
         let mut full = vec![u64::MAX; n_words];
@@ -70,6 +95,8 @@ impl BatchIndex {
             full[n_words - 1] = u64::MAX >> spare;
         }
         let mut features = Vec::with_capacity(n_features);
+        let mut lut = vec![0u16; n_features * MACRO_BINS as usize];
+        let mut arena: Vec<u64> = Vec::new();
         for f in 0..n_features {
             let mut bounds: Vec<u16> = Vec::with_capacity(2 * n_rows);
             for r in 0..n_rows {
@@ -85,34 +112,60 @@ impl BatchIndex {
             // Within an elementary interval no bound level is crossed, so
             // row membership is constant; evaluate it once at the
             // interval's lower endpoint.
-            let mut words = vec![0u64; (bounds.len() + 1) * n_words];
-            for (i, w) in words.chunks_mut(n_words).enumerate() {
+            let off = arena.len();
+            arena.resize(off + (bounds.len() + 1) * n_words, 0);
+            for i in 0..=bounds.len() {
                 let rep = if i == 0 { 0 } else { bounds[i - 1] };
+                let w = &mut arena[off + i * n_words..off + (i + 1) * n_words];
                 for r in 0..n_rows {
                     if cells[r * n_features + f].matches_ideal(rep) {
                         w[r / 64] |= 1u64 << (r % 64);
                     }
                 }
             }
-            features.push(FeatureIndex { bounds, words });
+            // LUT sweep: interval id = number of bounds ≤ level, i.e. the
+            // same value `partition_point` computes, tabulated for every
+            // 8-bit DAC level in one O(256 + |bounds|) pass. Bounds above
+            // 255 (a `hi` of 256) are never ≤ a DAC level and simply stay
+            // ahead of the sweep.
+            let table = &mut lut[f * MACRO_BINS as usize..(f + 1) * MACRO_BINS as usize];
+            let mut bi = 0usize;
+            for (level, slot) in table.iter_mut().enumerate() {
+                while bi < bounds.len() && (bounds[bi] as usize) <= level {
+                    bi += 1;
+                }
+                *slot = bi as u16;
+            }
+            features.push(PlanFeature { bounds, off });
         }
-        BatchIndex { n_words, features, full }
+        CorePlan { n_words, features, lut, arena, full }
     }
 
-    /// Bitset of rows whose window on feature `f` contains query level `q`.
+    /// Planned-path interval resolution: one LUT load. `q` must already
+    /// be a saturated 8-bit DAC level (guaranteed by [`dac_level`] /
+    /// [`DacErrors::apply`], both of which clamp to 255).
     #[inline]
     fn rows_matching(&self, f: usize, q: u16) -> &[u64] {
+        debug_assert!(q < MACRO_BINS, "query level {q} escaped DAC saturation");
+        let iv = self.lut[f * MACRO_BINS as usize + q as usize] as usize;
+        &self.arena[self.features[f].off + iv * self.n_words..][..self.n_words]
+    }
+
+    /// Indexed-path interval resolution: binary search over the bound
+    /// levels (kept as the planned path's measured baseline).
+    #[inline]
+    fn rows_matching_indexed(&self, f: usize, q: u16) -> &[u64] {
         let fi = &self.features[f];
         let iv = fi.bounds.partition_point(|&b| b <= q);
-        &fi.words[iv * self.n_words..(iv + 1) * self.n_words]
+        &self.arena[fi.off + iv * self.n_words..][..self.n_words]
     }
 }
 
 /// Per-core compiled search state.
 struct EngineCore {
     cam: CoreCam,
-    /// Batched-path index over the same programmed cells as `cam`.
-    index: BatchIndex,
+    /// Execution plan over the same programmed cells as `cam`.
+    plan: CorePlan,
     /// Leaf payloads per row.
     leaf: Vec<f32>,
     class: Vec<u16>,
@@ -167,10 +220,10 @@ impl CamEngine {
             let n_rows = c.rows.len();
             let mut crng = rng.fork(ci as u64);
             let (cells, _, dac) = core_defect_draw(program, c, defects, scale, &mut crng);
-            let index = BatchIndex::build(n_rows, program.n_features, &cells);
+            let plan = CorePlan::build(n_rows, program.n_features, &cells);
             cores.push(EngineCore {
                 cam: CoreCam::from_cells(n_rows, program.n_features, cells),
-                index,
+                plan,
                 leaf: c.rows.iter().map(|r| r.leaf).collect(),
                 class: c.rows.iter().map(|r| r.class).collect(),
                 n_trees_core: c.n_trees_core(),
@@ -189,6 +242,34 @@ impl CamEngine {
 
     pub fn n_features(&self) -> usize {
         self.n_features
+    }
+
+    /// Cores in the compiled program (one [`CorePlan`] each).
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Quantizer-bin → 8-bit DAC level: the DAC's full-scale mapping,
+    /// saturating at the top level through the same [`dac_level`]
+    /// conversion the CAM search paths use. A raw `b * scale` here once
+    /// wrapped (u16 overflow) for out-of-range bins — the same bug class
+    /// as the PR 2 `search_two_cycle` cast — so all query paths now
+    /// share this saturating conversion and stay mutually equivalent on
+    /// every input, including bins past `n_bins`.
+    #[inline]
+    fn scale_bin(&self, b: u16) -> u16 {
+        dac_level(b.saturating_mul(self.scale))
+    }
+
+    /// Scale a whole batch into DAC level space (arity-checked).
+    fn scale_batch(&self, batch: &[Vec<u16>]) -> Vec<Vec<u16>> {
+        batch
+            .iter()
+            .map(|bins| {
+                assert_eq!(bins.len(), self.n_features, "feature arity mismatch");
+                bins.iter().map(|&b| self.scale_bin(b)).collect()
+            })
+            .collect()
     }
 
     /// Inference over quantized bins; returns logits per output column.
@@ -210,11 +291,15 @@ impl CamEngine {
         self.partials_bins_stats(bins).0
     }
 
-    fn partials_bins_stats(&self, bins: &[u16]) -> (Vec<f64>, SearchStats) {
+    /// Scalar partial sums + search statistics in one pass (the
+    /// agreement gates compare both against the batch paths without
+    /// running the per-cell scan twice).
+    pub fn partials_bins_stats(&self, bins: &[u16]) -> (Vec<f64>, SearchStats) {
         assert_eq!(bins.len(), self.n_features, "feature arity mismatch");
         // Queries are scaled into the same 8-bit level space as the
-        // programmed bounds, modelling the DAC's full-scale mapping.
-        let scaled: Vec<u16> = bins.iter().map(|&b| b * self.scale).collect();
+        // programmed bounds, modelling the DAC's full-scale mapping
+        // (saturating — see `scale_bin`).
+        let scaled: Vec<u16> = bins.iter().map(|&b| self.scale_bin(b)).collect();
         let mut acc = vec![0f64; self.n_outputs];
         let mut stats = SearchStats::default();
         for core in &self.cores {
@@ -260,14 +345,16 @@ impl CamEngine {
         self.partials_batch_stats(batch).0
     }
 
-    /// The batched hot path: per core, intersect per-feature match sets
-    /// from the interval index as u64 bitset words instead of scanning
-    /// every cell per row. The queued-segment gating of
-    /// [`CoreCam::search`] is reproduced by snapshotting the active-set
-    /// population at each segment boundary (`charged_rows`), and MMR
-    /// consumes set bits in ascending row order under the same
-    /// `n_trees_core` budget — so partials, logits and [`SearchStats`]
-    /// (summed over the batch) are bit-identical to the scalar path.
+    /// The indexed batch path: per core, intersect per-feature match
+    /// sets from the plan's interval arena as u64 bitset words instead
+    /// of scanning every cell per row (interval resolution by binary
+    /// search — the planned path's measured baseline). The
+    /// queued-segment gating of [`CoreCam::search`] is reproduced by
+    /// snapshotting the active-set population at each segment boundary
+    /// (`charged_rows`), and MMR consumes set bits in ascending row
+    /// order under the same `n_trees_core` budget — so partials, logits
+    /// and [`SearchStats`] (summed over the batch) are bit-identical to
+    /// the scalar path.
     pub fn partials_batch_stats(&self, batch: &[Vec<u16>]) -> (Vec<Vec<f64>>, SearchStats) {
         let mut acc = vec![vec![0f64; self.n_outputs]; batch.len()];
         let mut stats = SearchStats::default();
@@ -275,23 +362,17 @@ impl CamEngine {
             return (acc, stats);
         }
         // Same DAC full-scale mapping as the scalar path.
-        let scaled: Vec<Vec<u16>> = batch
-            .iter()
-            .map(|bins| {
-                assert_eq!(bins.len(), self.n_features, "feature arity mismatch");
-                bins.iter().map(|&b| b * self.scale).collect()
-            })
-            .collect();
+        let scaled = self.scale_batch(batch);
         let n_segments = self.n_features.div_ceil(ARRAY_COLS).max(1);
         let mut active: Vec<u64> = Vec::new();
-        // Cores outer, batch rows inner: one core's index stays cache-hot
+        // Cores outer, batch rows inner: one core's plan stays cache-hot
         // across the whole batch, and each row still accumulates its
         // per-core contributions in core order (the scalar f64 order).
         for core in &self.cores {
-            let idx = &core.index;
+            let plan = &core.plan;
             for (q, row_acc) in scaled.iter().zip(acc.iter_mut()) {
                 active.clear();
-                active.extend_from_slice(&idx.full);
+                active.extend_from_slice(&plan.full);
                 for s in 0..n_segments {
                     // Queued gating: segment s charges the rows still
                     // active after the previous segments' features.
@@ -300,7 +381,7 @@ impl CamEngine {
                     let c0 = s * ARRAY_COLS;
                     let c1 = ((s + 1) * ARRAY_COLS).min(self.n_features);
                     for f in c0..c1 {
-                        let m = idx.rows_matching(f, core.dac.apply(f, q[f]));
+                        let m = plan.rows_matching_indexed(f, core.dac.apply(f, q[f]));
                         for (a, &w) in active.iter_mut().zip(m) {
                             *a &= w;
                         }
@@ -331,6 +412,111 @@ impl CamEngine {
         (acc, stats)
     }
 
+    /// Batched inference through the planned path; logits per row.
+    /// Bit-identical to [`CamEngine::infer_batch`] (and hence to the
+    /// scalar path) for every `threads` value.
+    pub fn infer_planned(&self, batch: &[Vec<u16>], threads: usize) -> Vec<Vec<f32>> {
+        self.infer_planned_stats(batch, threads).0
+    }
+
+    /// Planned inference + search statistics summed over the batch.
+    pub fn infer_planned_stats(
+        &self,
+        batch: &[Vec<u16>],
+        threads: usize,
+    ) -> (Vec<Vec<f32>>, SearchStats) {
+        let (accs, stats) = self.partials_planned_stats(batch, threads);
+        let logits = accs.iter().map(|acc| apply_base(acc, &self.base_score)).collect();
+        (logits, stats)
+    }
+
+    /// Planned base-free partial sums — the planned form of
+    /// [`CamEngine::partials_batch`], bit-identical per row.
+    pub fn partials_planned(&self, batch: &[Vec<u16>], threads: usize) -> Vec<Vec<f64>> {
+        self.partials_planned_stats(batch, threads).0
+    }
+
+    /// The planned hot path: LUT interval resolution + arena bitsets +
+    /// query-blocked traversal, with cores partitioned across a
+    /// `std::thread::scope` pool (`threads`; 0 = one worker per
+    /// available CPU, capped at the core count).
+    ///
+    /// **Determinism contract** (docs/adr/002-planned-execution.md):
+    /// each worker owns a contiguous, ascending range of cores and
+    /// records every MMR hit as a `(class, leaf)` pair per batch row in
+    /// (core, ascending-row) order; the merge then replays those adds
+    /// worker by worker in ascending core order. The resulting f64 add
+    /// chain per row is *exactly* the scalar path's interleaved
+    /// accumulation, so partials, logits and [`SearchStats`] are
+    /// bit-identical for every thread count. (Summing per-worker f64
+    /// subtotals instead would re-associate the chain and drift.)
+    pub fn partials_planned_stats(
+        &self,
+        batch: &[Vec<u16>],
+        threads: usize,
+    ) -> (Vec<Vec<f64>>, SearchStats) {
+        let mut acc = vec![vec![0f64; self.n_outputs]; batch.len()];
+        let mut stats = SearchStats::default();
+        if batch.is_empty() || self.cores.is_empty() {
+            return (acc, stats);
+        }
+        let scaled = self.scale_batch(batch);
+        let t = self.effective_threads(threads);
+        if t <= 1 {
+            // Single worker: accumulate in place — the emit order is the
+            // scalar chain already, so no hit buffering is needed.
+            execute_planned(&self.cores, self.n_features, &scaled, &mut stats, |row, c, l| {
+                acc[row][c as usize] += l as f64;
+            });
+            return (acc, stats);
+        }
+        let chunk = self.cores.len().div_ceil(t);
+        let n_features = self.n_features;
+        let results: Vec<(MatchHits, SearchStats)> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .cores
+                .chunks(chunk)
+                .map(|cores| {
+                    let scaled = &scaled;
+                    s.spawn(move || {
+                        let mut hits: MatchHits = vec![Vec::new(); scaled.len()];
+                        let mut st = SearchStats::default();
+                        execute_planned(cores, n_features, scaled, &mut st, |row, c, l| {
+                            hits[row].push((c, l));
+                        });
+                        (hits, st)
+                    })
+                })
+                .collect();
+            // Join in spawn order = ascending core order.
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("planned execution worker panicked"))
+                .collect()
+        });
+        for (hits, st) in results {
+            stats.charged_rows += st.charged_rows;
+            stats.matches += st.matches;
+            for (row_acc, row_hits) in acc.iter_mut().zip(hits) {
+                for (class, leaf) in row_hits {
+                    row_acc[class as usize] += leaf as f64;
+                }
+            }
+        }
+        (acc, stats)
+    }
+
+    /// Resolve the `threads` knob: 0 = available parallelism, always at
+    /// least 1 and never more workers than cores.
+    fn effective_threads(&self, threads: usize) -> usize {
+        let t = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        t.clamp(1, self.cores.len().max(1))
+    }
+
     /// Quantize a raw feature row with the program's quantizer, then infer.
     pub fn infer_row(&self, program: &CamProgram, row: &[f32]) -> Vec<f32> {
         let bins = program.quantizer.bin_row(row);
@@ -358,6 +544,107 @@ impl CamEngine {
     pub fn predict(&self, program: &CamProgram, row: &[f32]) -> f32 {
         let l = self.infer_row(program, row);
         self.decide(&l)
+    }
+}
+
+/// One worker's MMR output: for each batch row, the ordered `(class,
+/// leaf)` add chain its core range contributes. Kept as raw adds — not
+/// f64 subtotals — so the merge can replay the scalar path's exact
+/// accumulation order (f64 addition is not associative).
+type MatchHits = Vec<Vec<(u16, f32)>>;
+
+/// Execute the planned path over a contiguous core range: per core,
+/// query-blocked traversal of the [`CorePlan`] (LUT interval resolution,
+/// arena bitsets), queued-segment charge accounting, and MMR hit
+/// extraction in ascending row order. `scaled` is the batch in DAC level
+/// space (every level ≤ 255). Each MMR hit is handed to `emit(row,
+/// class, leaf)` in the scalar path's exact order — the single-worker
+/// path accumulates f64 directly, the threaded path buffers
+/// [`MatchHits`] for the ordered merge.
+fn execute_planned<F: FnMut(usize, u16, f32)>(
+    cores: &[EngineCore],
+    n_features: usize,
+    scaled: &[Vec<u16>],
+    stats: &mut SearchStats,
+    mut emit: F,
+) {
+    let n_segments = n_features.div_ceil(ARRAY_COLS).max(1);
+    // One active-set arena for the whole block (SoA: query-major rows of
+    // `n_words` words), reused across blocks and cores.
+    let mut active: Vec<u64> = Vec::new();
+    let mut alive = [false; QUERY_BLOCK];
+    for core in cores {
+        let plan = &core.plan;
+        let nw = plan.n_words;
+        let core_live = plan.full.iter().any(|&w| w != 0);
+        for (b, block) in scaled.chunks(QUERY_BLOCK).enumerate() {
+            let base = b * QUERY_BLOCK;
+            let bs = block.len();
+            active.clear();
+            for _ in 0..bs {
+                active.extend_from_slice(&plan.full);
+            }
+            alive[..bs].fill(core_live);
+            for s in 0..n_segments {
+                // Queued gating: segment s charges the rows still active
+                // after the previous segments' features; a query whose
+                // active set already drained charges popcount(∅) = 0 and
+                // is skipped outright (the empty-segment short-circuit).
+                for q in 0..bs {
+                    if alive[q] {
+                        stats.charged_rows += active[q * nw..(q + 1) * nw]
+                            .iter()
+                            .map(|w| w.count_ones() as usize)
+                            .sum::<usize>();
+                    }
+                }
+                let c0 = s * ARRAY_COLS;
+                let c1 = ((s + 1) * ARRAY_COLS).min(n_features);
+                for f in c0..c1 {
+                    // Blocked traversal: every live query in the block
+                    // ANDs against this feature's (cache-hot) interval
+                    // slices before the walk moves to the next feature.
+                    for q in 0..bs {
+                        if !alive[q] {
+                            continue;
+                        }
+                        let m = plan.rows_matching(f, core.dac.apply(f, block[q][f]));
+                        for (a, &w) in active[q * nw..(q + 1) * nw].iter_mut().zip(m) {
+                            *a &= w;
+                        }
+                    }
+                }
+                let mut any = false;
+                for q in 0..bs {
+                    if alive[q] {
+                        alive[q] = active[q * nw..(q + 1) * nw].iter().any(|&w| w != 0);
+                    }
+                    any |= alive[q];
+                }
+                if !any {
+                    break;
+                }
+            }
+            // MMR over set bits in ascending row order, bounded by the
+            // core's iteration budget — emitted as (class, leaf) adds
+            // in the scalar path's order.
+            for q in 0..bs {
+                let mut taken = 0usize;
+                'mmr: for (w, &word0) in active[q * nw..(q + 1) * nw].iter().enumerate() {
+                    let mut word = word0;
+                    while word != 0 {
+                        if taken >= core.n_trees_core {
+                            break 'mmr;
+                        }
+                        let row = w * 64 + word.trailing_zeros() as usize;
+                        taken += 1;
+                        emit(base + q, core.class[row], core.leaf[row]);
+                        word &= word - 1;
+                    }
+                }
+                stats.matches += taken;
+            }
+        }
     }
 }
 
@@ -610,7 +897,8 @@ mod tests {
 
     /// Cheap in-module smoke of the batched/scalar bit-identity contract
     /// (the exhaustive property suite — tasks × precisions × defects ×
-    /// shard plans — lives in `rust/tests/batch_agreement.rs`).
+    /// shard plans × thread counts — lives in
+    /// `rust/tests/batch_agreement.rs`).
     #[test]
     fn batched_path_smoke_bit_identical() {
         let d = by_name("telco").unwrap().generate_n(700);
@@ -634,10 +922,191 @@ mod tests {
         }
         assert_eq!(stats.charged_rows, charged, "charged_rows drifted");
         assert_eq!(stats.matches, matches, "matches drifted");
+        // The planned path rides the same contract, per thread count.
+        for threads in [1usize, 2, 8] {
+            let (pp, ps) = e.partials_planned_stats(&batch, threads);
+            assert_eq!(pp, partials, "planned({threads}T) partials");
+            assert_eq!(e.infer_planned(&batch, threads), logits, "planned({threads}T) logits");
+            assert_eq!(ps.charged_rows, charged, "planned({threads}T) charged_rows");
+            assert_eq!(ps.matches, matches, "planned({threads}T) matches");
+        }
         // Empty batches are a no-op, not a panic.
         let (empty, zero) = e.partials_batch_stats(&[]);
         assert!(empty.is_empty());
         assert_eq!((zero.charged_rows, zero.matches), (0, 0));
+        let (empty, zero) = e.partials_planned_stats(&[], 4);
+        assert!(empty.is_empty());
+        assert_eq!((zero.charged_rows, zero.matches), (0, 0));
+    }
+
+    /// A one-core engine over hand-laid cells: the direct harness for the
+    /// `CorePlan` edge cases below (in-module so private fields are
+    /// constructible).
+    fn handmade_engine(
+        n_rows: usize,
+        n_features: usize,
+        cells: Vec<MacroCell>,
+        n_trees_core: usize,
+    ) -> CamEngine {
+        let plan = CorePlan::build(n_rows, n_features, &cells);
+        CamEngine {
+            task: Task::Binary,
+            n_outputs: 1,
+            base_score: vec![0.0],
+            cores: vec![EngineCore {
+                cam: CoreCam::from_cells(n_rows, n_features, cells),
+                plan,
+                leaf: (0..n_rows).map(|r| 0.25 + r as f32).collect(),
+                class: vec![0; n_rows],
+                n_trees_core,
+                dac: DacErrors::none(n_features),
+            }],
+            n_features,
+            scale: 1,
+        }
+    }
+
+    /// All three paths on one engine/batch, compared bit for bit.
+    fn assert_paths_agree(e: &CamEngine, batch: &[Vec<u16>], label: &str) {
+        let (batched, bstats) = e.partials_batch_stats(batch);
+        let (mut charged, mut matches) = (0usize, 0usize);
+        for (i, bins) in batch.iter().enumerate() {
+            let (scalar, s) = e.partials_bins_stats(bins);
+            assert_eq!(batched[i], scalar, "{label}: row {i} batched vs scalar");
+            charged += s.charged_rows;
+            matches += s.matches;
+        }
+        assert_eq!((bstats.charged_rows, bstats.matches), (charged, matches), "{label}: stats");
+        for threads in [1usize, 2, 8] {
+            let (planned, pstats) = e.partials_planned_stats(batch, threads);
+            assert_eq!(planned, batched, "{label}: planned({threads}T) partials");
+            assert_eq!(
+                (pstats.charged_rows, pstats.matches),
+                (charged, matches),
+                "{label}: planned({threads}T) stats"
+            );
+        }
+    }
+
+    /// The LUT is a tabulated `partition_point`: both interval
+    /// resolutions must return the identical arena slice for every 8-bit
+    /// level, on every feature, including bound levels 255 and 256.
+    #[test]
+    fn plan_lut_matches_binary_search_everywhere() {
+        use crate::util::prop;
+        prop::check(50, 0x1007, |g| {
+            let n_rows = g.usize_in(1, 70);
+            let n_features = g.usize_in(1, 6);
+            let mut cells = Vec::with_capacity(n_rows * n_features);
+            for _ in 0..n_rows * n_features {
+                let lo = g.usize_in(0, 257) as u16;
+                let hi = g.usize_in(0, 257) as u16;
+                cells.push(MacroCell::new(lo, hi));
+            }
+            let plan = CorePlan::build(n_rows, n_features, &cells);
+            for f in 0..n_features {
+                for q in 0..MACRO_BINS {
+                    prop::require(
+                        plan.rows_matching(f, q) == plan.rows_matching_indexed(f, q),
+                        format!("f={f} q={q} rows={n_rows}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// `CorePlan` edge cases (ISSUE 4 satellite): features with zero
+    /// useful bound levels (don't-care and never-match columns), a
+    /// single distinct level, and windows touching level 255 — each
+    /// bit-identical across scalar/indexed/planned paths.
+    #[test]
+    fn plan_edge_level_features_agree() {
+        let n_rows = 5;
+        // f0: don't care (bounds collapse to {256} → one reachable
+        //     interval); f1: single distinct level 7 shared by all rows;
+        // f2: top window [250, 256) — level 255 must match;
+        // f3: mixed per-row windows including an empty [5, 5).
+        let mut cells = Vec::new();
+        for r in 0..n_rows {
+            cells.push(MacroCell::DONT_CARE);
+            cells.push(MacroCell::new(0, 7));
+            cells.push(MacroCell::new(250, MACRO_BINS));
+            cells.push(match r {
+                0 => MacroCell::new(5, 5),   // empty window: never matches
+                1 => MacroCell::new(200, 10), // inverted: never matches
+                _ => MacroCell::DONT_CARE,
+            });
+        }
+        let e = handmade_engine(n_rows, 4, cells, n_rows);
+        let batch: Vec<Vec<u16>> = vec![
+            vec![0, 0, 250, 0],
+            vec![255, 6, 255, 255], // level 255 everywhere it matters
+            vec![17, 7, 254, 99],   // f1 boundary: 7 is outside [0,7)
+            vec![255, 255, 249, 5],
+        ];
+        assert_paths_agree(&e, &batch, "edge-levels");
+        // Spot-check the semantics the paths agreed on: query 1 matches
+        // rows 2.. on every feature (f3 kills rows 0 and 1).
+        let p = e.partials_bins(&batch[1]);
+        let want: f64 = (2..n_rows).map(|r| (0.25 + r as f32) as f64).sum();
+        assert_eq!(p[0], want);
+        // Query 2 matches nothing (f1 level 7 ≥ hi).
+        assert_eq!(e.partials_bins(&batch[2])[0], 0.0);
+    }
+
+    /// Empty-after-gating short-circuit (ISSUE 4 satellite): when
+    /// segment 0 drains the active set, later segments charge 0 rows on
+    /// every path, and the planned path's skip of dead queries must not
+    /// change the accounting.
+    #[test]
+    fn plan_short_circuits_empty_tail_segments() {
+        let n_rows = 8;
+        let n_features = 130; // two queued segments
+        let mut cells = vec![MacroCell::DONT_CARE; n_rows * n_features];
+        for r in 0..n_rows {
+            cells[r * n_features] = MacroCell::new(10, 20);
+        }
+        let e = handmade_engine(n_rows, n_features, cells, n_rows);
+        // Query misses every first-segment window → segment 1 never
+        // charges.
+        let miss = vec![0u16; n_features];
+        let (p, stats) = e.partials_bins_stats(&miss);
+        assert_eq!(p[0], 0.0);
+        assert_eq!(stats.charged_rows, n_rows, "only segment 0 charges");
+        assert_eq!(stats.matches, 0);
+        // Query hits → both segments charge all rows.
+        let mut hit = vec![0u16; n_features];
+        hit[0] = 15;
+        let (_, stats) = e.partials_bins_stats(&hit);
+        assert_eq!(stats.charged_rows, 2 * n_rows);
+        assert_eq!(stats.matches, n_rows);
+        // And the batched/planned paths reproduce both, mixed in one
+        // batch (the short-circuit applies per query, not per block).
+        assert_paths_agree(&e, &[miss, hit], "short-circuit");
+    }
+
+    /// Defect-modified rows (ISSUE 4 satellite): the plan is built from
+    /// the perturbed cells, so planned == scalar must hold on defective
+    /// engines — including the DAC-error query offsets.
+    #[test]
+    fn plan_agrees_on_defect_modified_rows() {
+        let d = by_name("churn").unwrap().generate_n(900);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 8, max_leaves: 8, ..Default::default() },
+            None,
+        );
+        // Small cores force a multi-core layout so thread partitioning
+        // splits real work.
+        let p = compile(&m, &CompileOptions { core_rows: 64, ..Default::default() }).unwrap();
+        let e = CamEngine::with_defects(
+            &p,
+            DefectSpec { memristor_pct: 0.3, dac_pct: 0.2 },
+            41,
+        );
+        let batch: Vec<Vec<u16>> = (0..24).map(|i| p.quantizer.bin_row(d.row(i))).collect();
+        assert_paths_agree(&e, &batch, "defects");
     }
 
     #[test]

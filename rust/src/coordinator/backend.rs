@@ -54,6 +54,14 @@ pub trait Backend: Send {
         let task = self.task();
         Ok(self.infer(batch)?.iter().map(|l| task.decide(l)).collect())
     }
+
+    /// Set the worker-thread count engine-backed backends use for the
+    /// planned execution path (0 = one worker per available CPU). The
+    /// planned path is bit-identical across thread counts, so this is a
+    /// pure throughput knob; backends without an internal parallel path
+    /// ignore it. Plumbed from [`crate::coordinator::BatchPolicy::threads`]
+    /// by `Server::start`/`start_sharded`.
+    fn set_threads(&mut self, _threads: usize) {}
 }
 
 /// Exact CPU tree-walk reference.
@@ -91,11 +99,25 @@ impl Backend for CpuExactBackend {
 /// Analog-CAM functional model backend.
 pub struct FunctionalBackend {
     pub engine: CamEngine,
+    /// Planned-path worker threads (0 = auto; default 1).
+    threads: usize,
 }
 
 impl FunctionalBackend {
+    /// Single-threaded planned execution (the deterministic default; the
+    /// planned path is bit-identical at every thread count anyway).
     pub fn new(program: &CamProgram) -> FunctionalBackend {
-        FunctionalBackend { engine: CamEngine::new(program) }
+        Self::with_threads(program, 1)
+    }
+
+    /// Planned execution over `threads` workers (0 = one per available
+    /// CPU).
+    pub fn with_threads(program: &CamProgram, threads: usize) -> FunctionalBackend {
+        FunctionalBackend { engine: CamEngine::new(program), threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 }
 
@@ -112,15 +134,20 @@ impl Backend for FunctionalBackend {
         self.engine.task
     }
 
-    /// Serves through [`CamEngine::infer_batch`] — the feature-major
-    /// interval-index hot path, bit-identical to the row-at-a-time
-    /// scalar engine (property-tested in `rust/tests/batch_agreement.rs`).
+    /// Serves through [`CamEngine::infer_planned`] — the planned LUT +
+    /// arena hot path, bit-identical to the row-at-a-time scalar engine
+    /// at every thread count (property-tested in
+    /// `rust/tests/batch_agreement.rs`).
     fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
-        Ok(self.engine.infer_batch(batch))
+        Ok(self.engine.infer_planned(batch, self.threads))
     }
 
     fn infer_partials(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
-        Ok(self.engine.partials_batch(batch))
+        Ok(self.engine.partials_planned(batch, self.threads))
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
     }
 }
 
@@ -240,6 +267,22 @@ mod tests {
             assert_eq!(logits[i], scalar.infer_bins(b), "row {i} logits");
             assert_eq!(partials[i], scalar.partials_bins(b), "row {i} partials");
         }
+    }
+
+    #[test]
+    fn threaded_backend_is_bit_identical_too() {
+        // The threads knob is a throughput lever only: a multi-worker
+        // backend must serve the exact bits of the single-worker one.
+        let (d, _, p) = setup();
+        let mut one = FunctionalBackend::new(&p);
+        let mut many = FunctionalBackend::with_threads(&p, 4);
+        assert_eq!(many.threads(), 4);
+        let bins: Vec<Vec<u16>> = (0..40).map(|i| p.quantizer.bin_row(d.row(i))).collect();
+        assert_eq!(one.infer(&bins).unwrap(), many.infer(&bins).unwrap());
+        assert_eq!(one.infer_partials(&bins).unwrap(), many.infer_partials(&bins).unwrap());
+        // And `set_threads` re-routes the same backend live.
+        many.set_threads(0); // auto
+        assert_eq!(one.infer(&bins).unwrap(), many.infer(&bins).unwrap());
     }
 
     #[test]

@@ -10,4 +10,4 @@ pub mod server;
 
 pub use backend::{Backend, CpuExactBackend, FunctionalBackend, XlaBackend};
 pub use router::Router;
-pub use server::{BatchPolicy, Reply, Server, ServerStats, ShardStats};
+pub use server::{BatchPolicy, Reply, Server, ServerStats, ShardStats, LATENCY_RESERVOIR_CAP};

@@ -29,11 +29,19 @@
 
 use super::backend::Backend;
 use crate::compiler::apply_base;
-use crate::util::stats::Summary;
+use crate::util::stats::{Reservoir, Summary};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Latency samples retained for [`Server::latency_summary`]: a
+/// fixed-capacity reservoir, so server memory stays bounded under
+/// sustained load (the log once grew one `f64` per request, forever).
+pub const LATENCY_RESERVOIR_CAP: usize = 1024;
+/// Deterministic reservoir seed — summaries are reproducible for a
+/// fixed request order.
+const LATENCY_RESERVOIR_SEED: u64 = 0x1A7E0C7;
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -42,18 +50,45 @@ pub struct BatchPolicy {
     pub max_wait_us: u64,
     /// Cap batches at this size (0 = backend's max_batch).
     pub max_batch: usize,
+    /// Planned-path worker threads pushed to every backend in the pool
+    /// via [`Backend::set_threads`] at startup: `None` keeps each
+    /// backend as constructed, `Some(0)` means one worker per available
+    /// CPU, `Some(n)` pins `n` workers. Results are bit-identical for
+    /// every setting (the planned path's determinism contract).
+    pub threads: Option<usize>,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_wait_us: 200, max_batch: 0 }
+        BatchPolicy { max_wait_us: 200, max_batch: 0, threads: None }
     }
 }
 
+/// Quantized request payload. Deliberately **not** `Clone`: batch
+/// assembly must move bins out of the request (`Request::into_parts`),
+/// so a per-request clone can never sneak back onto the hot path — the
+/// compiler rejects it.
+struct Bins(Vec<u16>);
+
 struct Request {
-    bins: Vec<u16>,
+    bins: Bins,
     enqueued: Instant,
     reply: Sender<Reply>,
+}
+
+/// A request's reply-side remainder once its bins moved into the device
+/// batch.
+struct Pending {
+    enqueued: Instant,
+    reply: Sender<Reply>,
+}
+
+impl Request {
+    /// Split into the device-batch row (moved, not cloned) and the
+    /// reply-side remainder.
+    fn into_parts(self) -> (Vec<u16>, Pending) {
+        (self.bins.0, Pending { enqueued: self.enqueued, reply: self.reply })
+    }
 }
 
 /// Response to one request.
@@ -180,7 +215,7 @@ pub struct Server {
     shard_workers: Vec<std::thread::JoinHandle<()>>,
     counters: Arc<Counters>,
     shard_counters: Arc<Vec<ShardCounter>>,
-    latencies: Arc<Mutex<Vec<f64>>>,
+    latencies: Arc<Mutex<Reservoir>>,
     n_features: usize,
 }
 
@@ -228,6 +263,11 @@ impl Server {
         n_features: usize,
     ) -> Server {
         assert!(!backends.is_empty(), "need at least one backend");
+        if let Some(threads) = policy.threads {
+            for b in &mut backends {
+                b.set_threads(threads);
+            }
+        }
         let task = backends[0].task();
         assert!(
             backends.iter().all(|b| b.task() == task),
@@ -250,7 +290,10 @@ impl Server {
                 .map(|(i, b)| ShardCounter::new(format!("{}#{i}", b.name())))
                 .collect(),
         );
-        let latencies = Arc::new(Mutex::new(Vec::new()));
+        let latencies = Arc::new(Mutex::new(Reservoir::new(
+            LATENCY_RESERVOIR_CAP,
+            LATENCY_RESERVOIR_SEED,
+        )));
 
         let c2 = counters.clone();
         let s2 = shard_counters.clone();
@@ -263,7 +306,10 @@ impl Server {
             let worker = std::thread::spawn(move || {
                 while let Ok(first) = rx.recv() {
                     let reqs = collect_batch(&rx, first, max_batch, wait);
-                    let batch: Vec<Vec<u16>> = reqs.iter().map(|r| r.bins.clone()).collect();
+                    // Bins *move* into the device batch — no per-request
+                    // clone on the hot path (`Bins` is not `Clone`).
+                    let (batch, pending): (Vec<Vec<u16>>, Vec<Pending>) =
+                        reqs.into_iter().map(Request::into_parts).unzip();
                     let t0 = Instant::now();
                     let result = backend.infer(&batch).and_then(|l| {
                         if l.len() == batch.len() {
@@ -281,9 +327,9 @@ impl Server {
                     match result {
                         Ok(logits) => {
                             c2.batches.fetch_add(1, Ordering::Relaxed);
-                            c2.batch_rows.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+                            c2.batch_rows.fetch_add(pending.len() as u64, Ordering::Relaxed);
                             let mut lat_log = l2.lock().unwrap();
-                            for (req, l) in reqs.into_iter().zip(logits) {
+                            for (req, l) in pending.into_iter().zip(logits) {
                                 let latency = req.enqueued.elapsed();
                                 lat_log.push(latency.as_secs_f64());
                                 let _ = req.reply.send(Reply {
@@ -299,10 +345,10 @@ impl Server {
                             // Error replies, not a dead server: callers
                             // see what failed and the worker keeps going.
                             let msg = format!("{e:#}");
-                            c2.errors.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+                            c2.errors.fetch_add(pending.len() as u64, Ordering::Relaxed);
                             s2[0].set_last_error(msg.clone());
                             eprintln!("backend error (batch dropped): {msg}");
-                            for req in reqs {
+                            for req in pending {
                                 let _ = req.reply.send(Reply {
                                     logits: Vec::new(),
                                     prediction: f32::NAN,
@@ -364,8 +410,11 @@ impl Server {
             while let Ok(first) = rx.recv() {
                 let reqs = collect_batch(&rx, first, max_batch, wait);
                 let n_rows = reqs.len();
-                let batch: Arc<Vec<Vec<u16>>> =
-                    Arc::new(reqs.iter().map(|r| r.bins.clone()).collect());
+                // Same move-not-clone batch assembly as the single-card
+                // worker; the broadcast to shard workers shares one Arc.
+                let (batch, reqs): (Vec<Vec<u16>>, Vec<Pending>) =
+                    reqs.into_iter().map(Request::into_parts).unzip();
+                let batch: Arc<Vec<Vec<u16>>> = Arc::new(batch);
 
                 // Fan out, then collect exactly one reply per live shard.
                 let (ptx, prx) = channel();
@@ -482,7 +531,7 @@ impl Server {
         self.tx
             .as_ref()
             .expect("server stopped")
-            .send(Request { bins, enqueued: Instant::now(), reply: rtx })
+            .send(Request { bins: Bins(bins), enqueued: Instant::now(), reply: rtx })
             .expect("worker gone");
         rrx
     }
@@ -504,10 +553,19 @@ impl Server {
         }
     }
 
-    /// Latency summary (seconds) over everything served successfully so
-    /// far; `None` before any traffic (or if every batch failed).
+    /// Latency summary (seconds) over served traffic; `None` before any
+    /// traffic (or if every batch failed). Backed by a fixed-capacity
+    /// deterministic reservoir ([`LATENCY_RESERVOIR_CAP`] samples), so
+    /// the summary is over a uniform sample of everything served and
+    /// server memory stays bounded under sustained load.
     pub fn latency_summary(&self) -> Option<Summary> {
-        Summary::try_of(&self.latencies.lock().unwrap())
+        self.latencies.lock().unwrap().summary()
+    }
+
+    /// Latency samples offered to the reservoir so far (= rows served
+    /// successfully).
+    pub fn latency_samples_seen(&self) -> u64 {
+        self.latencies.lock().unwrap().seen()
     }
 
     /// Stop the workers.
@@ -679,7 +737,7 @@ mod tests {
         let (d, m, p) = setup();
         let server = Arc::new(Server::start(
             Box::new(CpuExactBackend { model: m }),
-            BatchPolicy { max_wait_us: 2_000, max_batch: 16 },
+            BatchPolicy { max_wait_us: 2_000, max_batch: 16, threads: None },
             p.n_features,
         ));
         let n = 200;
@@ -715,6 +773,59 @@ mod tests {
         assert!(s.min > 0.0);
     }
 
+    /// Satellite (ISSUE 4): the latency log is a fixed-capacity
+    /// reservoir — sustained load cannot grow server memory, while the
+    /// summary still reflects a uniform sample of everything served.
+    #[test]
+    fn latency_log_is_bounded_under_sustained_load() {
+        let (d, m, p) = setup();
+        let server = Server::start(
+            Box::new(CpuExactBackend { model: m }),
+            BatchPolicy { max_wait_us: 500, max_batch: 64, threads: None },
+            p.n_features,
+        );
+        let n = super::LATENCY_RESERVOIR_CAP + 500;
+        let rxs: Vec<_> = (0..n)
+            .map(|i| server.submit(p.quantizer.bin_row(d.row(i % d.n_rows()))))
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        // Every served row was offered to the reservoir…
+        assert_eq!(server.latency_samples_seen(), n as u64);
+        // …but only the capacity is retained and summarized.
+        let s = server.latency_summary().unwrap();
+        assert_eq!(s.n, super::LATENCY_RESERVOIR_CAP);
+        assert!(s.min > 0.0 && s.min <= s.p95);
+        server.shutdown();
+    }
+
+    /// The `BatchPolicy::threads` knob reaches every backend in the pool
+    /// and leaves results bit-identical (the planned path's determinism
+    /// contract) — here against the scalar reference engine.
+    #[test]
+    fn policy_threads_keep_serving_bit_identical() {
+        let (d, _, p) = setup();
+        let reference = CamEngine::new(&p);
+        for threads in [Some(1), Some(4), Some(0)] {
+            let server = Server::start(
+                Box::new(FunctionalBackend::new(&p)),
+                BatchPolicy { max_wait_us: 200, max_batch: 16, threads },
+                p.n_features,
+            );
+            for i in 0..12 {
+                let bins = p.quantizer.bin_row(d.row(i));
+                let reply = server.infer_blocking(bins.clone());
+                assert_eq!(
+                    reply.logits,
+                    reference.infer_bins(&bins),
+                    "threads={threads:?} row {i}"
+                );
+            }
+            server.shutdown();
+        }
+    }
+
     #[test]
     #[should_panic(expected = "feature arity mismatch")]
     fn rejects_wrong_arity() {
@@ -734,7 +845,7 @@ mod tests {
         let (d, _, p) = setup();
         let server = Server::start(
             Box::new(FunctionalBackend::new(&p)),
-            BatchPolicy { max_wait_us: 30_000, max_batch: 64 },
+            BatchPolicy { max_wait_us: 30_000, max_batch: 64, threads: None },
             p.n_features,
         );
         let t0 = Instant::now();
@@ -760,7 +871,7 @@ mod tests {
         let (d, m, p) = setup();
         let server = Server::start(
             Box::new(CpuExactBackend { model: m }),
-            BatchPolicy { max_wait_us: 20_000, max_batch: 4 },
+            BatchPolicy { max_wait_us: 20_000, max_batch: 4, threads: None },
             p.n_features,
         );
         let rxs: Vec<_> = (0..32)
@@ -789,7 +900,7 @@ mod tests {
                 inner: FunctionalBackend::new(&p),
                 delay: Duration::from_millis(15),
             }),
-            BatchPolicy { max_wait_us: 0, max_batch: 4 },
+            BatchPolicy { max_wait_us: 0, max_batch: 4, threads: None },
             p.n_features,
         );
         let n = 32;
@@ -829,7 +940,7 @@ mod tests {
         let server = Server::start_sharded(
             backends,
             plan.base_score.clone(),
-            BatchPolicy { max_wait_us: 0, max_batch: 4 },
+            BatchPolicy { max_wait_us: 0, max_batch: 4, threads: None },
             p.n_features,
         );
         let n = 24;

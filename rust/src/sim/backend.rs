@@ -48,6 +48,8 @@ pub struct SimCardBackend {
     service_s: f64,
     /// Simulated unloaded end-to-end latency (s), incl. PCIe round trip.
     latency_s: f64,
+    /// Planned-path worker threads (0 = auto; default 1).
+    threads: usize,
     counters: Arc<SimCardCounters>,
 }
 
@@ -55,13 +57,27 @@ impl SimCardBackend {
     /// Build a card for `program` (typically one shard of a
     /// [`crate::compiler::ShardPlan`]): runs the cycle-detailed card
     /// simulation once to calibrate timing, then serves numerics through
-    /// the functional engine.
+    /// the functional engine (single planned worker).
     pub fn new(program: &CamProgram, chip: &ChipConfig, card: &CardConfig) -> SimCardBackend {
+        Self::with_threads(program, chip, card, 1)
+    }
+
+    /// Like [`SimCardBackend::new`] but serving numerics over `threads`
+    /// planned-path workers (0 = one per available CPU). Simulated
+    /// timing is unaffected: the calibrated card model, not the host,
+    /// owns the projected rates.
+    pub fn with_threads(
+        program: &CamProgram,
+        chip: &ChipConfig,
+        card: &CardConfig,
+        threads: usize,
+    ) -> SimCardBackend {
         let rep = simulate_card(program, chip, card, 20_000);
         SimCardBackend {
             engine: CamEngine::new(program),
             service_s: 1.0 / rep.throughput_sps.max(1.0),
             latency_s: rep.latency_s,
+            threads,
             counters: Arc::new(SimCardCounters::default()),
         }
     }
@@ -95,16 +111,21 @@ impl Backend for SimCardBackend {
         self.engine.task
     }
 
-    /// Numerics through the batched interval-index engine (bit-identical
-    /// to the scalar path); timing through the calibrated card model.
+    /// Numerics through the planned execution engine (bit-identical to
+    /// the scalar path at every thread count); timing through the
+    /// calibrated card model.
     fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
         self.counters.accrue(batch.len(), self.service_s);
-        Ok(self.engine.infer_batch(batch))
+        Ok(self.engine.infer_planned(batch, self.threads))
     }
 
     fn infer_partials(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
         self.counters.accrue(batch.len(), self.service_s);
-        Ok(self.engine.partials_batch(batch))
+        Ok(self.engine.partials_planned(batch, self.threads))
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
     }
 }
 

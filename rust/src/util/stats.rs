@@ -1,5 +1,61 @@
 //! Small statistics helpers shared by benches, the simulator and metrics.
 
+use super::rng::Rng;
+
+/// Fixed-capacity uniform reservoir sampler (Vitter's algorithm R) with
+/// a deterministic seed: bounded-memory percentile summaries over
+/// unbounded streams. The serving engine's latency log uses one so
+/// sustained load cannot grow the server's memory without limit; any
+/// prefix of the stream is summarized from a uniform sample of what has
+/// been offered so far.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir { cap, seen: 0, samples: Vec::new(), rng: Rng::new(seed) }
+    }
+
+    /// Offer one value: kept outright while the reservoir fills, then
+    /// replaces a uniformly chosen slot with probability `cap / seen`.
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.below(self.seen as usize);
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Values offered so far (≥ [`Reservoir::len`]).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Values currently held (saturates at the capacity).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Summary over the held sample; `None` before any value arrived.
+    pub fn summary(&self) -> Option<Summary> {
+        Summary::try_of(&self.samples)
+    }
+}
+
 /// Online mean/variance accumulator (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Welford {
@@ -189,6 +245,53 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 2.0);
         assert_eq!(s.n, 2);
+    }
+
+    #[test]
+    fn reservoir_saturates_at_capacity() {
+        // The satellite contract: memory is bounded however long the
+        // stream runs, while `seen` keeps counting.
+        let mut r = Reservoir::new(64, 9);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 64);
+        assert_eq!(r.seen(), 10_000);
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 64);
+        // A uniform sample of 0..10000 cannot be stuck in the prefix the
+        // first 64 pushes filled.
+        assert!(s.max > 64.0, "reservoir never replaced a slot: max={}", s.max);
+        assert!((0.0..10_000.0).contains(&s.min));
+        // Roughly uniform: the sample mean sits near the stream mean.
+        assert!((s.mean - 5_000.0).abs() < 1_500.0, "mean={}", s.mean);
+    }
+
+    #[test]
+    fn reservoir_below_capacity_keeps_everything() {
+        let mut r = Reservoir::new(100, 1);
+        assert!(r.is_empty());
+        assert!(r.summary().is_none());
+        for i in 0..10 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 10);
+        let s = r.summary().unwrap();
+        assert_eq!((s.min, s.max), (0.0, 9.0));
+    }
+
+    #[test]
+    fn reservoir_is_deterministic() {
+        let run = || {
+            let mut r = Reservoir::new(32, 0xC0FFEE);
+            for i in 0..5_000 {
+                r.push(i as f64);
+            }
+            let mut s = r.samples.clone();
+            s.sort_by(f64::total_cmp);
+            s
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

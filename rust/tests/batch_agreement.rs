@@ -1,10 +1,12 @@
-//! Batched-vs-scalar bit-identity: the feature-major interval index
-//! (`CamEngine::partials_batch` / `infer_batch`) must reproduce the
-//! row-at-a-time scalar engine *exactly* — f64 partials, f32 logits,
-//! decisions and `SearchStats` counts — across tasks, program precisions,
-//! defect draws and sharded plans. This is the contract every serving
-//! backend now rides on (DESIGN.md §5), so the comparison is `assert_eq!`
-//! on raw floats, not a tolerance.
+//! Batched-vs-scalar bit-identity: the indexed batch path
+//! (`CamEngine::partials_batch` / `infer_batch`) *and* the planned path
+//! (`partials_planned` / `infer_planned`, at thread counts 1/2/8) must
+//! reproduce the row-at-a-time scalar engine *exactly* — f64 partials,
+//! f32 logits, decisions and `SearchStats` counts — across tasks,
+//! program precisions, defect draws and sharded plans. This is the
+//! contract every serving backend now rides on (DESIGN.md §5,
+//! docs/adr/002-planned-execution.md), so the comparison is
+//! `assert_eq!` on raw floats, not a tolerance.
 
 use xtime::bench_support::{random_ensemble, random_query_bins, sharded_functional_pool};
 use xtime::cam::DefectSpec;
@@ -15,9 +17,15 @@ use xtime::sim::{CardConfig, ChipConfig, SimCardBackend};
 use xtime::trees::{gbdt, rf, GbdtParams, RfParams};
 use xtime::util::prop;
 
-/// Exact agreement of one engine's batched and scalar paths on `batch`.
-/// Returns an `Err` witness for `prop::check` instead of asserting, so
-/// failures report the replayable iteration.
+/// Thread counts the planned path is pinned at everywhere: single
+/// worker, a split, and more workers than most test programs have cores
+/// (exercising the clamp).
+const THREADS: [usize; 3] = [1, 2, 8];
+
+/// Exact agreement of one engine's indexed, planned (all pinned thread
+/// counts) and scalar paths on `batch`. Returns an `Err` witness for
+/// `prop::check` instead of asserting, so failures report the
+/// replayable iteration.
 fn batch_agrees(e: &CamEngine, batch: &[Vec<u16>], label: &str) -> prop::PropResult {
     let (partials, stats) = e.partials_batch_stats(batch);
     let logits = e.infer_batch(batch);
@@ -43,7 +51,28 @@ fn batch_agrees(e: &CamEngine, batch: &[Vec<u16>], label: &str) -> prop::PropRes
     prop::require(
         stats.matches == matches,
         format!("{label}: matches {} vs scalar {matches}", stats.matches),
-    )
+    )?;
+    // The planned path must agree for every thread count — partials,
+    // logits and stats, bit for bit (determinism contract, ADR-002).
+    for &threads in &THREADS {
+        let (pp, ps) = e.partials_planned_stats(batch, threads);
+        prop::require(
+            pp == partials,
+            format!("{label}: planned({threads}T) partials diverged"),
+        )?;
+        prop::require(
+            e.infer_planned(batch, threads) == logits,
+            format!("{label}: planned({threads}T) logits diverged"),
+        )?;
+        prop::require(
+            (ps.charged_rows, ps.matches) == (charged, matches),
+            format!(
+                "{label}: planned({threads}T) stats ({}, {}) vs scalar ({charged}, {matches})",
+                ps.charged_rows, ps.matches
+            ),
+        )?;
+    }
+    Ok(())
 }
 
 /// Random bin batch straight from the generator — exercises bin-space
@@ -160,6 +189,11 @@ fn batched_shards_reproduce_unsharded_logits() {
     // Per-shard batched partials, then the dispatcher's aggregation.
     let per_shard: Vec<Vec<Vec<f64>>> =
         shard_engines.iter().map(|e| e.partials_batch(&batch)).collect();
+    // Planned shard workers produce the identical partials (any thread
+    // count), so the sharding contract transfers to the planned path.
+    for (s, e) in shard_engines.iter().enumerate() {
+        assert_eq!(e.partials_planned(&batch, 2), per_shard[s], "shard {s} planned partials");
+    }
     for (i, bins) in batch.iter().enumerate() {
         let mut total = vec![0f64; reference.n_outputs];
         for shard in &per_shard {
@@ -177,6 +211,49 @@ fn batched_shards_reproduce_unsharded_logits() {
     // And each shard engine itself is batched-vs-scalar clean.
     for (s, e) in shard_engines.iter().enumerate() {
         batch_agrees(e, &batch, &format!("shard {s}")).unwrap();
+    }
+}
+
+/// Regression (ISSUE 4 satellite): query scaling routes through the
+/// shared saturating `dac_level` conversion. A raw `b * scale` multiply
+/// once wrapped/panicked (u16 overflow) on out-of-range bins; now every
+/// path saturates at DAC full scale and they all agree at the
+/// boundaries — bin 0, the top in-range bin, the first out-of-range
+/// bin, and u16::MAX (which used to overflow the multiply outright on
+/// sub-8-bit programs).
+#[test]
+fn bin_boundaries_agree_across_paths() {
+    for n_bits in [4u8, 8] {
+        let d = by_name("telco").unwrap().generate_n(700);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 5, max_leaves: 8, n_bits, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let e = CamEngine::new(&p);
+        let nf = p.n_features;
+        let max_bin = p.n_bins - 1;
+        let mut batch: Vec<Vec<u16>> = vec![
+            vec![0u16; nf],              // floor
+            vec![max_bin; nf],           // top in-range bin
+            vec![p.n_bins; nf],          // first out-of-range bin
+            vec![u16::MAX; nf],          // saturating_mul territory
+        ];
+        // Mixed row: one boundary value per feature, cycling.
+        batch.push(
+            (0..nf)
+                .map(|f| [0, max_bin, p.n_bins, u16::MAX][f % 4])
+                .collect(),
+        );
+        batch_agrees(&e, &batch, &format!("{n_bits}-bit boundaries")).unwrap();
+        // Out-of-range bins drive the saturated top DAC level and still
+        // produce finite logits on every path.
+        for (i, bins) in batch.iter().enumerate() {
+            for l in e.infer_bins(bins) {
+                assert!(l.is_finite(), "{n_bits}-bit row {i}: non-finite logit");
+            }
+        }
     }
 }
 

@@ -32,7 +32,7 @@ fn shard_servers(
         &PartitionOptions { strategy, ..Default::default() },
     )
     .expect("partition");
-    sharded_functional_pool(&plan, BatchPolicy { max_wait_us: 200, max_batch: 32 })
+    sharded_functional_pool(&plan, BatchPolicy { max_wait_us: 200, max_batch: 32, threads: None })
 }
 
 /// The acceptance criterion: on a 1024-tree ensemble, sharded logits are
