@@ -4,9 +4,12 @@
 //! builder the scaling bench/example/tests share.
 
 use crate::compiler::{CamProgram, ShardPlan};
-use crate::coordinator::{Backend, BatchPolicy, FunctionalBackend, Server};
+use crate::coordinator::{
+    Admission, Backend, BatchPolicy, Fleet, FleetStats, FunctionalBackend, Server,
+};
 use crate::data::{by_name, Dataset, FeatureQuantizer, Task};
 use crate::trees::{paper_model, train_paper_model, Ensemble, Node, Tree};
+use crate::util::bench::Table;
 use crate::util::{Json, Rng};
 use std::path::PathBuf;
 
@@ -142,6 +145,110 @@ pub fn sharded_functional_pool(plan: &ShardPlan, policy: BatchPolicy) -> Server 
     Server::start_sharded(backends, plan.base_score.clone(), policy, plan.n_features)
 }
 
+/// One tenant of a skewed load mix driven by [`drive_skewed_mix`].
+pub struct MixTenant<'a> {
+    /// Registered model name in the fleet.
+    pub name: &'a str,
+    /// Request rows are drawn from this dataset (cycled).
+    pub data: &'a Dataset,
+    /// Relative share of the mix (integer weight > 0).
+    pub weight: usize,
+}
+
+/// Outcome of one [`drive_skewed_mix`] run; `served + shed + errors`
+/// equals the offered request count exactly.
+pub struct MixOutcome {
+    /// Requests admitted and answered with a successful reply.
+    pub served: usize,
+    /// Requests refused at a route's admission bound.
+    pub shed: usize,
+    /// Requests admitted but answered with an error reply (or dropped).
+    pub errors: usize,
+    /// Wall-clock seconds from first submit to last reply.
+    pub wall_s: f64,
+}
+
+/// Drive a weighted multi-tenant request mix through `fleet`: each
+/// request picks a tenant with probability proportional to its weight
+/// (deterministic given `seed`), submits a row from that tenant's
+/// dataset, and every accepted reply is awaited. Shared by
+/// `xtime serve --models …` and `examples/fleet_serving.rs` so the two
+/// load drivers cannot drift apart.
+pub fn drive_skewed_mix(
+    fleet: &Fleet,
+    tenants: &[MixTenant],
+    n_requests: usize,
+    seed: u64,
+) -> Result<MixOutcome, String> {
+    assert!(!tenants.is_empty(), "need at least one tenant");
+    assert!(tenants.iter().all(|t| t.weight > 0), "weights must be positive");
+    let total_weight: usize = tenants.iter().map(|t| t.weight).sum();
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    let mut shed = 0usize;
+    for r in 0..n_requests {
+        let mut pick = rng.below(total_weight);
+        let mut ti = 0usize;
+        while pick >= tenants[ti].weight {
+            pick -= tenants[ti].weight;
+            ti += 1;
+        }
+        let d = tenants[ti].data;
+        match fleet.submit(tenants[ti].name, d.row(r % d.n_rows()))? {
+            Admission::Accepted(rx) => pending.push(rx),
+            Admission::Shed { .. } => shed += 1,
+        }
+    }
+    let mut served = 0usize;
+    let mut errors = 0usize;
+    for rx in pending {
+        match rx.recv() {
+            Ok(reply) if reply.is_ok() => served += 1,
+            _ => errors += 1,
+        }
+    }
+    Ok(MixOutcome { served, shed, errors, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Render a [`FleetStats`] snapshot as the standard fleet table —
+/// shared by `xtime serve --models …` and `examples/fleet_serving.rs`
+/// so the two surfaces can't drift apart.
+pub fn fleet_table(stats: &FleetStats) -> Table {
+    let mut table = Table::new(&[
+        "model",
+        "shards",
+        "admitted",
+        "shed",
+        "served",
+        "errors",
+        "mean batch",
+        "p50",
+        "p95",
+        "queue",
+    ]);
+    for m in &stats.models {
+        let (p50, p95) = match &m.latency {
+            Some(s) => (crate::util::bench::t(s.median), crate::util::bench::t(s.p95)),
+            None => ("-".to_string(), "-".to_string()),
+        };
+        let cap = if m.queue_cap == 0 { "∞".to_string() } else { m.queue_cap.to_string() };
+        table.row(&[
+            m.name.clone(),
+            m.shards.to_string(),
+            m.admitted.to_string(),
+            m.shed.to_string(),
+            m.served.to_string(),
+            m.errors.to_string(),
+            format!("{:.1}", m.mean_batch),
+            p50,
+            p95,
+            format!("{}/{cap}", m.queue_depth),
+        ]);
+    }
+    table
+}
+
 fn random_tree(depth: usize, n_features: usize, n_bins: usize, rng: &mut Rng) -> Tree {
     // Complete binary tree: internal nodes then leaves, built recursively.
     let mut tree = Tree::default();
@@ -194,6 +301,35 @@ mod tests {
     fn random_ensemble_multiclass_classes_cycle() {
         let e = random_ensemble(9, 3, 8, Task::MultiClass(3), 4);
         assert_eq!(e.tree_class, vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn fleet_table_renders_with_and_without_latency() {
+        use crate::coordinator::ModelStats;
+        let row = |name: &str, latency| ModelStats {
+            name: name.to_string(),
+            shards: 2,
+            admitted: 10,
+            shed: 3,
+            served: 9,
+            errors: 1,
+            batches: 4,
+            mean_batch: 2.5,
+            queue_depth: 0,
+            queue_cap: 64,
+            latency,
+            shard_stats: Vec::new(),
+        };
+        let stats = FleetStats {
+            models: vec![
+                row("warm", crate::util::stats::Summary::try_of(&[0.001, 0.002])),
+                row("cold", None),
+            ],
+            admitted: 20,
+            shed: 6,
+        };
+        // Renders without panicking for both populated and empty latency.
+        fleet_table(&stats).print("smoke");
     }
 
     #[test]

@@ -1,13 +1,41 @@
 //! L3 serving coordinator: pluggable inference backends, a dynamic
-//! batcher feeding a pool of per-shard worker threads, and a multi-model
-//! request router — the host-side system for the multi-card PCIe
-//! deployment the paper envisions (§III-D), patterned after vLLM's
-//! router/worker split. See DESIGN.md §"Sharded serving".
+//! batcher feeding a pool of per-shard worker threads, and a
+//! multi-tenant model [`Fleet`] — the host-side system for the
+//! multi-card PCIe deployment the paper envisions (§III-D), patterned
+//! after vLLM's router/worker split. See DESIGN.md §"Sharded serving"
+//! and §"Model fleet".
+//!
+//! The fleet registers each model as a sharded server pool with a
+//! bounded admission queue, and replaces models via drain-on-swap
+//! ([`Fleet::swap_program`]) so a retrain→redeploy never drops an
+//! in-flight request:
+//!
+//! ```
+//! use xtime::compiler::{compile, CompileOptions};
+//! use xtime::coordinator::{Fleet, ModelConfig};
+//! use xtime::data::by_name;
+//! use xtime::trees::{gbdt, GbdtParams};
+//!
+//! // Train and compile a small model, then serve it through the fleet.
+//! let data = by_name("churn").unwrap().generate_n(300);
+//! let params = GbdtParams { n_rounds: 3, max_leaves: 4, ..Default::default() };
+//! let model = gbdt::train(&data, &params, None);
+//! let program = compile(&model, &CompileOptions::default()).unwrap();
+//!
+//! let fleet = Fleet::new();
+//! fleet.register_program("churn", &program, ModelConfig::for_program(&program)).unwrap();
+//! let reply = fleet.infer("churn", data.row(0)).unwrap();
+//! assert_eq!(reply.prediction, model.predict(data.row(0)));
+//! assert_eq!(fleet.stats().models[0].served, 1);
+//! fleet.shutdown(); // drains: every admitted request is answered first
+//! ```
 
 pub mod backend;
 pub mod router;
 pub mod server;
 
 pub use backend::{Backend, CpuExactBackend, FunctionalBackend, XlaBackend};
-pub use router::Router;
+pub use router::{
+    Admission, Fleet, FleetStats, ModelConfig, ModelStats, Router, DEFAULT_QUEUE_CAP,
+};
 pub use server::{BatchPolicy, Reply, Server, ServerStats, ShardStats, LATENCY_RESERVOIR_CAP};

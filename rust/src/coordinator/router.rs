@@ -1,99 +1,557 @@
-//! Request router: the multi-model front end.
+//! Model fleet coordinator: the multi-tenant serving front end.
 //!
 //! §III-D: "multiple unique models can be mapped to the accelerator, by
-//! assigning a different batch to each model". The router owns the
-//! quantizers (the host-side "DAC"), routes raw feature rows to the right
-//! model's server, and exposes aggregate metrics.
+//! assigning a different batch to each model". [`Fleet`] is that host:
+//! it owns one sharded [`Server`] per registered model (the quantizer is
+//! the host-side "DAC"), routes raw feature rows — single rows or whole
+//! client batches — to the right model's pool, and degrades
+//! deterministically under overload:
+//!
+//! * **sharded + planned registration** — [`Fleet::register_program`]
+//!   partitions a compiled [`CamProgram`] across
+//!   [`ModelConfig::shards`] cards and spins up
+//!   [`Server::start_sharded`] over planned-execution functional
+//!   backends; [`Fleet::register_backends`] accepts any backend pool
+//!   (simulated PCIe cards, XLA) for the same route;
+//! * **admission control** — each route holds a bounded queue
+//!   ([`ModelConfig::queue_cap`]): [`Fleet::submit`] returns
+//!   [`Admission::Accepted`] with the reply channel or
+//!   [`Admission::Shed`] with the observed depth, and per-model +
+//!   fleet-level shed/admitted counters account for every request
+//!   exactly (an overloaded tenant sheds at its cap instead of growing
+//!   an unbounded mpsc queue — the resource-contention regime RETENTION
+//!   (Liao et al., 2025) studies for tree ensembles on CAMs);
+//! * **hot swap / unload** — [`Fleet::swap_program`] atomically
+//!   replaces a route while the old server drains under the
+//!   [`Server::shutdown`] drain contract: every already-admitted
+//!   request is answered by the server (and therefore the program) it
+//!   was admitted to, bit-exactly, and only then do the old workers
+//!   exit (DESIGN.md §5 contract 6). This is what lets the
+//!   hardware-aware-training retrain → redeploy loop (PR 3) run against
+//!   live traffic;
+//! * **fleet observability** — [`Fleet::stats`] returns named
+//!   [`FleetStats`]/[`ModelStats`] (admitted/shed/served, batching,
+//!   queue depth, per-shard counters, latency summary from the
+//!   bounded reservoir) consumed by `xtime serve --models …` and
+//!   `examples/fleet_serving.rs`.
+//!
+//! [`Router`] remains as a thin alias for the single-model-era name;
+//! duplicate registration is an error (replacement goes through
+//! `swap_*` exclusively, so a live server can never be dropped without
+//! its drain).
 
-use super::server::{BatchPolicy, Reply, Server};
-use super::backend::Backend;
+use super::backend::{Backend, FunctionalBackend};
+use super::server::{BatchPolicy, QueueTicket, Reply, Server, ShardStats};
+use crate::compiler::{partition, CamProgram, PartitionOptions};
 use crate::data::FeatureQuantizer;
+use crate::util::stats::Summary;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
+use std::sync::{Arc, RwLock};
 
-struct Route {
-    server: Server,
-    quantizer: FeatureQuantizer,
-    n_features: usize,
+/// Default bounded-queue capacity for [`ModelConfig`]: deep enough that
+/// a healthy backend never sheds, small enough that a stalled one
+/// back-pressures clients in milliseconds instead of hoarding requests.
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
+/// Per-model serving configuration.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    /// Worker backends the route fans out to (≥ 1). For
+    /// [`Fleet::register_program`] this is the number of shard programs
+    /// the compiled model is partitioned into (one virtual PCIe card
+    /// each, ADR-001); `1` serves the unpartitioned program.
+    pub shards: usize,
+    /// Dynamic-batching policy for the route's server, including the
+    /// planned-execution `threads` knob pushed to every backend
+    /// (ADR-002; bit-identical at every setting).
+    pub batch_policy: BatchPolicy,
+    /// Admission bound: at most this many requests may be in the server
+    /// (admitted, reply not yet sent) before [`Fleet::submit`] sheds.
+    /// `0` = unbounded (the pre-fleet behavior).
+    pub queue_cap: usize,
+    /// Host-side "DAC": raw f32 rows → quantized bins for this model.
+    pub quantizer: FeatureQuantizer,
 }
 
-/// Routes requests by model name.
-#[derive(Default)]
-pub struct Router {
-    routes: BTreeMap<String, Route>,
-}
-
-impl Router {
-    pub fn new() -> Router {
-        Router::default()
+impl ModelConfig {
+    /// Config serving `program` unsharded with the default batch policy
+    /// and queue bound; chain [`ModelConfig::with_shards`] /
+    /// [`ModelConfig::with_policy`] / [`ModelConfig::with_queue_cap`]
+    /// to specialize.
+    pub fn for_program(program: &CamProgram) -> ModelConfig {
+        ModelConfig {
+            shards: 1,
+            batch_policy: BatchPolicy::default(),
+            queue_cap: DEFAULT_QUEUE_CAP,
+            quantizer: program.quantizer.clone(),
+        }
     }
 
-    /// Register a model: its quantizer + a backend to serve it.
+    pub fn with_shards(mut self, shards: usize) -> ModelConfig {
+        self.shards = shards.max(1);
+        self
+    }
+
+    pub fn with_policy(mut self, policy: BatchPolicy) -> ModelConfig {
+        self.batch_policy = policy;
+        self
+    }
+
+    pub fn with_queue_cap(mut self, cap: usize) -> ModelConfig {
+        self.queue_cap = cap;
+        self
+    }
+}
+
+/// Outcome of submitting a request to a bounded route.
+pub enum Admission {
+    /// The request holds a queue slot; the reply arrives on the channel
+    /// (successful or error — never silently dropped, even across a
+    /// swap or unregister of the model).
+    Accepted(Receiver<Reply>),
+    /// The route's queue was at capacity; the request was **not**
+    /// enqueued and is counted in the model's and the fleet's `shed`.
+    Shed {
+        /// The queue bound the refusal was made against
+        /// ([`ModelConfig::queue_cap`]): the route held this many
+        /// admitted-but-unanswered requests when the claim failed. (The
+        /// live gauge may already be lower by the time the caller looks
+        /// — workers drain concurrently — so the *configured* bound is
+        /// reported, which is deterministic.)
+        queue_depth: usize,
+    },
+}
+
+impl Admission {
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, Admission::Accepted(_))
+    }
+
+    /// Blocking convenience: wait for the reply, folding shedding and
+    /// backend errors into `Err`.
+    pub fn recv(self) -> Result<Reply, String> {
+        match self {
+            Admission::Shed { queue_depth } => {
+                Err(format!("request shed (queue at {queue_depth})"))
+            }
+            Admission::Accepted(rx) => {
+                let reply =
+                    rx.recv().map_err(|_| "worker dropped the request".to_string())?;
+                match reply.error {
+                    Some(e) => Err(e),
+                    None => Ok(reply),
+                }
+            }
+        }
+    }
+}
+
+/// One registered model: its server pool plus admission state.
+struct Route {
+    server: Server,
+    cfg: ModelConfig,
+    n_features: usize,
+    /// Requests admitted whose reply has not been sent yet (the ticket
+    /// gauge; see [`QueueTicket`]).
+    depth: Arc<AtomicUsize>,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl Route {
+    fn start(
+        backends: Vec<Box<dyn Backend>>,
+        base_score: Vec<f32>,
+        cfg: ModelConfig,
+    ) -> Result<Route, String> {
+        if backends.is_empty() {
+            return Err("a route needs at least one backend".to_string());
+        }
+        let n_features = cfg.quantizer.edges.len();
+        let server = Server::start_sharded(backends, base_score, cfg.batch_policy, n_features);
+        Ok(Route {
+            server,
+            cfg,
+            n_features,
+            depth: Arc::new(AtomicUsize::new(0)),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        })
+    }
+
+    fn stats(&self, name: &str) -> ModelStats {
+        let s = self.server.stats();
+        ModelStats {
+            name: name.to_string(),
+            shards: s.shards.len(),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            served: self.server.latency_samples_seen(),
+            errors: s.errors,
+            batches: s.batches,
+            mean_batch: s.mean_batch,
+            queue_depth: self.depth.load(Ordering::Acquire),
+            queue_cap: self.cfg.queue_cap,
+            latency: self.server.latency_summary(),
+            shard_stats: s.shards,
+        }
+    }
+}
+
+/// Point-in-time statistics of one route (since its registration or
+/// last swap — a swap starts a fresh server and fresh route counters;
+/// fleet-level totals in [`FleetStats`] survive).
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub name: String,
+    /// Worker backends in the route's pool.
+    pub shards: usize,
+    /// Requests that passed admission.
+    pub admitted: u64,
+    /// Requests refused at the queue bound (never enqueued).
+    pub shed: u64,
+    /// Rows whose successful reply has been sent.
+    pub served: u64,
+    /// Rows that received an error reply (backend/shard failures).
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Admitted requests still owed a reply right now.
+    pub queue_depth: usize,
+    /// Admission bound (0 = unbounded).
+    pub queue_cap: usize,
+    /// Seconds; uniform reservoir sample over everything served
+    /// ([`super::LATENCY_RESERVOIR_CAP`] retained samples).
+    pub latency: Option<Summary>,
+    /// Per-worker counters from the route's server.
+    pub shard_stats: Vec<ShardStats>,
+}
+
+/// Fleet-wide snapshot: every live route plus lifetime totals.
+#[derive(Clone, Debug)]
+pub struct FleetStats {
+    /// One entry per registered model, name-sorted.
+    pub models: Vec<ModelStats>,
+    /// Requests admitted across the fleet's lifetime — including routes
+    /// since swapped or unregistered.
+    pub admitted: u64,
+    /// Requests shed across the fleet's lifetime.
+    pub shed: u64,
+}
+
+/// Multi-model fleet coordinator. All methods take `&self` (routes live
+/// behind an `RwLock`), so one `Arc<Fleet>` serves concurrent client
+/// threads while another thread swaps or unloads models.
+///
+/// The lock guards only the name→route map; submissions clone the
+/// route's `Arc` and quantize/admit **outside** the lock, so one
+/// tenant's large client batch can never head-of-line-block other
+/// tenants (or an operator's swap) behind the guard.
+#[derive(Default)]
+pub struct Fleet {
+    routes: RwLock<BTreeMap<String, Arc<Route>>>,
+    total_admitted: AtomicU64,
+    total_shed: AtomicU64,
+}
+
+/// The single-model-era name; the fleet is a drop-in superset.
+pub type Router = Fleet;
+
+impl Fleet {
+    pub fn new() -> Fleet {
+        Fleet::default()
+    }
+
+    /// Register a compiled program: partitions it into
+    /// [`ModelConfig::shards`] shard programs (ADR-001) and serves each
+    /// through a planned-execution [`FunctionalBackend`]
+    /// ([`Server::start_sharded`] aggregation is bit-identical to the
+    /// unsharded engine). Errors if `name` is already registered —
+    /// replacement goes through [`Fleet::swap_program`].
+    pub fn register_program(
+        &self,
+        name: &str,
+        program: &CamProgram,
+        cfg: ModelConfig,
+    ) -> Result<(), String> {
+        let (backends, base_score) = functional_shards(program, cfg.shards)?;
+        self.register_backends(name, backends, base_score, cfg)
+    }
+
+    /// Register a model served by an explicit backend pool (simulated
+    /// PCIe cards, XLA, test doubles). `base_score` is the source
+    /// ensemble's additive prior for >1 backend
+    /// ([`crate::compiler::ShardPlan::base_score`]); ignored for a pool
+    /// of one.
+    pub fn register_backends(
+        &self,
+        name: &str,
+        backends: Vec<Box<dyn Backend>>,
+        base_score: Vec<f32>,
+        cfg: ModelConfig,
+    ) -> Result<(), String> {
+        let route = Route::start(backends, base_score, cfg)?;
+        let mut routes = self.routes.write().unwrap();
+        if routes.contains_key(name) {
+            // The fresh route has seen no traffic; dropping it just
+            // joins idle workers. The live server is untouched.
+            return Err(format!(
+                "model `{name}` is already registered; replace it with `swap`, not `register`"
+            ));
+        }
+        routes.insert(name.to_string(), Arc::new(route));
+        Ok(())
+    }
+
+    /// Compatibility shim for the pre-fleet `Router::register`: one
+    /// backend, unbounded queue. Now **errors on duplicate names**
+    /// instead of silently dropping the old route's server mid-flight.
     pub fn register(
-        &mut self,
+        &self,
         name: &str,
         quantizer: FeatureQuantizer,
         backend: Box<dyn Backend>,
         policy: BatchPolicy,
-    ) {
-        let n_features = quantizer.edges.len();
-        let server = Server::start(backend, policy, n_features);
-        self.routes.insert(name.to_string(), Route { server, quantizer, n_features });
+    ) -> Result<(), String> {
+        let cfg =
+            ModelConfig { shards: 1, batch_policy: policy, queue_cap: 0, quantizer };
+        self.register_backends(name, vec![backend], Vec::new(), cfg)
     }
 
-    pub fn models(&self) -> Vec<&str> {
-        self.routes.keys().map(|s| s.as_str()).collect()
+    /// Hot-swap `name` to a newly compiled program (the HAT retrain →
+    /// redeploy loop): the new sharded server goes live atomically, then
+    /// this call blocks while the old server drains — every request
+    /// admitted before the swap receives its reply *from the old
+    /// program*, bit-exactly (contract 6). Errors if `name` is unknown.
+    pub fn swap_program(
+        &self,
+        name: &str,
+        program: &CamProgram,
+        cfg: ModelConfig,
+    ) -> Result<(), String> {
+        let (backends, base_score) = functional_shards(program, cfg.shards)?;
+        self.swap_backends(name, backends, base_score, cfg)
     }
 
-    /// Async submit of a raw feature row.
-    pub fn submit(&self, model: &str, row: &[f32]) -> Result<Receiver<Reply>, String> {
-        let route = self.routes.get(model).ok_or_else(|| format!("unknown model `{model}`"))?;
-        if row.len() != route.n_features {
-            return Err(format!(
-                "model `{model}` expects {} features, got {}",
-                route.n_features,
-                row.len()
-            ));
+    /// [`Fleet::swap_program`] for an explicit backend pool.
+    pub fn swap_backends(
+        &self,
+        name: &str,
+        backends: Vec<Box<dyn Backend>>,
+        base_score: Vec<f32>,
+        cfg: ModelConfig,
+    ) -> Result<(), String> {
+        let fresh = Route::start(backends, base_score, cfg)?;
+        let old = {
+            let mut routes = self.routes.write().unwrap();
+            match routes.get_mut(name) {
+                Some(slot) => std::mem::replace(slot, Arc::new(fresh)),
+                None => {
+                    return Err(format!(
+                        "cannot swap unknown model `{name}`; register it first"
+                    ))
+                }
+            }
+        };
+        // Write lock released: new submissions already land on the new
+        // server. Old in-flight requests hold reply channels bound to
+        // the old server; the drain blocks until each has its reply
+        // (the drain contract), so no queued reply is ever dropped.
+        drain_route(old);
+        Ok(())
+    }
+
+    /// Unload a model. Blocks while the route's server drains: requests
+    /// admitted before the unregister still receive their replies.
+    pub fn unregister(&self, name: &str) -> Result<(), String> {
+        let old = self
+            .routes
+            .write()
+            .unwrap()
+            .remove(name)
+            .ok_or_else(|| format!("cannot unregister unknown model `{name}`"))?;
+        drain_route(old);
+        Ok(())
+    }
+
+    /// Registered model names (sorted).
+    pub fn models(&self) -> Vec<String> {
+        self.routes.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Admission-controlled async submit of a raw feature row.
+    pub fn submit(&self, model: &str, row: &[f32]) -> Result<Admission, String> {
+        let route = self.route(model)?; // routes lock released here
+        check_arity(&route, model, row.len())?;
+        Ok(self.admit(&route, route.cfg.quantizer.bin_row(row)))
+    }
+
+    /// Admission-controlled submit of a whole client batch. Rows are
+    /// enqueued back to back onto one route snapshot, so the server's
+    /// dynamic batcher coalesces them into shared device batches — the
+    /// PR 2/4 batched hot path — instead of row-at-a-time round trips.
+    /// Quantization and admission run outside the routes lock, so a
+    /// large batch never head-of-line-blocks other tenants. Input
+    /// errors (unknown model, wrong arity anywhere in the batch) fail
+    /// the whole call before anything is enqueued; per-row admission is
+    /// reported in the returned vector.
+    pub fn submit_batch(
+        &self,
+        model: &str,
+        rows: &[Vec<f32>],
+    ) -> Result<Vec<Admission>, String> {
+        let route = self.route(model)?; // routes lock released here
+        for row in rows {
+            check_arity(&route, model, row.len())?;
         }
-        Ok(route.server.submit(route.quantizer.bin_row(row)))
-    }
-
-    /// Blocking inference. Backend/shard failures surface in the `Err`
-    /// arm (the server sends an error [`Reply`] rather than hanging up),
-    /// so `Ok` always carries a served prediction.
-    pub fn infer(&self, model: &str, row: &[f32]) -> Result<Reply, String> {
-        let reply = self
-            .submit(model, row)?
-            .recv()
-            .map_err(|_| format!("model `{model}` worker dropped the request"))?;
-        match reply.error {
-            Some(e) => Err(format!("model `{model}` inference failed: {e}")),
-            None => Ok(reply),
-        }
-    }
-
-    /// Per-model (requests, mean batch) metrics.
-    pub fn stats(&self) -> Vec<(String, u64, f64)> {
-        self.routes
+        Ok(rows
             .iter()
-            .map(|(name, r)| {
-                let s = r.server.stats();
-                (name.clone(), s.requests, s.mean_batch)
-            })
-            .collect()
+            .map(|row| self.admit(&route, route.cfg.quantizer.bin_row(row)))
+            .collect())
     }
+
+    /// Blocking single-row inference. Shedding, backend/shard failures
+    /// and unknown models all surface in the `Err` arm, so `Ok` always
+    /// carries a served prediction.
+    pub fn infer(&self, model: &str, row: &[f32]) -> Result<Reply, String> {
+        self.submit(model, row)?
+            .recv()
+            .map_err(|e| format!("model `{model}`: {e}"))
+    }
+
+    /// Blocking batch inference: submit the whole batch, then wait for
+    /// every reply. Per-row outcomes (shed rows, failed batches) come
+    /// back as `Err` entries; the outer `Err` is for input errors only.
+    pub fn infer_batch(
+        &self,
+        model: &str,
+        rows: &[Vec<f32>],
+    ) -> Result<Vec<Result<Reply, String>>, String> {
+        let admissions = self.submit_batch(model, rows)?;
+        Ok(admissions.into_iter().map(Admission::recv).collect())
+    }
+
+    /// Stats for one model, `None` if unknown.
+    pub fn model_stats(&self, name: &str) -> Option<ModelStats> {
+        let route = self.routes.read().unwrap().get(name).cloned()?;
+        Some(route.stats(name))
+    }
+
+    /// Fleet-wide snapshot: per-model [`ModelStats`] plus lifetime
+    /// admitted/shed totals. Counter snapshotting runs outside the
+    /// routes lock.
+    pub fn stats(&self) -> FleetStats {
+        let routes: Vec<(String, Arc<Route>)> = self
+            .routes
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, r)| (name.clone(), r.clone()))
+            .collect();
+        FleetStats {
+            models: routes.iter().map(|(name, r)| r.stats(name)).collect(),
+            admitted: self.total_admitted.load(Ordering::Relaxed),
+            shed: self.total_shed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drain every route and join all workers.
+    pub fn shutdown(self) {
+        let routes = self.routes.into_inner().unwrap();
+        for (_, route) in routes {
+            drain_route(route);
+        }
+    }
+
+    /// Clone the named route's handle out of the map — the lock guard
+    /// lives only for this statement, so quantization, admission and
+    /// reply waits all run without it.
+    fn route(&self, model: &str) -> Result<Arc<Route>, String> {
+        self.routes
+            .read()
+            .unwrap()
+            .get(model)
+            .cloned()
+            .ok_or_else(|| format!("unknown model `{model}`"))
+    }
+
+    fn admit(&self, route: &Route, bins: Vec<u16>) -> Admission {
+        match QueueTicket::try_claim(&route.depth, route.cfg.queue_cap) {
+            Some(ticket) => {
+                route.admitted.fetch_add(1, Ordering::Relaxed);
+                self.total_admitted.fetch_add(1, Ordering::Relaxed);
+                Admission::Accepted(route.server.submit_ticketed(bins, Some(ticket)))
+            }
+            None => {
+                route.shed.fetch_add(1, Ordering::Relaxed);
+                self.total_shed.fetch_add(1, Ordering::Relaxed);
+                Admission::Shed { queue_depth: route.cfg.queue_cap }
+            }
+        }
+    }
+}
+
+/// Block until no submitter still holds `route` (they hold it only for
+/// the short lookup→enqueue window), then drain its server: every
+/// request it admitted receives its reply before this returns —
+/// `swap_*`/`unregister` ride this for contract 6's "returns only after
+/// the drain completed".
+fn drain_route(mut route: Arc<Route>) {
+    let route = loop {
+        match Arc::try_unwrap(route) {
+            Ok(route) => break route,
+            Err(still_shared) => {
+                route = still_shared;
+                std::thread::yield_now();
+            }
+        }
+    };
+    let Route { server, .. } = route;
+    server.shutdown();
+}
+
+fn check_arity(route: &Route, model: &str, got: usize) -> Result<(), String> {
+    if got != route.n_features {
+        return Err(format!(
+            "model `{model}` expects {} features, got {got}",
+            route.n_features
+        ));
+    }
+    Ok(())
+}
+
+/// Partition `program` into `shards` planned-execution functional
+/// backends (1 = serve unpartitioned; base score then stays with the
+/// single backend's own `infer`).
+fn functional_shards(
+    program: &CamProgram,
+    shards: usize,
+) -> Result<(Vec<Box<dyn Backend>>, Vec<f32>), String> {
+    if shards <= 1 {
+        return Ok((vec![Box::new(FunctionalBackend::new(program))], Vec::new()));
+    }
+    let plan = partition(program, shards, &PartitionOptions::default())
+        .map_err(|e| format!("partitioning `{}` into {shards} shards: {e}", program.name))?;
+    let backends = plan
+        .shards
+        .iter()
+        .map(|s| Box::new(FunctionalBackend::new(s)) as Box<dyn Backend>)
+        .collect();
+    Ok((backends, plan.base_score))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::{compile, CompileOptions};
+    use crate::compiler::{compile, CamEngine, CompileOptions};
     use crate::coordinator::backend::FunctionalBackend;
     use crate::data::by_name;
     use crate::trees::{gbdt, GbdtParams};
 
     fn add_model(
-        router: &mut Router,
+        fleet: &Fleet,
         dataset: &str,
     ) -> (crate::data::Dataset, crate::trees::Ensemble) {
         let d = by_name(dataset).unwrap().generate_n(600);
@@ -103,42 +561,122 @@ mod tests {
             None,
         );
         let p = compile(&m, &CompileOptions::default()).unwrap();
-        router.register(
-            dataset,
-            p.quantizer.clone(),
-            Box::new(FunctionalBackend::new(&p)),
-            BatchPolicy::default(),
-        );
+        fleet
+            .register(
+                dataset,
+                p.quantizer.clone(),
+                Box::new(FunctionalBackend::new(&p)),
+                BatchPolicy::default(),
+            )
+            .unwrap();
         (d, m)
     }
 
     #[test]
     fn routes_multiple_models() {
-        let mut router = Router::new();
-        let (d1, m1) = add_model(&mut router, "churn");
-        let (d2, m2) = add_model(&mut router, "telco");
-        assert_eq!(router.models(), vec!["churn", "telco"]);
+        let fleet = Fleet::new();
+        let (d1, m1) = add_model(&fleet, "churn");
+        let (d2, m2) = add_model(&fleet, "telco");
+        assert_eq!(fleet.models(), vec!["churn".to_string(), "telco".to_string()]);
         for i in 0..20 {
-            let r1 = router.infer("churn", d1.row(i)).unwrap();
+            let r1 = fleet.infer("churn", d1.row(i)).unwrap();
             assert_eq!(r1.prediction, m1.predict(d1.row(i)));
-            let r2 = router.infer("telco", d2.row(i)).unwrap();
+            let r2 = fleet.infer("telco", d2.row(i)).unwrap();
             assert_eq!(r2.prediction, m2.predict(d2.row(i)));
         }
-        let stats = router.stats();
-        assert_eq!(stats.len(), 2);
-        assert!(stats.iter().all(|(_, reqs, _)| *reqs == 20));
+        let stats = fleet.stats();
+        assert_eq!(stats.models.len(), 2);
+        assert!(stats.models.iter().all(|m| m.admitted == 20 && m.shed == 0));
+        assert_eq!(stats.admitted, 40);
+        assert_eq!(stats.shed, 0);
     }
 
     #[test]
     fn rejects_unknown_model_and_bad_arity() {
-        let mut router = Router::new();
-        let (d, _) = add_model(&mut router, "churn");
-        assert!(router.infer("nope", d.row(0)).is_err());
-        assert!(router.infer("churn", &[1.0, 2.0]).is_err());
+        let fleet = Fleet::new();
+        let (d, _) = add_model(&fleet, "churn");
+        assert!(fleet.infer("nope", d.row(0)).is_err());
+        assert!(fleet.infer("churn", &[1.0, 2.0]).is_err());
+        assert!(fleet.submit_batch("churn", &[d.row(0).to_vec(), vec![1.0]]).is_err());
+        assert!(fleet.swap_program("nope", &dummy_program(), dummy_cfg()).is_err());
+        assert!(fleet.unregister("nope").is_err());
+    }
+
+    fn dummy_program() -> crate::compiler::CamProgram {
+        let d = by_name("churn").unwrap().generate_n(300);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 2, max_leaves: 4, ..Default::default() },
+            None,
+        );
+        compile(&m, &CompileOptions::default()).unwrap()
+    }
+
+    fn dummy_cfg() -> ModelConfig {
+        ModelConfig::for_program(&dummy_program())
+    }
+
+    /// Regression (ISSUE 5 satellite): `register` on an existing name
+    /// used to `BTreeMap::insert`-overwrite the route, dropping the old
+    /// `Server` without its drain. It must refuse instead, leave the old
+    /// route serving, and point at `swap`.
+    #[test]
+    fn duplicate_register_is_an_error_and_old_route_survives() {
+        let fleet = Fleet::new();
+        let (d, m) = add_model(&fleet, "churn");
+        let err = fleet
+            .register(
+                "churn",
+                m.quantizer.clone(),
+                Box::new(FunctionalBackend::new(
+                    &compile(&m, &CompileOptions::default()).unwrap(),
+                )),
+                BatchPolicy::default(),
+            )
+            .unwrap_err();
+        assert!(err.contains("swap"), "error should direct to swap: `{err}`");
+        // The original route is untouched and still serves correctly.
+        let r = fleet.infer("churn", d.row(0)).unwrap();
+        assert_eq!(r.prediction, m.predict(d.row(0)));
+    }
+
+    /// Sharded registration through the fleet serves bit-identically to
+    /// the unsharded engine, and the per-model stats expose the pool.
+    #[test]
+    fn register_program_sharded_matches_reference() {
+        let d = by_name("telco").unwrap().generate_n(800);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 12, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let reference = CamEngine::new(&p);
+        let fleet = Fleet::new();
+        fleet
+            .register_program("telco", &p, ModelConfig::for_program(&p).with_shards(3))
+            .unwrap();
+        let rows: Vec<Vec<f32>> = (0..24).map(|i| d.row(i).to_vec()).collect();
+        for (i, reply) in fleet.infer_batch("telco", &rows).unwrap().into_iter().enumerate() {
+            let reply = reply.unwrap();
+            assert_eq!(
+                reply.logits,
+                reference.infer_bins(&p.quantizer.bin_row(&rows[i])),
+                "row {i}"
+            );
+        }
+        let s = fleet.model_stats("telco").unwrap();
+        assert_eq!(s.shards, 3);
+        assert_eq!(s.admitted, 24);
+        assert_eq!(s.served, 24);
+        assert_eq!(s.errors, 0);
+        assert_eq!(s.queue_depth, 0, "all replies delivered → queue empty");
+        assert_eq!(s.shard_stats.len(), 3);
+        assert!(s.latency.is_some());
     }
 
     /// Regression: the server reports backend failures via an error
-    /// `Reply` (it no longer hangs up), so `Router::infer` must fold
+    /// `Reply` (it no longer hangs up), so `Fleet::infer` must fold
     /// that into its `Err` arm rather than returning an `Ok` carrying
     /// NaN/empty logits.
     #[test]
@@ -158,14 +696,19 @@ mod tests {
                 Err(anyhow::anyhow!("injected fault"))
             }
         }
-        let mut router = Router::new();
-        router.register(
-            "flaky",
-            FeatureQuantizer { n_bits: 1, edges: vec![vec![0.5]] },
-            Box::new(FailingBackend),
-            BatchPolicy::default(),
-        );
-        let err = router.infer("flaky", &[0.3]).unwrap_err();
+        let fleet = Fleet::new();
+        fleet
+            .register(
+                "flaky",
+                FeatureQuantizer { n_bits: 1, edges: vec![vec![0.5]] },
+                Box::new(FailingBackend),
+                BatchPolicy::default(),
+            )
+            .unwrap();
+        let err = fleet.infer("flaky", &[0.3]).unwrap_err();
         assert!(err.contains("injected fault"), "got `{err}`");
+        let s = fleet.model_stats("flaky").unwrap();
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.served, 0);
     }
 }

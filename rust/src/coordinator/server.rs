@@ -30,7 +30,7 @@
 use super::backend::Backend;
 use crate::compiler::apply_base;
 use crate::util::stats::{Reservoir, Summary};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -70,24 +70,76 @@ impl Default for BatchPolicy {
 /// compiler rejects it.
 struct Bins(Vec<u16>);
 
+/// RAII slot in a bounded admission queue (the fleet's per-model
+/// backpressure gauge). Claimed by [`QueueTicket::try_claim`] before a
+/// request enters the server, released — the gauge decrements — exactly
+/// when the ticket drops, which the worker loops arrange to happen
+/// right after the request's [`Reply`] is sent. Because the ticket
+/// rides inside `Request`/`Pending` and the drain contract guarantees
+/// every queued request is replied to, the gauge can never leak a slot:
+/// admitted − replied is always the true in-server depth.
+pub(crate) struct QueueTicket(Arc<AtomicUsize>);
+
+impl QueueTicket {
+    /// Claim a slot against `depth`, refusing once `cap` slots are
+    /// held (`cap == 0` means unbounded — always admit). Lock-free CAS
+    /// loop so concurrent submitters can never overshoot the cap.
+    pub(crate) fn try_claim(depth: &Arc<AtomicUsize>, cap: usize) -> Option<QueueTicket> {
+        if cap == 0 {
+            depth.fetch_add(1, Ordering::AcqRel);
+            return Some(QueueTicket(depth.clone()));
+        }
+        let mut cur = depth.load(Ordering::Acquire);
+        loop {
+            if cur >= cap {
+                return None;
+            }
+            match depth.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(QueueTicket(depth.clone())),
+                Err(observed) => cur = observed,
+            }
+        }
+    }
+}
+
+impl Drop for QueueTicket {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
 struct Request {
     bins: Bins,
     enqueued: Instant,
     reply: Sender<Reply>,
+    /// Admission-queue slot, released when the reply has been sent
+    /// (`None` for un-gated submitters like `Server::submit`).
+    ticket: Option<QueueTicket>,
 }
 
 /// A request's reply-side remainder once its bins moved into the device
-/// batch.
+/// batch. Dropping it (after the reply send) releases the admission
+/// ticket.
 struct Pending {
     enqueued: Instant,
     reply: Sender<Reply>,
+    #[allow(dead_code)] // held for its Drop (queue-depth release)
+    ticket: Option<QueueTicket>,
 }
 
 impl Request {
     /// Split into the device-batch row (moved, not cloned) and the
     /// reply-side remainder.
     fn into_parts(self) -> (Vec<u16>, Pending) {
-        (self.bins.0, Pending { enqueued: self.enqueued, reply: self.reply })
+        (
+            self.bins.0,
+            Pending { enqueued: self.enqueued, reply: self.reply, ticket: self.ticket },
+        )
     }
 }
 
@@ -525,13 +577,26 @@ impl Server {
 
     /// Submit a quantized request; returns the reply channel.
     pub fn submit(&self, bins: Vec<u16>) -> Receiver<Reply> {
+        self.submit_ticketed(bins, None)
+    }
+
+    /// [`Server::submit`] carrying an admission [`QueueTicket`]: the
+    /// fleet's bounded per-model queues ride this — the ticket's slot is
+    /// released when the worker has sent this request's reply, so the
+    /// queue-depth gauge tracks exactly the requests the server still
+    /// owes a reply.
+    pub(crate) fn submit_ticketed(
+        &self,
+        bins: Vec<u16>,
+        ticket: Option<QueueTicket>,
+    ) -> Receiver<Reply> {
         assert_eq!(bins.len(), self.n_features, "feature arity mismatch");
         self.counters.requests.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
         self.tx
             .as_ref()
             .expect("server stopped")
-            .send(Request { bins: Bins(bins), enqueued: Instant::now(), reply: rtx })
+            .send(Request { bins: Bins(bins), enqueued: Instant::now(), reply: rtx, ticket })
             .expect("worker gone");
         rrx
     }
@@ -1043,6 +1108,58 @@ mod tests {
         let stats = server.stats();
         assert_eq!(stats.errors, 1);
         assert!(stats.shards[0].last_error.is_some());
+        server.shutdown();
+    }
+
+    /// The admission ticket is pure CAS bookkeeping: `cap` slots, claims
+    /// beyond it refused, every drop releasing exactly one slot, and
+    /// `cap == 0` admitting without bound while still counting depth.
+    #[test]
+    fn queue_ticket_caps_and_releases_slots() {
+        let depth = Arc::new(AtomicUsize::new(0));
+        let t1 = QueueTicket::try_claim(&depth, 2).expect("slot 1");
+        let _t2 = QueueTicket::try_claim(&depth, 2).expect("slot 2");
+        assert!(QueueTicket::try_claim(&depth, 2).is_none(), "cap must refuse slot 3");
+        assert_eq!(depth.load(Ordering::Acquire), 2);
+        drop(t1);
+        assert_eq!(depth.load(Ordering::Acquire), 1);
+        let _t3 = QueueTicket::try_claim(&depth, 2).expect("freed slot reclaims");
+
+        let unbounded = Arc::new(AtomicUsize::new(0));
+        let held: Vec<QueueTicket> =
+            (0..100).map(|_| QueueTicket::try_claim(&unbounded, 0).unwrap()).collect();
+        assert_eq!(unbounded.load(Ordering::Acquire), 100);
+        drop(held);
+        assert_eq!(unbounded.load(Ordering::Acquire), 0);
+    }
+
+    /// A ticketed request's slot is released only once its reply has
+    /// been sent — the gauge measures requests the server still owes.
+    #[test]
+    fn ticket_released_when_reply_sent() {
+        let (d, _, p) = setup();
+        let server = Server::start(
+            Box::new(SlowBackend {
+                inner: FunctionalBackend::new(&p),
+                delay: Duration::from_millis(40),
+            }),
+            BatchPolicy { max_wait_us: 0, max_batch: 8, threads: None },
+            p.n_features,
+        );
+        let depth = Arc::new(AtomicUsize::new(0));
+        let ticket = QueueTicket::try_claim(&depth, 1).unwrap();
+        let rx = server.submit_ticketed(p.quantizer.bin_row(d.row(0)), Some(ticket));
+        // While the slow batch is in flight the slot stays held.
+        assert_eq!(depth.load(Ordering::Acquire), 1);
+        let reply = rx.recv().unwrap();
+        assert!(reply.is_ok());
+        // The worker drops `Pending` right after the send; give its loop
+        // a moment to finish the iteration.
+        let t0 = Instant::now();
+        while depth.load(Ordering::Acquire) != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "ticket never released");
+            std::thread::yield_now();
+        }
         server.shutdown();
     }
 

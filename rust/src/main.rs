@@ -4,7 +4,8 @@
 //!   train     — train a Table II model on its synthetic dataset
 //!   compile   — compile a trained model to a CAM program
 //!   simulate  — run the cycle-detailed chip simulation
-//!   serve     — demo serving loop (XLA artifact or functional backend)
+//!   serve     — demo serving loop (XLA artifact or functional backend),
+//!               or a multi-tenant fleet with `--models a,b,c`
 //!   report    — print the Fig. 8 area/power breakdown
 //!
 //! Example:
@@ -12,14 +13,16 @@
 //!   xtime compile --model /tmp/churn.model.json --out /tmp/churn.cam.json
 //!   xtime simulate --program /tmp/churn.cam.json --samples 100000
 //!   xtime serve --program /tmp/churn.cam.json --requests 1000
+//!   xtime serve --models churn,telco,gas --shards 2 --requests 6000
 
 use std::path::Path;
+use xtime::bench_support::{drive_skewed_mix, fleet_table, MixTenant};
 use xtime::compiler::{compile, CamProgram, CompileOptions};
-use xtime::coordinator::{BatchPolicy, FunctionalBackend, Server, XlaBackend};
+use xtime::coordinator::{BatchPolicy, Fleet, FunctionalBackend, ModelConfig, Server, XlaBackend};
 use xtime::data::{by_name, catalog};
 use xtime::runtime::XlaCamEngine;
 use xtime::sim::{chip_area, chip_peak_power, simulate, ChipConfig, Workload};
-use xtime::trees::{paper_model, train_paper_model, Ensemble};
+use xtime::trees::{gbdt, paper_model, train_paper_model, Ensemble, GbdtParams};
 use xtime::util::stats::{fmt_si_rate, fmt_si_time};
 use xtime::util::Args;
 
@@ -161,12 +164,27 @@ fn cmd_simulate(argv: &[String]) {
 fn cmd_serve(argv: &[String]) {
     let a = parse(
         Args::new("xtime serve", "demo serving loop over synthetic requests")
-            .opt("program", None, "compiled CAM program JSON")
+            .opt("program", Some(""), "compiled CAM program JSON (single-model mode)")
+            .opt("models", Some(""), "comma-separated dataset names → multi-tenant fleet mode")
             .opt("requests", Some("1000"), "number of requests")
             .opt("backend", Some("auto"), "auto | xla | functional")
-            .opt("artifacts", Some("artifacts"), "AOT artifact directory"),
+            .opt("artifacts", Some("artifacts"), "AOT artifact directory")
+            .opt("shards", Some("1"), "fleet mode: shard programs (virtual cards) per model")
+            .opt("queue-cap", Some("1024"), "fleet mode: per-model admission bound (0 = unbounded)")
+            .opt(
+                "threads",
+                Some("1"),
+                "fleet mode: planned-execution workers per backend (0 = auto)",
+            ),
         argv,
     );
+    if !a.get("models").is_empty() {
+        return cmd_serve_fleet(&a);
+    }
+    if a.get("program").is_empty() {
+        eprintln!("serve needs --program <file> (single-model) or --models <a,b,c> (fleet)");
+        std::process::exit(2);
+    }
     let program = load_program(&a.get("program"));
     let n = a.get_usize("requests");
     let Some(spec) = by_name(&program.name) else {
@@ -221,6 +239,99 @@ fn cmd_serve(argv: &[String]) {
         fmt_si_time(lat.max)
     );
     println!("batching   : {} batches, mean size {:.1}", stats.batches, stats.mean_batch);
+}
+
+/// Multi-tenant fleet mode (`xtime serve --models churn,telco,gas`):
+/// trains one small model per named catalog dataset in-process, registers
+/// each as a sharded route with a bounded admission queue, drives a
+/// skewed load mix across the tenants, and prints the per-model fleet
+/// table (§III-D "a different batch to each model").
+fn cmd_serve_fleet(a: &Args) {
+    let names: Vec<String> = a
+        .get("models")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        eprintln!("--models needs at least one dataset name");
+        std::process::exit(2);
+    }
+    let shards = a.get_usize("shards").max(1);
+    let queue_cap = a.get_usize("queue-cap");
+    let threads = a.get_usize("threads");
+    let n_requests = a.get_usize("requests");
+
+    let fleet = Fleet::new();
+    let mut datasets = Vec::new();
+    println!(
+        "building fleet: {} model(s) × {shards} shard(s) each, queue cap {}",
+        names.len(),
+        if queue_cap == 0 { "∞".to_string() } else { queue_cap.to_string() }
+    );
+    for name in &names {
+        let Some(spec) = by_name(name) else {
+            eprintln!(
+                "unknown dataset `{name}`; catalog: {}",
+                catalog().iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+            );
+            std::process::exit(2);
+        };
+        let data = spec.generate_n(2_000);
+        let model = gbdt::train(
+            &data,
+            &GbdtParams { n_rounds: 16, max_leaves: 32, ..Default::default() },
+            None,
+        );
+        let program = compile(&model, &CompileOptions::default()).unwrap_or_else(|e| {
+            eprintln!("compiling `{name}`: {e}");
+            std::process::exit(2);
+        });
+        let policy = BatchPolicy { max_wait_us: 200, max_batch: 0, threads: Some(threads) };
+        let cfg = ModelConfig::for_program(&program)
+            .with_shards(shards)
+            .with_policy(policy)
+            .with_queue_cap(queue_cap);
+        fleet.register_program(name, &program, cfg).unwrap_or_else(|e| {
+            eprintln!("registering `{name}`: {e}");
+            std::process::exit(2);
+        });
+        println!(
+            "  {name}: {} trees, {} CAM rows → {shards} shard(s)",
+            program.n_trees,
+            program.total_rows(),
+        );
+        datasets.push(data);
+    }
+
+    // Skewed tenant mix (weights 2^(k-1) … 1): the first model is the
+    // hot tenant, the last the cold one.
+    let tenants: Vec<MixTenant> = names
+        .iter()
+        .zip(&datasets)
+        .enumerate()
+        .map(|(i, (name, data))| MixTenant {
+            name: name.as_str(),
+            data,
+            weight: 1usize << (names.len() - 1 - i),
+        })
+        .collect();
+    let mix = drive_skewed_mix(&fleet, &tenants, n_requests, 7).unwrap_or_else(|e| {
+        eprintln!("submit failed: {e}");
+        std::process::exit(2);
+    });
+
+    fleet_table(&fleet.stats()).print(&format!(
+        "fleet serving — {n_requests} requests in {} (mix {})",
+        fmt_si_time(mix.wall_s),
+        tenants.iter().map(|t| t.weight.to_string()).collect::<Vec<_>>().join(":")
+    ));
+    println!("throughput : {}", fmt_si_rate(mix.served as f64 / mix.wall_s, "req"));
+    println!(
+        "admission  : {} served, {} shed, {} errored (every request accounted)",
+        mix.served, mix.shed, mix.errors
+    );
+    fleet.shutdown();
 }
 
 fn cmd_report() {

@@ -1,6 +1,18 @@
 //! PJRT (XLA) runtime: loads the AOT artifacts produced by
 //! `python/compile/aot.py` and executes them on the request path with no
 //! Python involvement (DESIGN.md §1).
+//!
+//! The artifact bundle is optional at runtime: without one, the loader
+//! reports a clean error (and serving falls back to the functional
+//! backend — `xtime serve --backend auto`), it never panics:
+//!
+//! ```
+//! use std::path::Path;
+//! use xtime::runtime::Manifest;
+//!
+//! let err = Manifest::load(Path::new("no/such/artifacts")).unwrap_err();
+//! assert!(err.contains("make artifacts"), "error should say how to build: {err}");
+//! ```
 
 pub mod engine;
 pub mod manifest;

@@ -1,6 +1,23 @@
 //! Cycle-detailed simulator of the X-TIME chip (SST-equivalent, §IV-B):
-//! discrete-event substrate, chip timing model, and the Fig. 8
-//! area/power/energy cost model.
+//! discrete-event substrate, chip timing model, the Fig. 8
+//! area/power/energy cost model, the PCIe card model, and
+//! [`SimCardBackend`] — a simulated card usable as a serving backend
+//! (one virtual card per shard of a fleet route).
+//!
+//! The cost model is pure arithmetic over [`ChipConfig`], so the Fig. 8
+//! breakdown is available without running a simulation:
+//!
+//! ```
+//! use xtime::sim::{chip_area, chip_peak_power, ChipConfig};
+//!
+//! let cfg = ChipConfig::default(); // the paper's 4096-core 16 nm chip
+//! let area = chip_area(&cfg);
+//! let power = chip_peak_power(&cfg);
+//! assert!(area.total() > 0.0, "total die area (mm²)");
+//! assert!(power.total() > 0.0, "peak power (W)");
+//! // Every breakdown row contributes a non-negative share.
+//! assert!(area.rows("mm²").iter().all(|(_, v)| *v >= 0.0));
+//! ```
 
 pub mod backend;
 pub mod card;

@@ -1,0 +1,393 @@
+//! Fleet behavior under stress (ISSUE 5): swap-under-load bit-identity,
+//! exact shed accounting under a slow backend, drain-on-unregister, and
+//! multi-model concurrent clients.
+//!
+//! The drain contract these tests pin (DESIGN.md §5 contract 6): every
+//! request admitted before a `swap`/`unregister` receives its reply
+//! from the server — and therefore the program — it was admitted to,
+//! bit-exactly; shed accounting is exact because `admitted + shed`
+//! equals offered requests by construction (each submit increments
+//! exactly one counter) and a queue slot is released only when a reply
+//! has been sent.
+
+use std::sync::Arc;
+use std::time::Duration;
+use xtime::bench_support::random_ensemble;
+use xtime::compiler::{
+    compile, partition, CamEngine, CamProgram, CompileOptions, PartitionOptions,
+};
+use xtime::coordinator::{
+    Admission, Backend, BatchPolicy, Fleet, FunctionalBackend, ModelConfig,
+};
+use xtime::data::Task;
+use xtime::util::Rng;
+
+/// Wraps a healthy functional backend with a per-batch delay so
+/// swaps/unregisters race a deep backlog of queued requests.
+struct SlowBackend {
+    inner: FunctionalBackend,
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn task(&self) -> Task {
+        self.inner.task()
+    }
+
+    fn infer(&mut self, batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.inner.infer(batch)
+    }
+
+    fn infer_partials(&mut self, batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f64>>> {
+        std::thread::sleep(self.delay);
+        self.inner.infer_partials(batch)
+    }
+}
+
+fn program(seed: u64, n_features: usize) -> CamProgram {
+    let model = random_ensemble(48, 4, n_features, Task::Binary, seed);
+    compile(&model, &CompileOptions::default()).unwrap()
+}
+
+/// N slow functional shards of `program` (sharded exactly like
+/// `Fleet::register_program`, but with the injected delay).
+fn slow_shards(
+    program: &CamProgram,
+    n: usize,
+    delay: Duration,
+) -> (Vec<Box<dyn Backend>>, Vec<f32>) {
+    if n <= 1 {
+        let b = SlowBackend { inner: FunctionalBackend::new(program), delay };
+        return (vec![Box::new(b) as Box<dyn Backend>], Vec::new());
+    }
+    let plan = partition(program, n, &PartitionOptions::default()).unwrap();
+    let backends = plan
+        .shards
+        .iter()
+        .map(|s| {
+            Box::new(SlowBackend { inner: FunctionalBackend::new(s), delay })
+                as Box<dyn Backend>
+        })
+        .collect();
+    (backends, plan.base_score)
+}
+
+fn random_rows(n_features: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..n_features).map(|_| rng.f32()).collect()).collect()
+}
+
+/// Swap under load: requests admitted *before* the swap must all be
+/// answered — bit-identically — by the **old** program, even though the
+/// new program is live by the time their batches are served; requests
+/// after the swap serve the new program. Old and new replies never
+/// interleave wrongly because each admission is bound to one server.
+#[test]
+fn swap_under_load_is_bit_exact_and_drops_nothing() {
+    let p1 = program(1, 16);
+    let p2 = program(2, 16);
+    let ref1 = CamEngine::new(&p1);
+    let ref2 = CamEngine::new(&p2);
+    let rows = random_rows(16, 32, 11);
+    let bins: Vec<Vec<u16>> = rows.iter().map(|r| p1.quantizer.bin_row(r)).collect();
+    // The swap must be observable: the two programs genuinely disagree.
+    assert!(
+        bins.iter().any(|b| ref1.infer_bins(b) != ref2.infer_bins(b)),
+        "test needs programs that differ on some query"
+    );
+
+    let fleet = Fleet::new();
+    let cfg = ModelConfig::for_program(&p1)
+        .with_policy(BatchPolicy { max_wait_us: 0, max_batch: 4, threads: None })
+        .with_queue_cap(0);
+    let (backends, base) = slow_shards(&p1, 2, Duration::from_millis(10));
+    fleet.register_backends("hot", backends, base, cfg).unwrap();
+
+    // Build a deep backlog on the old server…
+    let admissions = fleet.submit_batch("hot", &rows).unwrap();
+    // …then swap while most of it is still queued. `swap_backends`
+    // returns only after the old server drained.
+    fleet.swap_program("hot", &p2, ModelConfig::for_program(&p2)).unwrap();
+
+    for (i, adm) in admissions.into_iter().enumerate() {
+        let reply = adm.recv().unwrap_or_else(|e| {
+            panic!("pre-swap request {i} was dropped across the swap: {e}")
+        });
+        assert_eq!(
+            reply.logits,
+            ref1.infer_bins(&bins[i]),
+            "pre-swap request {i} must be served by the OLD program"
+        );
+    }
+    // Post-swap traffic serves the new program.
+    for (i, row) in rows.iter().take(8).enumerate() {
+        let reply = fleet.infer("hot", row).unwrap();
+        assert_eq!(
+            reply.logits,
+            ref2.infer_bins(&bins[i]),
+            "post-swap request {i} must be served by the NEW program"
+        );
+    }
+    // The swap reset the route's counters; fleet lifetime totals kept
+    // counting across it.
+    let stats = fleet.stats();
+    assert_eq!(stats.admitted, 32 + 8);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.models[0].admitted, 8, "route counters restart at swap");
+    fleet.shutdown();
+}
+
+/// Swap racing live concurrent clients: every reply is bit-exact under
+/// exactly one of the two programs — never an aggregation that mixes
+/// shards of both — and nothing errors or drops.
+#[test]
+fn swap_during_concurrent_traffic_serves_old_or_new_exactly() {
+    let p1 = program(3, 12);
+    let p2 = program(4, 12);
+    let ref1 = CamEngine::new(&p1);
+    let ref2 = CamEngine::new(&p2);
+
+    let fleet = Arc::new(Fleet::new());
+    fleet
+        .register_program(
+            "live",
+            &p1,
+            ModelConfig::for_program(&p1).with_shards(2).with_queue_cap(0),
+        )
+        .unwrap();
+
+    std::thread::scope(|scope| {
+        for t in 0..3 {
+            let fleet = Arc::clone(&fleet);
+            let (ref1, ref2) = (&ref1, &ref2);
+            let p1 = &p1;
+            scope.spawn(move || {
+                let rows = random_rows(12, 120, 100 + t);
+                for (i, row) in rows.iter().enumerate() {
+                    let reply = fleet.infer("live", row).unwrap_or_else(|e| {
+                        panic!("client {t} request {i} failed during swap: {e}")
+                    });
+                    let bins = p1.quantizer.bin_row(row);
+                    let (want_old, want_new) =
+                        (ref1.infer_bins(&bins), ref2.infer_bins(&bins));
+                    assert!(
+                        reply.logits == want_old || reply.logits == want_new,
+                        "client {t} request {i}: logits match neither program"
+                    );
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        fleet.swap_program("live", &p2, ModelConfig::for_program(&p2)).unwrap();
+    });
+
+    let stats = fleet.stats();
+    assert_eq!(stats.admitted, 3 * 120);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.models[0].errors, 0);
+}
+
+/// Unregister under load: the fleet blocks until the route drained, so
+/// every queued reply arrives even though the model is gone.
+#[test]
+fn unregister_under_load_drains_every_queued_reply() {
+    let p = program(5, 16);
+    let reference = CamEngine::new(&p);
+    let rows = random_rows(16, 24, 21);
+
+    let fleet = Fleet::new();
+    let cfg = ModelConfig::for_program(&p)
+        .with_policy(BatchPolicy { max_wait_us: 0, max_batch: 4, threads: None })
+        .with_queue_cap(0);
+    let (backends, base) = slow_shards(&p, 2, Duration::from_millis(10));
+    fleet.register_backends("gone", backends, base, cfg).unwrap();
+
+    let admissions = fleet.submit_batch("gone", &rows).unwrap();
+    fleet.unregister("gone").unwrap();
+    for (i, adm) in admissions.into_iter().enumerate() {
+        let reply = adm
+            .recv()
+            .unwrap_or_else(|e| panic!("request {i} dropped at unregister: {e}"));
+        assert_eq!(reply.logits, reference.infer_bins(&p.quantizer.bin_row(&rows[i])));
+    }
+    assert!(fleet.infer("gone", &rows[0]).is_err(), "route must be gone");
+    assert!(fleet.models().is_empty());
+}
+
+/// Shed accounting exactness: with a backend stalled for longer than the
+/// whole submit loop takes, the queue admits exactly `cap` requests and
+/// sheds the rest — and every counter (admission results, per-model
+/// stats, fleet totals) agrees to the request.
+#[test]
+fn shed_accounting_is_exact_under_slow_backend() {
+    let p = program(6, 8);
+    let fleet = Fleet::new();
+    let cfg = ModelConfig::for_program(&p)
+        .with_policy(BatchPolicy { max_wait_us: 0, max_batch: 32, threads: None })
+        .with_queue_cap(4);
+    // The stall must outlast the submit loop by a wide margin even on an
+    // oversubscribed CI box: 64 channel sends vs 1.5 s.
+    let (backends, base) = slow_shards(&p, 1, Duration::from_millis(1_500));
+    fleet.register_backends("tiny", backends, base, cfg).unwrap();
+
+    let rows = random_rows(8, 64, 31);
+    let mut accepted = Vec::new();
+    let mut shed_seen = 0usize;
+    // Submit far faster than the first batch's stall: no queue slot is
+    // released during the loop, so exactly `cap` requests admit.
+    for row in &rows {
+        match fleet.submit("tiny", row).unwrap() {
+            Admission::Accepted(rx) => accepted.push(rx),
+            Admission::Shed { queue_depth } => {
+                assert_eq!(queue_depth, 4, "shed reports the configured bound");
+                shed_seen += 1;
+            }
+        }
+    }
+    assert_eq!(accepted.len(), 4, "exactly the queue cap admits");
+    assert_eq!(shed_seen, 60);
+    assert_eq!(accepted.len() + shed_seen, rows.len(), "every request accounted");
+
+    let stats = fleet.model_stats("tiny").unwrap();
+    assert_eq!(stats.admitted, 4);
+    assert_eq!(stats.shed, 60);
+    let fleet_stats = fleet.stats();
+    assert_eq!((fleet_stats.admitted, fleet_stats.shed), (4, 60));
+
+    // Every admitted request is still served correctly.
+    let reference = CamEngine::new(&p);
+    for (rx, row) in accepted.into_iter().zip(&rows) {
+        let reply = rx.recv().expect("admitted request must be served");
+        assert!(reply.is_ok());
+        assert_eq!(reply.logits, reference.infer_bins(&p.quantizer.bin_row(row)));
+    }
+    // With all replies delivered the queue gauge returns to zero (the
+    // worker releases the slot just after the send; spin briefly).
+    let t0 = std::time::Instant::now();
+    loop {
+        let depth = fleet.model_stats("tiny").unwrap().queue_depth;
+        if depth == 0 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "queue never drained: {depth}");
+        std::thread::yield_now();
+    }
+    assert_eq!(fleet.model_stats("tiny").unwrap().served, 4);
+}
+
+/// A fleet route over simulated PCIe cards (one `SimCardBackend` per
+/// shard): same bit-identity as the functional pool, and the simulated
+/// device counters accrue per card — the §III-D multi-card deployment
+/// served through the multi-tenant front end.
+#[test]
+fn fleet_route_over_sim_cards_is_bit_identical_and_metered() {
+    use xtime::sim::{CardConfig, ChipConfig, SimCardBackend};
+
+    let p = program(10, 16);
+    let reference = CamEngine::new(&p);
+    let plan = partition(&p, 2, &PartitionOptions::default()).unwrap();
+    let cards: Vec<SimCardBackend> = plan
+        .shards
+        .iter()
+        .map(|s| SimCardBackend::new(s, &ChipConfig::default(), &CardConfig::default()))
+        .collect();
+    let counters: Vec<_> = cards.iter().map(|c| c.counters()).collect();
+    let backends: Vec<Box<dyn Backend>> =
+        cards.into_iter().map(|c| Box::new(c) as Box<dyn Backend>).collect();
+
+    let fleet = Fleet::new();
+    let cfg = ModelConfig::for_program(&p);
+    fleet.register_backends("cards", backends, plan.base_score.clone(), cfg).unwrap();
+    let rows = random_rows(16, 12, 41);
+    for (i, reply) in fleet.infer_batch("cards", &rows).unwrap().into_iter().enumerate() {
+        let reply = reply.unwrap();
+        assert_eq!(
+            reply.logits,
+            reference.infer_bins(&p.quantizer.bin_row(&rows[i])),
+            "row {i}"
+        );
+    }
+    fleet.shutdown();
+    for c in &counters {
+        assert_eq!(c.samples(), 12, "every simulated card sees every row");
+        assert!(c.busy_s() > 0.0);
+    }
+}
+
+/// Three tenants, concurrent clients on each: replies never cross
+/// routes (each model's logits match its own reference bit-exactly) and
+/// per-model/fleet counters add up.
+#[test]
+fn multi_model_concurrent_clients_stay_isolated() {
+    let programs: Vec<CamProgram> =
+        vec![program(7, 8), program(8, 12), program(9, 16)];
+    let names = ["alpha", "beta", "gamma"];
+    let references: Vec<CamEngine> = programs.iter().map(CamEngine::new).collect();
+
+    let fleet = Arc::new(Fleet::new());
+    for (i, (name, p)) in names.iter().zip(&programs).enumerate() {
+        fleet
+            .register_program(
+                name,
+                p,
+                ModelConfig::for_program(p).with_shards(i + 1).with_queue_cap(0),
+            )
+            .unwrap();
+    }
+    assert_eq!(fleet.models(), names.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+
+    std::thread::scope(|scope| {
+        for (mi, name) in names.iter().enumerate() {
+            for client in 0..2u64 {
+                let fleet = Arc::clone(&fleet);
+                let p = &programs[mi];
+                let reference = &references[mi];
+                scope.spawn(move || {
+                    let rows = random_rows(p.n_features, 30, 1000 + 10 * mi as u64 + client);
+                    if client == 0 {
+                        // Row-at-a-time client.
+                        for (i, row) in rows.iter().enumerate() {
+                            let reply = fleet.infer(name, row).unwrap();
+                            assert_eq!(
+                                reply.logits,
+                                reference.infer_bins(&p.quantizer.bin_row(row)),
+                                "{name} client {client} row {i}"
+                            );
+                        }
+                    } else {
+                        // Batched client through the same route.
+                        let replies = fleet.infer_batch(name, &rows).unwrap();
+                        for (i, reply) in replies.into_iter().enumerate() {
+                            let reply = reply.unwrap();
+                            assert_eq!(
+                                reply.logits,
+                                reference.infer_bins(&p.quantizer.bin_row(&rows[i])),
+                                "{name} batch client row {i}"
+                            );
+                        }
+                    }
+                });
+            }
+        }
+    });
+
+    let stats = fleet.stats();
+    assert_eq!(stats.admitted, 3 * 2 * 30);
+    assert_eq!(stats.shed, 0);
+    for (i, m) in stats.models.iter().enumerate() {
+        assert_eq!(m.admitted, 60, "{}", m.name);
+        assert_eq!(m.served, 60, "{}", m.name);
+        assert_eq!(m.errors, 0, "{}", m.name);
+        // BTreeMap order: alpha, beta, gamma — shard pools 1, 2, 3.
+        assert_eq!(m.shards, i + 1, "{}", m.name);
+    }
+}
