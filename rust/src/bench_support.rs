@@ -39,6 +39,29 @@ pub fn write_bench_json(name: &str, json: &Json) -> PathBuf {
     path
 }
 
+/// Latency-tail summary (`p50/p90/p99/p999/mean/max/n`) of a sample in
+/// seconds, as a stable-keyed object for `BENCH_*.json` files —
+/// `Json::Null` on an empty sample (a tenant that never got a reply).
+/// `xtime loadgen` writes these into `BENCH_serving.json`
+/// (docs/BENCHMARKS.md documents the schema).
+pub fn latency_tail_json(samples: &[f64]) -> Json {
+    if samples.is_empty() {
+        return Json::Null;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+    let mut j = Json::obj();
+    j.set("n", Json::Num(sorted.len() as f64))
+        .set("p50", Json::Num(crate::util::stats::percentile_sorted(&sorted, 50.0)))
+        .set("p90", Json::Num(crate::util::stats::percentile_sorted(&sorted, 90.0)))
+        .set("p99", Json::Num(crate::util::stats::percentile_sorted(&sorted, 99.0)))
+        .set("p999", Json::Num(crate::util::stats::percentile_sorted(&sorted, 99.9)))
+        .set("mean", Json::Num(mean))
+        .set("max", Json::Num(*sorted.last().unwrap()));
+    j
+}
+
 fn cache_dir() -> PathBuf {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target/xtime_bench_cache");
     let _ = std::fs::create_dir_all(&dir);
@@ -330,6 +353,21 @@ mod tests {
         };
         // Renders without panicking for both populated and empty latency.
         fleet_table(&stats).print("smoke");
+    }
+
+    #[test]
+    fn latency_tail_json_is_ordered_and_null_on_empty() {
+        assert_eq!(latency_tail_json(&[]), Json::Null);
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64 / 1000.0).collect();
+        let j = latency_tail_json(&samples);
+        let p50 = j.req_f64("p50").unwrap();
+        let p99 = j.req_f64("p99").unwrap();
+        let p999 = j.req_f64("p999").unwrap();
+        let max = j.req_f64("max").unwrap();
+        assert!(p50 <= p99 && p99 <= p999 && p999 <= max);
+        assert!((p50 - 0.5005).abs() < 1e-9, "p50={p50}");
+        assert_eq!(max, 1.0);
+        assert_eq!(j.req_f64("n").unwrap() as usize, 1000);
     }
 
     #[test]

@@ -36,6 +36,7 @@ pub mod server;
 
 pub use backend::{Backend, CpuExactBackend, FunctionalBackend, XlaBackend};
 pub use router::{
-    Admission, Fleet, FleetStats, ModelConfig, ModelStats, Router, DEFAULT_QUEUE_CAP,
+    AdmitSlot, Admission, Fleet, FleetStats, ModelConfig, ModelStats, RouteHandle, Router,
+    DEFAULT_QUEUE_CAP,
 };
 pub use server::{BatchPolicy, Reply, Server, ServerStats, ShardStats, LATENCY_RESERVOIR_CAP};

@@ -383,9 +383,9 @@ impl Fleet {
 
     /// Admission-controlled async submit of a raw feature row.
     pub fn submit(&self, model: &str, row: &[f32]) -> Result<Admission, String> {
-        let route = self.route(model)?; // routes lock released here
-        check_arity(&route, model, row.len())?;
-        Ok(self.admit(&route, route.cfg.quantizer.bin_row(row)))
+        let handle = self.handle(model)?; // routes lock released here
+        handle.check_arity(row.len())?;
+        Ok(handle.submit_row(row))
     }
 
     /// Admission-controlled submit of a whole client batch. Rows are
@@ -402,14 +402,11 @@ impl Fleet {
         model: &str,
         rows: &[Vec<f32>],
     ) -> Result<Vec<Admission>, String> {
-        let route = self.route(model)?; // routes lock released here
+        let handle = self.handle(model)?; // routes lock released here
         for row in rows {
-            check_arity(&route, model, row.len())?;
+            handle.check_arity(row.len())?;
         }
-        Ok(rows
-            .iter()
-            .map(|row| self.admit(&route, route.cfg.quantizer.bin_row(row)))
-            .collect())
+        Ok(rows.iter().map(|row| handle.submit_row(row)).collect())
     }
 
     /// Blocking single-row inference. Shedding, backend/shard failures
@@ -477,18 +474,99 @@ impl Fleet {
             .ok_or_else(|| format!("unknown model `{model}`"))
     }
 
-    fn admit(&self, route: &Route, bins: Vec<u16>) -> Admission {
-        match QueueTicket::try_claim(&route.depth, route.cfg.queue_cap) {
+    /// Snapshot the named route into a [`RouteHandle`] that can make
+    /// admission decisions **before** request payloads are decoded — the
+    /// wire front end's shed-before-parse path. The routes lock is held
+    /// only for the map lookup; everything done through the handle runs
+    /// without it. The handle pins its route snapshot: a concurrent swap
+    /// publishes the new route immediately to *new* lookups, while work
+    /// submitted through this handle lands on (and is drained by) the
+    /// server it was admitted to — exactly the contract-6 behavior of
+    /// the in-process path.
+    pub fn handle(&self, model: &str) -> Result<RouteHandle<'_>, String> {
+        let route = self.route(model)?;
+        Ok(RouteHandle { fleet: self, name: model.to_string(), route })
+    }
+}
+
+/// A claimed admission slot: proof that one request passed a route's
+/// queue bound. Produced by [`RouteHandle::try_admit`] *before* any
+/// feature payload is deserialized and consumed by
+/// [`RouteHandle::submit_admitted`]. The slot wraps the route's RAII
+/// [`QueueTicket`], so dropping an unused slot releases the queue
+/// position (the request still counts as admitted in the fleet's
+/// accounting — claim-side counters are what make
+/// `admitted + shed == offered` exact under races).
+pub struct AdmitSlot {
+    ticket: QueueTicket,
+}
+
+/// A pinned snapshot of one model's route, exposing the fleet's
+/// admission machinery in two phases — claim ([`RouteHandle::try_admit`])
+/// separated from payload decode + enqueue
+/// ([`RouteHandle::submit_admitted`]) — so transport front ends can shed
+/// at the queue bound without ever touching the bytes of a refused row.
+pub struct RouteHandle<'f> {
+    fleet: &'f Fleet,
+    name: String,
+    route: Arc<Route>,
+}
+
+impl RouteHandle<'_> {
+    /// Feature arity this model expects.
+    pub fn n_features(&self) -> usize {
+        self.route.n_features
+    }
+
+    /// Configured admission bound (0 = unbounded).
+    pub fn queue_cap(&self) -> usize {
+        self.route.cfg.queue_cap
+    }
+
+    /// Live gauge: admitted requests not yet answered.
+    pub fn queue_depth(&self) -> usize {
+        self.route.depth.load(Ordering::Acquire)
+    }
+
+    /// Check a row's feature count against the model, with the same
+    /// error text as [`Fleet::submit`].
+    pub fn check_arity(&self, got: usize) -> Result<(), String> {
+        check_arity(&self.route, &self.name, got)
+    }
+
+    /// Try to claim one queue slot. `Some` counts the request as
+    /// admitted (route + fleet totals); `None` counts it as shed. This
+    /// touches only atomics — no quantization, no payload access — so a
+    /// wire listener can call it straight off the frame header.
+    pub fn try_admit(&self) -> Option<AdmitSlot> {
+        match QueueTicket::try_claim(&self.route.depth, self.route.cfg.queue_cap) {
             Some(ticket) => {
-                route.admitted.fetch_add(1, Ordering::Relaxed);
-                self.total_admitted.fetch_add(1, Ordering::Relaxed);
-                Admission::Accepted(route.server.submit_ticketed(bins, Some(ticket)))
+                self.route.admitted.fetch_add(1, Ordering::Relaxed);
+                self.fleet.total_admitted.fetch_add(1, Ordering::Relaxed);
+                Some(AdmitSlot { ticket })
             }
             None => {
-                route.shed.fetch_add(1, Ordering::Relaxed);
-                self.total_shed.fetch_add(1, Ordering::Relaxed);
-                Admission::Shed { queue_depth: route.cfg.queue_cap }
+                self.route.shed.fetch_add(1, Ordering::Relaxed);
+                self.fleet.total_shed.fetch_add(1, Ordering::Relaxed);
+                None
             }
+        }
+    }
+
+    /// Quantize an already-admitted row and enqueue it, transferring
+    /// the slot's ticket into the server (released when the reply is
+    /// sent). Decode/quantization happens here — after admission — which
+    /// is what keeps the refused path payload-free.
+    pub fn submit_admitted(&self, slot: AdmitSlot, row: &[f32]) -> Receiver<Reply> {
+        let bins = self.route.cfg.quantizer.bin_row(row);
+        self.route.server.submit_ticketed(bins, Some(slot.ticket))
+    }
+
+    /// One-shot claim + enqueue: the in-process [`Fleet::submit`] path.
+    pub fn submit_row(&self, row: &[f32]) -> Admission {
+        match self.try_admit() {
+            Some(slot) => Admission::Accepted(self.submit_admitted(slot, row)),
+            None => Admission::Shed { queue_depth: self.route.cfg.queue_cap },
         }
     }
 }

@@ -21,6 +21,8 @@
 //!   produced by the JAX/Pallas build pipeline under `python/`;
 //! * [`coordinator`] — the serving engine: request router, dynamic batcher,
 //!   sharded multi-card worker pool and pluggable inference backends;
+//! * [`serve`] — the framed-TCP wire front end over the fleet, its
+//!   client, and the open-loop multi-tenant load generator;
 //! * [`util`] — offline substrates (PRNG, JSON, CLI, stats, prop tests).
 
 pub mod baselines;
@@ -30,6 +32,7 @@ pub mod compiler;
 pub mod coordinator;
 pub mod data;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod trees;
 pub mod util;

@@ -5,7 +5,10 @@
 //!   compile   — compile a trained model to a CAM program
 //!   simulate  — run the cycle-detailed chip simulation
 //!   serve     — demo serving loop (XLA artifact or functional backend),
-//!               or a multi-tenant fleet with `--models a,b,c`
+//!               or a multi-tenant fleet with `--models a,b,c`; add
+//!               `--listen ADDR` to expose the fleet on framed TCP
+//!   loadgen   — open-loop wire load generator against a `serve --listen`
+//!               endpoint; writes BENCH_serving.json
 //!   report    — print the Fig. 8 area/power breakdown
 //!
 //! Example:
@@ -14,22 +17,27 @@
 //!   xtime simulate --program /tmp/churn.cam.json --samples 100000
 //!   xtime serve --program /tmp/churn.cam.json --requests 1000
 //!   xtime serve --models churn,telco,gas --shards 2 --requests 6000
+//!   xtime serve --models churn,telco --listen 127.0.0.1:7711 --duration-s 30
+//!   xtime loadgen --addr 127.0.0.1:7711 --tenants churn,telco --requests 5000
 
 use std::path::Path;
+use std::sync::Arc;
 use xtime::bench_support::{drive_skewed_mix, fleet_table, MixTenant};
 use xtime::compiler::{compile, CamProgram, CompileOptions};
 use xtime::coordinator::{BatchPolicy, Fleet, FunctionalBackend, ModelConfig, Server, XlaBackend};
 use xtime::data::{by_name, catalog};
 use xtime::runtime::XlaCamEngine;
+use xtime::serve::loadgen::{self, LoadgenConfig, TenantSpec};
+use xtime::serve::{WireServer, WIRE_VERSION};
 use xtime::sim::{chip_area, chip_peak_power, simulate, ChipConfig, Workload};
 use xtime::trees::{gbdt, paper_model, train_paper_model, Ensemble, GbdtParams};
-use xtime::util::stats::{fmt_si_rate, fmt_si_time};
+use xtime::util::stats::{fmt_si_rate, fmt_si_time, percentile_sorted};
 use xtime::util::Args;
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: xtime <train|compile|simulate|serve|report> [options]");
+        eprintln!("usage: xtime <train|compile|simulate|serve|loadgen|report> [options]");
         eprintln!("datasets: {}", catalog().iter().map(|s| s.name).collect::<Vec<_>>().join(", "));
         std::process::exit(2);
     }
@@ -39,6 +47,7 @@ fn main() {
         "compile" => cmd_compile(&argv),
         "simulate" => cmd_simulate(&argv),
         "serve" => cmd_serve(&argv),
+        "loadgen" => cmd_loadgen(&argv),
         "report" => cmd_report(),
         other => {
             eprintln!("unknown command `{other}`");
@@ -175,6 +184,17 @@ fn cmd_serve(argv: &[String]) {
                 "threads",
                 Some("1"),
                 "fleet mode: planned-execution workers per backend (0 = auto)",
+            )
+            .opt(
+                "listen",
+                Some(""),
+                "fleet mode: expose the fleet on framed TCP at this address \
+                 (e.g. 127.0.0.1:7711) instead of driving a local mix",
+            )
+            .opt(
+                "duration-s",
+                Some("30"),
+                "with --listen: seconds to serve before draining (0 = forever)",
             ),
         argv,
     );
@@ -304,6 +324,11 @@ fn cmd_serve_fleet(a: &Args) {
         datasets.push(data);
     }
 
+    let listen = a.get("listen");
+    if !listen.is_empty() {
+        return serve_wire(fleet, &listen, a.get_u64("duration-s"));
+    }
+
     // Skewed tenant mix (weights 2^(k-1) … 1): the first model is the
     // hot tenant, the last the cold one.
     let tenants: Vec<MixTenant> = names
@@ -332,6 +357,156 @@ fn cmd_serve_fleet(a: &Args) {
         mix.served, mix.shed, mix.errors
     );
     fleet.shutdown();
+}
+
+/// `xtime serve --models … --listen ADDR`: expose the built fleet on
+/// framed TCP for `--duration-s` seconds (0 = until killed), then drain
+/// cleanly — wire handlers first, then every route's server.
+fn serve_wire(fleet: Fleet, addr: &str, duration_s: u64) {
+    let fleet = Arc::new(fleet);
+    let server = WireServer::start(fleet.clone(), addr).unwrap_or_else(|e| {
+        eprintln!("binding {addr}: {e}");
+        std::process::exit(2);
+    });
+    println!(
+        "listening on {} (wire protocol v{WIRE_VERSION}, {})",
+        server.local_addr(),
+        if duration_s == 0 {
+            "until killed".to_string()
+        } else {
+            format!("{duration_s}s")
+        }
+    );
+    if duration_s == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration_s));
+    let ws = server.stats();
+    server.shutdown(); // joins accept loop + all connection handlers
+    println!(
+        "wire: {} connection(s), {} frame(s), rows offered {} = admitted {} + shed {} \
+         (decoded {}), {} rejected frame(s), {} protocol error(s)",
+        ws.connections,
+        ws.frames,
+        ws.rows_offered,
+        ws.rows_admitted,
+        ws.rows_shed,
+        ws.rows_decoded,
+        ws.rejected_frames,
+        ws.protocol_errors,
+    );
+    fleet_table(&fleet.stats()).print("fleet after wire serving");
+    match Arc::try_unwrap(fleet) {
+        Ok(fleet) => fleet.shutdown(), // drain: every admitted row answered
+        Err(_) => eprintln!("warning: fleet still shared at exit; skipping drain"),
+    }
+}
+
+/// `xtime loadgen`: open-loop Poisson load against a `serve --listen`
+/// endpoint; prints per-tenant accounting and writes BENCH_serving.json.
+fn cmd_loadgen(argv: &[String]) {
+    let a = parse(
+        Args::new("xtime loadgen", "open-loop wire load generator (writes BENCH_serving.json)")
+            .opt("addr", Some("127.0.0.1:7711"), "serve --listen address")
+            .opt(
+                "tenants",
+                Some("churn,telco"),
+                "comma-separated tenant names; must match the server's --models",
+            )
+            .opt("requests", Some("5000"), "total requests across all connections")
+            .opt("rate", Some("2000"), "aggregate arrival rate, req/s (0 = unpaced)")
+            .opt("conns", Some("8"), "concurrent worker connections")
+            .opt("batch", Some("4"), "rows per request frame")
+            .opt("churn", Some("200"), "reconnect each worker every N requests (0 = never)")
+            .opt("rows", Some("256"), "distinct synthetic rows per tenant")
+            .opt("seed", Some("7"), "RNG seed (arrivals + tenant mix)"),
+        argv,
+    );
+    let names: Vec<String> = a
+        .get("tenants")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        eprintln!("--tenants needs at least one dataset name");
+        std::process::exit(2);
+    }
+    // Same skewed weights (2^(k-1) … 1) as `serve --models`, so the
+    // hot/cold tenant split matches what the server prints.
+    let n_rows = a.get_usize("rows").max(1);
+    let tenants: Vec<TenantSpec> = names
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let Some(spec) = by_name(name) else {
+                eprintln!(
+                    "unknown dataset `{name}`; catalog: {}",
+                    catalog().iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+                );
+                std::process::exit(2);
+            };
+            let data = spec.generate_n(n_rows);
+            TenantSpec {
+                name: name.clone(),
+                rows: (0..data.n_rows()).map(|r| data.row(r).to_vec()).collect(),
+                weight: 1usize << (names.len() - 1 - i),
+            }
+        })
+        .collect();
+    let cfg = LoadgenConfig {
+        addr: a.get("addr"),
+        tenants,
+        requests: a.get_usize("requests"),
+        rate_rps: a.get_f64("rate"),
+        conns: a.get_usize("conns").max(1),
+        batch: a.get_usize("batch").max(1),
+        churn_every: a.get_usize("churn"),
+        seed: a.get_u64("seed"),
+    };
+    println!(
+        "loadgen → {}: {} requests × {} row(s), {} conn(s), rate {} req/s, churn every {}",
+        cfg.addr, cfg.requests, cfg.batch, cfg.conns, cfg.rate_rps, cfg.churn_every
+    );
+    let report = loadgen::run(&cfg).unwrap_or_else(|e| {
+        eprintln!("loadgen: {e}");
+        std::process::exit(2);
+    });
+    for (name, o) in &report.tenants {
+        let mut lat = o.latencies.clone();
+        lat.sort_by(f64::total_cmp);
+        let q = |p: f64| {
+            if lat.is_empty() {
+                "-".to_string()
+            } else {
+                fmt_si_time(percentile_sorted(&lat, p))
+            }
+        };
+        println!(
+            "  {name:<12} offered {:>8} served {:>8} shed {:>8} ({:>5.1}%) failed {:>6} | \
+             p50 {} p99 {} p999 {}",
+            o.offered_rows,
+            o.served_rows,
+            o.shed_rows,
+            100.0 * o.shed_rate(),
+            o.failed_rows,
+            q(50.0),
+            q(99.0),
+            q(99.9),
+        );
+    }
+    let totals = report.totals();
+    println!(
+        "total: {} rows in {} → {}, shed rate {:.1}%, {} transport error(s)",
+        totals.offered_rows,
+        fmt_si_time(report.wall_s),
+        fmt_si_rate(totals.offered_rows as f64 / report.wall_s.max(1e-9), "rows"),
+        100.0 * totals.shed_rate(),
+        report.request_errors,
+    );
+    xtime::bench_support::write_bench_json("serving", &loadgen::report_json(&cfg, &report));
 }
 
 fn cmd_report() {

@@ -1,0 +1,77 @@
+//! Minimal blocking wire client: one connection, one request in flight.
+//!
+//! Used by `xtime loadgen`, the conformance battery, and anything else
+//! that wants to talk to a [`super::listener::WireServer`] without
+//! hand-rolling frames. Deliberately synchronous — the load generator
+//! gets concurrency from worker threads, not from multiplexing.
+
+use super::frame::{
+    decode_reply, encode_request, read_frame, write_frame, ReplyFrame, RowOutcome,
+};
+use std::io;
+use std::net::TcpStream;
+
+/// A decoded batch reply: per-row outcomes in request order plus the
+/// route's admitted-but-unanswered gauge observed after the batch.
+#[derive(Clone, Debug)]
+pub struct BatchReply {
+    pub queue_depth: u32,
+    pub rows: Vec<RowOutcome>,
+}
+
+/// Blocking client over one TCP connection. Request ids are assigned
+/// sequentially per connection and checked against the reply's echo.
+pub struct WireClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl WireClient {
+    /// Connect to a listening [`super::listener::WireServer`].
+    pub fn connect(addr: &str) -> io::Result<WireClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(WireClient { stream, next_id: 1 })
+    }
+
+    /// Send one batch for `tenant` and block for the reply.
+    ///
+    /// `Ok` is a decoded [`BatchReply`]; `Err` covers transport
+    /// failures, `Rejected` frames (unknown tenant, arity mismatch,
+    /// zero rows — the connection stays usable afterwards) and
+    /// `ProtocolError` frames (after which the server hangs up and this
+    /// client is dead).
+    pub fn request(&mut self, tenant: &str, rows: &[Vec<f32>]) -> Result<BatchReply, String> {
+        let n_features = rows.first().map_or(0, Vec::len);
+        self.request_shaped(tenant, n_features, rows)
+    }
+
+    /// [`WireClient::request`] with an explicit feature count, so tests
+    /// can send zero-row (and otherwise oddly shaped) batches.
+    pub fn request_shaped(
+        &mut self,
+        tenant: &str,
+        n_features: usize,
+        rows: &[Vec<f32>],
+    ) -> Result<BatchReply, String> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = encode_request(id, tenant, n_features, rows);
+        write_frame(&mut self.stream, &frame).map_err(|e| format!("send: {e}"))?;
+        let body = read_frame(&mut self.stream)
+            .map_err(|e| format!("recv: {e}"))?
+            .ok_or_else(|| "server closed the connection before replying".to_string())?;
+        match decode_reply(&body).map_err(|e| format!("recv: {e}"))? {
+            ReplyFrame::Batch { id: got, queue_depth, rows } => {
+                if got != id {
+                    return Err(format!("reply id {got} does not match request id {id}"));
+                }
+                Ok(BatchReply { queue_depth, rows })
+            }
+            ReplyFrame::Rejected { reason, .. } => Err(format!("rejected: {reason}")),
+            ReplyFrame::ProtocolError { reason, .. } => {
+                Err(format!("protocol error: {reason}"))
+            }
+        }
+    }
+}

@@ -1,0 +1,638 @@
+//! Wire format: length-prefixed binary frames with a lazy request decode.
+//!
+//! Every message on a connection is one frame: a little-endian `u32`
+//! body length followed by the body. Request bodies carry a fixed-size
+//! header (magic, version, request id, tenant name, row/feature counts)
+//! *before* any feature bytes, so a server can route and make admission
+//! decisions from the header alone; [`RequestView::parse`] validates the
+//! frame's structure without touching the payload region, and feature
+//! bytes are only deserialized when [`RequestView::row`] is called for a
+//! row that was actually admitted (the shed-before-parse contract,
+//! DESIGN.md §6). The payload is raw little-endian `f32` bits, so a
+//! round trip is exact for every value including NaN payloads.
+//!
+//! Request body layout (after the 4-byte length prefix):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "XTRQ"
+//! 4       1     version (currently 1)
+//! 5       8     request id (u64, echoed in the reply)
+//! 13      2     tenant name length T (u16)
+//! 15      T     tenant name (UTF-8)
+//! 15+T    4     n_rows (u32)
+//! 19+T    4     n_features (u32)
+//! 23+T    n_rows × n_features × 4    row-major f32 feature payload
+//! ```
+//!
+//! Reply body layout:
+//!
+//! ```text
+//! 0       4     magic "XTRP"
+//! 4       1     version
+//! 5       8     request id
+//! 13      1     frame status: 0 = batch reply,
+//!                             1 = request rejected (connection stays usable),
+//!                             2 = protocol error (server closes the connection)
+//! status 1/2:   u16 reason length + reason bytes
+//! status 0:     u32 n_rows, u32 queue_depth (route gauge after the batch),
+//!               then per row: u8 row status —
+//!                 0 = served:  f32 prediction, u16 n_logits, n × f32 logits
+//!                 1 = shed:    u32 queue_depth (the configured admission bound)
+//!                 2 = failed:  u16 error length + error bytes
+//! ```
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Protocol version; a mismatch is a [`WireError::Malformed`] frame.
+pub const WIRE_VERSION: u8 = 1;
+/// Request-body magic (`"XTRQ"`).
+pub const MAGIC_REQUEST: [u8; 4] = *b"XTRQ";
+/// Reply-body magic (`"XTRP"`).
+pub const MAGIC_REPLY: [u8; 4] = *b"XTRP";
+/// Hard ceiling on one frame body. A length prefix above this is
+/// rejected *before* any body byte is read, so a hostile or corrupt
+/// prefix cannot make the server allocate or block on gigabytes.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+/// Minimum request body: the fixed header with an empty tenant name.
+pub const MIN_REQUEST_BYTES: usize = 23;
+
+/// A malformed or oversized frame. Everything maps to a printable
+/// reason the server echoes back in a reject/protocol-error reply.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Length prefix exceeds [`MAX_FRAME_BYTES`].
+    Oversized { len: usize },
+    /// Structurally invalid body (bad magic/version/lengths/UTF-8).
+    Malformed(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Oversized { len } => write!(
+                f,
+                "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte frame ceiling"
+            ),
+            WireError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+        }
+    }
+}
+
+// ---- little-endian put/get helpers ------------------------------------
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked cursor over a frame body; every read returns a
+/// [`WireError::Malformed`] instead of panicking on short input.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
+        if self.i + n > self.b.len() {
+            return Err(WireError::Malformed(format!(
+                "truncated body: {what} needs {n} bytes at offset {} of {}",
+                self.i,
+                self.b.len()
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+}
+
+// ---- request ----------------------------------------------------------
+
+/// Encode a request frame (length prefix included). `n_features` is
+/// explicit so zero-row frames — a shape the conformance battery sends
+/// on purpose — are encodable; all rows must match it.
+pub fn encode_request(id: u64, tenant: &str, n_features: usize, rows: &[Vec<f32>]) -> Vec<u8> {
+    assert!(tenant.len() <= u16::MAX as usize, "tenant name too long");
+    assert!(
+        rows.iter().all(|r| r.len() == n_features),
+        "ragged request batch: all rows must have {n_features} features"
+    );
+    let body_len = MIN_REQUEST_BYTES + tenant.len() + rows.len() * n_features * 4;
+    let mut buf = Vec::with_capacity(4 + body_len);
+    put_u32(&mut buf, body_len as u32);
+    buf.extend_from_slice(&MAGIC_REQUEST);
+    buf.push(WIRE_VERSION);
+    put_u64(&mut buf, id);
+    put_u16(&mut buf, tenant.len() as u16);
+    buf.extend_from_slice(tenant.as_bytes());
+    put_u32(&mut buf, rows.len() as u32);
+    put_u32(&mut buf, n_features as u32);
+    for row in rows {
+        for &v in row {
+            put_f32(&mut buf, v);
+        }
+    }
+    buf
+}
+
+/// A parsed request *header* borrowing the frame body. Parsing scans and
+/// validates everything **up to** the payload region — magic, version,
+/// id, tenant, row/feature counts, and that the body length accounts for
+/// exactly `n_rows × n_features` f32s — but never reads a payload byte.
+/// Feature bytes are deserialized one row at a time by
+/// [`RequestView::row`], which the server calls only after that row has
+/// claimed an admission slot.
+pub struct RequestView<'a> {
+    pub id: u64,
+    pub tenant: &'a str,
+    pub n_rows: usize,
+    pub n_features: usize,
+    payload: &'a [u8],
+}
+
+impl<'a> RequestView<'a> {
+    /// Lazy parse of a request body (without the 4-byte length prefix).
+    pub fn parse(body: &'a [u8]) -> Result<RequestView<'a>, WireError> {
+        let mut c = Cursor { b: body, i: 0 };
+        let magic = c.take(4, "magic")?;
+        if magic != MAGIC_REQUEST {
+            return Err(WireError::Malformed(format!(
+                "bad magic {magic:02x?} (expected \"XTRQ\")"
+            )));
+        }
+        let version = c.u8("version")?;
+        if version != WIRE_VERSION {
+            return Err(WireError::Malformed(format!(
+                "unsupported protocol version {version} (this server speaks {WIRE_VERSION})"
+            )));
+        }
+        let id = c.u64("request id")?;
+        let tenant_len = c.u16("tenant length")? as usize;
+        let tenant = std::str::from_utf8(c.take(tenant_len, "tenant name")?)
+            .map_err(|_| WireError::Malformed("tenant name is not UTF-8".to_string()))?;
+        let n_rows = c.u32("row count")? as usize;
+        let n_features = c.u32("feature count")? as usize;
+        // u128 math: two hostile u32 counts times 4 can overflow u64,
+        // and a debug-build overflow panic is exactly the crash this
+        // parser exists to rule out.
+        let want = (n_rows as u128) * (n_features as u128) * 4;
+        let have = (body.len() - c.i) as u128;
+        if want != have {
+            return Err(WireError::Malformed(format!(
+                "payload length mismatch: {n_rows} rows × {n_features} features \
+                 needs {want} bytes, frame carries {have}"
+            )));
+        }
+        Ok(RequestView { id, tenant, n_rows, n_features, payload: &body[c.i..] })
+    }
+
+    /// Deserialize row `i`'s features — the **only** place request
+    /// payload bytes are decoded. Panics on an out-of-range row index
+    /// (a server bug, not a wire condition: `parse` proved the payload
+    /// holds exactly `n_rows` rows).
+    pub fn row(&self, i: usize) -> Vec<f32> {
+        assert!(i < self.n_rows, "row {i} out of range ({} rows)", self.n_rows);
+        let start = i * self.n_features * 4;
+        (0..self.n_features)
+            .map(|f| {
+                let o = start + f * 4;
+                f32::from_le_bytes(self.payload[o..o + 4].try_into().unwrap())
+            })
+            .collect()
+    }
+}
+
+// ---- reply ------------------------------------------------------------
+
+/// Per-row outcome in a batch reply.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RowOutcome {
+    /// Admitted and answered: the model's decision and full logits
+    /// (f32 bits cross the wire exactly — contract 7 bit-identity).
+    Served { prediction: f32, logits: Vec<f32> },
+    /// Refused at the route's admission bound before any feature byte of
+    /// this row was deserialized; carries the configured queue cap (the
+    /// same deterministic figure as [`crate::coordinator::Admission::Shed`]).
+    Shed { queue_depth: u32 },
+    /// Admitted but the backend failed the batch (error replies keep the
+    /// wire and the server alive, mirroring the in-process contract).
+    Failed { error: String },
+}
+
+/// A decoded reply frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReplyFrame {
+    /// One outcome per request row, in request order, plus the route's
+    /// admitted-but-unanswered gauge observed after the batch.
+    Batch { id: u64, queue_depth: u32, rows: Vec<RowOutcome> },
+    /// The request was well-framed but unserviceable (unknown tenant,
+    /// arity mismatch, zero-row batch). The connection stays usable.
+    Rejected { id: u64, reason: String },
+    /// The byte stream itself is broken (bad magic, truncation,
+    /// oversized prefix). The server closes the connection after this.
+    ProtocolError { id: u64, reason: String },
+}
+
+fn encode_reply_header(buf: &mut Vec<u8>, id: u64, status: u8) {
+    buf.extend_from_slice(&MAGIC_REPLY);
+    buf.push(WIRE_VERSION);
+    put_u64(buf, id);
+    buf.push(status);
+}
+
+fn finish_frame(mut body: Vec<u8>) -> Vec<u8> {
+    let mut framed = Vec::with_capacity(4 + body.len());
+    put_u32(&mut framed, body.len() as u32);
+    framed.append(&mut body);
+    framed
+}
+
+/// Encode a batch reply frame (length prefix included).
+pub fn encode_reply(id: u64, queue_depth: u32, rows: &[RowOutcome]) -> Vec<u8> {
+    let mut body = Vec::new();
+    encode_reply_header(&mut body, id, 0);
+    put_u32(&mut body, rows.len() as u32);
+    put_u32(&mut body, queue_depth);
+    for row in rows {
+        match row {
+            RowOutcome::Served { prediction, logits } => {
+                body.push(0);
+                put_f32(&mut body, *prediction);
+                put_u16(&mut body, logits.len() as u16);
+                for &l in logits {
+                    put_f32(&mut body, l);
+                }
+            }
+            RowOutcome::Shed { queue_depth } => {
+                body.push(1);
+                put_u32(&mut body, *queue_depth);
+            }
+            RowOutcome::Failed { error } => {
+                body.push(2);
+                let msg = truncate_msg(error);
+                put_u16(&mut body, msg.len() as u16);
+                body.extend_from_slice(msg.as_bytes());
+            }
+        }
+    }
+    finish_frame(body)
+}
+
+/// Encode a rejected-request reply (status 1; connection stays usable).
+pub fn encode_rejected(id: u64, reason: &str) -> Vec<u8> {
+    encode_status_frame(id, 1, reason)
+}
+
+/// Encode a protocol-error reply (status 2; sender closes afterwards).
+pub fn encode_protocol_error(id: u64, reason: &str) -> Vec<u8> {
+    encode_status_frame(id, 2, reason)
+}
+
+fn encode_status_frame(id: u64, status: u8, reason: &str) -> Vec<u8> {
+    let mut body = Vec::new();
+    encode_reply_header(&mut body, id, status);
+    let msg = truncate_msg(reason);
+    put_u16(&mut body, msg.len() as u16);
+    body.extend_from_slice(msg.as_bytes());
+    finish_frame(body)
+}
+
+/// Reasons ride in a u16-length field; clamp on a char boundary so a
+/// pathological backend error cannot produce an unencodable frame.
+fn truncate_msg(msg: &str) -> &str {
+    let cap = u16::MAX as usize;
+    if msg.len() <= cap {
+        return msg;
+    }
+    let mut end = cap;
+    while !msg.is_char_boundary(end) {
+        end -= 1;
+    }
+    &msg[..end]
+}
+
+/// Decode a reply body (without the 4-byte length prefix).
+pub fn decode_reply(body: &[u8]) -> Result<ReplyFrame, WireError> {
+    let mut c = Cursor { b: body, i: 0 };
+    let magic = c.take(4, "magic")?;
+    if magic != MAGIC_REPLY {
+        return Err(WireError::Malformed(format!(
+            "bad magic {magic:02x?} (expected \"XTRP\")"
+        )));
+    }
+    let version = c.u8("version")?;
+    if version != WIRE_VERSION {
+        return Err(WireError::Malformed(format!(
+            "unsupported protocol version {version}"
+        )));
+    }
+    let id = c.u64("request id")?;
+    let status = c.u8("frame status")?;
+    match status {
+        0 => {
+            let n_rows = c.u32("row count")? as usize;
+            let queue_depth = c.u32("queue depth")?;
+            let mut rows = Vec::with_capacity(n_rows.min(4096));
+            for r in 0..n_rows {
+                let tag = c.u8("row status")?;
+                rows.push(match tag {
+                    0 => {
+                        let prediction = c.f32("prediction")?;
+                        let n_logits = c.u16("logit count")? as usize;
+                        let mut logits = Vec::with_capacity(n_logits);
+                        for _ in 0..n_logits {
+                            logits.push(c.f32("logit")?);
+                        }
+                        RowOutcome::Served { prediction, logits }
+                    }
+                    1 => RowOutcome::Shed { queue_depth: c.u32("shed depth")? },
+                    2 => {
+                        let len = c.u16("error length")? as usize;
+                        let msg = std::str::from_utf8(c.take(len, "error message")?)
+                            .map_err(|_| {
+                                WireError::Malformed("error message is not UTF-8".to_string())
+                            })?;
+                        RowOutcome::Failed { error: msg.to_string() }
+                    }
+                    t => {
+                        return Err(WireError::Malformed(format!(
+                            "unknown row status {t} in row {r}"
+                        )))
+                    }
+                });
+            }
+            if c.i != body.len() {
+                return Err(WireError::Malformed(format!(
+                    "{} trailing bytes after the last row",
+                    body.len() - c.i
+                )));
+            }
+            Ok(ReplyFrame::Batch { id, queue_depth, rows })
+        }
+        1 | 2 => {
+            let len = c.u16("reason length")? as usize;
+            let reason = std::str::from_utf8(c.take(len, "reason")?)
+                .map_err(|_| WireError::Malformed("reason is not UTF-8".to_string()))?
+                .to_string();
+            if status == 1 {
+                Ok(ReplyFrame::Rejected { id, reason })
+            } else {
+                Ok(ReplyFrame::ProtocolError { id, reason })
+            }
+        }
+        s => Err(WireError::Malformed(format!("unknown frame status {s}"))),
+    }
+}
+
+// ---- blocking stream I/O ----------------------------------------------
+
+/// Read one frame from a blocking stream: `Ok(None)` on a clean EOF at
+/// a frame boundary, `Err` on truncation, an oversized prefix, or any
+/// other I/O failure.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+    let mut prefix = [0u8; 4];
+    match read_exact_or_eof(r, &mut prefix)? {
+        ReadStatus::CleanEof => return Ok(None),
+        ReadStatus::Complete => {}
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            WireError::Oversized { len }.to_string(),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+/// Write one already-encoded frame (the encoders include the prefix).
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> io::Result<()> {
+    w.write_all(frame)?;
+    w.flush()
+}
+
+enum ReadStatus {
+    Complete,
+    CleanEof,
+}
+
+/// `read_exact` that distinguishes EOF-before-any-byte (a peer closing
+/// between frames — normal) from EOF-mid-buffer (truncation — an error).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> io::Result<ReadStatus> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(ReadStatus::CleanEof),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("stream closed {filled} bytes into a {}-byte read", buf.len()),
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadStatus::Complete)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_preserves_bits() {
+        let rows = vec![
+            vec![0.25f32, -1.5, f32::NAN, f32::INFINITY],
+            vec![0.0, -0.0, f32::MIN_POSITIVE, 3.25e-39],
+        ];
+        let frame = encode_request(42, "tenant-é", 4, &rows);
+        let body = &frame[4..];
+        assert_eq!(u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize, body.len());
+        let view = RequestView::parse(body).unwrap();
+        assert_eq!(view.id, 42);
+        assert_eq!(view.tenant, "tenant-é");
+        assert_eq!(view.n_rows, 2);
+        assert_eq!(view.n_features, 4);
+        for (i, row) in rows.iter().enumerate() {
+            let got = view.row(i);
+            let want: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+            let have: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(want, have, "row {i}");
+        }
+    }
+
+    #[test]
+    fn zero_row_request_is_structurally_valid() {
+        let frame = encode_request(7, "m", 5, &[]);
+        let view = RequestView::parse(&frame[4..]).unwrap();
+        assert_eq!(view.n_rows, 0);
+        assert_eq!(view.n_features, 5);
+    }
+
+    #[test]
+    fn parse_rejects_bad_magic_version_and_lengths() {
+        let good = encode_request(1, "m", 2, &[vec![1.0, 2.0]]);
+        let body = good[4..].to_vec();
+
+        let mut bad_magic = body.clone();
+        bad_magic[0] = b'Z';
+        assert!(matches!(
+            RequestView::parse(&bad_magic),
+            Err(WireError::Malformed(m)) if m.contains("magic")
+        ));
+
+        let mut bad_version = body.clone();
+        bad_version[4] = 99;
+        assert!(matches!(
+            RequestView::parse(&bad_version),
+            Err(WireError::Malformed(m)) if m.contains("version")
+        ));
+
+        // Body shorter than the payload the counts promise.
+        let truncated = &body[..body.len() - 3];
+        assert!(matches!(
+            RequestView::parse(truncated),
+            Err(WireError::Malformed(m)) if m.contains("mismatch")
+        ));
+
+        // Tenant length pointing past the end of the body.
+        let mut long_tenant = body.clone();
+        long_tenant[13] = 0xFF;
+        long_tenant[14] = 0xFF;
+        assert!(RequestView::parse(&long_tenant).is_err());
+
+        // Hostile row/feature counts must not overflow the length check.
+        let mut hostile = encode_request(1, "", 0, &[]);
+        let b = hostile.len();
+        hostile[b - 8..b - 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        hostile[b - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(RequestView::parse(&hostile[4..]).is_err());
+    }
+
+    #[test]
+    fn reply_roundtrip_all_row_kinds() {
+        let rows = vec![
+            RowOutcome::Served { prediction: 1.0, logits: vec![0.5, -0.25, f32::NAN] },
+            RowOutcome::Shed { queue_depth: 64 },
+            RowOutcome::Failed { error: "shard 1: injected fault".to_string() },
+            RowOutcome::Served { prediction: -0.0, logits: Vec::new() },
+        ];
+        let frame = encode_reply(9, 3, &rows);
+        match decode_reply(&frame[4..]).unwrap() {
+            ReplyFrame::Batch { id, queue_depth, rows: got } => {
+                assert_eq!(id, 9);
+                assert_eq!(queue_depth, 3);
+                assert_eq!(got.len(), rows.len());
+                for (want, have) in rows.iter().zip(&got) {
+                    match (want, have) {
+                        (
+                            RowOutcome::Served { prediction: p1, logits: l1 },
+                            RowOutcome::Served { prediction: p2, logits: l2 },
+                        ) => {
+                            assert_eq!(p1.to_bits(), p2.to_bits());
+                            let b1: Vec<u32> = l1.iter().map(|v| v.to_bits()).collect();
+                            let b2: Vec<u32> = l2.iter().map(|v| v.to_bits()).collect();
+                            assert_eq!(b1, b2);
+                        }
+                        (a, b) => assert_eq!(a, b),
+                    }
+                }
+            }
+            other => panic!("expected batch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejected_and_protocol_error_roundtrip() {
+        let f = encode_rejected(5, "unknown model `x`");
+        assert_eq!(
+            decode_reply(&f[4..]).unwrap(),
+            ReplyFrame::Rejected { id: 5, reason: "unknown model `x`".to_string() }
+        );
+        let f = encode_protocol_error(0, "bad magic");
+        assert_eq!(
+            decode_reply(&f[4..]).unwrap(),
+            ReplyFrame::ProtocolError { id: 0, reason: "bad magic".to_string() }
+        );
+    }
+
+    #[test]
+    fn decode_reply_rejects_garbage() {
+        assert!(decode_reply(b"").is_err());
+        assert!(decode_reply(b"XTRP").is_err());
+        assert!(decode_reply(&[0u8; 32]).is_err());
+        // Trailing bytes after a complete batch are an error.
+        let mut f = encode_reply(1, 0, &[RowOutcome::Shed { queue_depth: 1 }]);
+        f.push(0xAB);
+        let body = &f[4..];
+        assert!(decode_reply(body).is_err());
+    }
+
+    #[test]
+    fn oversized_error_message_is_clamped() {
+        let huge = "é".repeat(40_000); // 80 000 bytes, over the u16 cap
+        let f = encode_rejected(1, &huge);
+        match decode_reply(&f[4..]).unwrap() {
+            ReplyFrame::Rejected { reason, .. } => {
+                assert!(reason.len() <= u16::MAX as usize);
+                assert!(reason.starts_with('é'));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_frame_roundtrip_and_guards() {
+        let frame = encode_request(3, "t", 1, &[vec![1.0]]);
+        let mut cursor = io::Cursor::new(frame.clone());
+        let body = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(&body[..], &frame[4..]);
+        // Clean EOF at the boundary.
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+        // Truncated body.
+        let mut short = io::Cursor::new(frame[..frame.len() - 2].to_vec());
+        assert!(read_frame(&mut short).is_err());
+        // Oversized prefix refused before any body read.
+        let mut oversized = io::Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        let err = read_frame(&mut oversized).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+}

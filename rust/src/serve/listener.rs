@@ -1,0 +1,359 @@
+//! Framed-TCP front end over the model [`Fleet`].
+//!
+//! One accept thread, one handler thread per connection. The handler
+//! reads a frame, parses only its *header* ([`RequestView::parse`]),
+//! and claims admission slots ([`RouteHandle::try_admit`]) row by row —
+//! feature payload bytes are deserialized **only** for rows that were
+//! admitted, so a saturated route sheds wire traffic at header-scan
+//! cost (the shed-before-parse contract, DESIGN.md §6). Socket
+//! backpressure thus maps directly onto the fleet's `QueueTicket`
+//! gauge: a stalled backend fills the route's bounded queue, the
+//! listener's `try_admit` starts refusing, and clients see `Shed` row
+//! outcomes instead of unbounded buffering anywhere in the server.
+//!
+//! Error containment is per connection: a malformed or oversized frame
+//! gets a protocol-error reply and closes *that* connection; unknown
+//! tenants, arity mismatches and zero-row batches get a `Rejected`
+//! reply and the connection stays usable. Neither path can panic a
+//! handler or wedge the accept loop.
+
+use super::frame::{
+    encode_protocol_error, encode_rejected, encode_reply, write_frame, RequestView,
+    RowOutcome, MAX_FRAME_BYTES,
+};
+use crate::coordinator::{Fleet, RouteHandle};
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Poll interval for the stop flag on otherwise-blocking reads.
+const POLL_TIMEOUT: Duration = Duration::from_millis(100);
+/// A connection that goes quiet *mid-frame* for this long is dropped
+/// (a peer that sent a length prefix owes the body; an idle peer
+/// between frames is fine and waits forever).
+const MID_FRAME_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Point-in-time counters for one [`WireServer`].
+#[derive(Clone, Debug, Default)]
+pub struct WireStats {
+    /// Connections accepted over the listener's lifetime.
+    pub connections: u64,
+    /// Well-formed request frames handled (including rejected ones).
+    pub frames: u64,
+    /// Rows offered across all request frames.
+    pub rows_offered: u64,
+    /// Rows that claimed an admission slot.
+    pub rows_admitted: u64,
+    /// Rows refused at the queue bound.
+    pub rows_shed: u64,
+    /// Rows whose feature payload was actually deserialized. The
+    /// shed-before-parse contract: `rows_decoded == rows_admitted`
+    /// always — shed rows never touch payload bytes.
+    pub rows_decoded: u64,
+    /// Connections torn down on a malformed/oversized/truncated frame.
+    pub protocol_errors: u64,
+    /// Well-framed requests refused whole (unknown tenant, arity
+    /// mismatch, zero rows); their connections stayed up.
+    pub rejected_frames: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    connections: AtomicU64,
+    frames: AtomicU64,
+    rows_offered: AtomicU64,
+    rows_admitted: AtomicU64,
+    rows_shed: AtomicU64,
+    rows_decoded: AtomicU64,
+    protocol_errors: AtomicU64,
+    rejected_frames: AtomicU64,
+}
+
+/// The TCP front end: owns the accept thread and all connection
+/// handlers. Dropping it without [`WireServer::shutdown`] leaks the
+/// threads (they hold an `Arc<Fleet>`), so shut it down explicitly.
+pub struct WireServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    accept_thread: JoinHandle<()>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7711"`; port 0 picks a free port —
+    /// read it back with [`WireServer::local_addr`]) and start serving
+    /// `fleet` until [`WireServer::shutdown`].
+    pub fn start(fleet: Arc<Fleet>, addr: &str) -> io::Result<WireServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(Counters::default());
+        let accept_thread = {
+            let stop = stop.clone();
+            let counters = counters.clone();
+            thread::Builder::new()
+                .name("wire-accept".to_string())
+                .spawn(move || accept_loop(listener, fleet, stop, counters))
+                .expect("spawn wire accept thread")
+        };
+        Ok(WireServer { addr, stop, counters, accept_thread })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot the listener's counters.
+    pub fn stats(&self) -> WireStats {
+        let c = &self.counters;
+        WireStats {
+            connections: c.connections.load(Ordering::Relaxed),
+            frames: c.frames.load(Ordering::Relaxed),
+            rows_offered: c.rows_offered.load(Ordering::Relaxed),
+            rows_admitted: c.rows_admitted.load(Ordering::Relaxed),
+            rows_shed: c.rows_shed.load(Ordering::Relaxed),
+            rows_decoded: c.rows_decoded.load(Ordering::Relaxed),
+            protocol_errors: c.protocol_errors.load(Ordering::Relaxed),
+            rejected_frames: c.rejected_frames.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting, join the accept thread and every connection
+    /// handler. In-flight requests finish first (handlers only exit at
+    /// frame boundaries or on their read timeout noticing the flag), so
+    /// no admitted row is abandoned by the front end. The fleet itself
+    /// is not shut down — it belongs to the caller.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::Release);
+        // Wake the blocking accept with a no-op connection; the loop
+        // re-checks the flag before handling it.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept_thread.join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    fleet: Arc<Fleet>,
+    stop: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+) {
+    // Handler threads are reaped lazily each accept; the remainder are
+    // joined on shutdown so `WireServer::shutdown` returns only when
+    // every connection is done.
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        handlers.retain(|h| !h.is_finished());
+        match conn {
+            Ok(stream) => {
+                counters.connections.fetch_add(1, Ordering::Relaxed);
+                let fleet = fleet.clone();
+                let stop = stop.clone();
+                let counters = counters.clone();
+                let h = thread::Builder::new()
+                    .name("wire-conn".to_string())
+                    .spawn(move || {
+                        // A handler failure (peer reset, mid-frame EOF)
+                        // is contained to this connection.
+                        let _ = handle_connection(stream, &fleet, &stop, &counters);
+                    })
+                    .expect("spawn wire connection handler");
+                handlers.push(h);
+            }
+            // Transient accept errors (e.g. EMFILE, aborted handshake)
+            // must not kill the loop.
+            Err(_) => continue,
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Serve one connection until clean EOF, a protocol error, or shutdown.
+fn handle_connection(
+    stream: TcpStream,
+    fleet: &Fleet,
+    stop: &AtomicBool,
+    counters: &Counters,
+) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(POLL_TIMEOUT))?;
+    let mut reader = stream.try_clone()?;
+    let mut writer = stream;
+    loop {
+        let body = match read_frame_interruptible(&mut reader, stop) {
+            Ok(Some(body)) => body,
+            // Clean EOF at a frame boundary, or shutdown while idle.
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                // Truncated / oversized / mid-frame disconnect: tell the
+                // peer if it is still there, then drop the connection.
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = write_frame(&mut writer, &encode_protocol_error(0, &e.to_string()));
+                return Ok(());
+            }
+        };
+        let view = match RequestView::parse(&body) {
+            Ok(view) => view,
+            Err(e) => {
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = write_frame(&mut writer, &encode_protocol_error(0, &e.to_string()));
+                return Ok(());
+            }
+        };
+        counters.frames.fetch_add(1, Ordering::Relaxed);
+        let reply = handle_request(&view, fleet, counters);
+        if write_frame(&mut writer, &reply).is_err() {
+            // Peer went away while we served its batch; nothing to do —
+            // admitted rows were still answered by the fleet.
+            return Ok(());
+        }
+    }
+}
+
+/// Serve one well-framed request, returning the encoded reply frame.
+/// This is the shed-before-parse core: admission slots are claimed from
+/// the header-only [`RequestView`], and `view.row(i)` — the only place
+/// feature bytes are deserialized — runs solely for admitted rows.
+fn handle_request(view: &RequestView<'_>, fleet: &Fleet, counters: &Counters) -> Vec<u8> {
+    counters.rows_offered.fetch_add(view.n_rows as u64, Ordering::Relaxed);
+    let handle: RouteHandle<'_> = match fleet.handle(view.tenant) {
+        Ok(h) => h,
+        Err(e) => {
+            counters.rejected_frames.fetch_add(1, Ordering::Relaxed);
+            return encode_rejected(view.id, &e);
+        }
+    };
+    if view.n_rows == 0 {
+        counters.rejected_frames.fetch_add(1, Ordering::Relaxed);
+        return encode_rejected(view.id, "empty batch: a request must carry at least one row");
+    }
+    if let Err(e) = handle.check_arity(view.n_features) {
+        counters.rejected_frames.fetch_add(1, Ordering::Relaxed);
+        return encode_rejected(view.id, &e);
+    }
+
+    // Phase 1: claim slots row by row, decoding only admitted rows.
+    let mut outcomes: Vec<Option<RowOutcome>> = vec![None; view.n_rows];
+    let mut pending: Vec<(usize, Receiver<crate::coordinator::Reply>)> = Vec::new();
+    for i in 0..view.n_rows {
+        match handle.try_admit() {
+            Some(slot) => {
+                counters.rows_admitted.fetch_add(1, Ordering::Relaxed);
+                counters.rows_decoded.fetch_add(1, Ordering::Relaxed);
+                let row = view.row(i);
+                pending.push((i, handle.submit_admitted(slot, &row)));
+            }
+            None => {
+                counters.rows_shed.fetch_add(1, Ordering::Relaxed);
+                outcomes[i] =
+                    Some(RowOutcome::Shed { queue_depth: handle.queue_cap() as u32 });
+            }
+        }
+    }
+
+    // Phase 2: wait for every admitted row's reply (the drain contract
+    // guarantees each channel is answered, even across a swap).
+    for (i, rx) in pending {
+        outcomes[i] = Some(match rx.recv() {
+            Ok(reply) => match reply.error {
+                None => RowOutcome::Served {
+                    prediction: reply.prediction,
+                    logits: reply.logits,
+                },
+                Some(error) => RowOutcome::Failed { error },
+            },
+            Err(_) => RowOutcome::Failed {
+                error: "worker dropped the request".to_string(),
+            },
+        });
+    }
+    let rows: Vec<RowOutcome> =
+        outcomes.into_iter().map(|o| o.expect("every row resolved")).collect();
+    encode_reply(view.id, handle.queue_depth() as u32, &rows)
+}
+
+/// [`super::frame::read_frame`] over a socket with a read timeout: while *idle*
+/// (waiting for a length prefix), timeouts just re-check the stop flag;
+/// once a prefix has arrived the peer owes the body and gets
+/// [`MID_FRAME_DEADLINE`] of cumulative silence before the connection
+/// is declared truncated.
+fn read_frame_interruptible(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> io::Result<Option<Vec<u8>>> {
+    let mut prefix = [0u8; 4];
+    let mut filled = 0;
+    // Idle phase: nothing read yet — shutdown exits cleanly.
+    while filled == 0 {
+        if stop.load(Ordering::Acquire) {
+            return Ok(None);
+        }
+        match stream.read(&mut prefix) {
+            Ok(0) => return Ok(None), // clean EOF between frames
+            Ok(n) => filled = n,
+            Err(e) if is_timeout(&e) => continue,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    // Committed phase: a frame has started; finish it or fail.
+    read_remainder(stream, &mut prefix[filled..])?;
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte frame ceiling"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    read_remainder(stream, &mut body)?;
+    Ok(Some(body))
+}
+
+/// `read_exact` under a read timeout: retries timeouts until
+/// [`MID_FRAME_DEADLINE`] of cumulative mid-frame silence, and treats
+/// EOF as truncation (we are mid-frame by construction).
+fn read_remainder(stream: &mut TcpStream, buf: &mut [u8]) -> io::Result<()> {
+    let deadline = Instant::now() + MID_FRAME_DEADLINE;
+    let mut filled = 0;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!(
+                        "peer disconnected {filled} bytes into a {}-byte frame section",
+                        buf.len()
+                    ),
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if is_timeout(&e) || e.kind() == io::ErrorKind::Interrupted => {
+                if Instant::now() >= deadline {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "peer stalled mid-frame",
+                    ));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Read timeouts surface as `WouldBlock` or `TimedOut` depending on the
+/// platform; treat both as "keep polling".
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}

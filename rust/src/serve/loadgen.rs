@@ -1,0 +1,355 @@
+//! Open-loop multi-tenant load generator for the wire front end.
+//!
+//! `xtime loadgen` drives a [`super::listener::WireServer`] the way the
+//! paper's serving claim imagines traffic: many independent clients, a
+//! skewed tenant mix, arrivals that do **not** slow down because the
+//! server is slow. Each worker connection schedules its requests by a
+//! seeded Poisson process (exponential inter-arrivals at its share of
+//! the aggregate rate) and measures latency from the *scheduled*
+//! arrival time, not the send time — so when the server falls behind,
+//! the queueing delay a real open-loop client would have seen lands in
+//! the tail percentiles instead of being silently absorbed
+//! (coordinated omission). Workers reconnect every
+//! [`LoadgenConfig::churn_every`] requests to keep the accept loop and
+//! per-connection state under churn, and the whole run is deterministic
+//! in its request sequence given [`LoadgenConfig::seed`].
+//!
+//! The run report aggregates per-tenant row accounting
+//! (`offered == served + shed + failed`) and latency tails, and
+//! [`report_json`] renders the stable-keyed `BENCH_serving.json` schema
+//! (docs/BENCHMARKS.md).
+
+use super::client::WireClient;
+use super::frame::RowOutcome;
+use crate::bench_support::{fast_mode, latency_tail_json};
+use crate::util::{Json, Rng};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One tenant of the generated mix.
+pub struct TenantSpec {
+    /// Registered model name on the serving side.
+    pub name: String,
+    /// Request rows, cycled per worker (must be non-empty, all rows of
+    /// the tenant model's arity).
+    pub rows: Vec<Vec<f32>>,
+    /// Relative share of the mix (> 0).
+    pub weight: usize,
+}
+
+/// Load-generator run parameters.
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7711`.
+    pub addr: String,
+    pub tenants: Vec<TenantSpec>,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Aggregate arrival rate (requests/s) split evenly across
+    /// connections. `0` disables pacing: every worker sends back to
+    /// back (maximum closed-loop pressure).
+    pub rate_rps: f64,
+    /// Concurrent worker connections.
+    pub conns: usize,
+    /// Rows per request frame.
+    pub batch: usize,
+    /// Reconnect each worker after this many requests (0 = never).
+    pub churn_every: usize,
+    pub seed: u64,
+}
+
+/// Per-tenant accounting for one run; rows, not requests
+/// (`offered == served + shed + failed`).
+#[derive(Clone, Debug, Default)]
+pub struct TenantOutcome {
+    pub offered_rows: u64,
+    pub served_rows: u64,
+    pub shed_rows: u64,
+    pub failed_rows: u64,
+    /// One sample per *request* that got a batch reply, in seconds from
+    /// scheduled arrival to decoded reply.
+    pub latencies: Vec<f64>,
+}
+
+impl TenantOutcome {
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered_rows == 0 {
+            0.0
+        } else {
+            self.shed_rows as f64 / self.offered_rows as f64
+        }
+    }
+
+    fn absorb(&mut self, other: TenantOutcome) {
+        self.offered_rows += other.offered_rows;
+        self.served_rows += other.served_rows;
+        self.shed_rows += other.shed_rows;
+        self.failed_rows += other.failed_rows;
+        self.latencies.extend(other.latencies);
+    }
+}
+
+/// Aggregated outcome of a [`run`].
+pub struct LoadReport {
+    /// Wall-clock seconds for the whole run.
+    pub wall_s: f64,
+    /// Requests that failed at the transport/protocol level (their rows
+    /// are counted as `failed_rows` on the tenant).
+    pub request_errors: u64,
+    /// Per-tenant accounting, name-keyed.
+    pub tenants: BTreeMap<String, TenantOutcome>,
+}
+
+impl LoadReport {
+    /// Row totals across tenants.
+    pub fn totals(&self) -> TenantOutcome {
+        let mut t = TenantOutcome::default();
+        for o in self.tenants.values() {
+            t.absorb(o.clone());
+        }
+        t
+    }
+}
+
+/// Run the load generator to completion.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
+    if cfg.tenants.is_empty() {
+        return Err("loadgen needs at least one tenant".to_string());
+    }
+    if cfg.tenants.iter().any(|t| t.rows.is_empty() || t.weight == 0) {
+        return Err("every tenant needs rows and a positive weight".to_string());
+    }
+    if cfg.conns == 0 || cfg.batch == 0 {
+        return Err("conns and batch must be positive".to_string());
+    }
+    let mut root = Rng::new(cfg.seed);
+    let worker_seeds: Vec<u64> =
+        (0..cfg.conns).map(|_| root.next_u64()).collect();
+    let t0 = Instant::now();
+    let partials: Vec<Result<WorkerOutcome, String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.conns)
+            .map(|w| {
+                // Spread the remainder so worker request counts sum to
+                // exactly `cfg.requests`.
+                let n = cfg.requests / cfg.conns
+                    + usize::from(w < cfg.requests % cfg.conns);
+                let seed = worker_seeds[w];
+                scope.spawn(move || worker(cfg, n, seed))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err("worker panicked".to_string())))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut tenants: BTreeMap<String, TenantOutcome> = cfg
+        .tenants
+        .iter()
+        .map(|t| (t.name.clone(), TenantOutcome::default()))
+        .collect();
+    let mut request_errors = 0u64;
+    for p in partials {
+        let p = p?;
+        request_errors += p.request_errors;
+        for (spec, outcome) in cfg.tenants.iter().zip(p.per_tenant) {
+            tenants.get_mut(&spec.name).unwrap().absorb(outcome);
+        }
+    }
+    Ok(LoadReport { wall_s, request_errors, tenants })
+}
+
+struct WorkerOutcome {
+    /// Indexed like `cfg.tenants`.
+    per_tenant: Vec<TenantOutcome>,
+    request_errors: u64,
+}
+
+/// One worker connection: open-loop schedule, weighted tenant picks,
+/// connection churn, reconnect-and-continue on request errors.
+fn worker(cfg: &LoadgenConfig, n_requests: usize, seed: u64) -> Result<WorkerOutcome, String> {
+    let mut rng = Rng::new(seed);
+    let per_conn_rate = cfg.rate_rps / cfg.conns as f64;
+    let total_weight: usize = cfg.tenants.iter().map(|t| t.weight).sum();
+    let mut per_tenant: Vec<TenantOutcome> =
+        cfg.tenants.iter().map(|_| TenantOutcome::default()).collect();
+    let mut offsets = vec![0usize; cfg.tenants.len()];
+    let mut request_errors = 0u64;
+    let mut client = WireClient::connect(&cfg.addr)
+        .map_err(|e| format!("connecting to {}: {e}", cfg.addr))?;
+    let start = Instant::now();
+    let mut scheduled = 0.0f64; // seconds since `start`
+    for r in 0..n_requests {
+        if per_conn_rate > 0.0 {
+            // Exponential inter-arrival: a Poisson process per worker
+            // (superposed across workers, still Poisson at the server).
+            scheduled += -rng.f64().max(f64::MIN_POSITIVE).ln() / per_conn_rate;
+            let now = start.elapsed().as_secs_f64();
+            if scheduled > now {
+                std::thread::sleep(Duration::from_secs_f64(scheduled - now));
+            }
+        } else {
+            scheduled = start.elapsed().as_secs_f64();
+        }
+        if cfg.churn_every > 0 && r > 0 && r % cfg.churn_every == 0 {
+            client = WireClient::connect(&cfg.addr)
+                .map_err(|e| format!("reconnecting to {}: {e}", cfg.addr))?;
+        }
+        // Weighted tenant pick, then `batch` rows cycled from its pool.
+        let mut pick = rng.below(total_weight);
+        let mut ti = 0usize;
+        while pick >= cfg.tenants[ti].weight {
+            pick -= cfg.tenants[ti].weight;
+            ti += 1;
+        }
+        let spec = &cfg.tenants[ti];
+        let rows: Vec<Vec<f32>> = (0..cfg.batch)
+            .map(|k| spec.rows[(offsets[ti] + k) % spec.rows.len()].clone())
+            .collect();
+        offsets[ti] = (offsets[ti] + cfg.batch) % spec.rows.len();
+        let out = &mut per_tenant[ti];
+        out.offered_rows += cfg.batch as u64;
+        match client.request(&spec.name, &rows) {
+            Ok(reply) => {
+                for row in &reply.rows {
+                    match row {
+                        RowOutcome::Served { .. } => out.served_rows += 1,
+                        RowOutcome::Shed { .. } => out.shed_rows += 1,
+                        RowOutcome::Failed { .. } => out.failed_rows += 1,
+                    }
+                }
+                out.latencies.push(start.elapsed().as_secs_f64() - scheduled);
+            }
+            Err(_) => {
+                // Transport/protocol failure: the whole request's rows
+                // are lost; reconnect and keep the schedule.
+                request_errors += 1;
+                out.failed_rows += cfg.batch as u64;
+                client = WireClient::connect(&cfg.addr)
+                    .map_err(|e| format!("reconnecting to {}: {e}", cfg.addr))?;
+            }
+        }
+    }
+    Ok(WorkerOutcome { per_tenant, request_errors })
+}
+
+/// Render the `BENCH_serving.json` schema (docs/BENCHMARKS.md): run
+/// parameters, per-tenant row accounting + latency tails, and totals.
+pub fn report_json(cfg: &LoadgenConfig, report: &LoadReport) -> Json {
+    let totals = report.totals();
+    let mut tenants = Json::obj();
+    for (name, o) in &report.tenants {
+        let weight = cfg
+            .tenants
+            .iter()
+            .find(|t| &t.name == name)
+            .map_or(0, |t| t.weight);
+        tenants.set(name, outcome_json(o, Some(weight)));
+    }
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("serving".to_string()))
+        .set("fast_mode", Json::Bool(fast_mode()))
+        .set("addr", Json::Str(cfg.addr.clone()))
+        .set("requests", Json::Num(cfg.requests as f64))
+        .set("rate_rps", Json::Num(cfg.rate_rps))
+        .set("conns", Json::Num(cfg.conns as f64))
+        .set("batch", Json::Num(cfg.batch as f64))
+        .set("churn_every", Json::Num(cfg.churn_every as f64))
+        .set("seed", Json::Num(cfg.seed as f64))
+        .set("wall_s", Json::Num(report.wall_s))
+        .set(
+            "rows_per_s",
+            Json::Num(if report.wall_s > 0.0 {
+                totals.offered_rows as f64 / report.wall_s
+            } else {
+                0.0
+            }),
+        )
+        .set("request_errors", Json::Num(report.request_errors as f64))
+        .set("tenants", tenants)
+        .set("total", outcome_json(&totals, None));
+    j
+}
+
+fn outcome_json(o: &TenantOutcome, weight: Option<usize>) -> Json {
+    let mut j = Json::obj();
+    if let Some(w) = weight {
+        j.set("weight", Json::Num(w as f64));
+    }
+    j.set("offered_rows", Json::Num(o.offered_rows as f64))
+        .set("served_rows", Json::Num(o.served_rows as f64))
+        .set("shed_rows", Json::Num(o.shed_rows as f64))
+        .set("failed_rows", Json::Num(o.failed_rows as f64))
+        .set("shed_rate", Json::Num(o.shed_rate()))
+        .set("latency_s", latency_tail_json(&o.latencies));
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_accounting_and_shed_rate() {
+        let mut a = TenantOutcome {
+            offered_rows: 10,
+            served_rows: 6,
+            shed_rows: 3,
+            failed_rows: 1,
+            latencies: vec![0.1, 0.2],
+        };
+        a.absorb(TenantOutcome {
+            offered_rows: 10,
+            served_rows: 10,
+            shed_rows: 0,
+            failed_rows: 0,
+            latencies: vec![0.3],
+        });
+        assert_eq!(a.offered_rows, a.served_rows + a.shed_rows + a.failed_rows);
+        assert!((a.shed_rate() - 0.15).abs() < 1e-12);
+        assert_eq!(a.latencies.len(), 3);
+        assert_eq!(TenantOutcome::default().shed_rate(), 0.0);
+    }
+
+    #[test]
+    fn report_json_has_stable_keys() {
+        let cfg = LoadgenConfig {
+            addr: "127.0.0.1:0".to_string(),
+            tenants: vec![TenantSpec {
+                name: "churn".to_string(),
+                rows: vec![vec![0.5]],
+                weight: 2,
+            }],
+            requests: 4,
+            rate_rps: 100.0,
+            conns: 1,
+            batch: 2,
+            churn_every: 0,
+            seed: 7,
+        };
+        let mut tenants = BTreeMap::new();
+        tenants.insert(
+            "churn".to_string(),
+            TenantOutcome {
+                offered_rows: 8,
+                served_rows: 5,
+                shed_rows: 3,
+                failed_rows: 0,
+                latencies: vec![0.01, 0.02, 0.03, 0.04],
+            },
+        );
+        let report = LoadReport { wall_s: 2.0, request_errors: 0, tenants };
+        let j = report_json(&cfg, &report);
+        assert_eq!(j.req_str("bench").unwrap(), "serving");
+        assert_eq!(j.req_f64("rows_per_s").unwrap(), 4.0);
+        let t = j.req("tenants").unwrap().req("churn").unwrap();
+        assert_eq!(t.req_f64("weight").unwrap(), 2.0);
+        assert!((t.req_f64("shed_rate").unwrap() - 0.375).abs() < 1e-12);
+        assert!(t.req("latency_s").unwrap().req_f64("p999").unwrap() > 0.0);
+        let total = j.req("total").unwrap();
+        assert_eq!(total.req_f64("offered_rows").unwrap(), 8.0);
+        assert!(total.get("weight").is_none());
+        // Round-trips through the serializer/parser.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req_str("bench").unwrap(), "serving");
+    }
+}

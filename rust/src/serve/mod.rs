@@ -1,0 +1,63 @@
+//! L4 wire serving: the framed-TCP front end over the model
+//! [`crate::coordinator::Fleet`], its blocking client, and the
+//! open-loop load generator behind `xtime loadgen`.
+//!
+//! The paper's headline serving numbers (119× throughput, §IV) are
+//! socket-to-socket figures; this module is the layer that turns the
+//! in-process fleet into something those numbers can be measured
+//! against. Design points (DESIGN.md §6, ADR-004):
+//!
+//! * **length-prefixed binary frames** ([`frame`]) — no heavy
+//!   serialization dependency; f32 feature/logit bits cross the wire
+//!   verbatim, which is what makes wire-vs-in-process bit-identity
+//!   (contract 7) testable at all;
+//! * **lazy request parse** ([`frame::RequestView`]) — header fields
+//!   (tenant, row count, arity) are validated without reading payload
+//!   bytes, so admission decisions happen *before* feature
+//!   deserialization;
+//! * **backpressure = admission** ([`listener`]) — the listener claims
+//!   a fleet `QueueTicket` per row straight off the header; refused
+//!   rows are answered `Shed` without their payload ever being decoded,
+//!   so a stalled backend sheds wire load at header-scan cost;
+//! * **open-loop load** ([`loadgen`]) — seeded Poisson arrivals,
+//!   skewed tenant mix, connection churn, latency measured from
+//!   scheduled arrival (no coordinated omission), reported as
+//!   `BENCH_serving.json`.
+//!
+//! Loopback round trip:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use xtime::bench_support::random_ensemble;
+//! use xtime::compiler::{compile, CompileOptions};
+//! use xtime::coordinator::{Fleet, ModelConfig};
+//! use xtime::data::Task;
+//! use xtime::serve::{RowOutcome, WireClient, WireServer};
+//!
+//! let model = random_ensemble(8, 3, 4, Task::Binary, 1);
+//! let program = compile(&model, &CompileOptions::default()).unwrap();
+//! let fleet = Arc::new(Fleet::new());
+//! fleet.register_program("m", &program, ModelConfig::for_program(&program)).unwrap();
+//!
+//! let server = WireServer::start(fleet.clone(), "127.0.0.1:0").unwrap();
+//! let mut client = WireClient::connect(&server.local_addr().to_string()).unwrap();
+//! let reply = client.request("m", &[vec![0.1, 0.5, 0.9, 0.25]]).unwrap();
+//! assert!(matches!(reply.rows[0], RowOutcome::Served { .. }));
+//!
+//! server.shutdown(); // joins the accept loop and every connection
+//! Arc::try_unwrap(fleet).ok().unwrap().shutdown();
+//! ```
+
+pub mod client;
+pub mod frame;
+pub mod listener;
+pub mod loadgen;
+
+pub use client::{BatchReply, WireClient};
+pub use frame::{
+    decode_reply, encode_reply, encode_request, read_frame, write_frame, ReplyFrame,
+    RequestView, RowOutcome, WireError, MAGIC_REPLY, MAGIC_REQUEST, MAX_FRAME_BYTES,
+    WIRE_VERSION,
+};
+pub use listener::{WireServer, WireStats};
+pub use loadgen::{LoadReport, LoadgenConfig, TenantOutcome, TenantSpec};

@@ -1,0 +1,594 @@
+//! Wire-protocol conformance battery (ISSUE 6): the framed-TCP front
+//! end must survive hostile bytes without panicking or wedging its
+//! accept loop, agree bit-exactly with the in-process fleet path
+//! (DESIGN.md §5 contract 7), and make shed decisions before a refused
+//! row's feature payload is ever deserialized (shed-before-parse,
+//! asserted through the listener's decode counter).
+//!
+//! Models are `random_ensemble` topologies (no training) so the battery
+//! runs in CI-smoke time.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use xtime::bench_support::random_ensemble;
+use xtime::compiler::{compile, CamEngine, CamProgram, CompileOptions};
+use xtime::coordinator::{Backend, BatchPolicy, Fleet, FunctionalBackend, ModelConfig};
+use xtime::data::Task;
+use xtime::serve::{
+    decode_reply, encode_request, read_frame, write_frame, ReplyFrame, RequestView,
+    RowOutcome, WireClient, WireServer, MAX_FRAME_BYTES,
+};
+use xtime::util::prop::{self, require};
+use xtime::util::Rng;
+
+fn program(seed: u64, n_features: usize, task: Task) -> CamProgram {
+    let model = random_ensemble(24, 4, n_features, task, seed);
+    compile(&model, &CompileOptions::default()).unwrap()
+}
+
+fn random_rows(n_features: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..n_features).map(|_| rng.f32()).collect()).collect()
+}
+
+/// A fleet with one functional route, wrapped for wire serving.
+fn serve_one(
+    name: &str,
+    p: &CamProgram,
+    cfg: ModelConfig,
+) -> (Arc<Fleet>, WireServer, String) {
+    let fleet = Arc::new(Fleet::new());
+    fleet.register_program(name, p, cfg).unwrap();
+    let server = WireServer::start(fleet.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    (fleet, server, addr)
+}
+
+fn teardown(fleet: Arc<Fleet>, server: WireServer) {
+    server.shutdown();
+    // After the wire shutdown joined every handler, the Arc is unique.
+    Arc::try_unwrap(fleet).ok().expect("wire shutdown leaves the fleet unshared").shutdown();
+}
+
+// ---- encode/decode round-trip properties ------------------------------
+
+/// Random batches (shape, tenant text, payload bits incl. NaN) survive
+/// a request encode → lazy parse → per-row decode round trip exactly.
+#[test]
+fn prop_request_roundtrip_random_batches() {
+    prop::check(128, 0x31E6, |g| {
+        let n_features = g.usize_in(1, 24);
+        let n_rows = g.usize_in(0, 12);
+        let id = g.u64();
+        let tenants = ["m", "telco", "tenant-é™", "", "a b/c"];
+        let tenant = *g.pick(&tenants);
+        let rows: Vec<Vec<f32>> = (0..n_rows)
+            .map(|_| {
+                (0..n_features)
+                    .map(|_| {
+                        // Exercise odd payloads too: NaN and subnormals
+                        // must cross the wire bit-exactly.
+                        if g.bool() {
+                            g.f32_in(-1e6, 1e6)
+                        } else {
+                            *g.pick(&[f32::NAN, 0.0, -0.0, f32::MIN_POSITIVE, 1e-40])
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let frame = encode_request(id, tenant, n_features, &rows);
+        let view = RequestView::parse(&frame[4..])
+            .map_err(|e| format!("parse failed: {e}"))?;
+        require(view.id == id, format!("id {} != {id}", view.id))?;
+        require(view.tenant == tenant, format!("tenant {:?}", view.tenant))?;
+        require(view.n_rows == n_rows, "row count")?;
+        require(view.n_features == n_features, "feature count")?;
+        for (i, row) in rows.iter().enumerate() {
+            let got = view.row(i);
+            let same = row.len() == got.len()
+                && row.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits());
+            require(same, format!("row {i} bits changed"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Random reply frames (every row-outcome kind, random logit widths)
+/// survive encode → decode exactly.
+#[test]
+fn prop_reply_roundtrip_random_outcomes() {
+    prop::check(128, 0x52E7, |g| {
+        let id = g.u64();
+        let queue_depth = g.u64() as u32;
+        let n_rows = g.usize_in(0, 10);
+        let rows: Vec<RowOutcome> = (0..n_rows)
+            .map(|_| match g.usize_in(0, 3) {
+                0 => RowOutcome::Served {
+                    prediction: g.f32_in(-10.0, 10.0),
+                    logits: g.vec_f32(g.usize_in(0, 6), -5.0, 5.0),
+                },
+                1 => RowOutcome::Shed { queue_depth: g.u64() as u32 },
+                _ => RowOutcome::Failed {
+                    error: format!("shard {}: fault", g.usize_in(0, 9)),
+                },
+            })
+            .collect();
+        let frame = xtime::serve::encode_reply(id, queue_depth, &rows);
+        match decode_reply(&frame[4..]).map_err(|e| format!("decode failed: {e}"))? {
+            ReplyFrame::Batch { id: gid, queue_depth: gq, rows: grows } => {
+                require(gid == id && gq == queue_depth, "header fields")?;
+                require(grows.len() == rows.len(), "row count")?;
+                for (i, (want, have)) in rows.iter().zip(&grows).enumerate() {
+                    let same = match (want, have) {
+                        (
+                            RowOutcome::Served { prediction: p1, logits: l1 },
+                            RowOutcome::Served { prediction: p2, logits: l2 },
+                        ) => {
+                            p1.to_bits() == p2.to_bits()
+                                && l1.len() == l2.len()
+                                && l1.iter().zip(l2).all(|(a, b)| a.to_bits() == b.to_bits())
+                        }
+                        (a, b) => a == b,
+                    };
+                    require(same, format!("row {i} changed"))?;
+                }
+                Ok(())
+            }
+            other => Err(format!("expected batch, got {other:?}")),
+        }
+    });
+}
+
+// ---- hostile-bytes battery --------------------------------------------
+
+/// Helper: raw socket + read one reply frame body.
+fn raw_reply(stream: &mut TcpStream) -> Option<Vec<u8>> {
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    read_frame(stream).ok().flatten()
+}
+
+/// A truncated frame (length prefix promises more than the peer sends)
+/// gets a protocol-error reply, the connection closes, and the server
+/// keeps accepting fresh connections.
+#[test]
+fn truncated_frame_yields_protocol_error_and_server_survives() {
+    let p = program(1, 8, Task::Binary);
+    let (fleet, server, addr) = serve_one("m", &p, ModelConfig::for_program(&p));
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.write_all(&100u32.to_le_bytes()).unwrap(); // promise 100 bytes…
+    stream.write_all(&[0xAB; 10]).unwrap(); // …send 10
+    stream.shutdown(Shutdown::Write).unwrap(); // EOF mid-frame
+    let body = raw_reply(&mut stream).expect("server must answer before closing");
+    match decode_reply(&body).unwrap() {
+        ReplyFrame::ProtocolError { reason, .. } => {
+            assert!(reason.contains("disconnected"), "reason: {reason}")
+        }
+        other => panic!("expected protocol error, got {other:?}"),
+    }
+
+    // Fresh connection on the same listener is healthy.
+    let mut client = WireClient::connect(&addr).unwrap();
+    let reply = client.request("m", &random_rows(8, 2, 2)).unwrap();
+    assert_eq!(reply.rows.len(), 2);
+    assert!(server.stats().protocol_errors >= 1);
+    teardown(fleet, server);
+}
+
+/// An oversized length prefix is refused before any body byte is read
+/// (no multi-gigabyte allocation), with a protocol-error reply.
+#[test]
+fn oversized_length_prefix_is_refused_up_front() {
+    let p = program(3, 8, Task::Binary);
+    let (fleet, server, addr) = serve_one("m", &p, ModelConfig::for_program(&p));
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    let body = raw_reply(&mut stream).expect("reply before close");
+    match decode_reply(&body).unwrap() {
+        ReplyFrame::ProtocolError { reason, .. } => {
+            assert!(reason.contains("ceiling"), "reason: {reason}");
+            assert!(reason.contains(&MAX_FRAME_BYTES.to_string()));
+        }
+        other => panic!("expected protocol error, got {other:?}"),
+    }
+    let mut client = WireClient::connect(&addr).unwrap();
+    assert!(client.request("m", &random_rows(8, 1, 4)).is_ok());
+    teardown(fleet, server);
+}
+
+/// Garbage bytes under a valid length prefix (bad magic) close only
+/// that connection, cleanly.
+#[test]
+fn garbage_body_yields_protocol_error() {
+    let p = program(5, 8, Task::Binary);
+    let (fleet, server, addr) = serve_one("m", &p, ModelConfig::for_program(&p));
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let garbage = [0x5Au8; 64];
+    stream.write_all(&(garbage.len() as u32).to_le_bytes()).unwrap();
+    stream.write_all(&garbage).unwrap();
+    let body = raw_reply(&mut stream).expect("reply before close");
+    match decode_reply(&body).unwrap() {
+        ReplyFrame::ProtocolError { reason, .. } => {
+            assert!(reason.contains("magic"), "reason: {reason}")
+        }
+        other => panic!("expected protocol error, got {other:?}"),
+    }
+    // The connection is closed after a protocol error: the next read
+    // sees EOF.
+    let mut probe = [0u8; 1];
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    assert_eq!(stream.read(&mut probe).unwrap_or(0), 0, "server must hang up");
+    assert_eq!(server.stats().protocol_errors, 1);
+    teardown(fleet, server);
+}
+
+/// A zero-row batch is well-framed but unserviceable: `Rejected`, and
+/// the **same** connection then serves a healthy request (reject ≠
+/// protocol error).
+#[test]
+fn zero_row_batch_is_rejected_and_connection_stays_usable() {
+    let p = program(7, 8, Task::Binary);
+    let (fleet, server, addr) = serve_one("m", &p, ModelConfig::for_program(&p));
+
+    let mut client = WireClient::connect(&addr).unwrap();
+    let err = client.request_shaped("m", 8, &[]).unwrap_err();
+    assert!(err.contains("rejected"), "got: {err}");
+    assert!(err.contains("empty batch"), "got: {err}");
+    // Same connection, next frame: served normally.
+    let reply = client.request("m", &random_rows(8, 3, 8)).unwrap();
+    assert_eq!(reply.rows.len(), 3);
+    let ws = server.stats();
+    assert_eq!(ws.rejected_frames, 1);
+    assert_eq!(ws.protocol_errors, 0);
+    teardown(fleet, server);
+}
+
+/// Unknown tenants and arity mismatches are rejects too — the route
+/// error text matches the in-process API's, and the connection lives.
+#[test]
+fn unknown_tenant_and_arity_mismatch_are_rejects() {
+    let p = program(9, 8, Task::Binary);
+    let (fleet, server, addr) = serve_one("m", &p, ModelConfig::for_program(&p));
+
+    let mut client = WireClient::connect(&addr).unwrap();
+    let err = client.request("ghost", &random_rows(8, 1, 9)).unwrap_err();
+    assert!(err.contains("unknown model `ghost`"), "got: {err}");
+    let err = client.request("m", &random_rows(5, 2, 10)).unwrap_err();
+    assert!(err.contains("expects 8 features, got 5"), "got: {err}");
+    // Still usable.
+    assert!(client.request("m", &random_rows(8, 1, 11)).is_ok());
+    assert_eq!(server.stats().rejected_frames, 2);
+    // Neither reject admitted or decoded anything.
+    assert_eq!(server.stats().rows_decoded, 1);
+    teardown(fleet, server);
+}
+
+/// A peer that vanishes mid-payload (socket dropped without EOF
+/// courtesy) must not wedge the accept loop or leak the handler: the
+/// server records a protocol error and keeps serving others.
+#[test]
+fn mid_frame_disconnect_leaves_server_healthy() {
+    let p = program(11, 8, Task::Binary);
+    let (fleet, server, addr) = serve_one("m", &p, ModelConfig::for_program(&p));
+
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let frame = encode_request(1, "m", 8, &random_rows(8, 4, 12));
+        stream.write_all(&frame[..frame.len() / 2]).unwrap();
+        // Dropped here: RST/FIN mid-frame.
+    }
+    // The handler notices asynchronously; poll until it has.
+    let t0 = Instant::now();
+    while server.stats().protocol_errors == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "mid-frame disconnect never surfaced"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // Accept loop unharmed.
+    let mut client = WireClient::connect(&addr).unwrap();
+    assert!(client.request("m", &random_rows(8, 2, 13)).is_ok());
+    teardown(fleet, server);
+}
+
+// ---- contract 7: wire vs in-process bit-identity ----------------------
+
+/// The same batch through the TCP front end and through
+/// `Fleet::infer_batch` yields byte-identical logits and predictions —
+/// and both match the single-engine reference (extends the contract-4/6
+/// agreement pattern to the wire).
+#[test]
+fn wire_and_in_process_predictions_are_bit_identical() {
+    let p = program(21, 12, Task::MultiClass(3));
+    let reference = CamEngine::new(&p);
+    let (fleet, server, addr) =
+        serve_one("mc", &p, ModelConfig::for_program(&p).with_shards(2));
+    let rows = random_rows(12, 32, 22);
+
+    let mut client = WireClient::connect(&addr).unwrap();
+    let wire = client.request("mc", &rows).unwrap();
+    assert_eq!(wire.rows.len(), rows.len());
+    let direct = fleet.infer_batch("mc", &rows).unwrap();
+
+    for (i, (w, d)) in wire.rows.iter().zip(&direct).enumerate() {
+        let d = d.as_ref().expect("in-process row served");
+        match w {
+            RowOutcome::Served { prediction, logits } => {
+                assert_eq!(
+                    prediction.to_bits(),
+                    d.prediction.to_bits(),
+                    "row {i} prediction"
+                );
+                let wb: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+                let db: Vec<u32> = d.logits.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(wb, db, "row {i} logits wire vs in-process");
+                assert_eq!(
+                    *logits,
+                    reference.infer_bins(&p.quantizer.bin_row(&rows[i])),
+                    "row {i} logits vs reference engine"
+                );
+            }
+            other => panic!("row {i}: expected Served, got {other:?}"),
+        }
+    }
+    teardown(fleet, server);
+}
+
+// ---- shed-before-parse ------------------------------------------------
+
+/// Blocks inside `infer` until the test drops the gate sender, so no
+/// queue slot can be released while a test's admission window is open.
+struct GatedBackend {
+    inner: FunctionalBackend,
+    gate: Receiver<()>,
+}
+
+impl Backend for GatedBackend {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+    fn task(&self) -> Task {
+        self.inner.task()
+    }
+    fn infer(&mut self, batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        // Blocks until the sender drops (Err) or sends; either opens it.
+        let _ = self.gate.recv();
+        self.inner.infer(batch)
+    }
+}
+
+fn gated_fleet(p: &CamProgram, queue_cap: usize) -> (Arc<Fleet>, Sender<()>) {
+    let (gate_tx, gate_rx) = channel();
+    let fleet = Arc::new(Fleet::new());
+    let cfg = ModelConfig::for_program(p)
+        .with_policy(BatchPolicy { max_wait_us: 0, max_batch: 32, threads: None })
+        .with_queue_cap(queue_cap);
+    fleet
+        .register_backends(
+            "tiny",
+            vec![Box::new(GatedBackend { inner: FunctionalBackend::new(p), gate: gate_rx })],
+            Vec::new(),
+            cfg,
+        )
+        .unwrap();
+    (fleet, gate_tx)
+}
+
+/// The wire mirror of the fleet 4/60 test: one 60-row frame against a
+/// stalled backend with queue cap 4 admits exactly 4 rows and sheds 56
+/// — and the 56 refused rows never have their feature payload decoded
+/// (`rows_decoded` counts exactly the admitted rows).
+#[test]
+fn shed_before_parse_single_frame_is_deterministic() {
+    let p = program(31, 8, Task::Binary);
+    let (fleet, gate) = gated_fleet(&p, 4);
+    let server = WireServer::start(fleet.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let rows = random_rows(8, 60, 32);
+    let handle = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut client = WireClient::connect(&addr).unwrap();
+            client.request("tiny", &rows)
+        })
+    };
+    // Wait until the frame's admission pass has fully resolved: every
+    // row either admitted (the backend holds them behind the gate) or
+    // shed — snapshotting mid-pass would observe a partial shed count.
+    let t0 = Instant::now();
+    while server.stats().rows_admitted + server.stats().rows_shed < 60 {
+        assert!(t0.elapsed() < Duration::from_secs(20), "frame never arrived");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let ws = server.stats();
+    assert_eq!(ws.rows_offered, 60);
+    assert_eq!(ws.rows_admitted, 4, "exactly the queue cap admits");
+    assert_eq!(ws.rows_shed, 56);
+    assert_eq!(ws.rows_admitted + ws.rows_shed, ws.rows_offered, "every row accounted");
+    // THE shed-before-parse assertion: only admitted rows were decoded.
+    assert_eq!(ws.rows_decoded, 4, "shed rows must never be deserialized");
+
+    drop(gate); // open the gate: the 4 admitted rows get served
+    let reply = handle.join().unwrap().expect("batch reply");
+    let served = reply
+        .rows
+        .iter()
+        .filter(|r| matches!(r, RowOutcome::Served { .. }))
+        .count();
+    let shed = reply
+        .rows
+        .iter()
+        .filter(|r| matches!(r, RowOutcome::Shed { queue_depth: 4 }))
+        .count();
+    assert_eq!((served, shed), (4, 56));
+
+    let stats = fleet.stats();
+    assert_eq!((stats.admitted, stats.shed), (4, 56), "fleet totals agree with the wire");
+    teardown(fleet, server);
+}
+
+/// Concurrent wire clients against the stalled route: per-client
+/// admission racing is fair game, but the totals stay deterministic —
+/// `admitted + shed == offered`, exactly `cap` admitted, and still no
+/// payload decode for any shed row.
+#[test]
+fn shed_accounting_exact_under_concurrent_wire_clients() {
+    let p = program(41, 8, Task::Binary);
+    let (fleet, gate) = gated_fleet(&p, 4);
+    let server = WireServer::start(fleet.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let handles: Vec<_> = (0..3)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let rows = random_rows(8, 20, 42 + c);
+                let mut client = WireClient::connect(&addr).unwrap();
+                client.request("tiny", &rows)
+            })
+        })
+        .collect();
+    // All three frames admit/shed against the gated queue; once every
+    // row is accounted, release the backend.
+    let t0 = Instant::now();
+    while server.stats().rows_admitted + server.stats().rows_shed < 60 {
+        assert!(t0.elapsed() < Duration::from_secs(20), "frames never resolved");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let ws = server.stats();
+    assert_eq!(ws.rows_offered, 60);
+    assert_eq!(ws.rows_admitted, 4, "cap admits exactly 4 across all clients");
+    assert_eq!(ws.rows_shed, 56);
+    assert_eq!(ws.rows_decoded, ws.rows_admitted, "decode only after admission");
+
+    drop(gate);
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    for h in handles {
+        let reply = h.join().unwrap().expect("batch reply");
+        assert_eq!(reply.rows.len(), 20);
+        for r in &reply.rows {
+            match r {
+                RowOutcome::Served { .. } => served += 1,
+                RowOutcome::Shed { .. } => shed += 1,
+                RowOutcome::Failed { error } => panic!("unexpected failure: {error}"),
+            }
+        }
+    }
+    assert_eq!((served, shed), (4, 56));
+    let stats = fleet.stats();
+    assert_eq!((stats.admitted, stats.shed), (4, 56));
+    teardown(fleet, server);
+}
+
+// ---- misc wire behaviors ----------------------------------------------
+
+/// Several frames over one connection: ids echo back in order and the
+/// connection is reusable indefinitely.
+#[test]
+fn sequential_frames_on_one_connection() {
+    let p = program(51, 6, Task::Binary);
+    let (fleet, server, addr) = serve_one("m", &p, ModelConfig::for_program(&p));
+    let mut client = WireClient::connect(&addr).unwrap();
+    for k in 1..=5 {
+        let reply = client.request("m", &random_rows(6, k, 50 + k as u64)).unwrap();
+        assert_eq!(reply.rows.len(), k);
+        assert!(reply.rows.iter().all(|r| matches!(r, RowOutcome::Served { .. })));
+    }
+    let ws = server.stats();
+    assert_eq!(ws.frames, 5);
+    assert_eq!(ws.rows_offered, (1..=5).sum::<usize>() as u64);
+    assert_eq!(ws.connections, 1);
+    teardown(fleet, server);
+}
+
+/// Backend failures surface as per-row `Failed` outcomes over the wire
+/// (mirroring the in-process error-reply contract) — the connection and
+/// server both stay up.
+#[test]
+fn backend_failure_maps_to_failed_rows_not_connection_loss() {
+    struct FailingBackend;
+    impl Backend for FailingBackend {
+        fn name(&self) -> &'static str {
+            "always-fails"
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn task(&self) -> Task {
+            Task::Binary
+        }
+        fn infer(&mut self, _batch: &[Vec<u16>]) -> anyhow::Result<Vec<Vec<f32>>> {
+            Err(anyhow::anyhow!("injected fault"))
+        }
+    }
+    let fleet = Arc::new(Fleet::new());
+    fleet
+        .register_backends(
+            "flaky",
+            vec![Box::new(FailingBackend)],
+            Vec::new(),
+            ModelConfig {
+                shards: 1,
+                batch_policy: BatchPolicy::default(),
+                queue_cap: 0,
+                quantizer: xtime::data::FeatureQuantizer {
+                    n_bits: 1,
+                    edges: vec![vec![0.5]],
+                },
+            },
+        )
+        .unwrap();
+    let server = WireServer::start(fleet.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut client = WireClient::connect(&addr).unwrap();
+    let reply = client.request("flaky", &[vec![0.3], vec![0.7]]).unwrap();
+    for (i, r) in reply.rows.iter().enumerate() {
+        match r {
+            RowOutcome::Failed { error } => {
+                assert!(error.contains("injected fault"), "row {i}: {error}")
+            }
+            other => panic!("row {i}: expected Failed, got {other:?}"),
+        }
+    }
+    // Connection still fine for the next (equally doomed) request.
+    assert!(client.request("flaky", &[vec![0.1]]).is_ok());
+    teardown(fleet, server);
+}
+
+/// `write_frame`/`read_frame` are inverses over a real socket too (the
+/// in-memory round trip lives in the frame module's unit tests).
+#[test]
+fn frame_io_roundtrip_over_loopback() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let echo = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        while let Some(body) = read_frame(&mut conn).unwrap() {
+            let mut framed = (body.len() as u32).to_le_bytes().to_vec();
+            framed.extend_from_slice(&body);
+            write_frame(&mut conn, &framed).unwrap();
+        }
+    });
+    let mut stream = TcpStream::connect(addr).unwrap();
+    for seed in 0..4u64 {
+        let frame = encode_request(seed, "echo", 3, &random_rows(3, 2, seed));
+        write_frame(&mut stream, &frame).unwrap();
+        let body = read_frame(&mut stream).unwrap().unwrap();
+        assert_eq!(&body[..], &frame[4..], "seed {seed}");
+    }
+    stream.shutdown(Shutdown::Both).unwrap();
+    echo.join().unwrap();
+}
