@@ -1,0 +1,41 @@
+//! Deploy-time static verifier for compiled CAM programs.
+//!
+//! The whole X-TIME chain rests on compiled artifacts being
+//! structurally sound: the CAM mapping only works if every root-to-leaf
+//! path is one row of valid `[lo, hi)` windows, and the planned
+//! execution path (ADR-002) additionally trusts that each core's
+//! LUT/arena faithfully tabulate the elementary-interval structure of
+//! its programmed cells. This module lints all of that **without
+//! executing a query** — a corrupt plan, a shard split that drops a
+//! tree, or a never-match row becomes a pre-deploy diagnostic instead
+//! of silently wrong logits under live traffic.
+//!
+//! Six rules, each with a stable [`RuleId`], a [`Severity`], and a
+//! precise [`Location`] (core/feature/interval/row/tree/shard):
+//!
+//! | rule | checks | severity |
+//! |---|---|---|
+//! | V1 | per-feature elementary intervals partition the DAC space; every 256-entry LUT equals the tabulated `partition_point` | deny |
+//! | V2 | arena offsets/lengths in-bounds, row-bitset width matches the core, padding bits zero | deny |
+//! | V3 | shard plans partition the tree set exactly; per-shard leaf rows reconcile with the unsharded program | deny |
+//! | V4 | quantizer cuts strictly increasing; every compiled threshold on the deploy grid (static face of contract 5) | deny |
+//! | V5 | dead-leaf lint: unsatisfiable rows (never-match / inverted after defect injection) | warn |
+//! | V6 | sparsity census: wildcard density per core/feature, shared-prefix counts | info |
+//!
+//! The verifier surfaces three ways: the `xtime verify` CLI subcommand
+//! (human table + `--json`), the fleet registration gate
+//! ([`crate::coordinator::Fleet::register_program`] refuses programs
+//! per the route's [`VerifyPolicy`] — DESIGN.md §5 contract 8), and the
+//! mutation suite in `rust/tests/analysis.rs` proving each rule fires
+//! on a deliberate corruption.
+
+pub mod report;
+pub mod verify;
+
+pub use report::{
+    AnalysisReport, CoreCensus, Finding, Location, RuleId, Severity, SparsityCensus, VerifyPolicy,
+};
+pub use verify::{
+    verify, verify_deployment, verify_engine, verify_program, verify_shard_plan,
+    verify_with_defects,
+};

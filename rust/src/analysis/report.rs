@@ -1,0 +1,547 @@
+//! Data model of the static verifier: rule identities, severities,
+//! locations, findings and the machine-readable [`AnalysisReport`]
+//! (DESIGN.md §7). The report is what every surface shares — the
+//! `xtime verify` CLI renders it, the fleet's contract-8 registration
+//! gate filters it through a [`VerifyPolicy`], and CI archives its JSON.
+
+use crate::util::Json;
+use std::fmt;
+
+/// Stable identity of one verifier rule. Codes (`V1`–`V6`) are part of
+/// the report schema: tests, CI artifact consumers and fleet refusal
+/// diagnostics all match on them, so variants may be added but existing
+/// codes never renumbered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// Per-feature elementary intervals exactly partition DAC space and
+    /// every LUT entry equals the tabulated `partition_point`.
+    V1IntervalPartition,
+    /// Bitset-arena offsets/lengths in-bounds, row-bitset width matches
+    /// the core's row count, padding bits zero.
+    V2ArenaBounds,
+    /// Shard plans partition the tree set exactly; per-shard row sums
+    /// reconcile with the unsharded program.
+    V3ShardPartition,
+    /// Quantizer cuts strictly increasing; every compiled threshold lies
+    /// on the deploy grid (the static face of contract 5).
+    V4QuantizerGrid,
+    /// Dead-leaf lint: rows whose interval conjunction is unsatisfiable
+    /// (never-match after defect injection) are flagged.
+    V5DeadLeaf,
+    /// Sparsity census: wildcard density and shared-prefix counts.
+    V6SparsityCensus,
+}
+
+impl RuleId {
+    /// Short stable code used in reports and refusal diagnostics.
+    pub fn code(self) -> &'static str {
+        match self {
+            RuleId::V1IntervalPartition => "V1",
+            RuleId::V2ArenaBounds => "V2",
+            RuleId::V3ShardPartition => "V3",
+            RuleId::V4QuantizerGrid => "V4",
+            RuleId::V5DeadLeaf => "V5",
+            RuleId::V6SparsityCensus => "V6",
+        }
+    }
+
+    /// Human rule name for the report table.
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::V1IntervalPartition => "interval-partition",
+            RuleId::V2ArenaBounds => "arena-bounds",
+            RuleId::V3ShardPartition => "shard-partition",
+            RuleId::V4QuantizerGrid => "quantizer-grid",
+            RuleId::V5DeadLeaf => "dead-leaf",
+            RuleId::V6SparsityCensus => "sparsity-census",
+        }
+    }
+}
+
+/// Severity ladder; ordering is meaningful (`Info < Warn < Deny`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Informational (the census, structural observations).
+    Info,
+    /// Suspicious but serveable (a dead leaf wastes a CAM row but
+    /// cannot corrupt a result).
+    Warn,
+    /// Structurally unsound: serving this program can return wrong
+    /// logits. Refused at registration under the default policy.
+    Deny,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// Precise location of a finding inside the compiled artifact. All
+/// coordinates are optional: a program-level finding (e.g. a lost tree)
+/// carries none, a LUT mismatch carries core + feature + interval.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Location {
+    /// Shard index inside a [`crate::compiler::ShardPlan`].
+    pub shard: Option<usize>,
+    /// Core index inside the program.
+    pub core: Option<usize>,
+    /// Feature column.
+    pub feature: Option<usize>,
+    /// Elementary-interval index (V1) or DAC level (LUT findings).
+    pub interval: Option<usize>,
+    /// CAM row within the core.
+    pub row: Option<usize>,
+    /// Source-ensemble tree id.
+    pub tree: Option<u32>,
+}
+
+impl Location {
+    /// Program-level location (no coordinates).
+    pub fn program() -> Location {
+        Location::default()
+    }
+
+    pub fn core(core: usize) -> Location {
+        Location { core: Some(core), ..Location::default() }
+    }
+
+    pub fn shard(shard: usize) -> Location {
+        Location { shard: Some(shard), ..Location::default() }
+    }
+
+    pub fn feature(mut self, f: usize) -> Location {
+        self.feature = Some(f);
+        self
+    }
+
+    pub fn interval(mut self, i: usize) -> Location {
+        self.interval = Some(i);
+        self
+    }
+
+    pub fn row(mut self, r: usize) -> Location {
+        self.row = Some(r);
+        self
+    }
+
+    pub fn tree(mut self, t: u32) -> Location {
+        self.tree = Some(t);
+        self
+    }
+
+    fn parts(&self) -> Vec<String> {
+        let mut p = Vec::new();
+        if let Some(s) = self.shard {
+            p.push(format!("shard {s}"));
+        }
+        if let Some(c) = self.core {
+            p.push(format!("core {c}"));
+        }
+        if let Some(f) = self.feature {
+            p.push(format!("feature {f}"));
+        }
+        if let Some(i) = self.interval {
+            p.push(format!("interval {i}"));
+        }
+        if let Some(r) = self.row {
+            p.push(format!("row {r}"));
+        }
+        if let Some(t) = self.tree {
+            p.push(format!("tree {t}"));
+        }
+        p
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        if let Some(s) = self.shard {
+            j.set("shard", Json::Num(s as f64));
+        }
+        if let Some(c) = self.core {
+            j.set("core", Json::Num(c as f64));
+        }
+        if let Some(f) = self.feature {
+            j.set("feature", Json::Num(f as f64));
+        }
+        if let Some(i) = self.interval {
+            j.set("interval", Json::Num(i as f64));
+        }
+        if let Some(r) = self.row {
+            j.set("row", Json::Num(r as f64));
+        }
+        if let Some(t) = self.tree {
+            j.set("tree", Json::Num(t as f64));
+        }
+        j
+    }
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts = self.parts();
+        if parts.is_empty() {
+            write!(f, "program")
+        } else {
+            write!(f, "{}", parts.join(" / "))
+        }
+    }
+}
+
+/// One verifier finding: which rule fired, how bad, where, and why.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: RuleId,
+    pub severity: Severity,
+    pub location: Location,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn deny(rule: RuleId, location: Location, message: String) -> Finding {
+        Finding { rule, severity: Severity::Deny, location, message }
+    }
+
+    pub fn warn(rule: RuleId, location: Location, message: String) -> Finding {
+        Finding { rule, severity: Severity::Warn, location, message }
+    }
+
+    pub fn info(rule: RuleId, location: Location, message: String) -> Finding {
+        Finding { rule, severity: Severity::Info, location, message }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("rule", Json::Str(self.rule.code().to_string()))
+            .set("name", Json::Str(self.rule.name().to_string()))
+            .set("severity", Json::Str(self.severity.label().to_string()))
+            .set("location", self.location.to_json())
+            .set("message", Json::Str(self.message.clone()));
+        j
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{} {}] {}: {}",
+            self.rule.code(),
+            self.severity.label(),
+            self.location,
+            self.message
+        )
+    }
+}
+
+/// Per-core slice of the sparsity census (rule V6).
+#[derive(Clone, Debug)]
+pub struct CoreCensus {
+    pub core: usize,
+    pub n_rows: usize,
+    /// `n_rows × n_features` programmed cells.
+    pub n_cells: usize,
+    /// Cells spanning the full DAC range (`is_dont_care`).
+    pub wildcard_cells: usize,
+    /// Per-feature wildcard counts (MonoSparse-style column density).
+    pub per_feature_wildcards: Vec<usize>,
+    /// Rows whose interval conjunction is unsatisfiable (V5 hits).
+    pub never_match_rows: usize,
+    /// Σ over adjacent row pairs of their longest common cell prefix —
+    /// the compressibility signal prefix-sharing schemes exploit.
+    pub shared_prefix_cells: usize,
+}
+
+impl CoreCensus {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("core", Json::Num(self.core as f64))
+            .set("n_rows", Json::Num(self.n_rows as f64))
+            .set("n_cells", Json::Num(self.n_cells as f64))
+            .set("wildcard_cells", Json::Num(self.wildcard_cells as f64))
+            .set("per_feature_wildcards", Json::from_usize_slice(&self.per_feature_wildcards))
+            .set("never_match_rows", Json::Num(self.never_match_rows as f64))
+            .set("shared_prefix_cells", Json::Num(self.shared_prefix_cells as f64));
+        j
+    }
+}
+
+/// Whole-program sparsity census: the measurement substrate for CAM
+/// compression work (most rows are mostly don't-care — this makes that
+/// visible before anything tries to exploit it).
+#[derive(Clone, Debug, Default)]
+pub struct SparsityCensus {
+    pub n_cores: usize,
+    pub n_rows: usize,
+    pub n_cells: usize,
+    pub wildcard_cells: usize,
+    pub never_match_rows: usize,
+    pub shared_prefix_cells: usize,
+    pub cores: Vec<CoreCensus>,
+}
+
+impl SparsityCensus {
+    /// Fraction of programmed cells that are full-range wildcards.
+    pub fn wildcard_density(&self) -> f64 {
+        if self.n_cells == 0 {
+            0.0
+        } else {
+            self.wildcard_cells as f64 / self.n_cells as f64
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("n_cores", Json::Num(self.n_cores as f64))
+            .set("n_rows", Json::Num(self.n_rows as f64))
+            .set("n_cells", Json::Num(self.n_cells as f64))
+            .set("wildcard_cells", Json::Num(self.wildcard_cells as f64))
+            .set("wildcard_density", Json::Num(self.wildcard_density()))
+            .set("never_match_rows", Json::Num(self.never_match_rows as f64))
+            .set("shared_prefix_cells", Json::Num(self.shared_prefix_cells as f64))
+            .set("cores", Json::Arr(self.cores.iter().map(CoreCensus::to_json).collect()));
+        j
+    }
+}
+
+/// Machine-readable result of one verification run.
+#[derive(Clone, Debug, Default)]
+pub struct AnalysisReport {
+    /// Program name the run was against.
+    pub program: String,
+    pub findings: Vec<Finding>,
+    /// Present whenever the program-level rules ran (absent for a
+    /// shard-plan-only report).
+    pub census: Option<SparsityCensus>,
+}
+
+impl AnalysisReport {
+    pub fn new(program: &str) -> AnalysisReport {
+        AnalysisReport { program: program.to_string(), ..AnalysisReport::default() }
+    }
+
+    pub fn push(&mut self, finding: Finding) {
+        self.findings.push(finding);
+    }
+
+    /// Absorb another report's findings (census kept from `self` unless
+    /// absent). Used to combine program-level and shard-plan runs.
+    pub fn merge(&mut self, other: AnalysisReport) {
+        self.findings.extend(other.findings);
+        if self.census.is_none() {
+            self.census = other.census;
+        }
+    }
+
+    pub fn count(&self, severity: Severity) -> usize {
+        self.findings.iter().filter(|f| f.severity == severity).count()
+    }
+
+    pub fn deny_count(&self) -> usize {
+        self.count(Severity::Deny)
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    /// No deny-level findings: the program is structurally sound (warn
+    /// and info findings may still be present).
+    pub fn is_clean(&self) -> bool {
+        self.deny_count() == 0
+    }
+
+    /// Findings of one rule, for mutation tests asserting that exactly
+    /// one rule fired.
+    pub fn findings_for(&self, rule: RuleId) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| f.rule == rule).collect()
+    }
+
+    /// Serialize (schema: DESIGN.md §7; consumed by CI artifacts).
+    pub fn to_json(&self) -> Json {
+        let mut counts = Json::obj();
+        counts
+            .set("deny", Json::Num(self.deny_count() as f64))
+            .set("warn", Json::Num(self.warn_count() as f64))
+            .set("info", Json::Num(self.count(Severity::Info) as f64));
+        let mut j = Json::obj();
+        j.set("report", Json::Str("xtime-verify".to_string()))
+            .set("program", Json::Str(self.program.clone()))
+            .set("counts", counts)
+            .set("clean", Json::Bool(self.is_clean()))
+            .set("findings", Json::Arr(self.findings.iter().map(Finding::to_json).collect()));
+        if let Some(c) = &self.census {
+            j.set("census", c.to_json());
+        }
+        j
+    }
+
+    /// Human-readable table for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "verify {}: {} finding(s) — {} deny, {} warn, {} info\n",
+            self.program,
+            self.findings.len(),
+            self.deny_count(),
+            self.warn_count(),
+            self.count(Severity::Info),
+        ));
+        if !self.findings.is_empty() {
+            out.push_str(&format!(
+                "{:<4} {:<5} {:<28} {}\n",
+                "RULE", "SEV", "LOCATION", "MESSAGE"
+            ));
+            // Deny first, then warn, then info; stable within a tier.
+            let mut ordered: Vec<&Finding> = self.findings.iter().collect();
+            ordered.sort_by(|a, b| b.severity.cmp(&a.severity));
+            for f in ordered {
+                out.push_str(&format!(
+                    "{:<4} {:<5} {:<28} {}\n",
+                    f.rule.code(),
+                    f.severity.label(),
+                    f.location.to_string(),
+                    f.message
+                ));
+            }
+        }
+        if let Some(c) = &self.census {
+            out.push_str(&format!(
+                "census: {} core(s), {} row(s), {} cell(s), wildcard density {:.1}%, \
+                 {} never-match row(s), {} shared-prefix cell(s)\n",
+                c.n_cores,
+                c.n_rows,
+                c.n_cells,
+                100.0 * c.wildcard_density(),
+                c.never_match_rows,
+                c.shared_prefix_cells,
+            ));
+        }
+        out.push_str(if self.is_clean() { "verdict: CLEAN\n" } else { "verdict: DENY\n" });
+        out
+    }
+}
+
+/// Registration-gate policy (contract 8, DESIGN.md §5): which findings
+/// block [`crate::coordinator::Fleet::register_program`] /
+/// `swap_program`. Configured per model via
+/// [`crate::coordinator::ModelConfig::with_verify`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum VerifyPolicy {
+    /// Do not run the verifier (trusted artifact, or latency-critical
+    /// registration of an already-verified program).
+    Skip,
+    /// Refuse deny-level findings; warnings serve. The default.
+    #[default]
+    DenyErrors,
+    /// Refuse warnings too (strictest: a dead leaf blocks deploy).
+    DenyWarnings,
+}
+
+impl VerifyPolicy {
+    /// First finding that blocks registration under this policy, if any.
+    pub fn blocks<'r>(&self, report: &'r AnalysisReport) -> Option<&'r Finding> {
+        let floor = match self {
+            VerifyPolicy::Skip => return None,
+            VerifyPolicy::DenyErrors => Severity::Deny,
+            VerifyPolicy::DenyWarnings => Severity::Warn,
+        };
+        // Report the worst finding first so the diagnostic names the
+        // most damning rule even when warnings also block.
+        report
+            .findings
+            .iter()
+            .filter(|f| f.severity >= floor)
+            .max_by_key(|f| f.severity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+    use super::*;
+
+    fn sample() -> AnalysisReport {
+        let mut r = AnalysisReport::new("m");
+        r.push(Finding::info(
+            RuleId::V6SparsityCensus,
+            Location::program(),
+            "census".to_string(),
+        ));
+        r.push(Finding::warn(
+            RuleId::V5DeadLeaf,
+            Location::core(1).row(3).tree(7),
+            "row can never match".to_string(),
+        ));
+        r.push(Finding::deny(
+            RuleId::V2ArenaBounds,
+            Location::core(0).feature(2),
+            "offset out of bounds".to_string(),
+        ));
+        r
+    }
+
+    #[test]
+    fn severity_ordering_and_counts() {
+        assert!(Severity::Info < Severity::Warn && Severity::Warn < Severity::Deny);
+        let r = sample();
+        assert_eq!(r.deny_count(), 1);
+        assert_eq!(r.warn_count(), 1);
+        assert_eq!(r.count(Severity::Info), 1);
+        assert!(!r.is_clean());
+        assert_eq!(r.findings_for(RuleId::V2ArenaBounds).len(), 1);
+    }
+
+    #[test]
+    fn policy_floors() {
+        let r = sample();
+        assert!(VerifyPolicy::Skip.blocks(&r).is_none());
+        assert_eq!(VerifyPolicy::DenyErrors.blocks(&r).unwrap().rule, RuleId::V2ArenaBounds);
+        // DenyWarnings still reports the deny finding first (worst wins).
+        assert_eq!(VerifyPolicy::DenyWarnings.blocks(&r).unwrap().rule, RuleId::V2ArenaBounds);
+        let mut warn_only = AnalysisReport::new("m");
+        warn_only.push(Finding::warn(
+            RuleId::V5DeadLeaf,
+            Location::program(),
+            "w".to_string(),
+        ));
+        assert!(VerifyPolicy::DenyErrors.blocks(&warn_only).is_none());
+        assert_eq!(VerifyPolicy::DenyWarnings.blocks(&warn_only).unwrap().rule, RuleId::V5DeadLeaf);
+    }
+
+    #[test]
+    fn location_and_finding_display() {
+        assert_eq!(Location::program().to_string(), "program");
+        let loc = Location::core(3).feature(1).interval(9);
+        assert_eq!(loc.to_string(), "core 3 / feature 1 / interval 9");
+        let f = Finding::deny(RuleId::V1IntervalPartition, loc, "lut mismatch".to_string());
+        let s = f.to_string();
+        assert!(s.contains("V1") && s.contains("deny") && s.contains("core 3"), "{s}");
+    }
+
+    #[test]
+    fn json_roundtrips_and_carries_counts() {
+        let r = sample();
+        let j = crate::util::Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.req_str("program").unwrap(), "m");
+        assert_eq!(j.req("counts").unwrap().req_f64("deny").unwrap(), 1.0);
+        let findings = match j.req("findings").unwrap() {
+            crate::util::Json::Arr(v) => v.clone(),
+            other => panic!("findings not an array: {other:?}"),
+        };
+        assert_eq!(findings.len(), 3);
+    }
+
+    #[test]
+    fn render_orders_deny_first() {
+        let s = sample().render();
+        let deny_at = s.find("V2").unwrap();
+        let warn_at = s.find("V5").unwrap();
+        assert!(deny_at < warn_at, "{s}");
+        assert!(s.contains("verdict: DENY"));
+    }
+}

@@ -1,0 +1,654 @@
+//! The rule engine: checks V1–V6 over a compiled [`CamProgram`], its
+//! per-core execution plans, and (optionally) a [`ShardPlan`].
+//!
+//! Every check is *static*: the verifier reads the compiled artifact —
+//! programmed cells, plan bounds, LUTs, arena bitsets, shard
+//! assignments — and cross-checks them against independently recomputed
+//! references. No query is ever executed. The checks are deliberately
+//! redundant with the compiler: each rule re-derives what the compiler
+//! *should* have produced from first principles (cells → bounds,
+//! bounds → `partition_point` LUT, rows → bitset width) so that a
+//! corruption anywhere between compile and deploy surfaces as a
+//! localized diagnostic rather than silently wrong logits
+//! (DESIGN.md §5, contract 8).
+//!
+//! Entry points:
+//!
+//! * [`verify_program`] — V1/V2/V4/V5/V6 on a defect-free engine build;
+//! * [`verify_with_defects`] — same rules on a defect-perturbed build
+//!   (V5 dead-leaf warnings carry the defect draw);
+//! * [`verify_shard_plan`] — V3 on an explicit [`ShardPlan`];
+//! * [`verify`] — the one-call form the CLI and fleet gate use:
+//!   program rules plus, for `n_shards > 1`, a partition + V3.
+
+use std::collections::BTreeMap;
+
+use super::report::{AnalysisReport, CoreCensus, Finding, Location, RuleId, SparsityCensus};
+use crate::cam::{DefectSpec, MACRO_BINS};
+use crate::compiler::{partition, CamEngine, CamProgram, PartitionOptions, PlanView, ShardPlan};
+
+/// Verify a program as compiled (defect-free engine build): rules V1,
+/// V2, V4, V5, V6.
+pub fn verify_program(program: &CamProgram) -> AnalysisReport {
+    let engine = CamEngine::new(program);
+    verify_engine(program, &engine, None)
+}
+
+/// Verify a defect-perturbed deployment of `program`: the same rules as
+/// [`verify_program`], but run over the engine built with `defects` and
+/// `seed` — so V5 reports exactly the rows this particular draw killed,
+/// with the draw recorded in the finding.
+pub fn verify_with_defects(program: &CamProgram, defects: DefectSpec, seed: u64) -> AnalysisReport {
+    let engine = CamEngine::with_defects(program, defects, seed);
+    verify_engine(program, &engine, Some((defects, seed)))
+}
+
+/// One-call verification: program rules, plus — when `n_shards > 1` —
+/// a fresh [`partition`] checked under V3.
+pub fn verify(program: &CamProgram, n_shards: usize) -> AnalysisReport {
+    verify_deployment(program, n_shards, DefectSpec::NONE, 0)
+}
+
+/// The full deployment form (`xtime verify`): program rules on the
+/// engine as it would deploy — defect-perturbed when `defects` is
+/// non-trivial — plus V3 over a fresh partition when `n_shards > 1`.
+/// A partition *failure* is itself a V3 deny: the deployment the
+/// caller asked for cannot exist.
+pub fn verify_deployment(
+    program: &CamProgram,
+    n_shards: usize,
+    defects: DefectSpec,
+    seed: u64,
+) -> AnalysisReport {
+    let pristine = defects.memristor_pct == 0.0 && defects.dac_pct == 0.0;
+    let mut report = if pristine {
+        verify_program(program)
+    } else {
+        verify_with_defects(program, defects, seed)
+    };
+    if n_shards > 1 {
+        match partition(program, n_shards, &PartitionOptions::default()) {
+            Ok(plan) => report.merge(verify_shard_plan(program, &plan)),
+            Err(e) => report.push(Finding::deny(
+                RuleId::V3ShardPartition,
+                Location::program(),
+                format!("cannot partition into {n_shards} shards: {e}"),
+            )),
+        }
+    }
+    report
+}
+
+/// Program-level rules against an already-built engine. `defect_ctx`
+/// carries the draw that produced the engine (None = defect-free), so
+/// V5 findings can name the corruption source.
+pub fn verify_engine(
+    program: &CamProgram,
+    engine: &CamEngine,
+    defect_ctx: Option<(DefectSpec, u64)>,
+) -> AnalysisReport {
+    let mut report = AnalysisReport::new(&program.name);
+    check_quantizer_grid(program, &mut report);
+
+    let n_cores = engine.n_cores().min(program.cores.len());
+    let mut cores = Vec::with_capacity(n_cores);
+    let mut total = CoreCensus {
+        core: 0,
+        n_rows: 0,
+        n_cells: 0,
+        wildcard_cells: 0,
+        per_feature_wildcards: Vec::new(),
+        never_match_rows: 0,
+        shared_prefix_cells: 0,
+    };
+    for ci in 0..n_cores {
+        let view = engine.plan_view(ci);
+        check_interval_partition(ci, &view, &mut report);
+        check_arena(ci, &view, &mut report);
+        check_dead_rows(program, ci, &view, defect_ctx, &mut report);
+        let census = core_census(ci, &view);
+        total.n_rows += census.n_rows;
+        total.n_cells += census.n_cells;
+        total.wildcard_cells += census.wildcard_cells;
+        total.never_match_rows += census.never_match_rows;
+        total.shared_prefix_cells += census.shared_prefix_cells;
+        cores.push(census);
+    }
+    let census = SparsityCensus {
+        n_cores,
+        n_rows: total.n_rows,
+        n_cells: total.n_cells,
+        wildcard_cells: total.wildcard_cells,
+        never_match_rows: total.never_match_rows,
+        shared_prefix_cells: total.shared_prefix_cells,
+        cores,
+    };
+    report.push(Finding::info(
+        RuleId::V6SparsityCensus,
+        Location::program(),
+        format!(
+            "{} cores, {} rows, {:.1}% wildcard cells, {} never-match rows, {} shared-prefix cells",
+            census.n_cores,
+            census.n_rows,
+            100.0 * census.wildcard_density(),
+            census.never_match_rows,
+            census.shared_prefix_cells
+        ),
+    ));
+    report.census = Some(census);
+    report
+}
+
+/// V4 — quantizer/grid coherence: cuts strictly increasing and finite,
+/// bin count consistent with the declared precision, and every
+/// *constrained* compiled window bound resolvable to a cut on the
+/// deploy grid. The one degenerate allowance: a feature with **no**
+/// cuts (constant feature) snaps every threshold to bin 1
+/// ([`crate::compiler::snap_threshold`]), so bound 1 is on-grid there.
+fn check_quantizer_grid(program: &CamProgram, report: &mut AnalysisReport) {
+    let q = &program.quantizer;
+    if q.edges.len() != program.n_features {
+        report.push(Finding::deny(
+            RuleId::V4QuantizerGrid,
+            Location::program(),
+            format!(
+                "quantizer covers {} features but program declares {}",
+                q.edges.len(),
+                program.n_features
+            ),
+        ));
+        return; // per-feature grid checks below would index out of bounds
+    }
+    if q.n_bits != program.n_bits {
+        report.push(Finding::deny(
+            RuleId::V4QuantizerGrid,
+            Location::program(),
+            format!("quantizer n_bits={} but program n_bits={}", q.n_bits, program.n_bits),
+        ));
+    }
+    let want_bins = 1u32 << program.n_bits;
+    if u32::from(program.n_bins) != want_bins {
+        report.push(Finding::deny(
+            RuleId::V4QuantizerGrid,
+            Location::program(),
+            format!("n_bins={} but 2^n_bits={want_bins}", program.n_bins),
+        ));
+    }
+    for (f, cuts) in q.edges.iter().enumerate() {
+        if cuts.len() >= want_bins as usize {
+            report.push(Finding::deny(
+                RuleId::V4QuantizerGrid,
+                Location::program().feature(f),
+                format!("{} cuts exceed the {want_bins}-bin grid capacity", cuts.len()),
+            ));
+        }
+        if let Some(c) = cuts.iter().find(|c| !c.is_finite()) {
+            report.push(Finding::deny(
+                RuleId::V4QuantizerGrid,
+                Location::program().feature(f),
+                format!("non-finite cut {c}"),
+            ));
+            continue; // ordering against NaN is meaningless
+        }
+        if let Some(i) = cuts.windows(2).position(|w| w[0] >= w[1]) {
+            report.push(Finding::deny(
+                RuleId::V4QuantizerGrid,
+                Location::program().feature(f),
+                format!(
+                    "cuts not strictly increasing: cuts[{i}]={} >= cuts[{}]={}",
+                    cuts[i],
+                    i + 1,
+                    cuts[i + 1]
+                ),
+            ));
+        }
+    }
+    // Every constrained window bound must be a real grid index: a lo > 0
+    // or hi < n_bins window edge came from some training threshold, and
+    // that threshold must still exist as cut `b-1` on the deploy grid.
+    for (ci, core) in program.cores.iter().enumerate() {
+        for (ri, row) in core.rows.iter().enumerate() {
+            if row.lo.len() != program.n_features || row.hi.len() != program.n_features {
+                report.push(Finding::deny(
+                    RuleId::V4QuantizerGrid,
+                    Location::core(ci).row(ri).tree(row.tree),
+                    format!(
+                        "row arity {}x{} does not match {} features",
+                        row.lo.len(),
+                        row.hi.len(),
+                        program.n_features
+                    ),
+                ));
+                continue;
+            }
+            for f in 0..program.n_features {
+                let cuts = &q.edges[f];
+                for (side, b) in [("lo", row.lo[f]), ("hi", row.hi[f])] {
+                    let constrained =
+                        if side == "lo" { b > 0 } else { b < program.n_bins };
+                    if !constrained {
+                        continue;
+                    }
+                    let on_grid = (1..=cuts.len() as u16).contains(&b)
+                        || (cuts.is_empty() && b == 1);
+                    if !on_grid {
+                        report.push(Finding::deny(
+                            RuleId::V4QuantizerGrid,
+                            Location::core(ci).feature(f).row(ri).tree(row.tree),
+                            format!(
+                                "{side} bound {b} is off the deploy grid ({} cuts)",
+                                cuts.len()
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// V1 — elementary intervals exactly partition DAC space and the LUT
+/// tabulates them. Three sub-checks per feature: (a) stored bound
+/// levels are strictly ascending inside `1..=MACRO_BINS` (a duplicate
+/// is an overlapping zero-width interval, an out-of-range bound a gap);
+/// (b) the stored bounds equal the set recomputed from the programmed
+/// cells (sorted distinct non-zero window edges) — so plan and CAM
+/// agree on where intervals begin; (c) all 256 LUT entries equal
+/// `partition_point` of the stored bounds — so level→interval
+/// resolution agrees with the binary-search (indexed) path.
+fn check_interval_partition(ci: usize, view: &PlanView<'_>, report: &mut AnalysisReport) {
+    let n_rows = view.n_rows();
+    for f in 0..view.n_features() {
+        let stored = view.bounds(f);
+        if let Some(&b) = stored.first() {
+            if b == 0 {
+                report.push(Finding::deny(
+                    RuleId::V1IntervalPartition,
+                    Location::core(ci).feature(f),
+                    "bound level 0 stored (interval 0 always starts at level 0)".to_string(),
+                ));
+            }
+        }
+        if let Some(&b) = stored.last() {
+            if b > MACRO_BINS {
+                report.push(Finding::deny(
+                    RuleId::V1IntervalPartition,
+                    Location::core(ci).feature(f),
+                    format!("bound level {b} above the {MACRO_BINS}-level DAC range"),
+                ));
+            }
+        }
+        if let Some(i) = stored.windows(2).position(|w| w[0] >= w[1]) {
+            report.push(Finding::deny(
+                RuleId::V1IntervalPartition,
+                Location::core(ci).feature(f).interval(i + 1),
+                format!(
+                    "bounds not strictly ascending: bounds[{i}]={} >= bounds[{}]={} \
+                     (overlapping or empty elementary interval)",
+                    stored[i],
+                    i + 1,
+                    stored[i + 1]
+                ),
+            ));
+        }
+        // (b) recompute the reference bound set from the programmed cells.
+        let mut want: Vec<u16> = Vec::with_capacity(n_rows * 2);
+        for r in 0..n_rows {
+            let c = view.cell(r, f);
+            want.push(c.lo);
+            want.push(c.hi);
+        }
+        want.retain(|&b| b > 0);
+        want.sort_unstable();
+        want.dedup();
+        if stored != want.as_slice() {
+            report.push(Finding::deny(
+                RuleId::V1IntervalPartition,
+                Location::core(ci).feature(f),
+                format!(
+                    "stored interval boundaries diverge from programmed cells \
+                     ({} stored vs {} recomputed)",
+                    stored.len(),
+                    want.len()
+                ),
+            ));
+        }
+        // (c) LUT tabulation against the stored bounds; report the first
+        // bad level only — one corrupt write rarely stays alone, and one
+        // precise location beats 256 copies of it.
+        for level in 0..MACRO_BINS as usize {
+            let want_iv = stored.partition_point(|&b| (b as usize) <= level) as u16;
+            let got = view.lut(f, level);
+            if got != want_iv {
+                report.push(Finding::deny(
+                    RuleId::V1IntervalPartition,
+                    Location::core(ci).feature(f).interval(level),
+                    format!("LUT[{level}]={got} but partition_point of bounds gives {want_iv}"),
+                ));
+                break;
+            }
+        }
+    }
+}
+
+/// V2 — bitset-arena structural soundness: per-feature slices are
+/// contiguous and in-bounds, the arena is exactly the sum of its
+/// slices, the row-bitset width matches the core's row count, the
+/// all-rows mask is correct, and no padding bit above `n_rows` is set
+/// in any interval bitset (a stray padding bit would phantom-match a
+/// nonexistent row on the planned path).
+fn check_arena(ci: usize, view: &PlanView<'_>, report: &mut AnalysisReport) {
+    let n_rows = view.n_rows();
+    let n_words = view.n_words();
+    let want_words = n_rows.div_ceil(64).max(1);
+    if n_words != want_words {
+        report.push(Finding::deny(
+            RuleId::V2ArenaBounds,
+            Location::core(ci),
+            format!("row-bitset width {n_words} words, but {n_rows} rows need {want_words}"),
+        ));
+        return; // every later bound derives from n_words
+    }
+    // The bits that may legally be set in any row bitset.
+    let mut legal = vec![u64::MAX; n_words];
+    if n_rows == 0 {
+        legal[0] = 0;
+    } else {
+        let spare = n_words * 64 - n_rows;
+        legal[n_words - 1] = u64::MAX >> spare;
+    }
+    let full = view.full_mask();
+    if full.len() != n_words {
+        report.push(Finding::deny(
+            RuleId::V2ArenaBounds,
+            Location::core(ci),
+            format!("all-rows mask is {} words, expected {n_words}", full.len()),
+        ));
+    } else if full != legal.as_slice() {
+        report.push(Finding::deny(
+            RuleId::V2ArenaBounds,
+            Location::core(ci),
+            format!("all-rows mask does not cover exactly rows 0..{n_rows}"),
+        ));
+    }
+    let arena = view.arena();
+    let mut expect_off = 0usize;
+    let mut in_bounds = vec![true; view.n_features()];
+    for f in 0..view.n_features() {
+        let n_intervals = view.bounds(f).len() + 1;
+        let off = view.offset(f);
+        if off != expect_off {
+            report.push(Finding::deny(
+                RuleId::V2ArenaBounds,
+                Location::core(ci).feature(f),
+                format!("arena offset {off}, expected {expect_off} (slices must be contiguous)"),
+            ));
+        }
+        let words = n_intervals * n_words;
+        if off > arena.len() || words > arena.len() - off.min(arena.len()) {
+            report.push(Finding::deny(
+                RuleId::V2ArenaBounds,
+                Location::core(ci).feature(f),
+                format!(
+                    "interval slices [{off}..{}) exceed the {}-word arena",
+                    off.saturating_add(words),
+                    arena.len()
+                ),
+            ));
+            in_bounds[f] = false; // skip padding scan — it would index past the arena
+        }
+        expect_off += words;
+    }
+    if arena.len() != expect_off {
+        report.push(Finding::deny(
+            RuleId::V2ArenaBounds,
+            Location::core(ci),
+            format!("arena holds {} words, layout requires {expect_off}", arena.len()),
+        ));
+    }
+    for f in 0..view.n_features() {
+        if !in_bounds[f] {
+            continue;
+        }
+        let off = view.offset(f);
+        'feature: for iv in 0..=view.bounds(f).len() {
+            let slice = &arena[off + iv * n_words..off + (iv + 1) * n_words];
+            for (w, &word) in slice.iter().enumerate() {
+                if word & !legal[w] != 0 {
+                    report.push(Finding::deny(
+                        RuleId::V2ArenaBounds,
+                        Location::core(ci).feature(f).interval(iv),
+                        format!(
+                            "padding bits set above row {n_rows} in bitset word {w} \
+                             (would phantom-match a nonexistent row)"
+                        ),
+                    ));
+                    break 'feature; // one location per feature is enough
+                }
+            }
+        }
+    }
+}
+
+/// V5 — dead-leaf lint: a row whose programmed conjunction contains an
+/// empty window (`hi <= lo` in DAC space) can never match any query;
+/// its leaf silently drops out of every prediction. On a clean compile
+/// this cannot happen (the path extractor only emits non-empty
+/// windows), so these are warnings that usually point at a defect draw
+/// — which is named in the finding when known.
+fn check_dead_rows(
+    program: &CamProgram,
+    ci: usize,
+    view: &PlanView<'_>,
+    defect_ctx: Option<(DefectSpec, u64)>,
+    report: &mut AnalysisReport,
+) {
+    let rows = &program.cores[ci].rows;
+    for r in 0..view.n_rows() {
+        let Some(f) = (0..view.n_features()).find(|&f| {
+            let c = view.cell(r, f);
+            c.hi <= c.lo
+        }) else {
+            continue;
+        };
+        let c = view.cell(r, f);
+        let draw = match defect_ctx {
+            Some((spec, seed)) => format!(
+                " (defect draw: {:.2}% memristor, {:.2}% dac, seed {seed})",
+                spec.memristor_pct, spec.dac_pct
+            ),
+            None => String::new(),
+        };
+        let mut loc = Location::core(ci).feature(f).row(r);
+        if let Some(row) = rows.get(r) {
+            loc = loc.tree(row.tree);
+        }
+        report.push(Finding::warn(
+            RuleId::V5DeadLeaf,
+            loc,
+            format!("window [{}, {}) is empty — row can never match{draw}", c.lo, c.hi),
+        ));
+    }
+}
+
+/// V6 — per-core sparsity census over the programmed cells: wildcard
+/// density (fully-open windows — the compression target of ROADMAP
+/// item 2), dead rows, and the shared-prefix count (cells equal to the
+/// same column of the previous row — an upper bound on prefix-sharing
+/// row compression).
+fn core_census(ci: usize, view: &PlanView<'_>) -> CoreCensus {
+    let n_rows = view.n_rows();
+    let n_features = view.n_features();
+    let mut per_feature = vec![0usize; n_features];
+    let mut wildcards = 0usize;
+    let mut dead = 0usize;
+    let mut shared = 0usize;
+    for r in 0..n_rows {
+        let mut row_dead = false;
+        let mut prefix_open = r > 0;
+        for f in 0..n_features {
+            let c = view.cell(r, f);
+            if c.is_dont_care() {
+                wildcards += 1;
+                per_feature[f] += 1;
+            }
+            if c.hi <= c.lo {
+                row_dead = true;
+            }
+            if prefix_open {
+                if view.cell(r - 1, f) == c {
+                    shared += 1;
+                } else {
+                    prefix_open = false;
+                }
+            }
+        }
+        if row_dead {
+            dead += 1;
+        }
+    }
+    CoreCensus {
+        core: ci,
+        n_rows,
+        n_cells: n_rows * n_features,
+        wildcard_cells: wildcards,
+        per_feature_wildcards: per_feature,
+        never_match_rows: dead,
+        shared_prefix_cells: shared,
+    }
+}
+
+/// V3 — shard plans partition the tree set exactly. Checks, in order:
+/// plan/program metadata coherence; every assigned tree exists in the
+/// program and belongs to exactly one shard (no duplicate, no loss);
+/// each shard's per-tree leaf-row counts reconcile with the unsharded
+/// program (no row dropped or forged in repacking); and the additive
+/// prior rides on shard 0 alone (applying it per shard would add it
+/// `n_shards` times — DESIGN.md §5 contract 6).
+pub fn verify_shard_plan(program: &CamProgram, plan: &ShardPlan) -> AnalysisReport {
+    let mut report = AnalysisReport::new(&program.name);
+    if plan.task != program.task {
+        report.push(Finding::deny(
+            RuleId::V3ShardPartition,
+            Location::program(),
+            format!("plan task {:?} but program task {:?}", plan.task, program.task),
+        ));
+    }
+    if plan.n_features != program.n_features {
+        report.push(Finding::deny(
+            RuleId::V3ShardPartition,
+            Location::program(),
+            format!("plan has {} features, program {}", plan.n_features, program.n_features),
+        ));
+    }
+    if plan.shards.len() != plan.assignment.len() {
+        report.push(Finding::deny(
+            RuleId::V3ShardPartition,
+            Location::program(),
+            format!(
+                "{} shard programs but {} assignment lists",
+                plan.shards.len(),
+                plan.assignment.len()
+            ),
+        ));
+    }
+    // Reference: leaf-row count per tree in the unsharded program.
+    let mut program_rows: BTreeMap<u32, usize> = BTreeMap::new();
+    for core in &program.cores {
+        for row in &core.rows {
+            *program_rows.entry(row.tree).or_insert(0) += 1;
+        }
+    }
+    // Assignment exactness: each program tree on exactly one shard.
+    let mut owner: BTreeMap<u32, usize> = BTreeMap::new();
+    for (s, trees) in plan.assignment.iter().enumerate() {
+        for &t in trees {
+            if !program_rows.contains_key(&t) {
+                report.push(Finding::deny(
+                    RuleId::V3ShardPartition,
+                    Location::shard(s).tree(t),
+                    format!("assigned tree {t} does not exist in the program"),
+                ));
+            }
+            if let Some(prev) = owner.insert(t, s) {
+                report.push(Finding::deny(
+                    RuleId::V3ShardPartition,
+                    Location::shard(s).tree(t),
+                    format!("tree {t} duplicated across shards {prev} and {s}"),
+                ));
+            }
+        }
+    }
+    for &t in program_rows.keys() {
+        if !owner.contains_key(&t) {
+            report.push(Finding::deny(
+                RuleId::V3ShardPartition,
+                Location::program().tree(t),
+                format!("tree {t} lost: assigned to no shard"),
+            ));
+        }
+    }
+    // Per-shard reconciliation: the repacked cores must carry exactly
+    // the assigned trees with exactly the program's row counts.
+    for (s, shard) in plan.shards.iter().enumerate() {
+        if shard.task != program.task
+            || shard.n_features != program.n_features
+            || shard.n_bins != program.n_bins
+        {
+            report.push(Finding::deny(
+                RuleId::V3ShardPartition,
+                Location::shard(s),
+                "shard program metadata (task/features/bins) diverges from source".to_string(),
+            ));
+        }
+        let mut shard_rows: BTreeMap<u32, usize> = BTreeMap::new();
+        for core in &shard.cores {
+            for row in &core.rows {
+                *shard_rows.entry(row.tree).or_insert(0) += 1;
+            }
+        }
+        let assigned: &[u32] =
+            plan.assignment.get(s).map(Vec::as_slice).unwrap_or_default();
+        for &t in assigned {
+            let want = program_rows.get(&t).copied().unwrap_or(0);
+            let got = shard_rows.remove(&t).unwrap_or(0);
+            if got != want {
+                report.push(Finding::deny(
+                    RuleId::V3ShardPartition,
+                    Location::shard(s).tree(t),
+                    format!("tree {t} carries {got} leaf rows on the shard, {want} in the program"),
+                ));
+            }
+        }
+        for (&t, &rows) in &shard_rows {
+            report.push(Finding::deny(
+                RuleId::V3ShardPartition,
+                Location::shard(s).tree(t),
+                format!("shard carries {rows} rows of tree {t} it was never assigned"),
+            ));
+        }
+        if s == 0 {
+            if shard.base_score != program.base_score {
+                report.push(Finding::deny(
+                    RuleId::V3ShardPartition,
+                    Location::shard(0),
+                    "shard 0 base score diverges from the program's".to_string(),
+                ));
+            }
+        } else if shard.base_score.iter().any(|&b| b != 0.0) {
+            report.push(Finding::deny(
+                RuleId::V3ShardPartition,
+                Location::shard(s),
+                format!("non-zero base score on shard {s} (the prior must be applied once)"),
+            ));
+        }
+    }
+    if plan.base_score != program.base_score {
+        report.push(Finding::deny(
+            RuleId::V3ShardPartition,
+            Location::program(),
+            "plan base score diverges from the program's".to_string(),
+        ));
+    }
+    report
+}

@@ -185,6 +185,61 @@ pub struct CamEngine {
     scale: u16,
 }
 
+/// Read-only per-core view for the static verifier (`analysis`
+/// module): the programmed (possibly defect-perturbed) cells and the
+/// [`CorePlan`]'s interval bounds, LUT, arena bitsets and masks.
+/// Obtained via [`CamEngine::plan_view`]; exists so the verifier can
+/// cross-check plan against cells without the plan internals becoming
+/// public mutable surface.
+pub struct PlanView<'a> {
+    core: &'a EngineCore,
+    n_features: usize,
+}
+
+impl PlanView<'_> {
+    pub fn n_rows(&self) -> usize {
+        self.core.leaf.len()
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.core.plan.n_words
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Ascending distinct non-zero bound levels of feature `f`
+    /// (elementary interval `i` spans `[bounds[i-1], bounds[i])`).
+    pub fn bounds(&self, f: usize) -> &[u16] {
+        &self.core.plan.features[f].bounds
+    }
+
+    /// Word offset of feature `f`'s interval 0 in the arena.
+    pub fn offset(&self, f: usize) -> usize {
+        self.core.plan.features[f].off
+    }
+
+    pub fn arena(&self) -> &[u64] {
+        &self.core.plan.arena
+    }
+
+    /// The all-rows mask (last word partially filled).
+    pub fn full_mask(&self) -> &[u64] {
+        &self.core.plan.full
+    }
+
+    /// Level→interval LUT entry for feature `f` at DAC `level`.
+    pub fn lut(&self, f: usize, level: usize) -> u16 {
+        self.core.plan.lut[f * MACRO_BINS as usize + level]
+    }
+
+    /// The programmed macro-cell at row `r`, feature `f` (DAC space).
+    pub fn cell(&self, r: usize, f: usize) -> MacroCell {
+        *self.core.cam.segments[f / ARRAY_COLS].cell(r, f % ARRAY_COLS)
+    }
+}
+
 /// The single rounding of the bit-identity contract (DESIGN.md §5):
 /// `partial as f32 + base`, with missing trailing base entries treated
 /// as 0. Shared by both engine query paths and the sharded dispatcher's
@@ -247,6 +302,49 @@ impl CamEngine {
     /// Cores in the compiled program (one [`CorePlan`] each).
     pub fn n_cores(&self) -> usize {
         self.cores.len()
+    }
+
+    /// Read-only view of core `ci`'s compiled state — programmed cells
+    /// plus the plan's bounds/LUT/arena — for the static verifier
+    /// (`analysis` module). Keeps [`CorePlan`] internals private while
+    /// letting the verifier audit them against the cells.
+    pub fn plan_view(&self, ci: usize) -> PlanView<'_> {
+        PlanView { core: &self.cores[ci], n_features: self.n_features }
+    }
+
+    /// Mutation-test hook (`rust/tests/analysis.rs`): bump one LUT
+    /// entry so level→interval resolution disagrees with the bounds —
+    /// rule V1 must fire, and only V1 (the arena is untouched).
+    #[doc(hidden)]
+    pub fn corrupt_lut_entry(&mut self, ci: usize, f: usize, level: usize) {
+        let i = f * MACRO_BINS as usize + level;
+        let lut = &mut self.cores[ci].plan.lut;
+        lut[i] = lut[i].wrapping_add(1);
+    }
+
+    /// Mutation-test hook: point one feature's arena offset past the
+    /// end of the arena — rule V2 must fire, and only V2 (bounds and
+    /// LUT are untouched).
+    #[doc(hidden)]
+    pub fn corrupt_arena_offset(&mut self, ci: usize, f: usize) {
+        let end = self.cores[ci].plan.arena.len() + 1;
+        self.cores[ci].plan.features[f].off = end;
+    }
+
+    /// Mutation-test hook: set the first padding bit (row `n_rows`) in
+    /// feature 0's interval-0 bitset — rule V2's padding check must
+    /// fire. Returns `false` when the core has no padding bits to
+    /// corrupt (empty core, or `n_rows` a multiple of 64).
+    #[doc(hidden)]
+    pub fn set_arena_padding_bit(&mut self, ci: usize) -> bool {
+        let core = &mut self.cores[ci];
+        let n_rows = core.leaf.len();
+        if n_rows == 0 || n_rows % 64 == 0 || core.plan.features.is_empty() {
+            return false;
+        }
+        let idx = core.plan.features[0].off + core.plan.n_words - 1;
+        core.plan.arena[idx] |= 1u64 << (n_rows % 64);
+        true
     }
 
     /// Quantizer-bin → 8-bit DAC level: the DAC's full-scale mapping,

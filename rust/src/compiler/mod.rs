@@ -10,7 +10,7 @@ pub mod paths;
 pub mod program;
 
 pub use engine::{
-    apply_base, defect_affected_trees, defective_score, hat_defect_retrain, CamEngine,
+    apply_base, defect_affected_trees, defective_score, hat_defect_retrain, CamEngine, PlanView,
     SearchStats,
 };
 pub use noc::{NocConfig, Router};

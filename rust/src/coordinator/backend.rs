@@ -210,6 +210,7 @@ impl Backend for XlaBackend {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::compiler::{compile, CompileOptions};

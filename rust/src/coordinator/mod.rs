@@ -30,10 +30,18 @@
 //! fleet.shutdown(); // drains: every admitted request is answered first
 //! ```
 
+// Panic-path lint spine: coordinator threads hold the fleet's locks and
+// worker queues — an unwind here can poison shared state for every
+// tenant. Surviving `unwrap`/`expect` sites carry an `#[allow]` stating
+// the invariant; everything else returns typed errors or degrades
+// per-request.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod backend;
 pub mod router;
 pub mod server;
 
+pub use crate::analysis::VerifyPolicy;
 pub use backend::{Backend, CpuExactBackend, FunctionalBackend, XlaBackend};
 pub use router::{
     AdmitSlot, Admission, Fleet, FleetStats, ModelConfig, ModelStats, RouteHandle, Router,

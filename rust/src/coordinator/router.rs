@@ -42,6 +42,7 @@
 
 use super::backend::{Backend, FunctionalBackend};
 use super::server::{BatchPolicy, QueueTicket, Reply, Server, ShardStats};
+use crate::analysis::{self, AnalysisReport, VerifyPolicy};
 use crate::compiler::{partition, CamProgram, PartitionOptions};
 use crate::data::FeatureQuantizer;
 use crate::util::stats::Summary;
@@ -73,6 +74,10 @@ pub struct ModelConfig {
     pub queue_cap: usize,
     /// Host-side "DAC": raw f32 rows → quantized bins for this model.
     pub quantizer: FeatureQuantizer,
+    /// Static-verifier gate run by [`Fleet::register_program`] /
+    /// [`Fleet::swap_program`] before any backend is built (DESIGN.md §5
+    /// contract 8). Default: refuse deny-level findings.
+    pub verify: VerifyPolicy,
 }
 
 impl ModelConfig {
@@ -86,6 +91,7 @@ impl ModelConfig {
             batch_policy: BatchPolicy::default(),
             queue_cap: DEFAULT_QUEUE_CAP,
             quantizer: program.quantizer.clone(),
+            verify: VerifyPolicy::default(),
         }
     }
 
@@ -101,6 +107,14 @@ impl ModelConfig {
 
     pub fn with_queue_cap(mut self, cap: usize) -> ModelConfig {
         self.queue_cap = cap;
+        self
+    }
+
+    /// Set the registration-gate policy ([`VerifyPolicy::Skip`] trusts
+    /// the compiler; [`VerifyPolicy::DenyWarnings`] also refuses V5
+    /// dead-leaf warnings, e.g. for defect-free golden deployments).
+    pub fn with_verify(mut self, policy: VerifyPolicy) -> ModelConfig {
+        self.verify = policy;
         self
     }
 }
@@ -251,9 +265,24 @@ pub struct FleetStats {
 /// tenants (or an operator's swap) behind the guard.
 #[derive(Default)]
 pub struct Fleet {
-    routes: RwLock<BTreeMap<String, Arc<Route>>>,
+    routes: RwLock<Routes>,
     total_admitted: AtomicU64,
     total_shed: AtomicU64,
+}
+
+type Routes = BTreeMap<String, Arc<Route>>;
+
+/// Routes-map access continuing through lock poisoning: the map is
+/// structurally valid at every point a panicking holder could have
+/// stopped (single insert/remove/lookup statements), so poison carries
+/// no integrity signal here — and refusing all access would turn one
+/// panicked request thread into a whole-fleet outage.
+fn routes_read(lock: &RwLock<Routes>) -> std::sync::RwLockReadGuard<'_, Routes> {
+    lock.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn routes_write(lock: &RwLock<Routes>) -> std::sync::RwLockWriteGuard<'_, Routes> {
+    lock.write().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// The single-model-era name; the fleet is a drop-in superset.
@@ -264,7 +293,9 @@ impl Fleet {
         Fleet::default()
     }
 
-    /// Register a compiled program: partitions it into
+    /// Register a compiled program: runs the static verifier per
+    /// [`ModelConfig::verify`] (a blocked program is refused with the
+    /// worst finding — DESIGN.md §5 contract 8), partitions it into
     /// [`ModelConfig::shards`] shard programs (ADR-001) and serves each
     /// through a planned-execution [`FunctionalBackend`]
     /// ([`Server::start_sharded`] aggregation is bit-identical to the
@@ -276,7 +307,7 @@ impl Fleet {
         program: &CamProgram,
         cfg: ModelConfig,
     ) -> Result<(), String> {
-        let (backends, base_score) = functional_shards(program, cfg.shards)?;
+        let (backends, base_score) = verified_shards(program, &cfg)?;
         self.register_backends(name, backends, base_score, cfg)
     }
 
@@ -293,7 +324,7 @@ impl Fleet {
         cfg: ModelConfig,
     ) -> Result<(), String> {
         let route = Route::start(backends, base_score, cfg)?;
-        let mut routes = self.routes.write().unwrap();
+        let mut routes = routes_write(&self.routes);
         if routes.contains_key(name) {
             // The fresh route has seen no traffic; dropping it just
             // joins idle workers. The live server is untouched.
@@ -315,8 +346,13 @@ impl Fleet {
         backend: Box<dyn Backend>,
         policy: BatchPolicy,
     ) -> Result<(), String> {
-        let cfg =
-            ModelConfig { shards: 1, batch_policy: policy, queue_cap: 0, quantizer };
+        let cfg = ModelConfig {
+            shards: 1,
+            batch_policy: policy,
+            queue_cap: 0,
+            quantizer,
+            verify: VerifyPolicy::default(),
+        };
         self.register_backends(name, vec![backend], Vec::new(), cfg)
     }
 
@@ -324,14 +360,17 @@ impl Fleet {
     /// redeploy loop): the new sharded server goes live atomically, then
     /// this call blocks while the old server drains — every request
     /// admitted before the swap receives its reply *from the old
-    /// program*, bit-exactly (contract 6). Errors if `name` is unknown.
+    /// program*, bit-exactly (contract 6). The replacement passes the
+    /// same static-verifier gate as registration (contract 8): a
+    /// refused program leaves the live route serving, untouched. Errors
+    /// if `name` is unknown.
     pub fn swap_program(
         &self,
         name: &str,
         program: &CamProgram,
         cfg: ModelConfig,
     ) -> Result<(), String> {
-        let (backends, base_score) = functional_shards(program, cfg.shards)?;
+        let (backends, base_score) = verified_shards(program, &cfg)?;
         self.swap_backends(name, backends, base_score, cfg)
     }
 
@@ -345,7 +384,7 @@ impl Fleet {
     ) -> Result<(), String> {
         let fresh = Route::start(backends, base_score, cfg)?;
         let old = {
-            let mut routes = self.routes.write().unwrap();
+            let mut routes = routes_write(&self.routes);
             match routes.get_mut(name) {
                 Some(slot) => std::mem::replace(slot, Arc::new(fresh)),
                 None => {
@@ -366,10 +405,7 @@ impl Fleet {
     /// Unload a model. Blocks while the route's server drains: requests
     /// admitted before the unregister still receive their replies.
     pub fn unregister(&self, name: &str) -> Result<(), String> {
-        let old = self
-            .routes
-            .write()
-            .unwrap()
+        let old = routes_write(&self.routes)
             .remove(name)
             .ok_or_else(|| format!("cannot unregister unknown model `{name}`"))?;
         drain_route(old);
@@ -378,7 +414,7 @@ impl Fleet {
 
     /// Registered model names (sorted).
     pub fn models(&self) -> Vec<String> {
-        self.routes.read().unwrap().keys().cloned().collect()
+        routes_read(&self.routes).keys().cloned().collect()
     }
 
     /// Admission-controlled async submit of a raw feature row.
@@ -432,7 +468,7 @@ impl Fleet {
 
     /// Stats for one model, `None` if unknown.
     pub fn model_stats(&self, name: &str) -> Option<ModelStats> {
-        let route = self.routes.read().unwrap().get(name).cloned()?;
+        let route = routes_read(&self.routes).get(name).cloned()?;
         Some(route.stats(name))
     }
 
@@ -440,10 +476,7 @@ impl Fleet {
     /// admitted/shed totals. Counter snapshotting runs outside the
     /// routes lock.
     pub fn stats(&self) -> FleetStats {
-        let routes: Vec<(String, Arc<Route>)> = self
-            .routes
-            .read()
-            .unwrap()
+        let routes: Vec<(String, Arc<Route>)> = routes_read(&self.routes)
             .iter()
             .map(|(name, r)| (name.clone(), r.clone()))
             .collect();
@@ -456,7 +489,8 @@ impl Fleet {
 
     /// Drain every route and join all workers.
     pub fn shutdown(self) {
-        let routes = self.routes.into_inner().unwrap();
+        let routes =
+            self.routes.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
         for (_, route) in routes {
             drain_route(route);
         }
@@ -466,9 +500,7 @@ impl Fleet {
     /// lives only for this statement, so quantization, admission and
     /// reply waits all run without it.
     fn route(&self, model: &str) -> Result<Arc<Route>, String> {
-        self.routes
-            .read()
-            .unwrap()
+        routes_read(&self.routes)
             .get(model)
             .cloned()
             .ok_or_else(|| format!("unknown model `{model}`"))
@@ -600,18 +632,31 @@ fn check_arity(route: &Route, model: &str, got: usize) -> Result<(), String> {
     Ok(())
 }
 
-/// Partition `program` into `shards` planned-execution functional
-/// backends (1 = serve unpartitioned; base score then stays with the
-/// single backend's own `infer`).
-fn functional_shards(
+/// Partition `program` into [`ModelConfig::shards`] planned-execution
+/// functional backends (1 = serve unpartitioned; base score then stays
+/// with the single backend's own `infer`), gated by the static verifier
+/// per [`ModelConfig::verify`] (contract 8). The sharded path verifies
+/// the *same* partition the backends are built from — one `partition`
+/// call, no verify/serve divergence window.
+fn verified_shards(
     program: &CamProgram,
-    shards: usize,
+    cfg: &ModelConfig,
 ) -> Result<(Vec<Box<dyn Backend>>, Vec<f32>), String> {
-    if shards <= 1 {
+    let gate = cfg.verify != VerifyPolicy::Skip;
+    if cfg.shards <= 1 {
+        if gate {
+            refuse_blocked(program, cfg.verify, analysis::verify_program(program))?;
+        }
         return Ok((vec![Box::new(FunctionalBackend::new(program))], Vec::new()));
     }
-    let plan = partition(program, shards, &PartitionOptions::default())
-        .map_err(|e| format!("partitioning `{}` into {shards} shards: {e}", program.name))?;
+    let plan = partition(program, cfg.shards, &PartitionOptions::default()).map_err(|e| {
+        format!("partitioning `{}` into {} shards: {e}", program.name, cfg.shards)
+    })?;
+    if gate {
+        let mut report = analysis::verify_program(program);
+        report.merge(analysis::verify_shard_plan(program, &plan));
+        refuse_blocked(program, cfg.verify, report)?;
+    }
     let backends = plan
         .shards
         .iter()
@@ -620,7 +665,26 @@ fn functional_shards(
     Ok((backends, plan.base_score))
 }
 
+/// Contract 8 refusal diagnostic: the worst blocking finding by rule,
+/// location and message, plus the report's finding totals.
+fn refuse_blocked(
+    program: &CamProgram,
+    policy: VerifyPolicy,
+    report: AnalysisReport,
+) -> Result<(), String> {
+    match policy.blocks(&report) {
+        Some(f) => Err(format!(
+            "static verifier refused `{}` ({} deny, {} warn): {f}",
+            program.name,
+            report.deny_count(),
+            report.warn_count()
+        )),
+        None => Ok(()),
+    }
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::compiler::{compile, CamEngine, CompileOptions};

@@ -32,7 +32,7 @@ use crate::compiler::apply_base;
 use crate::util::stats::{Reservoir, Summary};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 /// Latency samples retained for [`Server::latency_summary`]: a
@@ -173,6 +173,15 @@ struct Counters {
     errors: AtomicU64,
 }
 
+/// Mutex access continuing through poisoning: every mutex in this
+/// module guards a plain value (an error string, the latency
+/// reservoir) that is valid at any point a panicking holder could have
+/// stopped, so poison carries no integrity signal — and stats readers
+/// must keep working after a worker panic (fault containment).
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// Per-shard-worker counters (one per backend in the pool).
 struct ShardCounter {
     name: String,
@@ -206,7 +215,7 @@ impl ShardCounter {
     }
 
     fn set_last_error(&self, msg: String) {
-        *self.last_error.lock().unwrap() = Some(msg);
+        *lock_clean(&self.last_error) = Some(msg);
     }
 
     /// A failure observed by the dispatcher rather than the worker
@@ -223,7 +232,7 @@ impl ShardCounter {
             rows: self.rows.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             busy_us: self.busy_us.load(Ordering::Relaxed),
-            last_error: self.last_error.lock().unwrap().clone(),
+            last_error: lock_clean(&self.last_error).clone(),
         }
     }
 }
@@ -325,6 +334,8 @@ impl Server {
             backends.iter().all(|b| b.task() == task),
             "all shard backends must serve the same task"
         );
+        // Invariant: asserted non-empty above, so a minimum exists.
+        #[allow(clippy::unwrap_used)]
         let cap = backends.iter().map(|b| b.max_batch()).min().unwrap();
         let max_batch = if policy.max_batch == 0 {
             cap
@@ -354,6 +365,8 @@ impl Server {
         if backends.len() == 1 {
             // Single-card fast path: the worker owns the backend and
             // serves logits directly (backend applies any base score).
+            // Invariant: this branch is `backends.len() == 1`.
+            #[allow(clippy::unwrap_used)]
             let mut backend = backends.pop().unwrap();
             let worker = std::thread::spawn(move || {
                 while let Ok(first) = rx.recv() {
@@ -380,7 +393,7 @@ impl Server {
                         Ok(logits) => {
                             c2.batches.fetch_add(1, Ordering::Relaxed);
                             c2.batch_rows.fetch_add(pending.len() as u64, Ordering::Relaxed);
-                            let mut lat_log = l2.lock().unwrap();
+                            let mut lat_log = lock_clean(&l2);
                             for (req, l) in pending.into_iter().zip(logits) {
                                 let latency = req.enqueued.elapsed();
                                 lat_log.push(latency.as_secs_f64());
@@ -530,7 +543,7 @@ impl Server {
                 // unsharded functional engine.
                 c2.batches.fetch_add(1, Ordering::Relaxed);
                 c2.batch_rows.fetch_add(n_rows as u64, Ordering::Relaxed);
-                let mut lat_log = l2.lock().unwrap();
+                let mut lat_log = lock_clean(&l2);
                 for (i, req) in reqs.into_iter().enumerate() {
                     let mut total: Vec<f64> = Vec::new();
                     for p in shard_partials.iter() {
@@ -593,6 +606,11 @@ impl Server {
         assert_eq!(bins.len(), self.n_features, "feature arity mismatch");
         self.counters.requests.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
+        // Invariant: `tx` is `Some` until `shutdown`/`Drop` consume the
+        // server, so no `&self` caller can observe `None`; and the
+        // worker holds `rx` until `tx` is dropped, so `send` cannot
+        // fail while `tx` is alive.
+        #[allow(clippy::expect_used)]
         self.tx
             .as_ref()
             .expect("server stopped")
@@ -603,6 +621,11 @@ impl Server {
 
     /// Blocking convenience: submit and wait.
     pub fn infer_blocking(&self, bins: Vec<u16>) -> Reply {
+        // Invariant: the drain contract — every submitted request's
+        // reply sender is used before the worker exits — so `recv` can
+        // only fail if the worker *panicked*, which already tore down
+        // the process's serving guarantees.
+        #[allow(clippy::expect_used)]
         self.submit(bins).recv().expect("worker dropped request")
     }
 
@@ -624,13 +647,13 @@ impl Server {
     /// the summary is over a uniform sample of everything served and
     /// server memory stays bounded under sustained load.
     pub fn latency_summary(&self) -> Option<Summary> {
-        self.latencies.lock().unwrap().summary()
+        lock_clean(&self.latencies).summary()
     }
 
     /// Latency samples offered to the reservoir so far (= rows served
     /// successfully).
     pub fn latency_samples_seen(&self) -> u64 {
-        self.latencies.lock().unwrap().seen()
+        lock_clean(&self.latencies).seen()
     }
 
     /// Stop the workers.
@@ -668,6 +691,7 @@ impl Drop for Server {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::compiler::{compile, partition, CamEngine, CompileOptions, PartitionOptions};

@@ -17,6 +17,9 @@
 //!   H-tree chip, plus the area/power/energy cost model (Fig. 8);
 //! * [`baselines`] — analytical V100/FIL GPU model and the Booster ASIC
 //!   model used as comparison points in Fig. 10/11;
+//! * [`analysis`] — deploy-time static verifier: rule-based lints (V1–V6)
+//!   over compiled programs, plans and shard splits, surfaced through
+//!   `xtime verify` and the fleet registration gate (contract 8);
 //! * [`runtime`] — PJRT (XLA) runtime loading AOT-compiled HLO artifacts
 //!   produced by the JAX/Pallas build pipeline under `python/`;
 //! * [`coordinator`] — the serving engine: request router, dynamic batcher,
@@ -25,6 +28,7 @@
 //!   client, and the open-loop multi-tenant load generator;
 //! * [`util`] — offline substrates (PRNG, JSON, CLI, stats, prop tests).
 
+pub mod analysis;
 pub mod baselines;
 pub mod bench_support;
 pub mod cam;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train     — train a Table II model on its synthetic dataset
 //!   compile   — compile a trained model to a CAM program
+//!   verify    — static verifier: lint a compiled program (rules V1–V6)
+//!               without executing a query; `--json` for the report
 //!   simulate  — run the cycle-detailed chip simulation
 //!   serve     — demo serving loop (XLA artifact or functional backend),
 //!               or a multi-tenant fleet with `--models a,b,c`; add
@@ -14,6 +16,7 @@
 //! Example:
 //!   xtime train --dataset churn --trees 64 --out /tmp/churn.model.json
 //!   xtime compile --model /tmp/churn.model.json --out /tmp/churn.cam.json
+//!   xtime verify --program /tmp/churn.cam.json --shards 2 --json
 //!   xtime simulate --program /tmp/churn.cam.json --samples 100000
 //!   xtime serve --program /tmp/churn.cam.json --requests 1000
 //!   xtime serve --models churn,telco,gas --shards 2 --requests 6000
@@ -23,6 +26,7 @@
 use std::path::Path;
 use std::sync::Arc;
 use xtime::bench_support::{drive_skewed_mix, fleet_table, MixTenant};
+use xtime::cam::DefectSpec;
 use xtime::compiler::{compile, CamProgram, CompileOptions};
 use xtime::coordinator::{BatchPolicy, Fleet, FunctionalBackend, ModelConfig, Server, XlaBackend};
 use xtime::data::{by_name, catalog};
@@ -37,7 +41,7 @@ use xtime::util::Args;
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: xtime <train|compile|simulate|serve|loadgen|report> [options]");
+        eprintln!("usage: xtime <train|compile|verify|simulate|serve|loadgen|report> [options]");
         eprintln!("datasets: {}", catalog().iter().map(|s| s.name).collect::<Vec<_>>().join(", "));
         std::process::exit(2);
     }
@@ -45,6 +49,7 @@ fn main() {
     match cmd.as_str() {
         "train" => cmd_train(&argv),
         "compile" => cmd_compile(&argv),
+        "verify" => cmd_verify(&argv),
         "simulate" => cmd_simulate(&argv),
         "serve" => cmd_serve(&argv),
         "loadgen" => cmd_loadgen(&argv),
@@ -143,6 +148,38 @@ fn load_program(path: &str) -> CamProgram {
         eprintln!("loading program: {e}");
         std::process::exit(2);
     })
+}
+
+fn cmd_verify(argv: &[String]) {
+    let a = parse(
+        Args::new("xtime verify", "static verifier: lint a compiled CAM program (rules V1-V6)")
+            .opt("program", None, "compiled CAM program JSON")
+            .opt("shards", Some("1"), "also verify an n-shard partition (rule V3)")
+            .opt("defect-pct", Some("0"), "lint under a memristor defect draw (rule V5)")
+            .opt("seed", Some("7"), "defect-draw seed")
+            .opt("out", Some(""), "also write the JSON report to this path")
+            .flag("json", "print the machine-readable report instead of the table"),
+        argv,
+    );
+    let program = load_program(&a.get("program"));
+    let defects = DefectSpec::memristor(a.get_f64("defect-pct"));
+    let report =
+        xtime::analysis::verify_deployment(&program, a.get_usize("shards"), defects, a.get_u64("seed"));
+    let json = report.to_json().to_string();
+    if a.get_flag("json") {
+        println!("{json}");
+    } else {
+        print!("{}", report.render());
+    }
+    let out = a.get("out");
+    if !out.is_empty() {
+        std::fs::write(Path::new(&out), &json).expect("writing report");
+    }
+    // Exit contract mirrors the fleet gate (contract 8): deny findings
+    // fail the invocation so CI can gate on the exit code alone.
+    if !report.is_clean() {
+        std::process::exit(1);
+    }
 }
 
 fn cmd_simulate(argv: &[String]) {

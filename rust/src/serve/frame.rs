@@ -105,6 +105,9 @@ struct Cursor<'a> {
     i: usize,
 }
 
+// `take(n)` hands back exactly `n` bytes, so the fixed-width
+// `try_into()` conversions below are infallible.
+#[allow(clippy::unwrap_used)]
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
         if self.i + n > self.b.len() {
@@ -224,6 +227,8 @@ impl<'a> RequestView<'a> {
     /// payload bytes are decoded. Panics on an out-of-range row index
     /// (a server bug, not a wire condition: `parse` proved the payload
     /// holds exactly `n_rows` rows).
+    // The 4-byte slice makes `try_into()` infallible.
+    #[allow(clippy::unwrap_used)]
     pub fn row(&self, i: usize) -> Vec<f32> {
         assert!(i < self.n_rows, "row {i} out of range ({} rows)", self.n_rows);
         let start = i * self.n_features * 4;
@@ -474,6 +479,7 @@ fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> io::Result<ReadStatus
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -97,8 +97,7 @@ impl WireServer {
             let counters = counters.clone();
             thread::Builder::new()
                 .name("wire-accept".to_string())
-                .spawn(move || accept_loop(listener, fleet, stop, counters))
-                .expect("spawn wire accept thread")
+                .spawn(move || accept_loop(listener, fleet, stop, counters))?
         };
         Ok(WireServer { addr, stop, counters, accept_thread })
     }
@@ -158,15 +157,17 @@ fn accept_loop(
                 let fleet = fleet.clone();
                 let stop = stop.clone();
                 let counters = counters.clone();
-                let h = thread::Builder::new()
-                    .name("wire-conn".to_string())
-                    .spawn(move || {
-                        // A handler failure (peer reset, mid-frame EOF)
-                        // is contained to this connection.
-                        let _ = handle_connection(stream, &fleet, &stop, &counters);
-                    })
-                    .expect("spawn wire connection handler");
-                handlers.push(h);
+                match thread::Builder::new().name("wire-conn".to_string()).spawn(move || {
+                    // A handler failure (peer reset, mid-frame EOF)
+                    // is contained to this connection.
+                    let _ = handle_connection(stream, &fleet, &stop, &counters);
+                }) {
+                    Ok(h) => handlers.push(h),
+                    // Thread exhaustion is transient like EMFILE below:
+                    // drop this connection (the stream closes, the peer
+                    // sees a reset) and keep accepting.
+                    Err(_) => continue,
+                }
             }
             // Transient accept errors (e.g. EMFILE, aborted handshake)
             // must not kill the loop.
@@ -277,8 +278,17 @@ fn handle_request(view: &RequestView<'_>, fleet: &Fleet, counters: &Counters) ->
             },
         });
     }
-    let rows: Vec<RowOutcome> =
-        outcomes.into_iter().map(|o| o.expect("every row resolved")).collect();
+    // Every slot was filled by the shed/submit/reply arms above; an
+    // unresolved row would be a dispatch bug — contain it to this row
+    // as a `Failed` outcome instead of tearing down the connection.
+    let rows: Vec<RowOutcome> = outcomes
+        .into_iter()
+        .map(|o| {
+            o.unwrap_or_else(|| RowOutcome::Failed {
+                error: "internal: row outcome unresolved".to_string(),
+            })
+        })
+        .collect();
     encode_reply(view.id, handle.queue_depth() as u32, &rows)
 }
 

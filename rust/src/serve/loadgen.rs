@@ -152,7 +152,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         let p = p?;
         request_errors += p.request_errors;
         for (spec, outcome) in cfg.tenants.iter().zip(p.per_tenant) {
-            tenants.get_mut(&spec.name).unwrap().absorb(outcome);
+            // The map was built from this same `cfg.tenants` iteration,
+            // so every spec name is present.
+            if let Some(t) = tenants.get_mut(&spec.name) {
+                t.absorb(outcome);
+            }
         }
     }
     Ok(LoadReport { wall_s, request_errors, tenants })
@@ -285,6 +289,7 @@ fn outcome_json(o: &TenantOutcome, weight: Option<usize>) -> Json {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -48,6 +48,13 @@
 //! Arc::try_unwrap(fleet).ok().unwrap().shutdown();
 //! ```
 
+// Panic-path lint spine: serving threads must not unwind on peer input
+// or lock poisoning. Every surviving `unwrap`/`expect` in this module
+// tree carries an `#[allow]` with the invariant that makes it
+// infallible; fallible paths return typed errors or per-row `Failed`
+// outcomes instead.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod client;
 pub mod frame;
 pub mod listener;

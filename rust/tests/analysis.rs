@@ -1,0 +1,412 @@
+//! Static-verifier contract (ISSUE 7): the property suite proves every
+//! real compile path produces verifier-clean programs (zero deny-level
+//! findings — the verifier is a standing oracle over the compiler
+//! surface), and the mutation suite proves each rule V1–V6 actually
+//! fires, on exactly its own `RuleId`, under a deliberate corruption.
+//! The fleet tests pin contract 8: `register_program`/`swap_program`
+//! refuse a blocked program with a diagnostic and leave live routes
+//! untouched.
+
+use xtime::analysis::{self, RuleId, Severity, VerifyPolicy};
+use xtime::bench_support::random_ensemble;
+use xtime::cam::DefectSpec;
+use xtime::compiler::{
+    compile, compile_for_deploy, partition, CamEngine, CamProgram, CompileOptions,
+    PartitionOptions,
+};
+use xtime::coordinator::{Fleet, ModelConfig};
+use xtime::data::{by_name, Dataset, Task};
+use xtime::trees::{gbdt, hat, rf, GbdtParams, HatParams, RfParams};
+
+fn churn(n: usize) -> Dataset {
+    by_name("churn").unwrap().generate_n(n)
+}
+
+fn gbdt_program(n_bits: u8) -> CamProgram {
+    let d = churn(400);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 8, max_leaves: 16, n_bits, ..Default::default() },
+        None,
+    );
+    compile(&m, &CompileOptions::default()).unwrap()
+}
+
+/// Zero deny findings at 1 and 2 shards, and the census is present.
+fn assert_clean(p: &CamProgram, what: &str) {
+    for shards in [1usize, 2] {
+        let r = analysis::verify(p, shards);
+        assert_eq!(
+            r.deny_count(),
+            0,
+            "{what} ({shards} shard(s)) must verify clean, got: {:?}",
+            r.findings
+        );
+        let census = r.census.as_ref().expect("census always emitted");
+        assert_eq!(census.n_cores, p.cores.len());
+        assert!(!r.findings_for(RuleId::V6SparsityCensus).is_empty());
+    }
+}
+
+/// Every deny finding carries `rule` — the corruption fired exactly the
+/// rule under test, not a neighbor.
+fn assert_denies_only(r: &analysis::AnalysisReport, rule: RuleId, what: &str) {
+    assert!(r.deny_count() > 0, "{what}: corruption must produce deny findings");
+    for f in &r.findings {
+        if f.severity == Severity::Deny {
+            assert_eq!(f.rule, rule, "{what}: unexpected rule fired: {f}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- property
+
+/// The verifier-clean oracle over the compile surface: GBDT and RF,
+/// direct compile and PTQ requantization (4/6/8-bit), hardware-aware
+/// training, multiclass, sharded and unsharded.
+#[test]
+fn all_compile_paths_verify_clean() {
+    let d = churn(400);
+    let m8 = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 8, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    assert_clean(&compile(&m8, &CompileOptions::default()).unwrap(), "gbdt 8-bit");
+    for bits in [4u8, 6] {
+        let (p, _) = compile_for_deploy(&m8, bits, &CompileOptions::default()).unwrap();
+        assert_clean(&p, &format!("gbdt PTQ {bits}-bit"));
+    }
+
+    let mrf = rf::train(&d, &RfParams { n_estimators: 8, max_leaves: 16, ..Default::default() });
+    assert_clean(&compile(&mrf, &CompileOptions::default()).unwrap(), "rf 8-bit");
+    let (prf4, _) = compile_for_deploy(&mrf, 4, &CompileOptions::default()).unwrap();
+    assert_clean(&prf4, "rf PTQ 4-bit");
+
+    let mhat = hat::train(
+        &d,
+        &HatParams {
+            deploy_bits: 4,
+            gbdt: GbdtParams { n_rounds: 6, max_leaves: 16, ..Default::default() },
+            ..Default::default()
+        },
+        None,
+    );
+    let (phat, rep) = compile_for_deploy(&mhat, 4, &CompileOptions::default()).unwrap();
+    rep.assert_lossless("hat 4-bit deploy");
+    assert_clean(&phat, "hat 4-bit");
+
+    let msyn = random_ensemble(12, 4, 10, Task::MultiClass(3), 5);
+    assert_clean(&compile(&msyn, &CompileOptions::default()).unwrap(), "synthetic multiclass");
+}
+
+/// Defect draws may kill rows (V5 warnings) but never produce deny
+/// findings: the perturbed plan is rebuilt from the perturbed cells, so
+/// it stays self-consistent under V1/V2.
+#[test]
+fn defect_draws_warn_but_never_deny() {
+    let p = gbdt_program(8);
+    for seed in 0..4 {
+        let r = analysis::verify_with_defects(&p, DefectSpec::memristor(2.0), seed);
+        assert_eq!(r.deny_count(), 0, "defect draw {seed}: {:?}", r.findings);
+        for f in &r.findings {
+            if f.severity == Severity::Warn {
+                assert_eq!(f.rule, RuleId::V5DeadLeaf);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- mutations
+
+/// V1: one corrupted LUT entry — level→interval resolution disagrees
+/// with the interval bounds at exactly that (core, feature, level).
+#[test]
+fn mutation_corrupt_lut_entry_fires_v1() {
+    let p = gbdt_program(8);
+    let mut engine = CamEngine::new(&p);
+    engine.corrupt_lut_entry(0, 0, 100);
+    let r = analysis::verify_engine(&p, &engine, None);
+    assert_denies_only(&r, RuleId::V1IntervalPartition, "lut corruption");
+    let f = r.findings_for(RuleId::V1IntervalPartition)[0];
+    assert_eq!(f.location.core, Some(0));
+    assert_eq!(f.location.feature, Some(0));
+    assert_eq!(f.location.interval, Some(100));
+}
+
+/// V2: one arena offset pointing past the arena — bounds violation on
+/// exactly that feature, no other rule disturbed (bounds and LUT are
+/// untouched by the corruption).
+#[test]
+fn mutation_corrupt_arena_offset_fires_v2() {
+    let p = gbdt_program(8);
+    let mut engine = CamEngine::new(&p);
+    engine.corrupt_arena_offset(0, 0);
+    let r = analysis::verify_engine(&p, &engine, None);
+    assert_denies_only(&r, RuleId::V2ArenaBounds, "arena offset corruption");
+    assert!(r
+        .findings_for(RuleId::V2ArenaBounds)
+        .iter()
+        .all(|f| f.location.core == Some(0) && f.location.feature == Some(0)));
+}
+
+/// V2 padding: a single stray bit above `n_rows` in an interval bitset
+/// (a phantom row on the planned path) is caught.
+#[test]
+fn mutation_padding_bit_fires_v2() {
+    // A core only has padding bits when its row count is not a multiple
+    // of 64, so scan a few ensemble sizes rather than betting one
+    // trainer's exact leaf count never lands on 64/128/192.
+    let d = churn(400);
+    let (p, engine, ci) = (5..12)
+        .find_map(|rounds| {
+            let m = gbdt::train(
+                &d,
+                &GbdtParams { n_rounds: rounds, max_leaves: 16, ..Default::default() },
+                None,
+            );
+            let p = compile(&m, &CompileOptions::default()).unwrap();
+            let mut engine = CamEngine::new(&p);
+            let ci = (0..engine.n_cores()).find(|&ci| engine.set_arena_padding_bit(ci))?;
+            Some((p, engine, ci))
+        })
+        .expect("some ensemble size yields a core with padding bits");
+    let r = analysis::verify_engine(&p, &engine, None);
+    assert_denies_only(&r, RuleId::V2ArenaBounds, "padding bit");
+    let f = r.findings_for(RuleId::V2ArenaBounds)[0];
+    assert_eq!(f.location.core, Some(ci));
+    assert_eq!(f.location.interval, Some(0));
+}
+
+/// V3: a lost tree, a duplicated tree, and a dropped shard program each
+/// break the exact-partition contract — and nothing else.
+#[test]
+fn mutation_shard_tampering_fires_v3() {
+    let p = gbdt_program(8);
+    let plan = partition(&p, 2, &PartitionOptions::default()).unwrap();
+    assert_eq!(analysis::verify_shard_plan(&p, &plan).deny_count(), 0);
+
+    let mut lost = plan.clone();
+    let dropped = lost.assignment[0].pop().expect("shard 0 owns trees");
+    let r = analysis::verify_shard_plan(&p, &lost);
+    assert_denies_only(&r, RuleId::V3ShardPartition, "lost tree");
+    assert!(r.findings.iter().any(|f| f.location.tree == Some(dropped)));
+
+    let mut dup = plan.clone();
+    let stolen = dup.assignment[0][0];
+    dup.assignment[1].push(stolen);
+    let r = analysis::verify_shard_plan(&p, &dup);
+    assert_denies_only(&r, RuleId::V3ShardPartition, "duplicated tree");
+
+    let mut short = plan.clone();
+    short.shards.pop();
+    let r = analysis::verify_shard_plan(&p, &short);
+    assert_denies_only(&r, RuleId::V3ShardPartition, "dropped shard");
+}
+
+/// V4: a desynced (duplicated) quantizer cut and an off-grid window
+/// bound each fire the grid rule alone — the engine rebuilt from the
+/// tampered program stays V1/V2-consistent, so only V4 sees the lie.
+#[test]
+fn mutation_desynced_cut_fires_v4() {
+    let mut p = gbdt_program(8);
+    let f = (0..p.n_features)
+        .find(|&f| p.quantizer.edges[f].len() >= 2)
+        .expect("some feature has >= 2 cuts");
+    p.quantizer.edges[f][1] = p.quantizer.edges[f][0];
+    let r = analysis::verify_program(&p);
+    assert_denies_only(&r, RuleId::V4QuantizerGrid, "duplicated cut");
+    assert!(r
+        .findings_for(RuleId::V4QuantizerGrid)
+        .iter()
+        .any(|fi| fi.location.feature == Some(f)));
+
+    let mut p = gbdt_program(8);
+    let cuts = p.quantizer.edges[0].len() as u16;
+    assert!(cuts + 1 < p.n_bins, "off-grid bound must stay constrained");
+    p.cores[0].rows[0].lo[0] = 0;
+    p.cores[0].rows[0].hi[0] = cuts + 1; // one past the last grid index
+    let r = analysis::verify_program(&p);
+    assert_denies_only(&r, RuleId::V4QuantizerGrid, "off-grid bound");
+}
+
+/// V5: a heavy memristor draw kills at least one row on some seed; the
+/// dead row is a warning (with row/tree location), never a deny.
+#[test]
+fn mutation_defect_draw_fires_v5() {
+    let p = gbdt_program(8);
+    let spec = DefectSpec::memristor(25.0);
+    let fired = (0..50).find_map(|seed| {
+        let r = analysis::verify_with_defects(&p, spec, seed);
+        (r.warn_count() > 0).then_some(r)
+    });
+    let r = fired.expect("25% defects must kill a row on some seed");
+    assert_eq!(r.deny_count(), 0);
+    let warns = r.findings_for(RuleId::V5DeadLeaf);
+    assert!(!warns.is_empty());
+    assert!(warns.iter().all(|f| f.location.row.is_some() && f.location.core.is_some()));
+    assert!(warns[0].message.contains("defect draw"));
+    assert_eq!(r.census.as_ref().unwrap().never_match_rows, warns.len());
+}
+
+/// V6: wildcarding a previously-constrained row moves the census — the
+/// sparsity numbers measure the cells, not a cached summary.
+#[test]
+fn mutation_wildcarded_row_moves_v6_census() {
+    let p = gbdt_program(8);
+    let before = analysis::verify_program(&p).census.unwrap();
+    let mut open = p.clone();
+    let row = &mut open.cores[0].rows[0];
+    for f in 0..open.n_features {
+        row.lo[f] = 0;
+        row.hi[f] = open.n_bins;
+    }
+    let after = analysis::verify_program(&open).census.unwrap();
+    assert!(
+        after.wildcard_cells > before.wildcard_cells,
+        "census must register the opened row ({} -> {})",
+        before.wildcard_cells,
+        after.wildcard_cells
+    );
+    assert_eq!(after.n_cells, before.n_cells);
+}
+
+// ---------------------------------------------------------------- contract 8
+
+/// `register_program` refuses a corrupted program with the worst
+/// finding in the diagnostic; `VerifyPolicy::Skip` trusts the compiler.
+#[test]
+fn fleet_refuses_corrupted_program() {
+    let mut p = gbdt_program(8);
+    let f = (0..p.n_features).find(|&f| p.quantizer.edges[f].len() >= 2).unwrap();
+    p.quantizer.edges[f][1] = p.quantizer.edges[f][0];
+
+    let fleet = Fleet::new();
+    let err = fleet
+        .register_program("bad", &p, ModelConfig::for_program(&p))
+        .expect_err("deny-level program must be refused");
+    assert!(err.contains("static verifier refused"), "diagnostic: {err}");
+    assert!(err.contains("V4"), "diagnostic names the rule: {err}");
+    assert!(fleet.models().is_empty());
+
+    fleet
+        .register_program(
+            "trusted",
+            &p,
+            ModelConfig::for_program(&p).with_verify(VerifyPolicy::Skip),
+        )
+        .expect("Skip policy bypasses the gate");
+    fleet.shutdown();
+}
+
+/// A refused swap leaves the live route serving the old program.
+#[test]
+fn refused_swap_leaves_live_route_serving() {
+    let good = gbdt_program(8);
+    let mut bad = good.clone();
+    let f = (0..bad.n_features).find(|&f| bad.quantizer.edges[f].len() >= 2).unwrap();
+    bad.quantizer.edges[f][1] = bad.quantizer.edges[f][0];
+
+    let fleet = Fleet::new();
+    fleet.register_program("m", &good, ModelConfig::for_program(&good)).unwrap();
+    let err = fleet
+        .swap_program("m", &bad, ModelConfig::for_program(&bad))
+        .expect_err("corrupted replacement must be refused");
+    assert!(err.contains("V4"), "diagnostic: {err}");
+    // The old program still serves.
+    let row = vec![0.5; good.n_features];
+    let reply = fleet.infer("m", &row).unwrap();
+    assert!(reply.prediction.is_finite());
+    fleet.shutdown();
+}
+
+/// Severity policy: a dead row (V5 warning) passes `DenyErrors` but is
+/// refused under `DenyWarnings`.
+#[test]
+fn deny_warnings_policy_blocks_dead_rows() {
+    let mut p = gbdt_program(8);
+    // Close one window in place (lo = hi, both on-grid): never-match
+    // row, structurally valid everywhere else.
+    let (ci, ri, f) = p
+        .cores
+        .iter()
+        .enumerate()
+        .find_map(|(ci, core)| {
+            core.rows.iter().enumerate().find_map(|(ri, row)| {
+                (0..p.n_features)
+                    .find(|&f| row.hi[f] >= 1 && row.hi[f] < p.n_bins)
+                    .map(|f| (ci, ri, f))
+            })
+        })
+        .expect("some row has a constrained upper bound");
+    p.cores[ci].rows[ri].lo[f] = p.cores[ci].rows[ri].hi[f];
+
+    let r = analysis::verify_program(&p);
+    assert_eq!(r.deny_count(), 0, "{:?}", r.findings);
+    assert!(!r.findings_for(RuleId::V5DeadLeaf).is_empty());
+
+    let fleet = Fleet::new();
+    fleet
+        .register_program("lenient", &p, ModelConfig::for_program(&p))
+        .expect("DenyErrors tolerates warnings");
+    let err = fleet
+        .register_program(
+            "strict",
+            &p,
+            ModelConfig::for_program(&p).with_verify(VerifyPolicy::DenyWarnings),
+        )
+        .expect_err("DenyWarnings refuses dead rows");
+    assert!(err.contains("V5"), "diagnostic: {err}");
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------- degenerate
+
+/// Single-leaf trees compile to fully-wildcard rows: zero interval
+/// bounds per feature, LUTs all zero — must verify clean, not trip V1.
+#[test]
+fn single_leaf_trees_verify_clean() {
+    let m = random_ensemble(6, 0, 8, Task::Binary, 3);
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    assert_clean(&p, "single-leaf ensemble");
+    let census = analysis::verify_program(&p).census.unwrap();
+    assert_eq!(census.wildcard_cells, census.n_cells, "every cell is a wildcard");
+}
+
+/// A constant feature yields an empty cut list; no tree can split on
+/// it, so the empty grid is never referenced — must verify clean, not
+/// trip V4.
+#[test]
+fn constant_feature_verifies_clean() {
+    let mut d = churn(300);
+    for r in 0..d.n_rows() {
+        d.x[r * d.n_features] = 0.5;
+    }
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 6, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    let p = compile(&m, &CompileOptions::default()).unwrap();
+    assert!(p.quantizer.edges[0].is_empty(), "constant feature has no cuts");
+    assert_clean(&p, "constant-feature program");
+}
+
+/// The `snap_threshold` empty-grid convention (bin 1 on a feature with
+/// no deploy cuts) is on-grid by the satellite-6 allowance — without
+/// it this shape would trip V4.
+#[test]
+fn empty_grid_snap_convention_verifies_clean() {
+    let mut p = gbdt_program(8);
+    p.quantizer.edges[0] = Vec::new();
+    for core in &mut p.cores {
+        for row in &mut core.rows {
+            row.lo[0] = 0;
+            row.hi[0] = p.n_bins;
+        }
+    }
+    // One row carries the snapped degenerate threshold: bin 1.
+    p.cores[0].rows[0].lo[0] = 1;
+    let r = analysis::verify_program(&p);
+    assert_eq!(r.deny_count(), 0, "{:?}", r.findings);
+}

@@ -547,6 +547,7 @@ fn backend_failure_maps_to_failed_rows_not_connection_loss() {
                     n_bits: 1,
                     edges: vec![vec![0.5]],
                 },
+                verify: xtime::analysis::VerifyPolicy::Skip,
             },
         )
         .unwrap();
