@@ -1,0 +1,116 @@
+//! Artifact cold start (ISSUE 8): how much faster is loading a compiled
+//! model back out of the content-addressed store than re-deriving it
+//! from data (train + compile)?
+//!
+//! The HAT retrain → redeploy loop (PR 3) and the fleet's hot-swap path
+//! (PR 5) both assumed an in-memory program; the artifact store makes
+//! "redeploy" a disk read instead. This bench measures that gap and
+//! asserts the loaded program stays bit-identical to the original on a
+//! random query batch (contract 9) — a benchmark that silently measured
+//! a *different* model would be worthless.
+//!
+//! Writes BENCH_coldstart.json (schema in docs/BENCHMARKS.md).
+//!
+//! Run: `cargo bench --bench coldstart` (XTIME_FAST=1 to shrink)
+
+use std::time::Instant;
+use xtime::artifact::{export_program, ArtifactStore};
+use xtime::bench_support::{fast_mode, random_query_bins, write_bench_json};
+use xtime::compiler::{compile, CamEngine, CompileOptions};
+use xtime::data::by_name;
+use xtime::trees::{gbdt, GbdtParams};
+use xtime::util::bench::{t, times, Table};
+use xtime::util::Json;
+
+fn main() {
+    let dataset = "churn";
+    let (n_rows, n_rounds) = if fast_mode() { (1_000, 8) } else { (6_000, 64) };
+    let load_iters = 5usize;
+
+    let data = by_name(dataset).expect("catalog").generate_n(n_rows);
+
+    let t0 = Instant::now();
+    let model = gbdt::train(
+        &data,
+        &GbdtParams { n_rounds, max_leaves: 32, ..Default::default() },
+        None,
+    );
+    let train_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let program = compile(&model, &CompileOptions::default()).expect("compile");
+    let compile_s = t0.elapsed().as_secs_f64();
+
+    let root = std::env::temp_dir().join(format!("xtime-coldstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut store = ArtifactStore::open(&root).expect("open store");
+
+    let t0 = Instant::now();
+    let id = export_program(&mut store, &program, None).expect("export");
+    let export_s = t0.elapsed().as_secs_f64();
+    let artifact_bytes: u64 = {
+        let art = store.load(&id).expect("load");
+        art.manifest.blobs.values().map(|b| b.size).sum()
+    };
+
+    let mut load_times = Vec::with_capacity(load_iters);
+    let mut loaded = None;
+    for _ in 0..load_iters {
+        // Re-open each iteration: a true cold start pays the index read
+        // and the digest verification, not just the file read.
+        let t0 = Instant::now();
+        let store = ArtifactStore::open(&root).expect("open store");
+        let art = store.load(&id).expect("load");
+        load_times.push(t0.elapsed().as_secs_f64());
+        loaded = Some(art);
+    }
+    let load_mean_s = load_times.iter().sum::<f64>() / load_times.len() as f64;
+    let load_min_s = load_times.iter().cloned().fold(f64::INFINITY, f64::min);
+
+    // Contract 9 spot check: the loaded program is the same model.
+    let art = loaded.expect("at least one load");
+    let queries = random_query_bins(&program, 256, 0xC01D);
+    let a = CamEngine::new(&program).infer_batch(&queries);
+    let b = CamEngine::new(&art.program).infer_batch(&queries);
+    assert!(
+        a.iter().zip(&b).all(|(x, y)| {
+            x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }),
+        "loaded program diverges from the original — bench is void"
+    );
+
+    let retrain_s = train_s + compile_s;
+    let speedup = retrain_s / load_mean_s.max(1e-12);
+
+    let mut table = Table::new(&["stage", "time", "notes"]);
+    table.row(&["train".into(), t(train_s), format!("{} trees on {n_rows} rows", program.n_trees)]);
+    table.row(&["compile".into(), t(compile_s), format!("{} CAM rows", program.total_rows())]);
+    table.row(&["export".into(), t(export_s), format!("{artifact_bytes} bytes → {}", &id[..12])]);
+    table.row(&[
+        "load (cold)".into(),
+        t(load_mean_s),
+        format!("mean of {load_iters}, min {}", t(load_min_s)),
+    ]);
+    table.row(&["speedup".into(), times(speedup), "retrain / load".into()]);
+    table.print(&format!("artifact cold start — {dataset}, fast_mode={}", fast_mode()));
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("coldstart".into()))
+        .set("fast_mode", Json::Bool(fast_mode()))
+        .set("dataset", Json::Str(dataset.into()))
+        .set("n_trees", Json::Num(program.n_trees as f64))
+        .set("n_rows_train", Json::Num(n_rows as f64))
+        .set("artifact_id", Json::Str(id.clone()))
+        .set("artifact_bytes", Json::Num(artifact_bytes as f64))
+        .set("train_s", Json::Num(train_s))
+        .set("compile_s", Json::Num(compile_s))
+        .set("export_s", Json::Num(export_s))
+        .set("load_iters", Json::Num(load_iters as f64))
+        .set("load_mean_s", Json::Num(load_mean_s))
+        .set("load_min_s", Json::Num(load_min_s))
+        .set("speedup_vs_retrain", Json::Num(speedup));
+    let path = write_bench_json("coldstart", &j);
+    println!("wrote {}", path.display());
+
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,208 @@
+//! The artifact manifest: the versioned top-level record of one exported
+//! model.
+//!
+//! Not to be confused with the AOT HLO bucket manifest
+//! ([`crate::runtime::AotManifest`], `artifacts/manifest.json`), which
+//! describes XLA compilation buckets. *This* manifest describes a
+//! **compiled CAM model** at rest: its identity metadata plus
+//! content-digest references to the blobs that make it up — the
+//! [`crate::compiler::CamProgram`] encoding (required) and an optional
+//! [`crate::compiler::ShardPlan`] encoding.
+//!
+//! Manifests are themselves canonical JSON and are addressed by the
+//! SHA-256 of their bytes (the *artifact id*), so a manifest can never
+//! drift from the blobs it references without the id changing. They
+//! deliberately carry no timestamps or host names: exporting the same
+//! model on two machines yields the same artifact id.
+
+use super::digest::sha256_hex;
+use crate::data::Task;
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// On-disk format version. Bump on any breaking change to the manifest
+/// or blob encodings; the store refuses versions it does not know
+/// ([`super::StoreError::UnknownVersion`]) instead of misparsing them.
+pub const FORMAT_VERSION: usize = 1;
+
+/// Format marker distinguishing artifact manifests from every other JSON
+/// file in the tree (model files, program files, AOT bucket manifests).
+pub const FORMAT_MARKER: &str = "xtime-artifact";
+
+/// Blob role for the program encoding (required in every manifest).
+pub const ROLE_PROGRAM: &str = "program";
+
+/// Blob role for the optional shard-plan encoding.
+pub const ROLE_SHARD_PLAN: &str = "shard_plan";
+
+/// A content-digest reference to one blob in the store.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlobRef {
+    /// Lowercase hex SHA-256 of the blob bytes.
+    pub digest: String,
+    /// Blob size in bytes (a cheap pre-check before hashing on read).
+    pub size: u64,
+}
+
+/// The top-level record of one exported model artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactManifest {
+    /// Model name ([`crate::compiler::CamProgram::name`]); the store's
+    /// `resolve` maps names to their latest published artifact.
+    pub name: String,
+    pub task: Task,
+    pub n_bits: u8,
+    pub n_features: usize,
+    pub n_trees: usize,
+    /// Shard count of the embedded plan blob; `0` when the artifact
+    /// carries only the unsharded program.
+    pub n_shards: usize,
+    /// Role → blob reference. [`ROLE_PROGRAM`] is always present.
+    pub blobs: BTreeMap<String, BlobRef>,
+}
+
+impl ArtifactManifest {
+    /// Canonical encoding; [`ArtifactManifest::id`] digests these bytes.
+    pub fn to_json(&self) -> Json {
+        let mut blobs = Json::obj();
+        for (role, b) in &self.blobs {
+            let mut o = Json::obj();
+            o.set("digest", Json::Str(b.digest.clone()))
+                .set("size", Json::Num(b.size as f64));
+            blobs.set(role, o);
+        }
+        let mut o = Json::obj();
+        o.set("format", Json::Str(FORMAT_MARKER.to_string()))
+            .set("format_version", Json::Num(FORMAT_VERSION as f64))
+            .set("name", Json::Str(self.name.clone()))
+            .set("task", Json::Str(self.task.name()))
+            .set("n_classes", Json::Num(self.task.n_classes() as f64))
+            .set("n_bits", Json::Num(self.n_bits as f64))
+            .set("n_features", Json::Num(self.n_features as f64))
+            .set("n_trees", Json::Num(self.n_trees as f64))
+            .set("n_shards", Json::Num(self.n_shards as f64))
+            .set("blobs", blobs);
+        o
+    }
+
+    /// Decode a manifest. The caller (the store) checks
+    /// `format_version` *before* calling this, so unknown future
+    /// versions surface as a structured version error rather than a
+    /// missing-field parse error.
+    pub fn from_json(j: &Json) -> Result<ArtifactManifest, String> {
+        if j.req_str("format")? != FORMAT_MARKER {
+            return Err(format!("not an artifact manifest (format != `{FORMAT_MARKER}`)"));
+        }
+        let task = Task::from_name(j.req_str("task")?, j.req_usize("n_classes")?)?;
+        let mut blobs = BTreeMap::new();
+        match j.req("blobs")? {
+            Json::Obj(m) => {
+                for (role, b) in m {
+                    blobs.insert(
+                        role.clone(),
+                        BlobRef {
+                            digest: b.req_str("digest")?.to_string(),
+                            size: b.req_f64("size")? as u64,
+                        },
+                    );
+                }
+            }
+            _ => return Err("field `blobs` is not an object".into()),
+        }
+        let m = ArtifactManifest {
+            name: j.req_str("name")?.to_string(),
+            task,
+            n_bits: j.req_usize("n_bits")? as u8,
+            n_features: j.req_usize("n_features")?,
+            n_trees: j.req_usize("n_trees")?,
+            n_shards: j.req_usize("n_shards")?,
+            blobs,
+        };
+        m.program_blob()?;
+        Ok(m)
+    }
+
+    /// Serialized canonical bytes (what the store writes and digests).
+    pub fn canonical_bytes(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
+    }
+
+    /// The artifact id: SHA-256 of the canonical manifest bytes.
+    pub fn id(&self) -> String {
+        sha256_hex(&self.canonical_bytes())
+    }
+
+    /// The required program blob reference.
+    pub fn program_blob(&self) -> Result<&BlobRef, String> {
+        self.blobs
+            .get(ROLE_PROGRAM)
+            .ok_or_else(|| format!("manifest for `{}` has no `{ROLE_PROGRAM}` blob", self.name))
+    }
+
+    /// The optional shard-plan blob reference.
+    pub fn shard_plan_blob(&self) -> Option<&BlobRef> {
+        self.blobs.get(ROLE_SHARD_PLAN)
+    }
+
+    /// Digests of every referenced blob (role-sorted).
+    pub fn blob_digests(&self) -> Vec<&str> {
+        self.blobs.values().map(|b| b.digest.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ArtifactManifest {
+        let mut blobs = BTreeMap::new();
+        blobs.insert(
+            ROLE_PROGRAM.to_string(),
+            BlobRef { digest: "ab".repeat(32), size: 1234 },
+        );
+        ArtifactManifest {
+            name: "churn".into(),
+            task: Task::Binary,
+            n_bits: 8,
+            n_features: 13,
+            n_trees: 16,
+            n_shards: 0,
+            blobs,
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_stable_id() {
+        let m = toy();
+        let text = m.to_json().to_string();
+        let back = ArtifactManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.to_json().to_string(), text, "canonical");
+        assert_eq!(back.id(), m.id(), "id must be a pure function of content");
+        assert_eq!(m.id().len(), 64);
+    }
+
+    #[test]
+    fn id_changes_with_content() {
+        let a = toy();
+        let mut b = toy();
+        b.n_trees = 17;
+        assert_ne!(a.id(), b.id());
+    }
+
+    #[test]
+    fn missing_program_blob_is_an_error() {
+        let mut m = toy();
+        m.blobs.clear();
+        let j = m.to_json();
+        let err = ArtifactManifest::from_json(&j).unwrap_err();
+        assert!(err.contains(ROLE_PROGRAM), "{err}");
+    }
+
+    #[test]
+    fn wrong_format_marker_rejected() {
+        let mut j = toy().to_json();
+        j.set("format", Json::Str("hlo-text".into()));
+        assert!(ArtifactManifest::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! Content-addressed model artifact store (PR 8).
+//!
+//! Everything a trained-and-compiled model needs to travel through disk
+//! and come back **bit-identical**:
+//!
+//! * [`digest`] — self-contained SHA-256 (FIPS 180-4); blob and
+//!   manifest addresses are lowercase hex digests of canonical bytes.
+//! * [`manifest`] — [`ArtifactManifest`], the versioned top-level
+//!   record of one exported model: task/bits metadata plus
+//!   digest-references to the program and optional shard-plan blobs.
+//!   Distinct from the AOT bucket manifest
+//!   ([`crate::runtime::AotManifest`]).
+//! * [`store`] — [`ArtifactStore`], the local blob store:
+//!   write-temp-then-rename atomicity, digest verification on every
+//!   read, ref-counted index, [`ArtifactStore::gc`] for unreferenced
+//!   data, and [`export_program`] which refuses to digest any encoding
+//!   that is not round-trip stable.
+//!
+//! The contract (DESIGN.md §5, contract 9): a program loaded from an
+//! artifact is verify-clean under the static verifier and produces
+//! bit-identical predictions, logits, and per-shard partials to the
+//! in-memory original it was exported from.
+
+pub mod digest;
+pub mod manifest;
+pub mod store;
+
+pub use digest::{sha256, sha256_hex};
+pub use manifest::{ArtifactManifest, BlobRef, FORMAT_MARKER, FORMAT_VERSION, ROLE_PROGRAM, ROLE_SHARD_PLAN};
+pub use store::{export_program, ArtifactStore, GcReport, IndexEntry, LoadedArtifact, StoreError};

@@ -1,0 +1,661 @@
+//! Digest-addressed local blob store for compiled model artifacts.
+//!
+//! Layout under the store root:
+//!
+//! ```text
+//! <root>/blobs/<sha256-hex>       # immutable content blobs (canonical JSON)
+//! <root>/manifests/<id>.json      # artifact manifests, id = sha256(bytes)
+//! <root>/index.json               # name→artifact map + blob refcounts
+//! ```
+//!
+//! Every write is temp-file-then-rename, so a crash mid-write never
+//! leaves a half-blob under its final name. Blobs are verified against
+//! their digest on *every* read, so bit-rot and truncation surface as
+//! [`StoreError::DigestMismatch`] rather than a decode panic downstream.
+//! The index keeps a refcount per blob digest; [`ArtifactStore::gc`]
+//! deletes blobs whose count reached zero and manifests no longer in
+//! the index.
+
+use super::manifest::{ArtifactManifest, BlobRef, FORMAT_VERSION, ROLE_PROGRAM, ROLE_SHARD_PLAN};
+use super::digest::sha256_hex;
+use crate::compiler::{CamProgram, ShardPlan};
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Everything that can go wrong talking to the store. All variants are
+/// structured errors — the store never panics on hostile on-disk state.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Filesystem failure (permissions, missing file, full disk, …).
+    Io { path: PathBuf, err: String },
+    /// A blob or manifest's bytes no longer hash to their address —
+    /// corruption, truncation, or tampering.
+    DigestMismatch { path: PathBuf, expected: String, actual: String },
+    /// Bytes hashed correctly but failed to parse/decode.
+    Corrupt { path: PathBuf, detail: String },
+    /// The manifest declares a format version this build does not know.
+    UnknownVersion { found: usize, supported: usize },
+    /// No artifact with this id in the store.
+    UnknownArtifact { id: String },
+    /// No artifact published under this model name.
+    UnknownName { name: String },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io { path, err } => write!(f, "io error at {}: {err}", path.display()),
+            StoreError::DigestMismatch { path, expected, actual } => write!(
+                f,
+                "digest mismatch at {}: expected {expected}, got {actual}",
+                path.display()
+            ),
+            StoreError::Corrupt { path, detail } => {
+                write!(f, "corrupt artifact data at {}: {detail}", path.display())
+            }
+            StoreError::UnknownVersion { found, supported } => write!(
+                f,
+                "artifact format version {found} is not supported (this build reads version {supported})"
+            ),
+            StoreError::UnknownArtifact { id } => write!(f, "no artifact with id {id}"),
+            StoreError::UnknownName { name } => write!(f, "no artifact published under name `{name}`"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+fn io_err(path: &Path, e: std::io::Error) -> StoreError {
+    StoreError::Io { path: path.to_path_buf(), err: e.to_string() }
+}
+
+/// One row of `xtime store ls`: the index's view of a published artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IndexEntry {
+    pub id: String,
+    pub name: String,
+    /// Monotone publish sequence; `resolve(name)` picks the max.
+    pub seq: u64,
+    pub n_shards: usize,
+    pub n_trees: usize,
+    pub n_bits: u8,
+}
+
+/// A fully loaded, digest-verified artifact ready to register with a
+/// fleet or engine.
+pub struct LoadedArtifact {
+    pub id: String,
+    pub manifest: ArtifactManifest,
+    pub program: CamProgram,
+    pub plan: Option<ShardPlan>,
+}
+
+/// Result of a [`ArtifactStore::gc`] sweep.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    pub kept_blobs: usize,
+    pub removed_blobs: usize,
+    pub removed_manifests: usize,
+    pub bytes_freed: u64,
+}
+
+#[derive(Default)]
+struct StoreIndex {
+    next_seq: u64,
+    artifacts: Vec<IndexEntry>,
+    /// Blob digest → number of indexed manifests referencing it.
+    refs: BTreeMap<String, u64>,
+}
+
+impl StoreIndex {
+    fn to_json(&self) -> Json {
+        let mut arts = Vec::with_capacity(self.artifacts.len());
+        for a in &self.artifacts {
+            let mut o = Json::obj();
+            o.set("id", Json::Str(a.id.clone()))
+                .set("name", Json::Str(a.name.clone()))
+                .set("seq", Json::Num(a.seq as f64))
+                .set("n_shards", Json::Num(a.n_shards as f64))
+                .set("n_trees", Json::Num(a.n_trees as f64))
+                .set("n_bits", Json::Num(a.n_bits as f64));
+            arts.push(o);
+        }
+        let mut refs = Json::obj();
+        for (d, c) in &self.refs {
+            refs.set(d, Json::Num(*c as f64));
+        }
+        let mut o = Json::obj();
+        o.set("format_version", Json::Num(FORMAT_VERSION as f64))
+            .set("next_seq", Json::Num(self.next_seq as f64))
+            .set("artifacts", Json::Arr(arts))
+            .set("refs", refs);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<StoreIndex, String> {
+        let found = j.req_usize("format_version")?;
+        if found != FORMAT_VERSION {
+            // Encoded as a string the caller maps back onto the typed
+            // variant; keeps this helper's error type uniform.
+            return Err(format!("#version:{found}"));
+        }
+        let mut artifacts = Vec::new();
+        match j.req("artifacts")? {
+            Json::Arr(items) => {
+                for a in items {
+                    artifacts.push(IndexEntry {
+                        id: a.req_str("id")?.to_string(),
+                        name: a.req_str("name")?.to_string(),
+                        seq: a.req_f64("seq")? as u64,
+                        n_shards: a.req_usize("n_shards")?,
+                        n_trees: a.req_usize("n_trees")?,
+                        n_bits: a.req_usize("n_bits")? as u8,
+                    });
+                }
+            }
+            _ => return Err("field `artifacts` is not an array".into()),
+        }
+        let mut refs = BTreeMap::new();
+        match j.req("refs")? {
+            Json::Obj(m) => {
+                for (d, c) in m {
+                    let c = c.as_f64().ok_or_else(|| format!("ref `{d}` is not a number"))?;
+                    refs.insert(d.clone(), c as u64);
+                }
+            }
+            _ => return Err("field `refs` is not an object".into()),
+        }
+        Ok(StoreIndex { next_seq: j.req_f64("next_seq")? as u64, artifacts, refs })
+    }
+}
+
+/// The local content-addressed artifact store.
+pub struct ArtifactStore {
+    root: PathBuf,
+    index: StoreIndex,
+}
+
+impl ArtifactStore {
+    /// Open (creating on first use) a store rooted at `root`.
+    pub fn open(root: &Path) -> Result<ArtifactStore, StoreError> {
+        let blobs = root.join("blobs");
+        let manifests = root.join("manifests");
+        fs::create_dir_all(&blobs).map_err(|e| io_err(&blobs, e))?;
+        fs::create_dir_all(&manifests).map_err(|e| io_err(&manifests, e))?;
+        let index_path = root.join("index.json");
+        let index = if index_path.exists() {
+            let text = fs::read_to_string(&index_path).map_err(|e| io_err(&index_path, e))?;
+            let j = Json::parse(&text).map_err(|e| StoreError::Corrupt {
+                path: index_path.clone(),
+                detail: e,
+            })?;
+            StoreIndex::from_json(&j).map_err(|e| match e.strip_prefix("#version:") {
+                Some(v) => StoreError::UnknownVersion {
+                    found: v.parse().unwrap_or(0),
+                    supported: FORMAT_VERSION,
+                },
+                None => StoreError::Corrupt { path: index_path.clone(), detail: e },
+            })?
+        } else {
+            StoreIndex::default()
+        };
+        Ok(ArtifactStore { root: root.to_path_buf(), index })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn blob_path(&self, digest: &str) -> PathBuf {
+        self.root.join("blobs").join(digest)
+    }
+
+    pub fn manifest_path(&self, id: &str) -> PathBuf {
+        self.root.join("manifests").join(format!("{id}.json"))
+    }
+
+    fn index_path(&self) -> PathBuf {
+        self.root.join("index.json")
+    }
+
+    /// Atomic write: temp file in the destination directory, then rename.
+    fn write_atomic(&self, dest: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+        let dir = dest.parent().unwrap_or(&self.root);
+        let tmp = dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            dest.file_name().and_then(|n| n.to_str()).unwrap_or("blob")
+        ));
+        fs::write(&tmp, bytes).map_err(|e| io_err(&tmp, e))?;
+        fs::rename(&tmp, dest).map_err(|e| io_err(dest, e))
+    }
+
+    fn persist_index(&self) -> Result<(), StoreError> {
+        self.write_atomic(&self.index_path(), self.index.to_json().to_string().as_bytes())
+    }
+
+    /// Store `bytes` under their SHA-256 address. Idempotent: an
+    /// existing blob with the same digest is left untouched.
+    pub fn put_blob(&self, bytes: &[u8]) -> Result<String, StoreError> {
+        let digest = sha256_hex(bytes);
+        let dest = self.blob_path(&digest);
+        if !dest.exists() {
+            self.write_atomic(&dest, bytes)?;
+        }
+        Ok(digest)
+    }
+
+    /// Read a blob and verify its bytes still hash to `digest`.
+    pub fn get_blob(&self, digest: &str) -> Result<Vec<u8>, StoreError> {
+        let path = self.blob_path(digest);
+        let bytes = fs::read(&path).map_err(|e| io_err(&path, e))?;
+        let actual = sha256_hex(&bytes);
+        if actual != digest {
+            return Err(StoreError::DigestMismatch {
+                path,
+                expected: digest.to_string(),
+                actual,
+            });
+        }
+        Ok(bytes)
+    }
+
+    /// Publish a manifest: write it under its content id, bump blob
+    /// refcounts, and index it under its model name. Idempotent — a
+    /// second publish of an identical manifest returns the same id
+    /// without touching refcounts.
+    pub fn publish(&mut self, m: &ArtifactManifest) -> Result<String, StoreError> {
+        let bytes = m.canonical_bytes();
+        let id = sha256_hex(&bytes);
+        let path = self.manifest_path(&id);
+        if self.index.artifacts.iter().any(|a| a.id == id) {
+            return Ok(id);
+        }
+        // Publishing a manifest whose blobs are absent would index a
+        // dangling artifact; refuse up front.
+        for d in m.blob_digests() {
+            let p = self.blob_path(d);
+            if !p.exists() {
+                return Err(StoreError::Corrupt {
+                    path: p,
+                    detail: format!("manifest references blob {d} which is not in the store"),
+                });
+            }
+        }
+        self.write_atomic(&path, &bytes)?;
+        for d in m.blob_digests() {
+            *self.index.refs.entry(d.to_string()).or_insert(0) += 1;
+        }
+        let seq = self.index.next_seq;
+        self.index.next_seq += 1;
+        self.index.artifacts.push(IndexEntry {
+            id: id.clone(),
+            name: m.name.clone(),
+            seq,
+            n_shards: m.n_shards,
+            n_trees: m.n_trees,
+            n_bits: m.n_bits,
+        });
+        self.persist_index()?;
+        Ok(id)
+    }
+
+    /// Load and fully verify an artifact: manifest bytes must hash to
+    /// `id`, the format version must be known, every referenced blob
+    /// must hash to its digest, and every decode must succeed.
+    pub fn load(&self, id: &str) -> Result<LoadedArtifact, StoreError> {
+        let path = self.manifest_path(id);
+        if !path.exists() {
+            return Err(StoreError::UnknownArtifact { id: id.to_string() });
+        }
+        let bytes = fs::read(&path).map_err(|e| io_err(&path, e))?;
+        let actual = sha256_hex(&bytes);
+        if actual != id {
+            return Err(StoreError::DigestMismatch {
+                path,
+                expected: id.to_string(),
+                actual,
+            });
+        }
+        let text = String::from_utf8(bytes)
+            .map_err(|_| StoreError::Corrupt { path: path.clone(), detail: "not utf-8".into() })?;
+        let j = Json::parse(&text)
+            .map_err(|e| StoreError::Corrupt { path: path.clone(), detail: e })?;
+        let found = j
+            .req_usize("format_version")
+            .map_err(|e| StoreError::Corrupt { path: path.clone(), detail: e })?;
+        if found != FORMAT_VERSION {
+            return Err(StoreError::UnknownVersion { found, supported: FORMAT_VERSION });
+        }
+        let manifest = ArtifactManifest::from_json(&j)
+            .map_err(|e| StoreError::Corrupt { path: path.clone(), detail: e })?;
+
+        let program = self.load_blob_json(manifest.program_blob().map_err(|e| {
+            StoreError::Corrupt { path: path.clone(), detail: e }
+        })?)?;
+        let program = CamProgram::from_json(&program.1).map_err(|e| StoreError::Corrupt {
+            path: program.0,
+            detail: e,
+        })?;
+
+        let plan = match manifest.shard_plan_blob() {
+            Some(b) => {
+                let (bp, j) = self.load_blob_json(b)?;
+                Some(ShardPlan::from_json(&j).map_err(|e| StoreError::Corrupt {
+                    path: bp,
+                    detail: e,
+                })?)
+            }
+            None => None,
+        };
+
+        Ok(LoadedArtifact { id: id.to_string(), manifest, program, plan })
+    }
+
+    fn load_blob_json(&self, b: &BlobRef) -> Result<(PathBuf, Json), StoreError> {
+        let path = self.blob_path(&b.digest);
+        let bytes = self.get_blob(&b.digest)?;
+        if bytes.len() as u64 != b.size {
+            return Err(StoreError::Corrupt {
+                path,
+                detail: format!("blob size {} != manifest size {}", bytes.len(), b.size),
+            });
+        }
+        let text = String::from_utf8(bytes)
+            .map_err(|_| StoreError::Corrupt { path: path.clone(), detail: "not utf-8".into() })?;
+        let j = Json::parse(&text)
+            .map_err(|e| StoreError::Corrupt { path: path.clone(), detail: e })?;
+        Ok((path, j))
+    }
+
+    /// Latest published artifact id for a model name.
+    pub fn resolve(&self, name: &str) -> Result<String, StoreError> {
+        self.index
+            .artifacts
+            .iter()
+            .filter(|a| a.name == name)
+            .max_by_key(|a| a.seq)
+            .map(|a| a.id.clone())
+            .ok_or_else(|| StoreError::UnknownName { name: name.to_string() })
+    }
+
+    /// Drop an artifact from the index and release its blob references.
+    /// Files stay on disk until the next [`ArtifactStore::gc`].
+    pub fn remove(&mut self, id: &str) -> Result<(), StoreError> {
+        let pos = self
+            .index
+            .artifacts
+            .iter()
+            .position(|a| a.id == id)
+            .ok_or_else(|| StoreError::UnknownArtifact { id: id.to_string() })?;
+        self.index.artifacts.remove(pos);
+        // Decrement refs for the blobs this manifest referenced. The
+        // manifest file may itself be corrupt at this point; treat an
+        // unreadable manifest as referencing nothing (gc sweeps it).
+        if let Ok(art) = self.load_manifest_only(id) {
+            for d in art.blob_digests() {
+                if let Some(c) = self.index.refs.get_mut(d) {
+                    *c = c.saturating_sub(1);
+                }
+            }
+        }
+        self.persist_index()
+    }
+
+    fn load_manifest_only(&self, id: &str) -> Result<ArtifactManifest, StoreError> {
+        let path = self.manifest_path(id);
+        let text = fs::read_to_string(&path).map_err(|e| io_err(&path, e))?;
+        let j = Json::parse(&text)
+            .map_err(|e| StoreError::Corrupt { path: path.clone(), detail: e })?;
+        ArtifactManifest::from_json(&j)
+            .map_err(|e| StoreError::Corrupt { path, detail: e })
+    }
+
+    /// Indexed artifacts, publish order.
+    pub fn ls(&self) -> &[IndexEntry] {
+        &self.index.artifacts
+    }
+
+    /// Sweep unreferenced data: blobs whose refcount is zero (or that
+    /// no indexed manifest ever referenced) and manifest files whose id
+    /// is no longer in the index.
+    pub fn gc(&mut self) -> Result<GcReport, StoreError> {
+        let mut report = GcReport::default();
+        let live: std::collections::BTreeSet<&str> = self
+            .index
+            .refs
+            .iter()
+            .filter(|(_, c)| **c > 0)
+            .map(|(d, _)| d.as_str())
+            .collect();
+        let blobs_dir = self.root.join("blobs");
+        for entry in fs::read_dir(&blobs_dir).map_err(|e| io_err(&blobs_dir, e))? {
+            let entry = entry.map_err(|e| io_err(&blobs_dir, e))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with(".tmp-") || !live.contains(name.as_str()) {
+                let len = entry.metadata().map(|m| m.len()).unwrap_or(0);
+                fs::remove_file(entry.path()).map_err(|e| io_err(&entry.path(), e))?;
+                report.removed_blobs += 1;
+                report.bytes_freed += len;
+            } else {
+                report.kept_blobs += 1;
+            }
+        }
+        let indexed: std::collections::BTreeSet<&str> =
+            self.index.artifacts.iter().map(|a| a.id.as_str()).collect();
+        let man_dir = self.root.join("manifests");
+        for entry in fs::read_dir(&man_dir).map_err(|e| io_err(&man_dir, e))? {
+            let entry = entry.map_err(|e| io_err(&man_dir, e))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let id = name.strip_suffix(".json").unwrap_or(&name);
+            if name.starts_with(".tmp-") || !indexed.contains(id) {
+                let len = entry.metadata().map(|m| m.len()).unwrap_or(0);
+                fs::remove_file(entry.path()).map_err(|e| io_err(&entry.path(), e))?;
+                report.removed_manifests += 1;
+                report.bytes_freed += len;
+            }
+        }
+        self.index.refs.retain(|_, c| *c > 0);
+        self.persist_index()?;
+        Ok(report)
+    }
+}
+
+/// Canonically encode a value and prove the encoding is round-trip
+/// stable (`encode(decode(bytes)) == bytes`) before it is digested —
+/// an unstable encoding would give the same logical model two
+/// addresses.
+fn encode_stable(
+    what: &str,
+    j: Json,
+    reencode: impl Fn(&Json) -> Result<Json, String>,
+) -> Result<Vec<u8>, StoreError> {
+    let text = j.to_string();
+    let parsed = Json::parse(&text).map_err(|e| StoreError::Corrupt {
+        path: PathBuf::from(what),
+        detail: format!("encoding does not re-parse: {e}"),
+    })?;
+    let again = reencode(&parsed).map_err(|e| StoreError::Corrupt {
+        path: PathBuf::from(what),
+        detail: format!("encoding does not decode: {e}"),
+    })?;
+    let text2 = again.to_string();
+    if text2 != text {
+        return Err(StoreError::Corrupt {
+            path: PathBuf::from(what),
+            detail: "encoding is not round-trip stable (decode→encode changed bytes)".into(),
+        });
+    }
+    Ok(text.into_bytes())
+}
+
+/// Export a compiled program (and optionally its shard plan) into the
+/// store: write blobs, build the manifest, publish, return the
+/// artifact id.
+pub fn export_program(
+    store: &mut ArtifactStore,
+    program: &CamProgram,
+    plan: Option<&ShardPlan>,
+) -> Result<String, StoreError> {
+    let prog_bytes = encode_stable("program", program.to_json(), |j| {
+        CamProgram::from_json(j).map(|p| p.to_json())
+    })?;
+    let prog_digest = store.put_blob(&prog_bytes)?;
+    let mut blobs = BTreeMap::new();
+    blobs.insert(
+        ROLE_PROGRAM.to_string(),
+        BlobRef { digest: prog_digest, size: prog_bytes.len() as u64 },
+    );
+    let mut n_shards = 0;
+    if let Some(p) = plan {
+        let plan_bytes = encode_stable("shard_plan", p.to_json(), |j| {
+            ShardPlan::from_json(j).map(|p| p.to_json())
+        })?;
+        let digest = store.put_blob(&plan_bytes)?;
+        blobs.insert(
+            ROLE_SHARD_PLAN.to_string(),
+            BlobRef { digest, size: plan_bytes.len() as u64 },
+        );
+        n_shards = p.n_shards();
+    }
+    let manifest = ArtifactManifest {
+        name: program.name.clone(),
+        task: program.task,
+        n_bits: program.n_bits,
+        n_features: program.n_features,
+        n_trees: program.n_trees,
+        n_shards,
+        blobs,
+    };
+    store.publish(&manifest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Task;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("xtime-store-unit-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    fn toy_manifest(digest: &str, size: u64, name: &str) -> ArtifactManifest {
+        let mut blobs = BTreeMap::new();
+        blobs.insert(ROLE_PROGRAM.to_string(), BlobRef { digest: digest.to_string(), size });
+        ArtifactManifest {
+            name: name.to_string(),
+            task: Task::Binary,
+            n_bits: 8,
+            n_features: 4,
+            n_trees: 2,
+            n_shards: 0,
+            blobs,
+        }
+    }
+
+    #[test]
+    fn put_get_blob_roundtrip_is_idempotent() {
+        let root = tmp_root("putget");
+        let store = ArtifactStore::open(&root).unwrap();
+        let d1 = store.put_blob(b"hello artifact").unwrap();
+        let d2 = store.put_blob(b"hello artifact").unwrap();
+        assert_eq!(d1, d2);
+        assert_eq!(store.get_blob(&d1).unwrap(), b"hello artifact");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn corrupt_blob_is_a_digest_mismatch_not_a_panic() {
+        let root = tmp_root("corrupt");
+        let store = ArtifactStore::open(&root).unwrap();
+        let d = store.put_blob(b"payload").unwrap();
+        fs::write(store.blob_path(&d), b"paXload").unwrap();
+        match store.get_blob(&d) {
+            Err(StoreError::DigestMismatch { expected, actual, .. }) => {
+                assert_eq!(expected, d);
+                assert_ne!(actual, d);
+            }
+            other => panic!("expected DigestMismatch, got {:?}", other.map(|_| ())),
+        }
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn publish_resolve_remove_and_gc() {
+        let root = tmp_root("lifecycle");
+        let mut store = ArtifactStore::open(&root).unwrap();
+        let bytes = b"fake program blob".to_vec();
+        let d = store.put_blob(&bytes).unwrap();
+        let m1 = toy_manifest(&d, bytes.len() as u64, "churn");
+        let id1 = store.publish(&m1).unwrap();
+        assert_eq!(store.publish(&m1).unwrap(), id1, "publish is idempotent");
+        assert_eq!(store.resolve("churn").unwrap(), id1);
+
+        // Second manifest shares the same blob: refcount 2.
+        let mut m2 = toy_manifest(&d, bytes.len() as u64, "churn");
+        m2.n_trees = 3;
+        let id2 = store.publish(&m2).unwrap();
+        assert_ne!(id1, id2);
+        assert_eq!(store.resolve("churn").unwrap(), id2, "resolve picks latest");
+        assert_eq!(store.ls().len(), 2);
+
+        // Removing one ref keeps the shared blob alive through gc.
+        store.remove(&id1).unwrap();
+        let r = store.gc().unwrap();
+        assert_eq!(r.kept_blobs, 1);
+        assert_eq!(r.removed_manifests, 1, "unindexed manifest swept");
+        assert!(store.blob_path(&d).exists());
+
+        // Removing the last ref lets gc drop the blob.
+        store.remove(&id2).unwrap();
+        let r = store.gc().unwrap();
+        assert_eq!(r.removed_blobs, 1);
+        assert!(r.bytes_freed > 0);
+        assert!(!store.blob_path(&d).exists());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn publish_refuses_dangling_blob_refs() {
+        let root = tmp_root("dangling");
+        let mut store = ArtifactStore::open(&root).unwrap();
+        let m = toy_manifest(&"00".repeat(32), 10, "ghost");
+        match store.publish(&m) {
+            Err(StoreError::Corrupt { detail, .. }) => assert!(detail.contains("not in the store")),
+            other => panic!("expected Corrupt, got {:?}", other.map(|_| ())),
+        }
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn unknown_index_version_is_structured() {
+        let root = tmp_root("version");
+        {
+            let store = ArtifactStore::open(&root).unwrap();
+            store.put_blob(b"x").unwrap();
+        }
+        let idx = root.join("index.json");
+        fs::write(&idx, br#"{"artifacts":[],"format_version":99,"next_seq":0,"refs":{}}"#).unwrap();
+        match ArtifactStore::open(&root) {
+            Err(StoreError::UnknownVersion { found, supported }) => {
+                assert_eq!(found, 99);
+                assert_eq!(supported, FORMAT_VERSION);
+            }
+            other => panic!("expected UnknownVersion, got {:?}", other.err()),
+        }
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn unknown_artifact_and_name_errors() {
+        let root = tmp_root("unknown");
+        let store = ArtifactStore::open(&root).unwrap();
+        assert!(matches!(store.load("deadbeef"), Err(StoreError::UnknownArtifact { .. })));
+        assert!(matches!(store.resolve("nope"), Err(StoreError::UnknownName { .. })));
+        let _ = fs::remove_dir_all(&root);
+    }
+}

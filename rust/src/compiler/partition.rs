@@ -22,6 +22,8 @@ use super::program::{pack_class_cores, CamProgram, CoreImage};
 use super::noc::NocConfig;
 use super::paths::CamRow;
 use crate::cam::CORE_ROWS;
+use crate::data::Task;
+use crate::util::Json;
 use std::collections::HashMap;
 
 /// How trees are distributed across shards.
@@ -41,6 +43,15 @@ impl ShardStrategy {
         match self {
             ShardStrategy::BalancedTrees => "balanced-trees",
             ShardStrategy::BalancedRows => "balanced-rows",
+        }
+    }
+
+    /// Inverse of [`ShardStrategy::name`] (used by the plan decoder).
+    pub fn from_name(name: &str) -> Result<ShardStrategy, String> {
+        match name {
+            "balanced-trees" => Ok(ShardStrategy::BalancedTrees),
+            "balanced-rows" => Ok(ShardStrategy::BalancedRows),
+            s => Err(format!("unknown shard strategy `{s}`")),
         }
     }
 }
@@ -139,6 +150,70 @@ impl ShardPlan {
         } else {
             max / min
         }
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    /// Canonical encoding (see [`CamProgram::to_json`]): shard programs
+    /// nest their own canonical encodings, floats are bit-exact, and
+    /// encode→decode→encode is byte-identical — the digest-stability
+    /// contract of the artifact store (`crate::artifact`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("strategy", Json::Str(self.strategy.name().to_string()))
+            .set("task", Json::Str(self.task.name()))
+            .set("n_classes", Json::Num(self.task.n_classes() as f64))
+            .set("n_features", Json::Num(self.n_features as f64))
+            .set("base_score", Json::from_canon_f32_slice(&self.base_score))
+            .set(
+                "assignment",
+                Json::Arr(
+                    self.assignment
+                        .iter()
+                        .map(|a| {
+                            Json::from_usize_slice(
+                                &a.iter().map(|&t| t as usize).collect::<Vec<_>>(),
+                            )
+                        })
+                        .collect(),
+                ),
+            )
+            .set("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect()));
+        o
+    }
+
+    /// Bit-exact inverse of [`ShardPlan::to_json`].
+    pub fn from_json(j: &Json) -> Result<ShardPlan, String> {
+        let strategy = ShardStrategy::from_name(j.req_str("strategy")?)?;
+        let task = Task::from_name(j.req_str("task")?, j.req_usize("n_classes")?)?;
+        let shards = j
+            .req_arr("shards")?
+            .iter()
+            .map(CamProgram::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let assignment = j
+            .req_arr("assignment")?
+            .iter()
+            .map(|a| a.usize_vec().map(|v| v.into_iter().map(|t| t as u32).collect()))
+            .collect::<Result<Vec<Vec<u32>>, _>>()?;
+        if shards.is_empty() {
+            return Err("shard plan has no shards".into());
+        }
+        if shards.len() != assignment.len() {
+            return Err(format!(
+                "shard plan has {} shards but {} assignment rows",
+                shards.len(),
+                assignment.len()
+            ));
+        }
+        Ok(ShardPlan {
+            shards,
+            assignment,
+            strategy,
+            base_score: j.req("base_score")?.canon_f32_vec()?,
+            task,
+            n_features: j.req_usize("n_features")?,
+        })
     }
 }
 
@@ -377,6 +452,35 @@ mod tests {
             partition(&p, 5, &PartitionOptions::default()),
             Err(PartitionError::TooManyShards { requested: 5, trees: 4 })
         ));
+    }
+
+    #[test]
+    fn shard_plan_json_codec_is_canonical() {
+        let p = program(10);
+        for strategy in [ShardStrategy::BalancedTrees, ShardStrategy::BalancedRows] {
+            let plan =
+                partition(&p, 2, &PartitionOptions { strategy, ..Default::default() }).unwrap();
+            let text = plan.to_json().to_string();
+            let back = ShardPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+            // Canonical: decoded plan re-encodes to identical bytes.
+            assert_eq!(back.to_json().to_string(), text, "{strategy:?}");
+            assert_eq!(back.strategy, plan.strategy);
+            assert_eq!(back.assignment, plan.assignment);
+            assert_eq!(back.task, plan.task);
+            assert_eq!(back.n_features, plan.n_features);
+            for (a, b) in plan.shards.iter().zip(&back.shards) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.noc.routers, b.noc.routers);
+                for (ca, cb) in a.cores.iter().zip(&b.cores) {
+                    assert_eq!(ca.rows, cb.rows);
+                    assert_eq!(ca.trees, cb.trees);
+                }
+            }
+            for (x, y) in plan.base_score.iter().zip(&back.base_score) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert!(ShardStrategy::from_name("nope").is_err());
     }
 
     #[test]

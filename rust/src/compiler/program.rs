@@ -298,6 +298,14 @@ impl CamProgram {
     }
 
     // ---- serialization ---------------------------------------------------
+    //
+    // The encoding is *canonical*: every float uses the bit-exact
+    // `Json::canon_f32` form and `from_json(to_json(p))` reproduces `p`
+    // including its NoC configuration, so encoding the same program twice
+    // — or re-encoding a decoded one — yields byte-identical text. The
+    // artifact store (`crate::artifact`) digests these bytes; any
+    // encode-cycle instability would make digests drift.
+
     pub fn to_json(&self) -> Json {
         let mut cores = Vec::with_capacity(self.cores.len());
         for c in &self.cores {
@@ -309,7 +317,7 @@ impl CamProgram {
             for r in &c.rows {
                 lo.extend(r.lo.iter().map(|&v| Json::Num(v as f64)));
                 hi.extend(r.hi.iter().map(|&v| Json::Num(v as f64)));
-                leaf.push(Json::Num(r.leaf as f64));
+                leaf.push(Json::canon_f32(r.leaf));
                 class.push(Json::Num(r.class as f64));
                 tree.push(Json::Num(r.tree as f64));
             }
@@ -335,32 +343,49 @@ impl CamProgram {
             .set("n_bits", Json::Num(self.n_bits as f64))
             .set("n_trees", Json::Num(self.n_trees as f64))
             .set("n_replicas", Json::Num(self.n_replicas as f64))
-            .set("base_score", Json::from_f32_slice(&self.base_score))
+            // The slot capacity the NoC was built against. `NocConfig::build`
+            // is deterministic in (cores, n_replicas, chip budget), so
+            // carrying this one number lets the decoder rebuild the exact
+            // tree even for programs compiled with a non-default
+            // `CompileOptions::chip_cores`.
+            .set("noc_slots", Json::Num(self.noc.n_slots as f64))
+            .set("base_score", Json::from_canon_f32_slice(&self.base_score))
             .set("cores", Json::Arr(cores))
-            .set("quant_bits", Json::Num(self.quantizer.n_bits as f64))
-            .set(
-                "quant_edges",
-                Json::Arr(self.quantizer.edges.iter().map(|e| Json::from_f32_slice(e)).collect()),
-            );
+            .set("quantizer", self.quantizer.to_json());
         o
     }
 
     pub fn from_json(j: &Json) -> Result<CamProgram, String> {
-        let task = match j.req_str("task")? {
-            "regression" => Task::Regression,
-            "binary" => Task::Binary,
-            s if s.starts_with("multiclass") => Task::MultiClass(j.req_usize("n_classes")?),
-            s => return Err(format!("unknown task `{s}`")),
-        };
+        let task = Task::from_name(j.req_str("task")?, j.req_usize("n_classes")?)?;
         let n_features = j.req_usize("n_features")?;
+        if n_features == 0 {
+            return Err("program has zero features".into());
+        }
         let mut cores = Vec::new();
-        for cj in j.req_arr("cores")? {
+        for (ci, cj) in j.req_arr("cores")?.iter().enumerate() {
             let lo = cj.req("lo")?.f64_vec()?;
             let hi = cj.req("hi")?.f64_vec()?;
-            let leaf = cj.req("leaf")?.f32_vec()?;
+            let leaf = cj.req("leaf")?.canon_f32_vec()?;
             let class = cj.req("class")?.usize_vec()?;
             let tree = cj.req("tree")?.usize_vec()?;
             let n_rows = leaf.len();
+            // A corrupt or truncated file must come back as an error,
+            // never a slice panic.
+            if lo.len() != n_rows * n_features
+                || hi.len() != n_rows * n_features
+                || class.len() != n_rows
+                || tree.len() != n_rows
+            {
+                return Err(format!(
+                    "core {ci}: row arrays disagree ({} leaves, lo {}, hi {}, class {}, tree {} \
+                     for {n_features} features)",
+                    n_rows,
+                    lo.len(),
+                    hi.len(),
+                    class.len(),
+                    tree.len()
+                ));
+            }
             let mut rows = Vec::with_capacity(n_rows);
             for r in 0..n_rows {
                 rows.push(CamRow {
@@ -379,23 +404,39 @@ impl CamProgram {
             });
         }
         let n_replicas = j.req_usize("n_replicas")?;
-        let noc = NocConfig::build(&cores, n_replicas, CHIP_CORES);
-        let edges = j
-            .req_arr("quant_edges")?
-            .iter()
-            .map(|e| e.f32_vec())
-            .collect::<Result<Vec<_>, _>>()?;
+        if n_replicas == 0 {
+            return Err("program has zero replicas".into());
+        }
+        // Rebuild the NoC deterministically for the recorded slot budget.
+        // Files from before the `noc_slots` field assume the paper chip.
+        let noc_slots = match j.get("noc_slots") {
+            Some(s) => s.as_usize().ok_or("field `noc_slots` is not a number")?,
+            None => CHIP_CORES,
+        };
+        let noc = NocConfig::build(&cores, n_replicas, noc_slots);
+        let quantizer = match j.get("quantizer") {
+            Some(q) => FeatureQuantizer::from_json(q)?,
+            // Pre-artifact files carried the quantizer as two flat fields.
+            None => FeatureQuantizer {
+                n_bits: j.req_usize("quant_bits")? as u8,
+                edges: j
+                    .req_arr("quant_edges")?
+                    .iter()
+                    .map(|e| e.f32_vec())
+                    .collect::<Result<Vec<_>, _>>()?,
+            },
+        };
         Ok(CamProgram {
             name: j.req_str("name")?.to_string(),
             task,
             n_features,
             n_bins: j.req_usize("n_bins")? as u16,
             n_bits: j.req_usize("n_bits")? as u8,
-            base_score: j.req("base_score")?.f32_vec()?,
+            base_score: j.req("base_score")?.canon_f32_vec()?,
             cores,
             n_replicas,
             noc,
-            quantizer: FeatureQuantizer { n_bits: j.req_usize("quant_bits")? as u8, edges },
+            quantizer,
             n_trees: j.req_usize("n_trees")?,
         })
     }
@@ -509,6 +550,70 @@ mod tests {
             assert_eq!(a.trees, b.trees);
         }
         assert_eq!(back.base_score, p.base_score);
+    }
+
+    /// The artifact-store contract: encoding is canonical (re-encoding a
+    /// decoded program is byte-identical — stable digests) and the NoC
+    /// rebuild is exact, including for non-default chip budgets where
+    /// the old decoder's hardcoded `CHIP_CORES` diverged.
+    #[test]
+    fn json_codec_is_canonical_and_rebuilds_noc_exactly() {
+        let m = small_model();
+        for chip_cores in [64usize, CHIP_CORES] {
+            let opts = CompileOptions { core_rows: 32, chip_cores, ..Default::default() };
+            let p = compile(&m, &opts).unwrap();
+            let text = p.to_json().to_string();
+            let back = CamProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.to_json().to_string(), text, "chip_cores {chip_cores}");
+            assert_eq!(back.noc.n_slots, p.noc.n_slots, "chip_cores {chip_cores}");
+            assert_eq!(back.noc.routers, p.noc.routers, "chip_cores {chip_cores}");
+            assert_eq!(back.noc.slot_group, p.noc.slot_group);
+            assert_eq!(back.quantizer.n_bits, p.quantizer.n_bits);
+            assert_eq!(back.quantizer.edges, p.quantizer.edges);
+            for (a, b) in p.base_score.iter().zip(&back.base_score) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    /// Pre-artifact program files (flat `quant_bits`/`quant_edges`, no
+    /// `noc_slots`) still decode.
+    #[test]
+    fn json_decodes_legacy_quantizer_fields() {
+        let m = small_model();
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let mut j = p.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("quantizer");
+            map.remove("noc_slots");
+        }
+        j.set("quant_bits", Json::Num(p.quantizer.n_bits as f64)).set(
+            "quant_edges",
+            Json::Arr(p.quantizer.edges.iter().map(|e| Json::from_f32_slice(e)).collect()),
+        );
+        let back = CamProgram::from_json(&j).unwrap();
+        assert_eq!(back.quantizer.edges, p.quantizer.edges);
+        assert_eq!(back.noc.n_slots, p.noc.n_slots);
+    }
+
+    /// Corrupt row arrays surface as errors, never slice panics.
+    #[test]
+    fn json_rejects_inconsistent_row_arrays() {
+        let m = small_model();
+        let p = compile(&m, &CompileOptions::default()).unwrap();
+        let mut j = p.to_json();
+        // Truncate core 0's `lo` array.
+        if let Some(Json::Arr(cores)) = j.get("cores").cloned() {
+            let mut c0 = cores[0].clone();
+            if let Some(Json::Arr(lo)) = c0.get("lo").cloned() {
+                c0.set("lo", Json::Arr(lo[..lo.len() - 1].to_vec()));
+            }
+            let mut new_cores = cores.clone();
+            new_cores[0] = c0;
+            j.set("cores", Json::Arr(new_cores));
+        }
+        let err = CamProgram::from_json(&j).unwrap_err();
+        assert!(err.contains("core 0"), "{err}");
     }
 
     #[test]

@@ -43,6 +43,7 @@
 use super::backend::{Backend, FunctionalBackend};
 use super::server::{BatchPolicy, QueueTicket, Reply, Server, ShardStats};
 use crate::analysis::{self, AnalysisReport, VerifyPolicy};
+use crate::artifact::{ArtifactStore, LoadedArtifact};
 use crate::compiler::{partition, CamProgram, PartitionOptions};
 use crate::data::FeatureQuantizer;
 use crate::util::stats::Summary;
@@ -402,6 +403,43 @@ impl Fleet {
         Ok(())
     }
 
+    /// Register a model straight from a stored artifact (cold start
+    /// without retraining). The store fully verifies the artifact on
+    /// load — manifest bytes hash to `id`, every blob hashes to its
+    /// digest, every decode succeeds — and then the decoded program
+    /// passes through the same static-verifier gate as any other
+    /// registration, which is what makes the artifact path satisfy
+    /// contract 9 (DESIGN.md §5): an artifact-loaded program goes live
+    /// only if it is verify-clean, and it then serves bit-identically
+    /// to the in-memory original it was exported from. With `cfg:
+    /// None`, the shard count recorded in the manifest is replayed
+    /// (`1` for an unsharded artifact).
+    pub fn register_from_artifact(
+        &self,
+        name: &str,
+        store: &ArtifactStore,
+        id: &str,
+        cfg: Option<ModelConfig>,
+    ) -> Result<(), String> {
+        let (art, cfg) = load_for_serving(store, id, cfg)?;
+        self.register_program(name, &art.program, cfg)
+    }
+
+    /// Hot-swap `name` to a stored artifact: [`Fleet::swap_program`]
+    /// semantics (atomic cutover, old server drains under contract 6)
+    /// with the program sourced from — and digest-verified against —
+    /// the store instead of an in-memory compile.
+    pub fn swap_to_digest(
+        &self,
+        name: &str,
+        store: &ArtifactStore,
+        id: &str,
+        cfg: Option<ModelConfig>,
+    ) -> Result<(), String> {
+        let (art, cfg) = load_for_serving(store, id, cfg)?;
+        self.swap_program(name, &art.program, cfg)
+    }
+
     /// Unload a model. Blocks while the route's server drains: requests
     /// admitted before the unregister still receive their replies.
     pub fn unregister(&self, name: &str) -> Result<(), String> {
@@ -630,6 +668,25 @@ fn check_arity(route: &Route, model: &str, got: usize) -> Result<(), String> {
         ));
     }
     Ok(())
+}
+
+/// Shared artifact-loading step for [`Fleet::register_from_artifact`] /
+/// [`Fleet::swap_to_digest`]: digest-verified load, then a derived
+/// [`ModelConfig`] when the caller passed none — the manifest's shard
+/// count (min 1) with the loaded program's quantizer and default
+/// policy/cap/verify.
+fn load_for_serving(
+    store: &ArtifactStore,
+    id: &str,
+    cfg: Option<ModelConfig>,
+) -> Result<(LoadedArtifact, ModelConfig), String> {
+    let art = store
+        .load(id)
+        .map_err(|e| format!("loading artifact {id}: {e}"))?;
+    let cfg = cfg.unwrap_or_else(|| {
+        ModelConfig::for_program(&art.program).with_shards(art.manifest.n_shards.max(1))
+    });
+    Ok((art, cfg))
 }
 
 /// Partition `program` into [`ModelConfig::shards`] planned-execution

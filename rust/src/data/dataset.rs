@@ -40,6 +40,24 @@ impl Task {
         }
     }
 
+    /// Inverse of [`Task::name`], shared by every persisted-struct
+    /// decoder (program, shard plan, artifact manifest). `n_classes` is
+    /// consulted only for the multi-class arm (the encoders write it
+    /// alongside the name).
+    pub fn from_name(name: &str, n_classes: usize) -> Result<Task, String> {
+        match name {
+            "regression" => Ok(Task::Regression),
+            "binary" => Ok(Task::Binary),
+            s if s.starts_with("multiclass") => {
+                if n_classes < 2 {
+                    return Err(format!("multiclass task needs n_classes >= 2, got {n_classes}"));
+                }
+                Ok(Task::MultiClass(n_classes))
+            }
+            s => Err(format!("unknown task `{s}`")),
+        }
+    }
+
     /// Co-processor decision rule (§III-A): identity for regression,
     /// threshold at 0 for binary logits, argmax for multi-class.
     pub fn decide(&self, logits: &[f32]) -> f32 {

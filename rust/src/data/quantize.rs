@@ -7,6 +7,7 @@
 //! paper's "256 bins per feature" description imply.
 
 use super::dataset::Dataset;
+use crate::util::Json;
 
 /// Per-feature quantile bin edges mapping f32 features → small integer bins.
 #[derive(Clone, Debug)]
@@ -169,6 +170,34 @@ impl FeatureQuantizer {
         } else {
             0.5 * (cuts[b - 1] + cuts[b])
         }
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    /// Canonical encoding: cut points use [`Json::canon_f32`], so
+    /// encode→decode→encode is byte-identical — the digest-stability
+    /// contract of the artifact store (`crate::artifact`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("n_bits", Json::Num(self.n_bits as f64)).set(
+            "edges",
+            Json::Arr(self.edges.iter().map(|e| Json::from_canon_f32_slice(e)).collect()),
+        );
+        o
+    }
+
+    /// Bit-exact inverse of [`FeatureQuantizer::to_json`].
+    pub fn from_json(j: &Json) -> Result<FeatureQuantizer, String> {
+        let n_bits = j.req_usize("n_bits")?;
+        if !(1..=16).contains(&n_bits) {
+            return Err(format!("quantizer n_bits {n_bits} outside 1..=16"));
+        }
+        let edges = j
+            .req_arr("edges")?
+            .iter()
+            .map(Json::canon_f32_vec)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(FeatureQuantizer { n_bits: n_bits as u8, edges })
     }
 
     /// Quantize an entire dataset into a row-major u16 bin matrix.
@@ -398,6 +427,29 @@ mod tests {
         let m = q.transform(&d);
         assert_eq!(m.len(), d.n_rows() * d.n_features);
         assert!(m.iter().all(|&b| (b as usize) < q.n_bins()));
+    }
+
+    #[test]
+    fn json_codec_is_bit_exact_and_canonical() {
+        let (_, q) = fitted(8);
+        let text = q.to_json().to_string();
+        let back = FeatureQuantizer::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n_bits, q.n_bits);
+        assert_eq!(back.edges.len(), q.edges.len());
+        for (f, (a, b)) in q.edges.iter().zip(&back.edges).enumerate() {
+            assert_eq!(a.len(), b.len(), "feature {f}");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "feature {f}");
+            }
+        }
+        // Canonical: re-encoding the decoded value emits identical bytes.
+        assert_eq!(back.to_json().to_string(), text);
+        // Degenerate inputs are structured errors, not panics.
+        assert!(FeatureQuantizer::from_json(
+            &Json::parse(r#"{"n_bits":0,"edges":[]}"#).unwrap()
+        )
+        .is_err());
+        assert!(FeatureQuantizer::from_json(&Json::parse(r#"{"edges":[]}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -20,6 +20,10 @@
 //! * [`analysis`] — deploy-time static verifier: rule-based lints (V1–V6)
 //!   over compiled programs, plans and shard splits, surfaced through
 //!   `xtime verify` and the fleet registration gate (contract 8);
+//! * [`artifact`] — content-addressed model artifact store: canonical
+//!   serialization of compiled programs/shard plans, SHA-256 blob store
+//!   with ref-counted GC, and digest-verified hot loading into the
+//!   fleet (contract 9);
 //! * [`runtime`] — PJRT (XLA) runtime loading AOT-compiled HLO artifacts
 //!   produced by the JAX/Pallas build pipeline under `python/`;
 //! * [`coordinator`] — the serving engine: request router, dynamic batcher,
@@ -29,6 +33,7 @@
 //! * [`util`] — offline substrates (PRNG, JSON, CLI, stats, prop tests).
 
 pub mod analysis;
+pub mod artifact;
 pub mod baselines;
 pub mod bench_support;
 pub mod cam;

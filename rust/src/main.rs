@@ -11,12 +11,21 @@
 //!               `--listen ADDR` to expose the fleet on framed TCP
 //!   loadgen   — open-loop wire load generator against a `serve --listen`
 //!               endpoint; writes BENCH_serving.json
+//!   export    — publish a compiled program (and optional shard plan)
+//!               into a content-addressed artifact store
+//!   import    — load + verify an artifact back out of the store,
+//!               optionally proving bit-identity against the original
+//!   store     — artifact store maintenance: `store ls`, `store gc`
 //!   report    — print the Fig. 8 area/power breakdown
 //!
 //! Example:
 //!   xtime train --dataset churn --trees 64 --out /tmp/churn.model.json
 //!   xtime compile --model /tmp/churn.model.json --out /tmp/churn.cam.json
 //!   xtime verify --program /tmp/churn.cam.json --shards 2 --json
+//!   xtime export --program /tmp/churn.cam.json --shards 2 --store /tmp/store
+//!   xtime import --name churn --store /tmp/store --check-against /tmp/churn.cam.json
+//!   xtime store ls --store /tmp/store
+//!   xtime serve --models churn --store /tmp/store --listen 127.0.0.1:7711
 //!   xtime simulate --program /tmp/churn.cam.json --samples 100000
 //!   xtime serve --program /tmp/churn.cam.json --requests 1000
 //!   xtime serve --models churn,telco,gas --shards 2 --requests 6000
@@ -26,8 +35,9 @@
 use std::path::Path;
 use std::sync::Arc;
 use xtime::bench_support::{drive_skewed_mix, fleet_table, MixTenant};
+use xtime::artifact::{export_program, ArtifactStore};
 use xtime::cam::DefectSpec;
-use xtime::compiler::{compile, CamProgram, CompileOptions};
+use xtime::compiler::{compile, partition, CamEngine, CamProgram, CompileOptions, PartitionOptions};
 use xtime::coordinator::{BatchPolicy, Fleet, FunctionalBackend, ModelConfig, Server, XlaBackend};
 use xtime::data::{by_name, catalog};
 use xtime::runtime::XlaCamEngine;
@@ -41,7 +51,9 @@ use xtime::util::Args;
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: xtime <train|compile|verify|simulate|serve|loadgen|report> [options]");
+        eprintln!(
+            "usage: xtime <train|compile|verify|simulate|serve|loadgen|export|import|store|report> [options]"
+        );
         eprintln!("datasets: {}", catalog().iter().map(|s| s.name).collect::<Vec<_>>().join(", "));
         std::process::exit(2);
     }
@@ -53,6 +65,9 @@ fn main() {
         "simulate" => cmd_simulate(&argv),
         "serve" => cmd_serve(&argv),
         "loadgen" => cmd_loadgen(&argv),
+        "export" => cmd_export(&argv),
+        "import" => cmd_import(&argv),
+        "store" => cmd_store(&argv),
         "report" => cmd_report(),
         other => {
             eprintln!("unknown command `{other}`");
@@ -212,6 +227,12 @@ fn cmd_serve(argv: &[String]) {
         Args::new("xtime serve", "demo serving loop over synthetic requests")
             .opt("program", Some(""), "compiled CAM program JSON (single-model mode)")
             .opt("models", Some(""), "comma-separated dataset names → multi-tenant fleet mode")
+            .opt(
+                "store",
+                Some(""),
+                "fleet mode: cold-start each model from this artifact store \
+                 (latest published artifact per name) instead of training in-process",
+            )
             .opt("requests", Some("1000"), "number of requests")
             .opt("backend", Some("auto"), "auto | xla | functional")
             .opt("artifacts", Some("artifacts"), "AOT artifact directory")
@@ -299,10 +320,13 @@ fn cmd_serve(argv: &[String]) {
 }
 
 /// Multi-tenant fleet mode (`xtime serve --models churn,telco,gas`):
-/// trains one small model per named catalog dataset in-process, registers
-/// each as a sharded route with a bounded admission queue, drives a
-/// skewed load mix across the tenants, and prints the per-model fleet
-/// table (§III-D "a different batch to each model").
+/// trains one small model per named catalog dataset in-process — or,
+/// with `--store DIR`, cold-starts each from its latest published
+/// artifact via [`Fleet::register_from_artifact`] (digest-verified,
+/// verifier-gated; contract 9) — registers each as a sharded route with
+/// a bounded admission queue, drives a skewed load mix across the
+/// tenants, and prints the per-model fleet table (§III-D "a different
+/// batch to each model").
 fn cmd_serve_fleet(a: &Args) {
     let names: Vec<String> = a
         .get("models")
@@ -319,12 +343,16 @@ fn cmd_serve_fleet(a: &Args) {
     let threads = a.get_usize("threads");
     let n_requests = a.get_usize("requests");
 
+    let store_dir = a.get("store");
+    let store = if store_dir.is_empty() { None } else { Some(open_store(&store_dir)) };
+
     let fleet = Fleet::new();
     let mut datasets = Vec::new();
     println!(
-        "building fleet: {} model(s) × {shards} shard(s) each, queue cap {}",
+        "building fleet: {} model(s) × {shards} shard(s) each, queue cap {}{}",
         names.len(),
-        if queue_cap == 0 { "∞".to_string() } else { queue_cap.to_string() }
+        if queue_cap == 0 { "∞".to_string() } else { queue_cap.to_string() },
+        if store.is_some() { format!(", cold-start from {store_dir}") } else { String::new() }
     );
     for name in &names {
         let Some(spec) = by_name(name) else {
@@ -335,29 +363,59 @@ fn cmd_serve_fleet(a: &Args) {
             std::process::exit(2);
         };
         let data = spec.generate_n(2_000);
-        let model = gbdt::train(
-            &data,
-            &GbdtParams { n_rounds: 16, max_leaves: 32, ..Default::default() },
-            None,
-        );
-        let program = compile(&model, &CompileOptions::default()).unwrap_or_else(|e| {
-            eprintln!("compiling `{name}`: {e}");
-            std::process::exit(2);
-        });
         let policy = BatchPolicy { max_wait_us: 200, max_batch: 0, threads: Some(threads) };
-        let cfg = ModelConfig::for_program(&program)
-            .with_shards(shards)
-            .with_policy(policy)
-            .with_queue_cap(queue_cap);
-        fleet.register_program(name, &program, cfg).unwrap_or_else(|e| {
-            eprintln!("registering `{name}`: {e}");
-            std::process::exit(2);
-        });
-        println!(
-            "  {name}: {} trees, {} CAM rows → {shards} shard(s)",
-            program.n_trees,
-            program.total_rows(),
-        );
+        if let Some(store) = &store {
+            // Cold start: digest-verified load + the same verifier gate
+            // as a fresh registration (contract 9).
+            let id = store.resolve(name).unwrap_or_else(|e| {
+                eprintln!("resolving `{name}` in {store_dir}: {e}");
+                std::process::exit(2);
+            });
+            let art = store.load(&id).unwrap_or_else(|e| {
+                eprintln!("loading `{name}` ({id}): {e}");
+                std::process::exit(2);
+            });
+            // --shards 1 (the default) replays the shard count recorded
+            // in the artifact; an explicit larger value overrides it.
+            let eff_shards = if shards > 1 { shards } else { art.manifest.n_shards.max(1) };
+            let cfg = ModelConfig::for_program(&art.program)
+                .with_shards(eff_shards)
+                .with_policy(policy)
+                .with_queue_cap(queue_cap);
+            fleet.register_from_artifact(name, store, &id, Some(cfg)).unwrap_or_else(|e| {
+                eprintln!("registering `{name}`: {e}");
+                std::process::exit(2);
+            });
+            println!(
+                "  {name}: artifact {} — {} trees, {} CAM rows → {eff_shards} shard(s)",
+                &id[..12.min(id.len())],
+                art.program.n_trees,
+                art.program.total_rows(),
+            );
+        } else {
+            let model = gbdt::train(
+                &data,
+                &GbdtParams { n_rounds: 16, max_leaves: 32, ..Default::default() },
+                None,
+            );
+            let program = compile(&model, &CompileOptions::default()).unwrap_or_else(|e| {
+                eprintln!("compiling `{name}`: {e}");
+                std::process::exit(2);
+            });
+            let cfg = ModelConfig::for_program(&program)
+                .with_shards(shards)
+                .with_policy(policy)
+                .with_queue_cap(queue_cap);
+            fleet.register_program(name, &program, cfg).unwrap_or_else(|e| {
+                eprintln!("registering `{name}`: {e}");
+                std::process::exit(2);
+            });
+            println!(
+                "  {name}: {} trees, {} CAM rows → {shards} shard(s)",
+                program.n_trees,
+                program.total_rows(),
+            );
+        }
         datasets.push(data);
     }
 
@@ -544,6 +602,181 @@ fn cmd_loadgen(argv: &[String]) {
         report.request_errors,
     );
     xtime::bench_support::write_bench_json("serving", &loadgen::report_json(&cfg, &report));
+}
+
+fn open_store(dir: &str) -> ArtifactStore {
+    ArtifactStore::open(Path::new(dir)).unwrap_or_else(|e| {
+        eprintln!("opening store {dir}: {e}");
+        std::process::exit(2);
+    })
+}
+
+/// `xtime export`: publish a compiled program into the content-addressed
+/// store. With `--shards N` the artifact also carries the N-way shard
+/// plan, so an importer can replay the exact partition.
+fn cmd_export(argv: &[String]) {
+    let a = parse(
+        Args::new("xtime export", "publish a compiled CAM program into an artifact store")
+            .opt("program", None, "compiled CAM program JSON")
+            .opt("shards", Some("0"), "also embed an n-shard plan (0 = program only)")
+            .opt("store", Some(".xtime-store"), "artifact store directory"),
+        argv,
+    );
+    let program = load_program(&a.get("program"));
+    let shards = a.get_usize("shards");
+    let plan = if shards > 1 {
+        Some(partition(&program, shards, &PartitionOptions::default()).unwrap_or_else(|e| {
+            eprintln!("partitioning into {shards} shards: {e}");
+            std::process::exit(2);
+        }))
+    } else {
+        None
+    };
+    let mut store = open_store(&a.get("store"));
+    let id = export_program(&mut store, &program, plan.as_ref()).unwrap_or_else(|e| {
+        eprintln!("export: {e}");
+        std::process::exit(2);
+    });
+    println!(
+        "exported {} ({} trees, {} rows{}) → {}",
+        program.name,
+        program.n_trees,
+        program.total_rows(),
+        if shards > 1 { format!(", {shards}-shard plan") } else { String::new() },
+        id
+    );
+}
+
+/// `xtime import`: digest-verified load of an artifact, gated by the
+/// static verifier (nonzero exit on deny findings, mirroring `xtime
+/// verify` and the fleet gate). `--check-against` additionally proves
+/// the loaded program serves bit-identically to an original program
+/// file — the contract 9 demonstration on the command line.
+fn cmd_import(argv: &[String]) {
+    let a = parse(
+        Args::new("xtime import", "load + verify an artifact from a store")
+            .opt("store", Some(".xtime-store"), "artifact store directory")
+            .opt("digest", Some(""), "artifact id (sha256 hex)")
+            .opt("name", Some(""), "model name → latest published artifact")
+            .opt("out", Some(""), "write the imported program JSON here")
+            .opt("check-against", Some(""), "original program JSON to prove bit-identity against")
+            .opt("queries", Some("256"), "random queries for the bit-identity check")
+            .opt("seed", Some("7"), "query-draw seed"),
+        argv,
+    );
+    let store = open_store(&a.get("store"));
+    let digest = a.get("digest");
+    let id = if !digest.is_empty() {
+        digest
+    } else {
+        let name = a.get("name");
+        if name.is_empty() {
+            eprintln!("import needs --digest <id> or --name <model>");
+            std::process::exit(2);
+        }
+        store.resolve(&name).unwrap_or_else(|e| {
+            eprintln!("resolve: {e}");
+            std::process::exit(2);
+        })
+    };
+    let art = store.load(&id).unwrap_or_else(|e| {
+        eprintln!("load: {e}");
+        std::process::exit(2);
+    });
+    let mut report = xtime::analysis::verify_program(&art.program);
+    if let Some(plan) = &art.plan {
+        report.merge(xtime::analysis::verify_shard_plan(&art.program, plan));
+    }
+    println!(
+        "loaded {} from {} ({} trees, {} rows, {} shard(s)) — verifier: {} deny, {} warn",
+        art.program.name,
+        &id[..12.min(id.len())],
+        art.program.n_trees,
+        art.program.total_rows(),
+        art.manifest.n_shards.max(1),
+        report.deny_count(),
+        report.warn_count(),
+    );
+    let out = a.get("out");
+    if !out.is_empty() {
+        art.program.save(Path::new(&out)).expect("writing program");
+        println!("wrote {out}");
+    }
+    let original = a.get("check-against");
+    if !original.is_empty() {
+        let orig = load_program(&original);
+        let queries = xtime::bench_support::random_query_bins(
+            &orig,
+            a.get_usize("queries").max(1),
+            a.get_u64("seed"),
+        );
+        let a_logits = CamEngine::new(&orig).infer_batch(&queries);
+        let b_logits = CamEngine::new(&art.program).infer_batch(&queries);
+        let identical = a_logits.len() == b_logits.len()
+            && a_logits.iter().zip(&b_logits).all(|(x, y)| {
+                x.len() == y.len()
+                    && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+            });
+        if identical {
+            println!("bit-identity: OK ({} queries, every logit bit-equal)", queries.len());
+        } else {
+            eprintln!("bit-identity: FAILED — imported program diverges from {original}");
+            std::process::exit(1);
+        }
+    }
+    if !report.is_clean() {
+        std::process::exit(1);
+    }
+}
+
+/// `xtime store ls|gc`: artifact store maintenance.
+fn cmd_store(argv: &[String]) {
+    let Some(sub) = argv.first().map(String::as_str) else {
+        eprintln!("usage: xtime store <ls|gc> --store <dir>");
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    let a = parse(
+        Args::new("xtime store", "artifact store maintenance (ls, gc)")
+            .opt("store", Some(".xtime-store"), "artifact store directory"),
+        rest,
+    );
+    let mut store = open_store(&a.get("store"));
+    match sub {
+        "ls" => {
+            let entries = store.ls();
+            if entries.is_empty() {
+                println!("store {} is empty", store.root().display());
+                return;
+            }
+            println!("{:<12} {:<16} {:>6} {:>6} {:>5} {:>4}", "ID", "NAME", "SEQ", "SHARDS", "TREES", "BITS");
+            for e in entries {
+                println!(
+                    "{:<12} {:<16} {:>6} {:>6} {:>5} {:>4}",
+                    &e.id[..12.min(e.id.len())],
+                    e.name,
+                    e.seq,
+                    e.n_shards,
+                    e.n_trees,
+                    e.n_bits
+                );
+            }
+        }
+        "gc" => {
+            let r = store.gc().unwrap_or_else(|e| {
+                eprintln!("gc: {e}");
+                std::process::exit(2);
+            });
+            println!(
+                "gc: kept {} blob(s), removed {} blob(s) + {} manifest(s), freed {} byte(s)",
+                r.kept_blobs, r.removed_blobs, r.removed_manifests, r.bytes_freed
+            );
+        }
+        other => {
+            eprintln!("unknown store subcommand `{other}` (expected ls or gc)");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn cmd_report() {

@@ -9,7 +9,7 @@
 //! to device buffers **once** at engine construction; each request batch
 //! only uploads the (tiny) query literal and executes via `execute_b`.
 
-use super::manifest::{BucketInfo, Layout, Manifest};
+use super::manifest::{AotManifest, BucketInfo, Layout};
 use crate::compiler::CamProgram;
 use crate::data::Task;
 use anyhow::{anyhow, Context, Result};
@@ -37,13 +37,13 @@ impl XlaCamEngine {
     /// Build from a compiled program + artifact directory, choosing the
     /// cheapest bucket that fits (batch capacity ≥ `batch_hint` preferred).
     pub fn new(program: &CamProgram, artifacts: &Path, batch_hint: usize) -> Result<XlaCamEngine> {
-        let manifest = Manifest::load(artifacts).map_err(|e| anyhow!(e))?;
+        let manifest = AotManifest::load(artifacts).map_err(|e| anyhow!(e))?;
         Self::with_manifest(program, &manifest, batch_hint)
     }
 
     pub fn with_manifest(
         program: &CamProgram,
-        manifest: &Manifest,
+        manifest: &AotManifest,
         batch_hint: usize,
     ) -> Result<XlaCamEngine> {
         let n_rows = program.total_rows();

@@ -1,6 +1,12 @@
-//! Artifact manifest: the contract between `python/compile/aot.py` and the
-//! Rust runtime. Describes the shape-monomorphic HLO buckets and the
+//! AOT bucket manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Describes the shape-monomorphic HLO buckets and the
 //! padding conventions baked into them.
+//!
+//! Not to be confused with [`crate::artifact::ArtifactManifest`], the
+//! content-addressed record of an exported **model** (program + shard
+//! plan). This one describes the **kernel bundle** a checkout compiled
+//! ahead of time; the two live in different directories, carry
+//! different `format` markers, and are loaded by different code paths.
 
 use crate::util::Json;
 use std::path::{Path, PathBuf};
@@ -38,17 +44,22 @@ pub enum Layout {
     BatchMajorI32,
 }
 
-/// Parsed `artifacts/manifest.json`.
+/// Parsed `artifacts/manifest.json` (the AOT kernel bundle).
 #[derive(Clone, Debug)]
-pub struct Manifest {
+pub struct AotManifest {
     pub dir: PathBuf,
     pub kernel_mode: String,
     pub layout: Layout,
     pub buckets: Vec<BucketInfo>,
 }
 
-impl Manifest {
-    pub fn load(dir: &Path) -> Result<Manifest, String> {
+/// Pre-PR-8 name, kept so existing `runtime::Manifest` callers build;
+/// new code should write [`AotManifest`] (and mean the kernel bundle)
+/// or [`crate::artifact::ArtifactManifest`] (and mean a stored model).
+pub type Manifest = AotManifest;
+
+impl AotManifest {
+    pub fn load(dir: &Path) -> Result<AotManifest, String> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).map_err(|e| {
             format!("{path:?}: {e} — run `make artifacts` to build the AOT bundle")
@@ -74,7 +85,7 @@ impl Manifest {
             Some("transposed_u8") => Layout::TransposedU8,
             _ => Layout::BatchMajorI32,
         };
-        Ok(Manifest {
+        Ok(AotManifest {
             dir: dir.to_path_buf(),
             kernel_mode: j.req_str("kernel_mode")?.to_string(),
             layout,
@@ -115,8 +126,8 @@ impl Manifest {
 mod tests {
     use super::*;
 
-    fn toy_manifest() -> Manifest {
-        Manifest {
+    fn toy_manifest() -> AotManifest {
+        AotManifest {
             dir: PathBuf::from("/tmp"),
             kernel_mode: "fast_u8".into(),
             layout: Layout::TransposedU8,
@@ -172,7 +183,7 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return;
         }
-        let m = Manifest::load(&dir).unwrap();
+        let m = AotManifest::load(&dir).unwrap();
         assert!(!m.buckets.is_empty());
         assert!(m.buckets.iter().any(|b| b.features >= 130));
         for b in &m.buckets {

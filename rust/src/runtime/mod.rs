@@ -8,9 +8,9 @@
 //!
 //! ```
 //! use std::path::Path;
-//! use xtime::runtime::Manifest;
+//! use xtime::runtime::AotManifest;
 //!
-//! let err = Manifest::load(Path::new("no/such/artifacts")).unwrap_err();
+//! let err = AotManifest::load(Path::new("no/such/artifacts")).unwrap_err();
 //! assert!(err.contains("make artifacts"), "error should say how to build: {err}");
 //! ```
 
@@ -18,4 +18,4 @@ pub mod engine;
 pub mod manifest;
 
 pub use engine::XlaCamEngine;
-pub use manifest::{BucketInfo, Manifest};
+pub use manifest::{AotManifest, BucketInfo, Manifest};

@@ -37,6 +37,97 @@ impl Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    // ---- canonical float encoding --------------------------------------
+    //
+    // The artifact store (`crate::artifact`) derives content digests from
+    // serialized bytes, so every persisted float must re-encode to the
+    // exact same text on every encode cycle AND re-parse to the exact
+    // same bits. Finite values ride `Json::Num`: Rust's float `Display`
+    // prints the shortest decimal that round-trips, and an `f32` widened
+    // to `f64` is exact, so `Num` loses nothing. Non-finite values have
+    // no JSON number form at all — they are encoded as tagged bit-pattern
+    // strings (`"f32:0x7fc00123"`), which preserves NaN payloads and
+    // infinity signs that a `null` clamp would destroy.
+
+    /// Canonically encode an `f64`: `Num` when finite, a
+    /// `"f64:0x<16 hex digits>"` bit-pattern string otherwise.
+    pub fn canon_f64(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Str(format!("f64:0x{:016x}", x.to_bits()))
+        }
+    }
+
+    /// Canonically encode an `f32`: `Num` (exactly widened) when finite,
+    /// a `"f32:0x<8 hex digits>"` bit-pattern string otherwise.
+    pub fn canon_f32(x: f32) -> Json {
+        if x.is_finite() {
+            Json::Num(x as f64)
+        } else {
+            Json::Str(format!("f32:0x{:08x}", x.to_bits()))
+        }
+    }
+
+    /// Decode a value written by [`Json::canon_f64`]. Bit-exact: the
+    /// returned value has the same bits as the encoded one.
+    pub fn decode_f64(&self) -> Result<f64, String> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            Json::Str(s) => {
+                let hex = s
+                    .strip_prefix("f64:0x")
+                    .ok_or_else(|| format!("`{s}` is not an f64 bit-pattern string"))?;
+                let bits = u64::from_str_radix(hex, 16)
+                    .map_err(|e| format!("bad f64 bit pattern `{s}`: {e}"))?;
+                Ok(f64::from_bits(bits))
+            }
+            other => Err(format!("expected a canonical f64, found {other:?}")),
+        }
+    }
+
+    /// Decode a value written by [`Json::canon_f32`]. Bit-exact: finite
+    /// values narrow from the exact `f64` widening, non-finite values
+    /// come back from their stored bit pattern (NaN payloads included).
+    pub fn decode_f32(&self) -> Result<f32, String> {
+        match self {
+            Json::Num(x) => Ok(*x as f32),
+            Json::Str(s) => {
+                let hex = s
+                    .strip_prefix("f32:0x")
+                    .ok_or_else(|| format!("`{s}` is not an f32 bit-pattern string"))?;
+                let bits = u32::from_str_radix(hex, 16)
+                    .map_err(|e| format!("bad f32 bit pattern `{s}`: {e}"))?;
+                Ok(f32::from_bits(bits))
+            }
+            other => Err(format!("expected a canonical f32, found {other:?}")),
+        }
+    }
+
+    pub fn from_canon_f32_slice(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::canon_f32(x)).collect())
+    }
+
+    pub fn from_canon_f64_slice(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::canon_f64(x)).collect())
+    }
+
+    pub fn canon_f32_vec(&self) -> Result<Vec<f32>, String> {
+        self.as_arr()
+            .ok_or("not an array".to_string())?
+            .iter()
+            .map(Json::decode_f32)
+            .collect()
+    }
+
+    pub fn canon_f64_vec(&self) -> Result<Vec<f64>, String> {
+        self.as_arr()
+            .ok_or("not an array".to_string())?
+            .iter()
+            .map(Json::decode_f64)
+            .collect()
+    }
+
     /// Insert into an object; panics if self is not an object (programming
     /// error in our own serializers, so a panic is the right failure mode).
     pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
@@ -181,14 +272,21 @@ impl fmt::Display for Json {
 
 fn write_num(f: &mut fmt::Formatter<'_>, x: f64) -> fmt::Result {
     if !x.is_finite() {
-        // JSON has no NaN/Inf; clamp to null (we never serialize these on
-        // purpose — quantized models are finite by construction).
+        // JSON has no NaN/Inf; clamp to null. Canonical encoders never
+        // put a non-finite value in `Num` — they use `Json::canon_f32`/
+        // `canon_f64`, which encode the bit pattern as a string.
         return write!(f, "null");
+    }
+    if x == 0.0 && x.is_sign_negative() {
+        // The integer fast path below would print `-0.0` as `0`,
+        // dropping the sign bit (and with it digest stability).
+        return write!(f, "-0");
     }
     if x == x.trunc() && x.abs() < 1e15 {
         write!(f, "{}", x as i64)
     } else {
-        // 17 significant digits round-trips f64 exactly.
+        // `{:e}` prints the shortest decimal that re-parses to the same
+        // f64 — exact round-trip for every finite value.
         write!(f, "{:e}", x)
     }
 }
@@ -446,5 +544,103 @@ mod tests {
         let err = j.req_str("x").unwrap_err();
         assert!(err.contains("x"), "{err}");
         assert!(j.req("missing").is_err());
+    }
+
+    /// Full canonical round trip for one f64: encode → serialize →
+    /// parse → decode must reproduce the exact bit pattern.
+    fn rt64(x: f64) -> u64 {
+        let text = Json::canon_f64(x).to_string();
+        let back = Json::parse(&text).unwrap().decode_f64().unwrap();
+        // Canonical also means the re-encoding emits identical bytes
+        // (digest stability across encode cycles).
+        assert_eq!(Json::canon_f64(back).to_string(), text, "unstable encoding for {x:?}");
+        back.to_bits()
+    }
+
+    fn rt32(x: f32) -> u32 {
+        let text = Json::canon_f32(x).to_string();
+        let back = Json::parse(&text).unwrap().decode_f32().unwrap();
+        assert_eq!(Json::canon_f32(back).to_string(), text, "unstable encoding for {x:?}");
+        back.to_bits()
+    }
+
+    #[test]
+    fn canon_floats_hostile_values_bit_exact() {
+        // The named horrors: negative zero, infinities, quiet/signaling
+        // NaNs with payloads, subnormals, extremes.
+        for x in [
+            -0.0f64,
+            0.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::from_bits(0x7ff0_0000_0000_0001), // signaling NaN, payload 1
+            f64::from_bits(0xfff8_dead_beef_0123), // negative NaN, payload
+            f64::MIN_POSITIVE,
+            f64::from_bits(1),  // smallest subnormal
+            f64::from_bits(0x000f_ffff_ffff_ffff), // largest subnormal
+            f64::MAX,
+            f64::MIN,
+            f64::EPSILON,
+            1e15,
+            -1e15,
+            0.1,
+            std::f64::consts::PI,
+        ] {
+            assert_eq!(rt64(x), x.to_bits(), "f64 {x:?} (bits {:#018x})", x.to_bits());
+        }
+        for x in [
+            -0.0f32,
+            0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x7f80_0001), // signaling NaN
+            f32::from_bits(0xffc0_1234), // negative NaN with payload
+            f32::MIN_POSITIVE,
+            f32::from_bits(1),           // smallest subnormal
+            f32::from_bits(0x007f_ffff), // largest subnormal
+            f32::MAX,
+            f32::MIN,
+            f32::EPSILON,
+        ] {
+            assert_eq!(rt32(x), x.to_bits(), "f32 {x:?} (bits {:#010x})", x.to_bits());
+        }
+    }
+
+    #[test]
+    fn canon_floats_random_bit_patterns_bit_exact() {
+        // Property: ANY bit pattern (finite, NaN-with-payload, subnormal,
+        // ±inf all occur under uniform bits) survives the round trip.
+        crate::util::prop::check(4096, 0xF10A7, |g| {
+            let bits64 = g.u64();
+            let bits32 = g.u64() as u32;
+            crate::util::prop::require(
+                rt64(f64::from_bits(bits64)) == bits64,
+                format!("f64 bits {bits64:#018x}"),
+            )?;
+            crate::util::prop::require(
+                rt32(f32::from_bits(bits32)) == bits32,
+                format!("f32 bits {bits32:#010x}"),
+            )
+        });
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign_in_plain_num() {
+        // `write_num` regression: -0.0 used to print as `0`.
+        let text = Json::Num(-0.0).to_string();
+        assert_eq!(text, "-0");
+        let back = Json::parse(&text).unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative());
+    }
+
+    #[test]
+    fn decode_rejects_mistagged_patterns() {
+        assert!(Json::Str("f64:0xzz".into()).decode_f64().is_err());
+        assert!(Json::Str("f32:0x7fc00000".into()).decode_f64().is_err());
+        assert!(Json::Str("f64:0x7ff8000000000000".into()).decode_f32().is_err());
+        assert!(Json::Null.decode_f32().is_err());
+        assert!(Json::Bool(true).decode_f64().is_err());
     }
 }

@@ -1,0 +1,404 @@
+//! Contract 9 (ISSUE 8): a compiled program that round-trips through
+//! the content-addressed artifact store is verify-clean under the
+//! static verifier and serves **bit-identically** to the in-memory
+//! original — predictions, logits, per-shard partials, defect draws —
+//! including when it is hot-loaded into a fleet via
+//! `register_from_artifact` / `swap_to_digest` under sustained load
+//! (where contract 6's drain guarantee must also hold).
+//!
+//! Plus the store's corruption surface: flipped or truncated blobs,
+//! truncated manifests, and unknown format versions must all surface
+//! as structured [`StoreError`]s — never a panic — and `gc` must keep
+//! every referenced blob while sweeping unreferenced ones.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+use xtime::artifact::{export_program, sha256_hex, ArtifactStore, StoreError};
+use xtime::bench_support::random_query_bins;
+use xtime::cam::DefectSpec;
+use xtime::compiler::{
+    compile, partition, CamEngine, CamProgram, CompileOptions, PartitionOptions, ShardPlan,
+};
+use xtime::coordinator::{Fleet, ModelConfig};
+use xtime::data::by_name;
+use xtime::trees::{gbdt, rf, GbdtParams, RfParams};
+use xtime::util::{Json, Rng};
+
+/// Unique per-test store root under the system temp dir, removed on drop.
+struct TmpStore {
+    root: PathBuf,
+}
+
+impl TmpStore {
+    fn new(tag: &str) -> TmpStore {
+        let root =
+            std::env::temp_dir().join(format!("xtime-artifact-it-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        TmpStore { root }
+    }
+
+    fn open(&self) -> ArtifactStore {
+        ArtifactStore::open(&self.root).expect("open store")
+    }
+}
+
+impl Drop for TmpStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+/// Train a small ensemble on a catalog dataset and compile it.
+fn train_program(dataset: &str, n_bits: u8, kind: &str, seed: u64) -> CamProgram {
+    let data = by_name(dataset).expect("catalog dataset").generate_n(400);
+    let model = match kind {
+        "gbdt" => gbdt::train(
+            &data,
+            &GbdtParams { n_rounds: 4, max_leaves: 8, n_bits, seed, ..Default::default() },
+            None,
+        ),
+        "rf" => rf::train(
+            &data,
+            &RfParams { n_estimators: 4, max_leaves: 8, n_bits, seed, ..Default::default() },
+        ),
+        other => panic!("unknown kind {other}"),
+    };
+    compile(&model, &CompileOptions::default()).expect("compile")
+}
+
+fn two_shard_plan(program: &CamProgram) -> ShardPlan {
+    partition(program, 2, &PartitionOptions::default()).expect("partition")
+}
+
+fn bits2(m: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    m.iter().map(|r| r.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn bits2_f64(m: &[Vec<f64>]) -> Vec<Vec<u64>> {
+    m.iter().map(|r| r.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+/// The tentpole property, over the task × bits × trainer grid: export →
+/// reopen store → load is verify-clean with **zero** deny findings and
+/// bit-identical on every inference surface, at planned-execution
+/// thread counts 1/2/8.
+#[test]
+fn export_import_grid_is_verify_clean_and_bit_identical() {
+    // churn = binary, eye = 3-class, rossmann = regression (Table II).
+    for (dataset, kind, n_bits) in [
+        ("churn", "gbdt", 4u8),
+        ("churn", "rf", 8u8),
+        ("eye", "gbdt", 6u8),
+        ("eye", "rf", 4u8),
+        ("rossmann", "gbdt", 8u8),
+        ("rossmann", "rf", 6u8),
+    ] {
+        let tag = format!("grid-{dataset}-{kind}-{n_bits}");
+        let tmp = TmpStore::new(&tag);
+        let program = train_program(dataset, n_bits, kind, 7);
+        let plan = two_shard_plan(&program);
+
+        let id = {
+            let mut store = tmp.open();
+            export_program(&mut store, &program, Some(&plan)).expect("export")
+        };
+        // A *fresh* store handle: everything must come back off disk.
+        let art = tmp.open().load(&id).unwrap_or_else(|e| panic!("{tag}: load: {e}"));
+        assert_eq!(art.manifest.n_shards, 2, "{tag}");
+        assert_eq!(art.program.task, program.task, "{tag}");
+
+        // Verify-clean: zero deny findings on program and plan.
+        let mut report = xtime::analysis::verify_program(&art.program);
+        let loaded_plan = art.plan.as_ref().expect("plan travels with the artifact");
+        report.merge(xtime::analysis::verify_shard_plan(&art.program, loaded_plan));
+        assert_eq!(report.deny_count(), 0, "{tag}: deny findings on loaded artifact");
+
+        // Bit-identity on every surface.
+        let queries = random_query_bins(&program, 64, 0xA57 + n_bits as u64);
+        let orig = CamEngine::new(&program);
+        let back = CamEngine::new(&art.program);
+        assert_eq!(
+            bits2(&orig.infer_batch(&queries)),
+            bits2(&back.infer_batch(&queries)),
+            "{tag}: infer_batch"
+        );
+        assert_eq!(
+            bits2_f64(&orig.partials_batch(&queries)),
+            bits2_f64(&back.partials_batch(&queries)),
+            "{tag}: partials_batch"
+        );
+        for threads in [1usize, 2, 8] {
+            assert_eq!(
+                bits2(&orig.infer_planned(&queries, threads)),
+                bits2(&back.infer_planned(&queries, threads)),
+                "{tag}: infer_planned × {threads} threads"
+            );
+        }
+        // Per-shard partials: each loaded shard is bit-equal to the
+        // shard the original partition produced.
+        assert_eq!(loaded_plan.shards.len(), plan.shards.len(), "{tag}");
+        for (si, (a, b)) in plan.shards.iter().zip(&loaded_plan.shards).enumerate() {
+            assert_eq!(
+                bits2_f64(&CamEngine::new(a).partials_batch(&queries)),
+                bits2_f64(&CamEngine::new(b).partials_batch(&queries)),
+                "{tag}: shard {si} partials"
+            );
+        }
+    }
+}
+
+/// Defect injection is seeded off program content the engine reads, so
+/// a bit-identical round trip must give bit-identical *defective*
+/// engines too.
+#[test]
+fn defect_draws_agree_after_roundtrip() {
+    let tmp = TmpStore::new("defects");
+    let program = train_program("churn", 8, "gbdt", 11);
+    let id = {
+        let mut store = tmp.open();
+        export_program(&mut store, &program, None).expect("export")
+    };
+    let art = tmp.open().load(&id).expect("load");
+    let queries = random_query_bins(&program, 64, 0xDEF);
+    for seed in [1u64, 9, 42] {
+        let a = CamEngine::with_defects(&program, DefectSpec::memristor(2.0), seed);
+        let b = CamEngine::with_defects(&art.program, DefectSpec::memristor(2.0), seed);
+        assert_eq!(
+            bits2(&a.infer_batch(&queries)),
+            bits2(&b.infer_batch(&queries)),
+            "defect draw seed {seed}"
+        );
+    }
+}
+
+/// The artifact id is a pure function of model content: same program →
+/// same id across repeat exports and across independent stores.
+#[test]
+fn digest_is_stable_across_exports_and_stores() {
+    let program = train_program("eye", 8, "gbdt", 3);
+    let plan = two_shard_plan(&program);
+    let (tmp_a, tmp_b) = (TmpStore::new("stable-a"), TmpStore::new("stable-b"));
+    let mut sa = tmp_a.open();
+    let mut sb = tmp_b.open();
+    let id1 = export_program(&mut sa, &program, Some(&plan)).unwrap();
+    let id2 = export_program(&mut sa, &program, Some(&plan)).unwrap();
+    let id3 = export_program(&mut sb, &program, Some(&plan)).unwrap();
+    assert_eq!(id1, id2, "re-export in the same store");
+    assert_eq!(id1, id3, "export in an independent store");
+    assert_eq!(sa.ls().len(), 1, "idempotent publish indexes once");
+}
+
+/// A flipped byte in a blob must surface as a digest mismatch when the
+/// artifact is loaded — never as a decode panic.
+#[test]
+fn corrupt_blob_is_a_digest_mismatch() {
+    let tmp = TmpStore::new("flip");
+    let program = train_program("churn", 4, "gbdt", 5);
+    let mut store = tmp.open();
+    let id = export_program(&mut store, &program, None).unwrap();
+    let digest = store.load(&id).unwrap().manifest.program_blob().unwrap().digest.clone();
+    let path = store.blob_path(&digest);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    match store.load(&id) {
+        Err(StoreError::DigestMismatch { expected, .. }) => assert_eq!(expected, digest),
+        other => panic!("expected DigestMismatch, got {:?}", other.err()),
+    }
+}
+
+/// Truncation — of a blob or of the manifest itself — is also caught by
+/// the digest check before any decoder sees the bytes.
+#[test]
+fn truncated_blob_and_manifest_fail_structurally() {
+    let tmp = TmpStore::new("trunc");
+    let program = train_program("churn", 4, "gbdt", 6);
+    let mut store = tmp.open();
+    let id = export_program(&mut store, &program, None).unwrap();
+    let digest = store.load(&id).unwrap().manifest.program_blob().unwrap().digest.clone();
+
+    let blob = store.blob_path(&digest);
+    let bytes = std::fs::read(&blob).unwrap();
+    std::fs::write(&blob, &bytes[..bytes.len() / 3]).unwrap();
+    assert!(
+        matches!(store.load(&id), Err(StoreError::DigestMismatch { .. })),
+        "truncated blob"
+    );
+    std::fs::write(&blob, &bytes).unwrap();
+    assert!(store.load(&id).is_ok(), "restored blob loads again");
+
+    let man = store.manifest_path(&id);
+    let mbytes = std::fs::read(&man).unwrap();
+    std::fs::write(&man, &mbytes[..mbytes.len() - 7]).unwrap();
+    assert!(
+        matches!(store.load(&id), Err(StoreError::DigestMismatch { .. })),
+        "truncated manifest"
+    );
+}
+
+/// A manifest from a future format version is refused with a typed
+/// version error, not misparsed.
+#[test]
+fn unknown_format_version_is_refused() {
+    let tmp = TmpStore::new("version");
+    let program = train_program("churn", 4, "gbdt", 8);
+    let mut store = tmp.open();
+    let id = export_program(&mut store, &program, None).unwrap();
+    // Rewrite the manifest claiming version 99, stored under its own
+    // (correct) content id so the digest check passes and the version
+    // gate is what fires.
+    let text = std::fs::read_to_string(store.manifest_path(&id)).unwrap();
+    let mut j = Json::parse(&text).unwrap();
+    j.set("format_version", Json::Num(99.0));
+    let bytes = j.to_string().into_bytes();
+    let future_id = sha256_hex(&bytes);
+    std::fs::write(store.manifest_path(&future_id), &bytes).unwrap();
+    match store.load(&future_id) {
+        Err(StoreError::UnknownVersion { found, supported }) => {
+            assert_eq!(found, 99);
+            assert_eq!(supported, xtime::artifact::FORMAT_VERSION);
+        }
+        other => panic!("expected UnknownVersion, got {:?}", other.err()),
+    }
+}
+
+/// GC keeps blobs any indexed manifest still references — including a
+/// program blob *shared* by two artifacts — and sweeps the rest.
+#[test]
+fn gc_keeps_referenced_blobs_and_drops_unreferenced() {
+    let tmp = TmpStore::new("gc");
+    let program = train_program("eye", 4, "gbdt", 9);
+    let plan = two_shard_plan(&program);
+    let mut store = tmp.open();
+    // Two artifacts of the same program — with and without a plan —
+    // share the program blob.
+    let id_bare = export_program(&mut store, &program, None).unwrap();
+    let id_plan = export_program(&mut store, &program, Some(&plan)).unwrap();
+    assert_ne!(id_bare, id_plan);
+    let prog_digest =
+        store.load(&id_bare).unwrap().manifest.program_blob().unwrap().digest.clone();
+
+    store.remove(&id_bare).unwrap();
+    let r = store.gc().unwrap();
+    assert!(store.blob_path(&prog_digest).exists(), "shared blob survives first gc");
+    assert_eq!(r.removed_manifests, 1, "bare manifest swept");
+    store.load(&id_plan).expect("remaining artifact still loads after gc");
+
+    store.remove(&id_plan).unwrap();
+    let r = store.gc().unwrap();
+    assert!(r.removed_blobs >= 2, "program + plan blobs swept, got {r:?}");
+    assert!(!store.blob_path(&prog_digest).exists());
+    assert!(store.ls().is_empty());
+    assert!(r.bytes_freed > 0);
+}
+
+/// Cold start through the fleet: `register_from_artifact` with no
+/// explicit config replays the manifest's shard count, passes the
+/// contract 8 verifier gate, and serves bit-identically to an engine
+/// built from the in-memory original.
+#[test]
+fn fleet_register_from_artifact_serves_bit_identically() {
+    let tmp = TmpStore::new("fleet-reg");
+    let program = train_program("churn", 8, "gbdt", 13);
+    let plan = two_shard_plan(&program);
+    let mut store = tmp.open();
+    let id = export_program(&mut store, &program, Some(&plan)).unwrap();
+
+    let fleet = Fleet::new();
+    fleet.register_from_artifact("churn", &store, &id, None).expect("register from artifact");
+    let reference = CamEngine::new(&program);
+    let data = by_name("churn").unwrap().generate_n(64);
+    for i in 0..data.n_rows() {
+        let reply = fleet.infer("churn", data.row(i)).expect("infer");
+        let want = reference.infer_bins(&program.quantizer.bin_row(data.row(i)));
+        assert_eq!(bits2(&[reply.logits]), bits2(&[want]), "row {i}");
+    }
+    // A missing digest is refused without touching the fleet.
+    assert!(fleet.register_from_artifact("ghost", &store, &"0".repeat(64), None).is_err());
+    assert_eq!(fleet.models(), vec!["churn".to_string()]);
+    fleet.shutdown();
+}
+
+/// `swap_to_digest` under sustained concurrent load: every pre-swap
+/// admission is answered by the old program (contract 6 — nothing
+/// dropped across the cutover), every concurrent reply matches exactly
+/// one of the two programs bit-for-bit, and post-swap traffic serves
+/// the artifact-loaded program.
+#[test]
+fn swap_to_digest_under_load_is_bit_exact_and_drops_nothing() {
+    let tmp = TmpStore::new("swap");
+    let p_old = train_program("churn", 8, "gbdt", 21);
+    let p_new = train_program("churn", 8, "gbdt", 22); // different seed → different model
+    let mut store = tmp.open();
+    let id_new = export_program(&mut store, &p_new, Some(&two_shard_plan(&p_new))).unwrap();
+
+    let ref_old = CamEngine::new(&p_old);
+    let ref_new = CamEngine::new(&p_new);
+    let data = by_name("churn").unwrap().generate_n(128);
+    let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i).to_vec()).collect();
+    let bins: Vec<Vec<u16>> = rows.iter().map(|r| p_old.quantizer.bin_row(r)).collect();
+    assert!(
+        bins.iter().any(|b| ref_old.infer_bins(b) != ref_new.infer_bins(b)),
+        "test needs models that disagree somewhere"
+    );
+
+    let fleet = Arc::new(Fleet::new());
+    fleet
+        .register_program("churn", &p_old, ModelConfig::for_program(&p_old).with_queue_cap(0))
+        .unwrap();
+
+    // Backlog admitted strictly before the swap: all old-program replies.
+    let admissions = fleet.submit_batch("churn", &rows).unwrap();
+
+    std::thread::scope(|scope| {
+        // Sustained concurrent traffic racing the swap.
+        for t in 0..2u64 {
+            let fleet = Arc::clone(&fleet);
+            let (ref_old, ref_new) = (&ref_old, &ref_new);
+            let p_old = &p_old;
+            let mut rng = Rng::new(0x5AB + t);
+            scope.spawn(move || {
+                for i in 0..80 {
+                    let row: Vec<f32> =
+                        (0..p_old.n_features).map(|_| rng.f32()).collect();
+                    let reply = fleet.infer("churn", &row).unwrap_or_else(|e| {
+                        panic!("client {t} request {i} dropped during swap: {e}")
+                    });
+                    let b = p_old.quantizer.bin_row(&row);
+                    let (old, new) = (ref_old.infer_bins(&b), ref_new.infer_bins(&b));
+                    assert!(
+                        reply.logits == old || reply.logits == new,
+                        "client {t} request {i}: reply matches neither program"
+                    );
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        fleet.swap_to_digest("churn", &store, &id_new, None).expect("swap to digest");
+    });
+
+    for (i, adm) in admissions.into_iter().enumerate() {
+        let reply = adm
+            .recv()
+            .unwrap_or_else(|e| panic!("pre-swap request {i} dropped across swap: {e}"));
+        assert_eq!(
+            bits2(&[reply.logits]),
+            bits2(&[ref_old.infer_bins(&bins[i])]),
+            "pre-swap request {i} must be served by the old program"
+        );
+    }
+    for (i, row) in rows.iter().take(16).enumerate() {
+        let reply = fleet.infer("churn", row).unwrap();
+        assert_eq!(
+            bits2(&[reply.logits]),
+            bits2(&[ref_new.infer_bins(&bins[i])]),
+            "post-swap request {i} must be served by the artifact-loaded program"
+        );
+    }
+    let stats = fleet.stats();
+    assert_eq!(stats.shed, 0, "queue-cap 0 swap must shed nothing");
+    assert_eq!(stats.models[0].errors, 0);
+    fleet.shutdown();
+}
