@@ -332,6 +332,8 @@ mod tests {
         let row = |name: &str, latency| ModelStats {
             name: name.to_string(),
             shards: 2,
+            epoch: 1,
+            degraded: false,
             admitted: 10,
             shed: 3,
             served: 9,

@@ -111,6 +111,33 @@ pub fn worst_case_discharge_s() -> f64 {
     discharge_time_s(G_MIN_S)
 }
 
+/// Sharpness of the soft match boundary (logistic slope, 1/margin
+/// units). MoS₂ soft-boundary CAMs (arXiv 2507.12384) report a graded,
+/// roughly sigmoidal match-line response near the stored interval edge
+/// instead of the hard step an ideal TCAM gives; β = 4 places the
+/// 98%-confidence point at a margin of ~1 decision unit, matching the
+/// "one quantizer bin ≈ one level margin" scale of the 8-bit deploy grid.
+pub const SOFT_BOUNDARY_BETA: f64 = 4.0;
+
+/// Soft-boundary confidence for a decision made at distance `margin`
+/// from the class boundary (see [`crate::data::Task::decision_margin`]):
+/// the logistic response σ(β·margin) of a soft match boundary.
+///
+/// * `margin = 0` (on the boundary) → 0.5: a coin flip.
+/// * `margin → ∞` (regression / far from the boundary) → 1.0.
+/// * NaN margins (defect-corrupted accumulators) → 0.0, so corrupted
+///   rows surface as zero-confidence instead of poisoning a mean.
+///
+/// Monotone in `margin`; used by the serving layer to flag low-confidence
+/// rows while a repair is in flight (degraded-serving mode).
+pub fn soft_confidence(margin: f32) -> f32 {
+    if margin.is_nan() {
+        return 0.0;
+    }
+    let m = margin as f64;
+    (1.0 / (1.0 + (-SOFT_BOUNDARY_BETA * m).exp())) as f32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,5 +208,23 @@ mod tests {
         assert!((erfc(0.0) - 1.0).abs() < 1e-6);
         assert!(erfc(3.0) < 3e-5);
         assert!((erfc(-3.0) - 2.0).abs() < 3e-5);
+    }
+
+    #[test]
+    fn soft_confidence_shape() {
+        // Boundary → coin flip; monotone; saturates to 1; NaN → 0.
+        assert!((soft_confidence(0.0) - 0.5).abs() < 1e-6);
+        let mut prev = 0.0f32;
+        for m in [0.01f32, 0.1, 0.5, 1.0, 2.0, 10.0] {
+            let c = soft_confidence(m);
+            assert!(c > prev, "confidence not monotone at margin {m}");
+            assert!(c <= 1.0);
+            prev = c;
+        }
+        assert!(soft_confidence(f32::INFINITY) == 1.0);
+        assert_eq!(soft_confidence(f32::NAN), 0.0);
+        // Symmetric distrust below the boundary (never used in serving,
+        // but keeps the function total).
+        assert!(soft_confidence(-1.0) < 0.5);
     }
 }

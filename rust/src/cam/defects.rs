@@ -14,7 +14,7 @@ use super::cell::{MacroCell, SUB_LEVELS};
 use crate::util::Rng;
 
 /// Defect-injection configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DefectSpec {
     /// Fraction of memristor devices flipped (0.0 – 1.0).
     pub memristor_pct: f64,

@@ -1,0 +1,270 @@
+//! Repair driver: background defect-aware retrain → verify → hot swap.
+//!
+//! The self-healing loop's *actuator* (DESIGN.md §"Self-healing"): when
+//! the [`super::monitor`] trips, [`SelfHealer::heal`] runs the full
+//! repair against the live card's tracked defect draw, end to end,
+//! while the route keeps serving in degraded mode:
+//!
+//! 1. **flag** — [`Fleet::set_degraded`] so every reply carries
+//!    `degraded = true` and callers can abstain on low-confidence rows;
+//! 2. **diagnose** — read the exact `(DefectSpec, seed)` draw the card
+//!    is serving through ([`crate::sim::DefectInjector::live_draw`]);
+//!    the engine's defect stream is deterministic per draw, so the
+//!    retrain probe sees precisely the deployed defects;
+//! 3. **retrain** — [`crate::compiler::hat_defect_retrain`] on a
+//!    background thread (traffic keeps flowing through the defective
+//!    card meanwhile): re-fits the affected trees and keeps the best
+//!    pass by defective-deployment score;
+//! 4. **verify** — the repaired program passes the contract-8 static
+//!    verifier gate before anything is published (explicit here because
+//!    the swap ships prebuilt sim-card backends, which bypasses
+//!    `swap_program`'s internal gate);
+//! 5. **export** — optionally into the content-addressed artifact store
+//!    (contract 9), so the repair survives a restart;
+//! 6. **swap** — [`Fleet::swap_backends_expecting`] pinned to the epoch
+//!    diagnosed in step 2: a concurrent operator replacement surfaces as
+//!    a structured error instead of being clobbered. The old server
+//!    drains under contract 6 — zero dropped replies;
+//! 7. **prove** — contract 10: post-swap replies are checked
+//!    bit-identical to `CamEngine::with_defects(&repaired, spec, seed)`,
+//!    the retrained program on the same defective card, before the
+//!    degraded flag clears.
+//!
+//! The caller (probe loop) then re-arms its [`super::HealthMonitor`]
+//! against the repaired deployment via
+//! [`super::HealthMonitor::rearm_with`].
+
+use super::backend::Backend;
+use super::router::{Admission, Fleet, ModelConfig};
+use super::server::BatchPolicy;
+use crate::analysis::{self, VerifyPolicy};
+use crate::artifact::{export_program, ArtifactStore};
+use crate::cam::DefectSpec;
+use crate::compiler::{compile, hat_defect_retrain, CamEngine, CompileOptions};
+use crate::data::Dataset;
+use crate::sim::{CardConfig, ChipConfig, DefectInjector, SimCardBackend};
+use crate::trees::hat::{HatParams, RetrainReport};
+use crate::trees::Ensemble;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Everything a repair needs that is not per-cycle state: the fleet and
+/// route, the training data to retrain on, and how to rebuild + publish
+/// the repaired card.
+pub struct HealContext {
+    pub fleet: Arc<Fleet>,
+    /// Route name the healer owns.
+    pub model: String,
+    /// Training rows for the defect-aware refit.
+    pub train: Dataset,
+    /// Held-out rows scoring each retrain pass (and the contract-10
+    /// probe rows).
+    pub eval: Dataset,
+    pub params: HatParams,
+    pub options: CompileOptions,
+    /// Card model the repaired backend is calibrated against.
+    pub chip: ChipConfig,
+    pub card: CardConfig,
+    /// Serving config of the published replacement route.
+    pub batch_policy: BatchPolicy,
+    pub queue_cap: usize,
+    /// Contract-8 gate for the repaired program.
+    pub verify: VerifyPolicy,
+    /// When set, every repaired program is exported here (contract 9)
+    /// before it goes live.
+    pub store: Option<ArtifactStore>,
+}
+
+/// Outcome of one completed repair cycle.
+#[derive(Clone, Debug)]
+pub struct HealReport {
+    /// Defect draw the repair was made against.
+    pub defects: DefectSpec,
+    pub seed: u64,
+    /// The retrain loop's own report: passes run, affected-tree counts,
+    /// defective-deployment score before → after.
+    pub retrain: RetrainReport,
+    /// Artifact id of the exported repaired program, when a store is
+    /// configured.
+    pub artifact_id: Option<String>,
+    /// Deployment epochs: the defective route that was diagnosed and
+    /// replaced, and the repaired route now live.
+    pub old_epoch: u64,
+    pub new_epoch: u64,
+    /// Rows proven bit-identical to the retrained program post-swap
+    /// (contract 10).
+    pub bit_identity_rows: usize,
+    /// Wall-clock of the whole cycle (degraded-serving window).
+    pub wall_s: f64,
+}
+
+/// The repair driver. One instance owns one route's repair policy;
+/// [`SelfHealer::heal`] runs a full cycle and can be called again for
+/// every subsequent drift verdict (the example runs ≥ 2 autonomous
+/// cycles back to back).
+pub struct SelfHealer {
+    ctx: HealContext,
+    history: Vec<HealReport>,
+}
+
+/// Rows checked for post-swap bit-identity (capped by the eval set).
+const BIT_IDENTITY_ROWS: usize = 64;
+
+impl SelfHealer {
+    pub fn new(ctx: HealContext) -> SelfHealer {
+        SelfHealer { ctx, history: Vec::new() }
+    }
+
+    /// Completed repair cycles, oldest first.
+    pub fn history(&self) -> &[HealReport] {
+        &self.history
+    }
+
+    /// Run one full repair cycle against the live route. `current` is
+    /// the deployed ensemble (the healer returns its repaired successor
+    /// for the next cycle) and `injector` the live card's defect hook.
+    ///
+    /// On success the repaired program is live, serving bit-identically
+    /// to `CamEngine::with_defects(&repaired, spec, seed)` (contract
+    /// 10), and the degraded flag is cleared. On failure the defective
+    /// route keeps serving **with the degraded flag still set** — wrong
+    /// answers stay flagged until a later repair lands.
+    pub fn heal(
+        &mut self,
+        current: Ensemble,
+        injector: &Arc<DefectInjector>,
+    ) -> Result<(Ensemble, Arc<DefectInjector>, HealReport), String> {
+        let t0 = Instant::now();
+        let fleet = self.ctx.fleet.clone();
+        let model = self.ctx.model.clone();
+
+        // Pin the deployment being repaired: the swap below is
+        // compare-and-swap'd against this epoch.
+        let old_epoch = fleet
+            .route_epoch(&model)
+            .ok_or_else(|| format!("unknown model `{model}`"))?;
+        fleet.set_degraded(&model, true)?;
+
+        let (spec, seed) = injector.live_draw().ok_or_else(|| {
+            format!("model `{model}` tripped the monitor but its card reports no defect draw")
+        })?;
+
+        // Background retrain; live traffic keeps flowing through the
+        // (degraded-flagged) defective card while this thread works.
+        let ctx = &self.ctx;
+        let (repaired, retrain) = std::thread::scope(|s| {
+            s.spawn(|| {
+                hat_defect_retrain(
+                    &ctx.train,
+                    &ctx.eval,
+                    current,
+                    &ctx.params,
+                    &ctx.options,
+                    spec,
+                    seed,
+                )
+            })
+            .join()
+        })
+        .map_err(|_| "defect-retrain thread panicked".to_string())?
+        .map_err(|e| format!("defect retrain for `{model}` failed: {e}"))?;
+
+        let program = compile(&repaired, &self.ctx.options)
+            .map_err(|e| format!("compiling repaired `{model}`: {e}"))?;
+
+        // Contract 8: the repaired program must be verify-clean before
+        // it is published. Explicit, because the swap below ships
+        // prebuilt sim-card backends (the path that skips the fleet's
+        // internal program gate).
+        if self.ctx.verify != VerifyPolicy::Skip {
+            let report = analysis::verify_program(&program);
+            if let Some(f) = self.ctx.verify.blocks(&report) {
+                return Err(format!(
+                    "static verifier refused repaired `{model}` ({} deny, {} warn): {f}",
+                    report.deny_count(),
+                    report.warn_count()
+                ));
+            }
+        }
+
+        let artifact_id = match &mut self.ctx.store {
+            Some(store) => Some(
+                export_program(store, &program, None)
+                    .map_err(|e| format!("exporting repaired `{model}`: {e}"))?,
+            ),
+            None => None,
+        };
+
+        // The repaired program deploys onto the *same defective card*:
+        // the fresh backend is struck with the diagnosed draw before its
+        // first batch, exactly the deployment `hat_defect_retrain`
+        // optimized (its probe scores candidates through
+        // `with_defects(candidate, spec, seed)`).
+        let new_injector = DefectInjector::new();
+        new_injector.strike(spec, seed);
+        let backend = SimCardBackend::new(&program, &self.ctx.chip, &self.ctx.card)
+            .with_injector(new_injector.clone());
+        let cfg = ModelConfig::for_program(&program)
+            .with_policy(self.ctx.batch_policy)
+            .with_queue_cap(self.ctx.queue_cap)
+            .with_verify(self.ctx.verify);
+
+        fleet.swap_backends_expecting(
+            &model,
+            old_epoch,
+            vec![Box::new(backend) as Box<dyn Backend>],
+            Vec::new(),
+            cfg,
+        )?;
+        let new_epoch = fleet
+            .route_epoch(&model)
+            .ok_or_else(|| format!("model `{model}` vanished right after its swap"))?;
+
+        // Contract 10: post-swap replies are bit-identical to the
+        // retrained program on the diagnosed defect draw. Shed rows are
+        // retried (the check competes with live traffic for queue
+        // slots); an error reply or a single diverging logit fails the
+        // cycle.
+        let reference = CamEngine::with_defects(&program, spec, seed);
+        let n_check = BIT_IDENTITY_ROWS.min(self.ctx.eval.n_rows());
+        for i in 0..n_check {
+            let row = self.ctx.eval.row(i);
+            let reply = loop {
+                match fleet.submit(&model, row)? {
+                    Admission::Accepted(rx) => {
+                        break rx
+                            .recv()
+                            .map_err(|_| "worker dropped a contract-10 probe".to_string())?
+                    }
+                    Admission::Shed { .. } => std::thread::yield_now(),
+                }
+            };
+            if let Some(e) = reply.error {
+                return Err(format!("contract-10 probe row {i} failed: {e}"));
+            }
+            let want = reference.infer_bins(&program.quantizer.bin_row(row));
+            if reply.logits != want {
+                return Err(format!(
+                    "contract 10 violated: post-swap reply for row {i} diverges from the \
+                     retrained program ({:?} != {want:?})",
+                    reply.logits
+                ));
+            }
+        }
+
+        fleet.set_degraded(&model, false)?;
+
+        let report = HealReport {
+            defects: spec,
+            seed,
+            retrain,
+            artifact_id,
+            old_epoch,
+            new_epoch,
+            bit_identity_rows: n_check,
+            wall_s: t0.elapsed().as_secs_f64(),
+        };
+        self.history.push(report.clone());
+        Ok((repaired, new_injector, report))
+    }
+}

@@ -38,11 +38,17 @@
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod backend;
+pub mod healer;
+pub mod monitor;
 pub mod router;
 pub mod server;
 
 pub use crate::analysis::VerifyPolicy;
 pub use backend::{Backend, CpuExactBackend, FunctionalBackend, XlaBackend};
+pub use healer::{HealContext, HealReport, SelfHealer};
+pub use monitor::{
+    CanarySet, DriftConfig, DriftDetector, DriftVerdict, HealthMonitor, HealthReading,
+};
 pub use router::{
     AdmitSlot, Admission, Fleet, FleetStats, ModelConfig, ModelStats, RouteHandle, Router,
     DEFAULT_QUEUE_CAP,

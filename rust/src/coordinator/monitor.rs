@@ -1,0 +1,296 @@
+//! Health monitor: closed-loop defect-drift detection on a live route.
+//!
+//! The self-healing loop's *sensor* (DESIGN.md §"Self-healing"): a
+//! [`CanarySet`] of held-out rows with reference predictions pinned at
+//! deployment time is periodically shadow-scored through the fleet, and
+//! the agreement fraction — diluted by any backend errors the route's
+//! [`super::ModelStats`] accrued since the last probe — feeds a
+//! thresholded, hysteretic [`DriftDetector`]. A card whose analog CAM
+//! cells pick up memristor defects (paper §V-A; injected mid-serve via
+//! [`crate::sim::DefectInjector`]) starts contradicting its own pinned
+//! predictions; `K` consecutive breaches below the trigger trip the
+//! detector, and the [`super::healer`] takes over.
+//!
+//! Detection is *label-free*: the canary references are the deployed
+//! model's own answers on frozen rows, so drift means "the silicon no
+//! longer computes the program we verified", not "the world changed".
+//! That is exactly the failure the defect-aware retrain loop
+//! ([`crate::compiler::hat_defect_retrain`]) can repair.
+//!
+//! The detector is a pure state machine (no clocks, no I/O): probes are
+//! whatever cadence the caller drives, which keeps every transition unit
+//! testable (`rust/tests/self_heal.rs`) and the monitor reusable from a
+//! test, the example's probe thread, or an operator loop.
+
+use super::router::Fleet;
+
+/// Thresholds and pacing of the drift detector.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftConfig {
+    /// A probe with agreement strictly below this fraction is a breach.
+    pub trigger_below: f64,
+    /// Hysteresis: a suspect route is considered healthy again only at
+    /// agreement at or above this (must be ≥ `trigger_below`; probes in
+    /// the band between neither breach nor clear — no flapping on
+    /// borderline drift).
+    pub clear_above: f64,
+    /// Consecutive breaches required to trip (≥ 1). One noisy probe —
+    /// a shed canary row, a transient shard error — must not trigger a
+    /// retrain.
+    pub breaches_to_trip: usize,
+    /// Cold-start grace: this many initial probes are observed but never
+    /// counted as breaches, so a route still filling its caches (or a
+    /// just-repaired deployment warming up) cannot trip spuriously.
+    pub grace_probes: usize,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            trigger_below: 0.90,
+            clear_above: 0.97,
+            breaches_to_trip: 2,
+            grace_probes: 1,
+        }
+    }
+}
+
+/// Outcome of one probe observation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftVerdict {
+    /// Within the cold-start grace window; nothing counted.
+    Grace,
+    /// Agreement at or above `clear_above` (or in the hysteresis band
+    /// with no breach streak in progress).
+    Healthy,
+    /// Breaches have started but the trip threshold is not reached, or
+    /// the probe landed in the hysteresis band mid-streak.
+    Suspect {
+        /// Consecutive breaches so far.
+        breaches: usize,
+    },
+    /// This probe tripped the detector: drift is confirmed, repair
+    /// should start. Emitted exactly once per trip.
+    Drift,
+    /// Already tripped (repair presumably in flight); stays until
+    /// [`DriftDetector::rearm`].
+    Tripped,
+}
+
+/// Thresholded + hysteretic drift detector (pure state machine).
+///
+/// Trip rule: after the grace window, `breaches_to_trip` *consecutive*
+/// probes below `trigger_below`. Probes in the hysteresis band
+/// `[trigger_below, clear_above)` neither extend nor reset the streak —
+/// a route hovering at the boundary stays `Suspect` instead of flapping
+/// between healthy and tripped. Only agreement ≥ `clear_above` resets
+/// the streak. Once tripped, the detector reports [`DriftVerdict::Tripped`]
+/// until [`DriftDetector::rearm`] (called by the healer after the
+/// repaired program is live), which also restarts the grace window.
+#[derive(Debug)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    probes_seen: usize,
+    breaches: usize,
+    tripped: bool,
+}
+
+impl DriftDetector {
+    /// Panics if the config is incoherent (`clear_above < trigger_below`
+    /// would invert the hysteresis band; zero breaches would trip on
+    /// nothing).
+    pub fn new(cfg: DriftConfig) -> DriftDetector {
+        assert!(
+            cfg.clear_above >= cfg.trigger_below,
+            "clear_above ({}) must be >= trigger_below ({})",
+            cfg.clear_above,
+            cfg.trigger_below
+        );
+        assert!(cfg.breaches_to_trip >= 1, "breaches_to_trip must be >= 1");
+        DriftDetector { cfg, probes_seen: 0, breaches: 0, tripped: false }
+    }
+
+    /// Feed one probe's agreement fraction (`[0, 1]`); returns the
+    /// verdict for this observation.
+    pub fn observe(&mut self, agreement: f64) -> DriftVerdict {
+        self.probes_seen += 1;
+        if self.tripped {
+            return DriftVerdict::Tripped;
+        }
+        if self.probes_seen <= self.cfg.grace_probes {
+            return DriftVerdict::Grace;
+        }
+        if agreement < self.cfg.trigger_below {
+            self.breaches += 1;
+            if self.breaches >= self.cfg.breaches_to_trip {
+                self.tripped = true;
+                return DriftVerdict::Drift;
+            }
+            return DriftVerdict::Suspect { breaches: self.breaches };
+        }
+        if agreement >= self.cfg.clear_above {
+            self.breaches = 0;
+            return DriftVerdict::Healthy;
+        }
+        // Hysteresis band: hold the streak where it is.
+        if self.breaches > 0 {
+            DriftVerdict::Suspect { breaches: self.breaches }
+        } else {
+            DriftVerdict::Healthy
+        }
+    }
+
+    /// Whether the detector is currently tripped.
+    pub fn is_tripped(&self) -> bool {
+        self.tripped
+    }
+
+    /// Reset after a repair: clears the trip and the breach streak and
+    /// restarts the cold-start grace window for the new deployment.
+    pub fn rearm(&mut self) {
+        self.tripped = false;
+        self.breaches = 0;
+        self.probes_seen = 0;
+    }
+
+    pub fn config(&self) -> DriftConfig {
+        self.cfg
+    }
+}
+
+/// Held-out canary rows with pinned reference predictions: the
+/// shadow-scoring probe's ground truth. References are the *deployed
+/// route's own* answers at pin time, so agreement measures "does the
+/// silicon still compute what we verified it computing", independent of
+/// labels.
+pub struct CanarySet {
+    rows: Vec<Vec<f32>>,
+    reference: Vec<f32>,
+}
+
+impl CanarySet {
+    /// Pin `rows` against the live route: each row is scored once
+    /// through the fleet and its prediction frozen as the reference.
+    /// Errors if any canary row fails to score (a canary that cannot be
+    /// served is no baseline).
+    pub fn pin(fleet: &Fleet, model: &str, rows: Vec<Vec<f32>>) -> Result<CanarySet, String> {
+        if rows.is_empty() {
+            return Err("canary set needs at least one row".to_string());
+        }
+        let mut set = CanarySet { rows, reference: Vec::new() };
+        set.repin(fleet, model)?;
+        Ok(set)
+    }
+
+    /// Re-freeze the references against the (possibly just-swapped)
+    /// live route. The healer calls this after publishing a repaired
+    /// program so subsequent probes compare against the new deployment.
+    pub fn repin(&mut self, fleet: &Fleet, model: &str) -> Result<(), String> {
+        let mut reference = Vec::with_capacity(self.rows.len());
+        for (i, admission) in fleet.infer_batch(model, &self.rows)?.into_iter().enumerate() {
+            let reply = admission.map_err(|e| format!("pinning canary row {i}: {e}"))?;
+            reference.push(reply.prediction);
+        }
+        self.reference = reference;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Shadow-score the canaries through the live route and return the
+    /// fraction agreeing with the pinned references. Shed or errored
+    /// rows count as disagreement — a card that cannot answer its
+    /// canaries is not healthy.
+    pub fn agreement(&self, fleet: &Fleet, model: &str) -> Result<f64, String> {
+        let replies = fleet.infer_batch(model, &self.rows)?;
+        let agree = replies
+            .into_iter()
+            .zip(&self.reference)
+            .filter(|(reply, want)| match reply {
+                Ok(r) => r.prediction == **want,
+                Err(_) => false,
+            })
+            .count();
+        Ok(agree as f64 / self.rows.len() as f64)
+    }
+}
+
+/// One probe's measurements plus the detector's verdict.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthReading {
+    /// Canary agreement fraction, before error dilution.
+    pub agreement: f64,
+    /// Effective agreement fed to the detector (canary agreement diluted
+    /// by route errors accrued since the previous probe).
+    pub effective_agreement: f64,
+    /// Route error-reply delta since the previous probe
+    /// ([`super::ModelStats::errors`]).
+    pub error_delta: u64,
+    pub verdict: DriftVerdict,
+}
+
+/// The complete sensor: canary shadow-scoring plus per-route error
+/// counters, folded through a [`DriftDetector`].
+///
+/// Error folding: `n` error replies since the last probe are treated as
+/// `n` extra failed canaries — `effective = agree / (canaries + n)` —
+/// so a defect storm that surfaces as backend errors (not just wrong
+/// predictions) accelerates the trip instead of hiding from the canary
+/// sample.
+pub struct HealthMonitor {
+    canary: CanarySet,
+    detector: DriftDetector,
+    last_errors: u64,
+}
+
+impl HealthMonitor {
+    pub fn new(canary: CanarySet, cfg: DriftConfig) -> HealthMonitor {
+        HealthMonitor { canary, detector: DriftDetector::new(cfg), last_errors: 0 }
+    }
+
+    /// Run one probe against the live route.
+    pub fn probe(&mut self, fleet: &Fleet, model: &str) -> Result<HealthReading, String> {
+        let agreement = self.canary.agreement(fleet, model)?;
+        let errors = fleet
+            .model_stats(model)
+            .map(|s| s.errors)
+            .ok_or_else(|| format!("unknown model `{model}`"))?;
+        // A swap resets the route's counters; saturating keeps the delta
+        // sane across the reset (the fresh route starts at zero).
+        let error_delta = errors.saturating_sub(self.last_errors);
+        self.last_errors = errors;
+        let n = self.canary.len() as f64;
+        let effective_agreement = agreement * n / (n + error_delta as f64);
+        let verdict = self.detector.observe(effective_agreement);
+        Ok(HealthReading { agreement, effective_agreement, error_delta, verdict })
+    }
+
+    /// Whether the detector is tripped (repair needed / in flight).
+    pub fn is_tripped(&self) -> bool {
+        self.detector.is_tripped()
+    }
+
+    /// Post-repair reset: re-pin the canary references against the
+    /// repaired live route, zero the error baseline, and rearm the
+    /// detector (fresh grace window).
+    pub fn rearm_with(&mut self, fleet: &Fleet, model: &str) -> Result<(), String> {
+        self.canary.repin(fleet, model)?;
+        self.last_errors = fleet.model_stats(model).map(|s| s.errors).unwrap_or(0);
+        self.detector.rearm();
+        Ok(())
+    }
+
+    pub fn detector(&self) -> &DriftDetector {
+        &self.detector
+    }
+
+    pub fn canary(&self) -> &CanarySet {
+        &self.canary
+    }
+}

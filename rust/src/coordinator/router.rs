@@ -168,6 +168,11 @@ struct Route {
     server: Server,
     cfg: ModelConfig,
     n_features: usize,
+    /// Fleet-unique deployment generation: every publish (register or
+    /// swap) of a name gets a fresh epoch, so a caller that observed one
+    /// deployment can detect that a concurrent operator replaced it
+    /// ([`Fleet::swap_backends_expecting`]).
+    epoch: u64,
     /// Requests admitted whose reply has not been sent yet (the ticket
     /// gauge; see [`QueueTicket`]).
     depth: Arc<AtomicUsize>,
@@ -180,6 +185,7 @@ impl Route {
         backends: Vec<Box<dyn Backend>>,
         base_score: Vec<f32>,
         cfg: ModelConfig,
+        epoch: u64,
     ) -> Result<Route, String> {
         if backends.is_empty() {
             return Err("a route needs at least one backend".to_string());
@@ -190,6 +196,7 @@ impl Route {
             server,
             cfg,
             n_features,
+            epoch,
             depth: Arc::new(AtomicUsize::new(0)),
             admitted: AtomicU64::new(0),
             shed: AtomicU64::new(0),
@@ -201,6 +208,8 @@ impl Route {
         ModelStats {
             name: name.to_string(),
             shards: s.shards.len(),
+            epoch: self.epoch,
+            degraded: self.server.is_degraded(),
             admitted: self.admitted.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             served: self.server.latency_samples_seen(),
@@ -223,6 +232,11 @@ pub struct ModelStats {
     pub name: String,
     /// Worker backends in the route's pool.
     pub shards: usize,
+    /// Deployment generation of this route (see [`Fleet::route_epoch`]).
+    pub epoch: u64,
+    /// True while the route serves in degraded mode (a repair is in
+    /// flight; replies carry `degraded = true`).
+    pub degraded: bool,
     /// Requests that passed admission.
     pub admitted: u64,
     /// Requests refused at the queue bound (never enqueued).
@@ -269,6 +283,8 @@ pub struct Fleet {
     routes: RwLock<Routes>,
     total_admitted: AtomicU64,
     total_shed: AtomicU64,
+    /// Monotonic deployment-epoch allocator (first epoch is 1).
+    epoch_counter: AtomicU64,
 }
 
 type Routes = BTreeMap<String, Arc<Route>>;
@@ -324,7 +340,7 @@ impl Fleet {
         base_score: Vec<f32>,
         cfg: ModelConfig,
     ) -> Result<(), String> {
-        let route = Route::start(backends, base_score, cfg)?;
+        let route = Route::start(backends, base_score, cfg, self.next_epoch())?;
         let mut routes = routes_write(&self.routes);
         if routes.contains_key(name) {
             // The fresh route has seen no traffic; dropping it just
@@ -375,7 +391,13 @@ impl Fleet {
         self.swap_backends(name, backends, base_score, cfg)
     }
 
-    /// [`Fleet::swap_program`] for an explicit backend pool.
+    /// [`Fleet::swap_program`] for an explicit backend pool. The
+    /// deployment observed at entry is the one replaced: the current
+    /// epoch is captured before the new pool spins up and rechecked
+    /// under the write lock ([`Fleet::swap_backends_expecting`]), so a
+    /// concurrent `unregister` + `register_from_artifact` of the same
+    /// name surfaces as a structured error instead of being silently
+    /// clobbered by this swap.
     pub fn swap_backends(
         &self,
         name: &str,
@@ -383,14 +405,46 @@ impl Fleet {
         base_score: Vec<f32>,
         cfg: ModelConfig,
     ) -> Result<(), String> {
-        let fresh = Route::start(backends, base_score, cfg)?;
+        let expected = self.route(name).map_err(|_| {
+            format!("cannot swap unknown model `{name}`; register it first")
+        })?;
+        self.swap_backends_expecting(name, expected.epoch, backends, base_score, cfg)
+    }
+
+    /// Compare-and-swap variant of [`Fleet::swap_backends`]: replace the
+    /// route only if it is still the deployment generation the caller
+    /// observed (`expected_epoch`, from [`Fleet::route_epoch`] or
+    /// [`ModelStats::epoch`]). If the name was concurrently unregistered
+    /// or re-registered (a different epoch is live), the swap is refused
+    /// with a structured error, the freshly built pool is torn down
+    /// untraffic'd, and the live route keeps serving — no silent
+    /// last-writer-wins. The self-healing repair driver publishes
+    /// through this, pinning the deployment it diagnosed.
+    pub fn swap_backends_expecting(
+        &self,
+        name: &str,
+        expected_epoch: u64,
+        backends: Vec<Box<dyn Backend>>,
+        base_score: Vec<f32>,
+        cfg: ModelConfig,
+    ) -> Result<(), String> {
+        let fresh = Route::start(backends, base_score, cfg, self.next_epoch())?;
         let old = {
             let mut routes = routes_write(&self.routes);
             match routes.get_mut(name) {
+                Some(slot) if slot.epoch != expected_epoch => {
+                    return Err(format!(
+                        "cannot swap model `{name}`: deployment changed concurrently \
+                         (expected epoch {expected_epoch}, live epoch {}); \
+                         re-read the route and retry",
+                        slot.epoch
+                    ));
+                }
                 Some(slot) => std::mem::replace(slot, Arc::new(fresh)),
                 None => {
                     return Err(format!(
-                        "cannot swap unknown model `{name}`; register it first"
+                        "cannot swap model `{name}`: it was concurrently unregistered \
+                         (expected epoch {expected_epoch})"
                     ))
                 }
             }
@@ -448,6 +502,63 @@ impl Fleet {
             .ok_or_else(|| format!("cannot unregister unknown model `{name}`"))?;
         drain_route(old);
         Ok(())
+    }
+
+    /// Compare-and-unregister: remove the route only if it is still the
+    /// deployment the caller observed. A concurrent re-registration (new
+    /// epoch) is refused with a structured error and keeps serving — the
+    /// guard that stops an operator's stale unload from tearing down a
+    /// model someone else just published under the same name.
+    pub fn unregister_expecting(&self, name: &str, expected_epoch: u64) -> Result<(), String> {
+        let old = {
+            let mut routes = routes_write(&self.routes);
+            match routes.get(name) {
+                None => {
+                    return Err(format!(
+                        "cannot unregister model `{name}`: it was concurrently \
+                         unregistered (expected epoch {expected_epoch})"
+                    ))
+                }
+                Some(route) if route.epoch != expected_epoch => {
+                    return Err(format!(
+                        "cannot unregister model `{name}`: deployment changed \
+                         concurrently (expected epoch {expected_epoch}, live epoch {})",
+                        route.epoch
+                    ));
+                }
+                // Invariant: checked present above; remove under the
+                // same write guard cannot miss.
+                #[allow(clippy::expect_used)]
+                Some(_) => routes.remove(name).expect("checked present under write lock"),
+            }
+        };
+        drain_route(old);
+        Ok(())
+    }
+
+    /// Deployment generation currently live for `name` (`None` if
+    /// unknown). Epochs are fleet-unique and monotonic: every register
+    /// or swap publishes a fresh one, so two reads returning the same
+    /// epoch bracket an interval with no replacement in between. Pin
+    /// one, then publish with [`Fleet::swap_backends_expecting`] /
+    /// [`Fleet::unregister_expecting`] to act only on the deployment
+    /// you diagnosed.
+    pub fn route_epoch(&self, name: &str) -> Option<u64> {
+        routes_read(&self.routes).get(name).map(|r| r.epoch)
+    }
+
+    /// Flip degraded-serving mode on a live route: while set, every
+    /// reply the route produces carries `degraded = true` (and its
+    /// [`ModelStats::degraded`] reads true), telling callers to treat
+    /// low-confidence answers with suspicion until the repair lands.
+    pub fn set_degraded(&self, name: &str, on: bool) -> Result<(), String> {
+        let route = self.route(name)?;
+        route.server.set_degraded(on);
+        Ok(())
+    }
+
+    fn next_epoch(&self) -> u64 {
+        self.epoch_counter.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Registered model names (sorted).

@@ -30,7 +30,7 @@
 use super::backend::Backend;
 use crate::compiler::apply_base;
 use crate::util::stats::{Reservoir, Summary};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
@@ -148,6 +148,16 @@ impl Request {
 pub struct Reply {
     pub logits: Vec<f32>,
     pub prediction: f32,
+    /// Soft-boundary confidence in the prediction, `[0, 1]`: the MoS₂
+    /// graded match-line response ([`crate::cam::analog::soft_confidence`])
+    /// of the task's decision margin. 1.0 for regression (point
+    /// predictions have no boundary), 0.5 on the class boundary, 0.0 for
+    /// error replies. During a degraded-serving window callers can
+    /// flag/abstain on low-confidence rows instead of trusting them.
+    pub confidence: f32,
+    /// True when the route was serving in degraded mode (a defect was
+    /// detected and a repair is in flight) when this reply was produced.
+    pub degraded: bool,
     /// Time spent queued + batched + inferred, as measured by the server.
     pub latency: Duration,
     /// Size of the device batch this request rode in.
@@ -162,6 +172,12 @@ impl Reply {
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
     }
+}
+
+/// Per-row confidence attached to every successful reply: the
+/// soft-boundary response of the decision margin.
+fn confidence_of(task: crate::data::Task, logits: &[f32]) -> f32 {
+    crate::cam::analog::soft_confidence(task.decision_margin(logits))
 }
 
 /// Aggregated server-side counters.
@@ -278,6 +294,9 @@ pub struct Server {
     shard_counters: Arc<Vec<ShardCounter>>,
     latencies: Arc<Mutex<Reservoir>>,
     n_features: usize,
+    /// Degraded-serving flag (a repair is in flight); stamped onto every
+    /// reply so callers can see which answers rode a defective card.
+    degraded: Arc<AtomicBool>,
 }
 
 /// Collect a batch: `first` plus whatever arrives before `max_batch` fills
@@ -358,9 +377,12 @@ impl Server {
             LATENCY_RESERVOIR_SEED,
         )));
 
+        let degraded = Arc::new(AtomicBool::new(false));
+
         let c2 = counters.clone();
         let s2 = shard_counters.clone();
         let l2 = latencies.clone();
+        let d2 = degraded.clone();
 
         if backends.len() == 1 {
             // Single-card fast path: the worker owns the backend and
@@ -394,11 +416,14 @@ impl Server {
                             c2.batches.fetch_add(1, Ordering::Relaxed);
                             c2.batch_rows.fetch_add(pending.len() as u64, Ordering::Relaxed);
                             let mut lat_log = lock_clean(&l2);
+                            let deg = d2.load(Ordering::Relaxed);
                             for (req, l) in pending.into_iter().zip(logits) {
                                 let latency = req.enqueued.elapsed();
                                 lat_log.push(latency.as_secs_f64());
                                 let _ = req.reply.send(Reply {
                                     prediction: task.decide(&l),
+                                    confidence: confidence_of(task, &l),
+                                    degraded: deg,
                                     logits: l,
                                     latency,
                                     batch_size: batch.len(),
@@ -413,10 +438,13 @@ impl Server {
                             c2.errors.fetch_add(pending.len() as u64, Ordering::Relaxed);
                             s2[0].set_last_error(msg.clone());
                             eprintln!("backend error (batch dropped): {msg}");
+                            let deg = d2.load(Ordering::Relaxed);
                             for req in pending {
                                 let _ = req.reply.send(Reply {
                                     logits: Vec::new(),
                                     prediction: f32::NAN,
+                                    confidence: 0.0,
+                                    degraded: deg,
                                     latency: req.enqueued.elapsed(),
                                     batch_size: batch.len(),
                                     error: Some(msg.clone()),
@@ -434,6 +462,7 @@ impl Server {
                 shard_counters,
                 latencies,
                 n_features,
+                degraded,
             };
         }
 
@@ -525,10 +554,13 @@ impl Server {
                         let msg = failures.join("; ");
                         c2.errors.fetch_add(n_rows as u64, Ordering::Relaxed);
                         eprintln!("sharded batch failed ({msg}); returning error replies");
+                        let deg = d2.load(Ordering::Relaxed);
                         for req in reqs {
                             let _ = req.reply.send(Reply {
                                 logits: Vec::new(),
                                 prediction: f32::NAN,
+                                confidence: 0.0,
+                                degraded: deg,
                                 latency: req.enqueued.elapsed(),
                                 batch_size: n_rows,
                                 error: Some(msg.clone()),
@@ -544,6 +576,7 @@ impl Server {
                 c2.batches.fetch_add(1, Ordering::Relaxed);
                 c2.batch_rows.fetch_add(n_rows as u64, Ordering::Relaxed);
                 let mut lat_log = lock_clean(&l2);
+                let deg = d2.load(Ordering::Relaxed);
                 for (i, req) in reqs.into_iter().enumerate() {
                     let mut total: Vec<f64> = Vec::new();
                     for p in shard_partials.iter() {
@@ -562,6 +595,8 @@ impl Server {
                     lat_log.push(latency.as_secs_f64());
                     let _ = req.reply.send(Reply {
                         prediction: task.decide(&logits),
+                        confidence: confidence_of(task, &logits),
+                        degraded: deg,
                         logits,
                         latency,
                         batch_size: n_rows,
@@ -580,7 +615,20 @@ impl Server {
             shard_counters,
             latencies,
             n_features,
+            degraded,
         }
+    }
+
+    /// Flip degraded-serving mode: subsequent replies carry
+    /// `degraded = true` until cleared. Set by the self-healing driver
+    /// while a repair is in flight ([`crate::coordinator::healer`]).
+    pub fn set_degraded(&self, on: bool) {
+        self.degraded.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether the server is currently flagged degraded.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
     }
 
     /// Number of worker backends in the pool.

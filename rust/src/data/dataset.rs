@@ -75,6 +75,36 @@ impl Task {
             }
         }
     }
+
+    /// Distance of `logits` from the decision boundary of
+    /// [`Task::decide`]: |logit| (the log-odds magnitude) for binary,
+    /// top-1 minus top-2 logit for multi-class, and +∞ for regression
+    /// (a point prediction has no boundary to be near). Empty logits —
+    /// an errored reply — are on the boundary (margin 0).
+    ///
+    /// Feeds [`crate::cam::analog::soft_confidence`] so the serving
+    /// layer can attach a per-row confidence to every reply.
+    pub fn decision_margin(&self, logits: &[f32]) -> f32 {
+        match self {
+            Task::Regression => f32::INFINITY,
+            Task::Binary => logits.first().map_or(0.0, |l| l.abs()),
+            Task::MultiClass(_) => {
+                if logits.len() < 2 {
+                    return 0.0;
+                }
+                let (mut top1, mut top2) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+                for &l in logits {
+                    if l > top1 {
+                        top2 = top1;
+                        top1 = l;
+                    } else if l > top2 {
+                        top2 = l;
+                    }
+                }
+                top1 - top2
+            }
+        }
+    }
 }
 
 /// Row-major dense tabular dataset. Labels are class indices for
@@ -204,5 +234,16 @@ mod tests {
     #[should_panic(expected = "shape mismatch")]
     fn shape_mismatch_panics() {
         Dataset::new("bad", Task::Binary, 3, vec![0.0; 7], vec![0.0; 2]);
+    }
+
+    #[test]
+    fn decision_margins() {
+        assert_eq!(Task::Regression.decision_margin(&[3.2]), f32::INFINITY);
+        assert_eq!(Task::Binary.decision_margin(&[-1.5]), 1.5);
+        assert_eq!(Task::Binary.decision_margin(&[]), 0.0);
+        let m = Task::MultiClass(3).decision_margin(&[0.1, 2.0, 1.25]);
+        assert!((m - 0.75).abs() < 1e-6);
+        // Tied top-2 → on the boundary.
+        assert_eq!(Task::MultiClass(2).decision_margin(&[1.0, 1.0]), 0.0);
     }
 }

@@ -4,12 +4,20 @@
 //! that wants to talk to a [`super::listener::WireServer`] without
 //! hand-rolling frames. Deliberately synchronous — the load generator
 //! gets concurrency from worker threads, not from multiplexing.
+//!
+//! Transient faults: [`RetryPolicy`] bounds reconnect/retry behavior.
+//! Connects retry on refusal with exponential backoff + deterministic
+//! jitter; a *request* is retried only when it is provably safe — the
+//! request frame was never (even partially) written to the socket, so
+//! the server cannot have seen it and a retry cannot double-submit.
+//! Once a single byte is out, the request's fate is unknown and the
+//! error is surfaced instead ([`WireClient::request_with_retry`]).
 
-use super::frame::{
-    decode_reply, encode_request, read_frame, write_frame, ReplyFrame, RowOutcome,
-};
-use std::io;
+use super::frame::{decode_reply, encode_request, read_frame, ReplyFrame, RowOutcome};
+use crate::util::Rng;
+use std::io::{self, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 /// A decoded batch reply: per-row outcomes in request order plus the
 /// route's admitted-but-unanswered gauge observed after the batch.
@@ -19,10 +27,85 @@ pub struct BatchReply {
     pub rows: Vec<RowOutcome>,
 }
 
+/// Bounded exponential backoff with jitter for transient transport
+/// faults (connection refused, reset before any request byte left).
+///
+/// Attempt `k` (0-based) sleeps a uniform draw from
+/// `[backoff/2, backoff]` where `backoff = min(base · 2^k, max)` — full
+/// exponential growth, half-window jitter so a thundering herd of
+/// clients decorrelates. The jitter stream is seeded per policy value,
+/// so tests are reproducible.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = fail fast, no retry).
+    pub max_retries: u32,
+    /// First backoff ceiling (µs).
+    pub base_backoff_us: u64,
+    /// Backoff ceiling growth stops here (µs).
+    pub max_backoff_us: u64,
+    /// Seed of the deterministic jitter stream.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff_us: 5_000,
+            max_backoff_us: 200_000,
+            jitter_seed: 0x7E7B,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never retries (the plain-`request` behavior).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_retries: 0, ..RetryPolicy::default() }
+    }
+
+    /// Jittered backoff for 0-based `attempt`: uniform in
+    /// `[ceiling/2, ceiling]`, `ceiling = min(base · 2^attempt, max)`.
+    pub fn backoff_us(&self, attempt: u32, rng: &mut Rng) -> u64 {
+        let ceiling = self
+            .base_backoff_us
+            .saturating_mul(1u64 << attempt.min(32))
+            .min(self.max_backoff_us)
+            .max(1);
+        let half = ceiling / 2;
+        half + rng.below(ceiling - half + 1)
+    }
+}
+
+/// `write_all` with explicit progress accounting: returns how many
+/// bytes actually reached the socket alongside the error, which is the
+/// fact the retry decision needs (`written == 0` ⇒ the server cannot
+/// have seen the request ⇒ a resend cannot double-submit).
+/// `std::io::Write::write_all` discards this.
+fn write_all_tracked(w: &mut impl Write, buf: &[u8]) -> (usize, io::Result<()>) {
+    let mut written = 0usize;
+    while written < buf.len() {
+        match w.write(&buf[written..]) {
+            Ok(0) => {
+                return (
+                    written,
+                    Err(io::Error::new(io::ErrorKind::WriteZero, "connection closed mid-frame")),
+                )
+            }
+            Ok(n) => written += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return (written, Err(e)),
+        }
+    }
+    (written, w.flush())
+}
+
 /// Blocking client over one TCP connection. Request ids are assigned
 /// sequentially per connection and checked against the reply's echo.
 pub struct WireClient {
     stream: TcpStream,
+    /// Peer address, kept for transparent reconnects.
+    addr: String,
     next_id: u64,
 }
 
@@ -31,7 +114,27 @@ impl WireClient {
     pub fn connect(addr: &str) -> io::Result<WireClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
-        Ok(WireClient { stream, next_id: 1 })
+        Ok(WireClient { stream, addr: addr.to_string(), next_id: 1 })
+    }
+
+    /// [`WireClient::connect`] retrying refused/unreachable connects
+    /// under `policy` (bounded exponential backoff with jitter). The
+    /// last error is returned once the retry budget is spent.
+    pub fn connect_with_retry(addr: &str, policy: RetryPolicy) -> io::Result<WireClient> {
+        let mut rng = Rng::new(policy.jitter_seed);
+        let mut attempt = 0u32;
+        loop {
+            match WireClient::connect(addr) {
+                Ok(client) => return Ok(client),
+                Err(_) if attempt < policy.max_retries => {
+                    std::thread::sleep(Duration::from_micros(
+                        policy.backoff_us(attempt, &mut rng),
+                    ));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Send one batch for `tenant` and block for the reply.
@@ -54,10 +157,72 @@ impl WireClient {
         n_features: usize,
         rows: &[Vec<f32>],
     ) -> Result<BatchReply, String> {
-        let id = self.next_id;
-        self.next_id += 1;
-        let frame = encode_request(id, tenant, n_features, rows);
-        write_frame(&mut self.stream, &frame).map_err(|e| format!("send: {e}"))?;
+        self.request_retrying(tenant, n_features, rows, RetryPolicy::none())
+    }
+
+    /// [`WireClient::request`] with transient-fault retry under
+    /// `policy`.
+    ///
+    /// **No-duplicate-submission guarantee**: a send failure is retried
+    /// (after a reconnect + backoff) only if **zero** bytes of the
+    /// request frame had been written — the server provably never saw
+    /// the request. A partial write, or any failure after the frame is
+    /// fully out (including a lost reply), is *not* retried: the server
+    /// may have executed the request, and replaying it would
+    /// double-submit. Those errors surface to the caller, who owns the
+    /// idempotency decision.
+    pub fn request_with_retry(
+        &mut self,
+        tenant: &str,
+        rows: &[Vec<f32>],
+        policy: RetryPolicy,
+    ) -> Result<BatchReply, String> {
+        let n_features = rows.first().map_or(0, Vec::len);
+        self.request_retrying(tenant, n_features, rows, policy)
+    }
+
+    fn request_retrying(
+        &mut self,
+        tenant: &str,
+        n_features: usize,
+        rows: &[Vec<f32>],
+        policy: RetryPolicy,
+    ) -> Result<BatchReply, String> {
+        let mut rng = Rng::new(policy.jitter_seed);
+        let mut attempt = 0u32;
+        loop {
+            let id = self.next_id;
+            self.next_id += 1;
+            let frame = encode_request(id, tenant, n_features, rows);
+            let (written, send) = write_all_tracked(&mut self.stream, &frame);
+            if let Err(e) = send {
+                // Retry-safety hinges on `written`: only an untouched
+                // frame can be resent without double-submission risk.
+                if written == 0 && attempt < policy.max_retries {
+                    std::thread::sleep(Duration::from_micros(
+                        policy.backoff_us(attempt, &mut rng),
+                    ));
+                    attempt += 1;
+                    match WireClient::connect(&self.addr) {
+                        Ok(fresh) => {
+                            // Fresh connection, fresh id space.
+                            *self = fresh;
+                        }
+                        Err(_) => continue, // next attempt retries the connect path
+                    }
+                    continue;
+                }
+                return Err(if written == 0 {
+                    format!("send: {e}")
+                } else {
+                    format!("send: {e} ({written} of {} frame bytes written — not retried: the server may have received the request)", frame.len())
+                });
+            }
+            return self.read_reply(id);
+        }
+    }
+
+    fn read_reply(&mut self, id: u64) -> Result<BatchReply, String> {
         let body = read_frame(&mut self.stream)
             .map_err(|e| format!("recv: {e}"))?
             .ok_or_else(|| "server closed the connection before replying".to_string())?;
@@ -73,5 +238,123 @@ impl WireClient {
                 Err(format!("protocol error: {reason}"))
             }
         }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    /// Writer that accepts `limit` bytes, then fails every call.
+    struct FailAfter {
+        limit: usize,
+        taken: usize,
+    }
+
+    impl Write for FailAfter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.taken >= self.limit {
+                return Err(io::Error::new(io::ErrorKind::BrokenPipe, "injected"));
+            }
+            let n = buf.len().min(self.limit - self.taken).min(3); // force short writes
+            self.taken += n;
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn tracked_write_reports_exact_progress() {
+        let buf = [7u8; 10];
+
+        // Failure before any byte: written == 0 — the only retryable case.
+        let mut w = FailAfter { limit: 0, taken: 0 };
+        let (written, res) = write_all_tracked(&mut w, &buf);
+        assert_eq!(written, 0);
+        assert!(res.is_err());
+
+        // Failure mid-frame, across several short writes: exact count.
+        let mut w = FailAfter { limit: 7, taken: 0 };
+        let (written, res) = write_all_tracked(&mut w, &buf);
+        assert_eq!(written, 7);
+        assert!(res.is_err());
+
+        // Full frame: all bytes, Ok.
+        let mut w = FailAfter { limit: 100, taken: 0 };
+        let (written, res) = write_all_tracked(&mut w, &buf);
+        assert_eq!(written, 10);
+        assert!(res.is_ok());
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_caps_and_jitters_within_bounds() {
+        let policy = RetryPolicy {
+            max_retries: 8,
+            base_backoff_us: 1_000,
+            max_backoff_us: 16_000,
+            jitter_seed: 11,
+        };
+        let mut rng = Rng::new(policy.jitter_seed);
+        for attempt in 0..10 {
+            let ceiling = (1_000u64 << attempt).min(16_000);
+            for _ in 0..50 {
+                let b = policy.backoff_us(attempt, &mut rng);
+                assert!(b >= ceiling / 2 && b <= ceiling, "attempt {attempt}: {b} outside [{}, {ceiling}]", ceiling / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed() {
+        let policy = RetryPolicy::default();
+        let seq = |seed: u64| -> Vec<u64> {
+            let mut rng = Rng::new(seed);
+            (0..6).map(|a| policy.backoff_us(a, &mut rng)).collect()
+        };
+        assert_eq!(seq(42), seq(42));
+        assert_ne!(seq(42), seq(43), "different seeds should jitter differently");
+    }
+
+    #[test]
+    fn huge_attempt_does_not_overflow() {
+        let policy = RetryPolicy {
+            max_retries: u32::MAX,
+            base_backoff_us: u64::MAX / 2,
+            max_backoff_us: u64::MAX,
+            jitter_seed: 1,
+        };
+        let mut rng = Rng::new(1);
+        // Saturating shift/mul: must not panic, must respect the cap.
+        let b = policy.backoff_us(63, &mut rng);
+        assert!(b <= u64::MAX);
+    }
+
+    #[test]
+    fn connect_with_retry_bounded_on_refused_then_succeeds_on_live_listener() {
+        use std::net::TcpListener;
+
+        // A port with no listener: the budget must be spent, then error.
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = l.local_addr().unwrap().to_string();
+            drop(l); // freed: connects will be refused
+            addr
+        };
+        let fast = RetryPolicy {
+            max_retries: 2,
+            base_backoff_us: 100,
+            max_backoff_us: 200,
+            jitter_seed: 5,
+        };
+        assert!(WireClient::connect_with_retry(&dead, fast).is_err());
+
+        // A live listener: first attempt connects, no budget needed.
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        let client = WireClient::connect_with_retry(&addr, fast);
+        assert!(client.is_ok());
     }
 }

@@ -60,7 +60,7 @@ pub mod frame;
 pub mod listener;
 pub mod loadgen;
 
-pub use client::{BatchReply, WireClient};
+pub use client::{BatchReply, RetryPolicy, WireClient};
 pub use frame::{
     decode_reply, encode_reply, encode_request, read_frame, write_frame, ReplyFrame,
     RequestView, RowOutcome, WireError, MAGIC_REPLY, MAGIC_REQUEST, MAX_FRAME_BYTES,

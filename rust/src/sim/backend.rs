@@ -9,12 +9,13 @@
 
 use super::card::{simulate_card, CardConfig};
 use super::config::ChipConfig;
+use crate::cam::DefectSpec;
 use crate::compiler::{CamEngine, CamProgram};
 use crate::coordinator::Backend;
 use crate::data::Task;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Simulated-device counters, shared out via [`SimCardBackend::counters`]
 /// so they stay readable after the backend moves into a worker thread.
@@ -41,9 +42,85 @@ impl SimCardCounters {
     }
 }
 
+/// Runtime defect-injection hook for a live [`SimCardBackend`]: lets a
+/// test harness (or the self-healing example) strike a card with
+/// memristor/DAC defects *mid-serve*, from outside the worker thread
+/// that owns the backend.
+///
+/// A strike is queued here and applied by the card at the start of its
+/// next batch: the engine is rebuilt as
+/// [`CamEngine::with_defects`]`(program, spec, seed)` — the exact
+/// deterministic defect draw the retrain probe
+/// ([`crate::compiler::defect_affected_trees`] /
+/// [`crate::compiler::defective_score`]) replays for the same
+/// `(spec, seed)`, which is what lets the repair loop retrain against
+/// precisely the defects the card is serving through. The live draw
+/// stays readable via [`DefectInjector::live_draw`] after the backend
+/// has moved into its worker.
+#[derive(Default)]
+pub struct DefectInjector {
+    /// Strike queued by the operator side, not yet applied by the card.
+    pending: Mutex<Option<(DefectSpec, u64)>>,
+    /// Draw the card is currently serving through (`None` = pristine).
+    live: Mutex<Option<(DefectSpec, u64)>>,
+    strikes: AtomicU64,
+}
+
+impl DefectInjector {
+    pub fn new() -> Arc<DefectInjector> {
+        Arc::new(DefectInjector::default())
+    }
+
+    /// Queue a defect strike; the card applies it on its next batch.
+    pub fn strike(&self, spec: DefectSpec, seed: u64) {
+        *lock_clean(&self.pending) = Some((spec, seed));
+    }
+
+    /// The `(spec, seed)` draw the card last applied — the ground truth
+    /// the healer hands to `hat_defect_retrain`. `None` until a strike
+    /// has been applied (or after [`DefectInjector::clear`]).
+    pub fn live_draw(&self) -> Option<(DefectSpec, u64)> {
+        *lock_clean(&self.live)
+    }
+
+    /// Strikes applied by the card so far.
+    pub fn strikes_applied(&self) -> u64 {
+        self.strikes.load(Ordering::Relaxed)
+    }
+
+    /// Forget the live draw (used when a repaired card replaces this
+    /// one and the injector handle is being retired).
+    pub fn clear(&self) {
+        *lock_clean(&self.pending) = None;
+        *lock_clean(&self.live) = None;
+    }
+
+    /// Card side: take a queued strike, recording it as live.
+    fn take_pending(&self) -> Option<(DefectSpec, u64)> {
+        let taken = lock_clean(&self.pending).take();
+        if let Some(draw) = taken {
+            *lock_clean(&self.live) = Some(draw);
+            self.strikes.fetch_add(1, Ordering::Relaxed);
+        }
+        taken
+    }
+}
+
+/// Mutex access continuing through poisoning: both guarded values are
+/// plain `Option` copies, valid at any point a panicking holder could
+/// have stopped, and the healer must stay able to read the live draw
+/// after a worker panic.
+fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// A serving [`Backend`] over one simulated PCIe card.
 pub struct SimCardBackend {
     engine: CamEngine,
+    /// The pristine program this card was built from — kept so a queued
+    /// defect strike can rebuild the engine as
+    /// `CamEngine::with_defects(&program, …)`.
+    program: CamProgram,
     /// Simulated per-sample service time (s) at saturation.
     service_s: f64,
     /// Simulated unloaded end-to-end latency (s), incl. PCIe round trip.
@@ -51,6 +128,8 @@ pub struct SimCardBackend {
     /// Planned-path worker threads (0 = auto; default 1).
     threads: usize,
     counters: Arc<SimCardCounters>,
+    /// Runtime defect hook (`None` = defects can't strike this card).
+    injector: Option<Arc<DefectInjector>>,
 }
 
 impl SimCardBackend {
@@ -75,10 +154,31 @@ impl SimCardBackend {
         let rep = simulate_card(program, chip, card, 20_000);
         SimCardBackend {
             engine: CamEngine::new(program),
+            program: program.clone(),
             service_s: 1.0 / rep.throughput_sps.max(1.0),
             latency_s: rep.latency_s,
             threads,
             counters: Arc::new(SimCardCounters::default()),
+            injector: None,
+        }
+    }
+
+    /// Attach a runtime defect-injection hook (builder style, before the
+    /// backend moves into its server). Keep a clone of the `Arc` to
+    /// strike the card and read its live draw from outside the worker.
+    pub fn with_injector(mut self, injector: Arc<DefectInjector>) -> SimCardBackend {
+        self.injector = Some(injector);
+        self
+    }
+
+    /// Apply a queued defect strike, if any, before serving a batch.
+    /// The rebuilt engine's planned path stays bit-identical to the
+    /// scalar `with_defects` engine for the same draw (contract 4), so
+    /// post-strike replies are exactly `defective_score`'s view.
+    fn apply_pending_strike(&mut self) {
+        let Some(injector) = &self.injector else { return };
+        if let Some((spec, seed)) = injector.take_pending() {
+            self.engine = CamEngine::with_defects(&self.program, spec, seed);
         }
     }
 
@@ -115,11 +215,13 @@ impl Backend for SimCardBackend {
     /// the scalar path at every thread count); timing through the
     /// calibrated card model.
     fn infer(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f32>>> {
+        self.apply_pending_strike();
         self.counters.accrue(batch.len(), self.service_s);
         Ok(self.engine.infer_planned(batch, self.threads))
     }
 
     fn infer_partials(&mut self, batch: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
+        self.apply_pending_strike();
         self.counters.accrue(batch.len(), self.service_s);
         Ok(self.engine.partials_planned(batch, self.threads))
     }
@@ -189,5 +291,42 @@ mod tests {
         for c in &counters {
             assert_eq!(c.samples(), 12);
         }
+    }
+
+    #[test]
+    fn mid_serve_defect_strike_switches_to_the_tracked_defective_engine() {
+        use crate::cam::DefectSpec;
+        let (d, p) = program();
+        let injector = DefectInjector::new();
+        let mut backend =
+            SimCardBackend::new(&p, &ChipConfig::default(), &CardConfig::default())
+                .with_injector(injector.clone());
+        let bins: Vec<Vec<u16>> = (0..32).map(|i| p.quantizer.bin_row(d.row(i))).collect();
+
+        // Pristine serving == clean engine.
+        let clean = CamEngine::new(&p);
+        for (i, l) in backend.infer(&bins).unwrap().into_iter().enumerate() {
+            assert_eq!(l, clean.infer_bins(&bins[i]), "pristine row {i}");
+        }
+        assert_eq!(injector.live_draw(), None);
+        assert_eq!(injector.strikes_applied(), 0);
+
+        // Strike mid-serve: the next batch must ride the deterministic
+        // defective engine for the same (spec, seed) draw.
+        let spec = DefectSpec::memristor(0.10);
+        injector.strike(spec, 0xC0FE);
+        let defective = CamEngine::with_defects(&p, spec, 0xC0FE);
+        let logits = backend.infer(&bins).unwrap();
+        for (i, l) in logits.iter().enumerate() {
+            assert_eq!(*l, defective.infer_bins(&bins[i]), "defective row {i}");
+        }
+        // At 10% flips the defective card must actually disagree with
+        // the clean engine somewhere — otherwise the test proves nothing.
+        assert!(
+            (0..bins.len()).any(|i| logits[i] != clean.infer_bins(&bins[i])),
+            "10% defects produced no observable change"
+        );
+        assert_eq!(injector.live_draw(), Some((spec, 0xC0FE)));
+        assert_eq!(injector.strikes_applied(), 1);
     }
 }

@@ -26,7 +26,7 @@ pub mod config;
 pub mod cost;
 pub mod event;
 
-pub use backend::{SimCardBackend, SimCardCounters};
+pub use backend::{DefectInjector, SimCardBackend, SimCardCounters};
 pub use card::{simulate_card, CardConfig, CardReport};
 pub use chip::{ideal_latency_cycles, simulate, SimReport, Workload};
 pub use config::ChipConfig;

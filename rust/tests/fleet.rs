@@ -391,3 +391,83 @@ fn multi_model_concurrent_clients_stay_isolated() {
         assert_eq!(m.shards, i + 1, "{}", m.name);
     }
 }
+
+/// Epoch-CAS regression (ISSUE 9 satellite 3): a `swap`/`unregister`
+/// pinned to a deployment epoch that has since been replaced must fail
+/// with a structured error — not silently clobber the concurrently
+/// re-registered route (last-writer-wins was the old behavior). The
+/// live route keeps serving its own program bit-identically throughout,
+/// and a swap pinned to the *current* epoch still succeeds.
+#[test]
+fn stale_epoch_swap_and_unregister_fail_structured_not_last_writer_wins() {
+    let p1 = program(41, 12);
+    let p2 = program(42, 12);
+    let p3 = program(43, 12);
+    let ref2 = CamEngine::new(&p2);
+    let ref3 = CamEngine::new(&p3);
+    let rows = random_rows(12, 16, 99);
+
+    let fleet = Fleet::new();
+    fleet
+        .register_program("hot", &p1, ModelConfig::for_program(&p1).with_queue_cap(0))
+        .unwrap();
+    let e1 = fleet.route_epoch("hot").unwrap();
+
+    // An operator replaces the deployment out from under the first
+    // registrant: unregister + fresh register under the same name.
+    fleet.unregister("hot").unwrap();
+    fleet
+        .register_program("hot", &p2, ModelConfig::for_program(&p2).with_queue_cap(0))
+        .unwrap();
+    let e2 = fleet.route_epoch("hot").unwrap();
+    assert_ne!(e1, e2, "re-registration must mint a fresh epoch");
+
+    // The first registrant's swap, pinned to its (stale) epoch, must be
+    // refused with a structured error naming both epochs...
+    let (backends, base) = slow_shards(&p3, 1, Duration::from_millis(0));
+    let err = fleet
+        .swap_backends_expecting("hot", e1, backends, base, ModelConfig::for_program(&p3))
+        .unwrap_err();
+    assert!(
+        err.contains("deployment changed concurrently"),
+        "swap error should explain the race, got: {err}"
+    );
+    assert!(
+        err.contains(&format!("{e1}")) && err.contains(&format!("{e2}")),
+        "swap error should name expected and live epochs, got: {err}"
+    );
+
+    // ...and so must its unregister.
+    let err = fleet.unregister_expecting("hot", e1).unwrap_err();
+    assert!(
+        err.contains("deployment changed concurrently"),
+        "unregister error should explain the race, got: {err}"
+    );
+
+    // The concurrently re-registered route was NOT clobbered: it still
+    // serves p2 bit-identically at its own epoch.
+    assert_eq!(fleet.route_epoch("hot").unwrap(), e2);
+    for row in &rows {
+        let reply = fleet.infer("hot", row).unwrap();
+        assert_eq!(reply.logits, ref2.infer_bins(&p2.quantizer.bin_row(row)));
+    }
+
+    // A swap pinned to the CURRENT epoch goes through, mints a fresh
+    // epoch, and serves the replacement program.
+    let (backends, base) = slow_shards(&p3, 1, Duration::from_millis(0));
+    fleet
+        .swap_backends_expecting("hot", e2, backends, base, ModelConfig::for_program(&p3))
+        .unwrap();
+    let e3 = fleet.route_epoch("hot").unwrap();
+    assert_ne!(e2, e3);
+    for row in &rows {
+        let reply = fleet.infer("hot", row).unwrap();
+        assert_eq!(reply.logits, ref3.infer_bins(&p3.quantizer.bin_row(row)));
+    }
+
+    // Stale unregister still refused post-swap; current-epoch succeeds.
+    assert!(fleet.unregister_expecting("hot", e2).is_err());
+    fleet.unregister_expecting("hot", e3).unwrap();
+    assert!(fleet.route_epoch("hot").is_none());
+    fleet.shutdown();
+}

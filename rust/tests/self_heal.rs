@@ -1,0 +1,304 @@
+//! Self-healing loop coverage (ISSUE 9): the drift detector's state
+//! machine (threshold crossing, hysteresis no-flap, cold-start grace),
+//! no-false-positive on a defect-free card, and one full
+//! detect → retrain → verify → swap cycle through [`SelfHealer`].
+//!
+//! The detector tests are pure (no fleet, no clocks): `observe` is fed
+//! agreement fractions directly and every transition is asserted. The
+//! integration tests drive a real [`SimCardBackend`] route, with
+//! mid-serve defects injected through [`DefectInjector`] — the same
+//! deterministic `(DefectSpec, seed)` draw the retrain loop repairs
+//! against, which is what makes the post-heal assertions exact.
+
+use std::sync::Arc;
+use xtime::cam::DefectSpec;
+use xtime::compiler::{compile, CamEngine, CompileOptions};
+use xtime::coordinator::{
+    DriftConfig, DriftDetector, DriftVerdict, Fleet, HealContext, HealthMonitor, ModelConfig,
+    SelfHealer, VerifyPolicy,
+};
+use xtime::coordinator::{Backend, BatchPolicy, CanarySet, DEFAULT_QUEUE_CAP};
+use xtime::data::{by_name, Dataset};
+use xtime::sim::{CardConfig, ChipConfig, DefectInjector, SimCardBackend};
+use xtime::trees::hat::{self, HatParams};
+use xtime::trees::{Ensemble, GbdtParams};
+
+// ---------------------------------------------------------------- unit:
+// DriftDetector is a pure state machine — feed agreements, pin verdicts.
+
+fn cfg(trigger: f64, clear: f64, breaches: usize, grace: usize) -> DriftConfig {
+    DriftConfig {
+        trigger_below: trigger,
+        clear_above: clear,
+        breaches_to_trip: breaches,
+        grace_probes: grace,
+    }
+}
+
+/// Threshold crossing: K consecutive breaches trip; `Drift` is emitted
+/// exactly once, then `Tripped` until rearm.
+#[test]
+fn detector_trips_after_consecutive_breaches_and_emits_drift_once() {
+    let mut d = DriftDetector::new(cfg(0.90, 0.97, 3, 0));
+    assert_eq!(d.observe(0.99), DriftVerdict::Healthy);
+    assert_eq!(d.observe(0.50), DriftVerdict::Suspect { breaches: 1 });
+    assert_eq!(d.observe(0.50), DriftVerdict::Suspect { breaches: 2 });
+    assert!(!d.is_tripped());
+    assert_eq!(d.observe(0.50), DriftVerdict::Drift);
+    assert!(d.is_tripped());
+    // Once tripped, stays tripped — even a perfect probe does not clear
+    // it (only the healer's rearm does).
+    assert_eq!(d.observe(0.50), DriftVerdict::Tripped);
+    assert_eq!(d.observe(1.00), DriftVerdict::Tripped);
+
+    d.rearm();
+    assert!(!d.is_tripped());
+    assert_eq!(d.observe(1.00), DriftVerdict::Healthy);
+}
+
+/// A clear probe (≥ `clear_above`) resets the streak: breaches must be
+/// *consecutive* to trip.
+#[test]
+fn clear_probe_resets_the_breach_streak() {
+    let mut d = DriftDetector::new(cfg(0.90, 0.97, 2, 0));
+    assert_eq!(d.observe(0.80), DriftVerdict::Suspect { breaches: 1 });
+    assert_eq!(d.observe(0.99), DriftVerdict::Healthy);
+    // Streak restarted: one more breach is Suspect{1} again, not a trip.
+    assert_eq!(d.observe(0.80), DriftVerdict::Suspect { breaches: 1 });
+    assert_eq!(d.observe(0.80), DriftVerdict::Drift);
+}
+
+/// Hysteresis: probes in `[trigger_below, clear_above)` neither extend
+/// nor reset an in-progress streak — a route hovering at the boundary
+/// holds `Suspect` indefinitely instead of flapping, and trips only if
+/// it breaches again.
+#[test]
+fn hysteresis_band_holds_streak_without_flapping() {
+    let mut d = DriftDetector::new(cfg(0.90, 0.97, 2, 0));
+    assert_eq!(d.observe(0.85), DriftVerdict::Suspect { breaches: 1 });
+    // Borderline probes: inside the band, streak held at 1 — not
+    // cleared (would allow flapping), not extended (not a breach).
+    for _ in 0..10 {
+        assert_eq!(d.observe(0.93), DriftVerdict::Suspect { breaches: 1 });
+    }
+    assert!(!d.is_tripped(), "band probes must never trip");
+    // A second genuine breach after the hover trips it.
+    assert_eq!(d.observe(0.85), DriftVerdict::Drift);
+
+    // With no streak in progress, band probes are plain Healthy.
+    let mut d = DriftDetector::new(cfg(0.90, 0.97, 2, 0));
+    assert_eq!(d.observe(0.93), DriftVerdict::Healthy);
+    assert_eq!(d.observe(0.93), DriftVerdict::Healthy);
+}
+
+/// Cold-start grace: the first `grace_probes` observations are never
+/// counted as breaches, and `rearm` restarts the window for the
+/// repaired deployment.
+#[test]
+fn cold_start_grace_ignores_initial_breaches_and_rearm_restarts_it() {
+    let mut d = DriftDetector::new(cfg(0.90, 0.97, 1, 2));
+    // Terrible agreement during warmup: observed, never counted.
+    assert_eq!(d.observe(0.0), DriftVerdict::Grace);
+    assert_eq!(d.observe(0.0), DriftVerdict::Grace);
+    assert!(!d.is_tripped());
+    // First counted probe is healthy — the grace breaches left no streak.
+    assert_eq!(d.observe(0.99), DriftVerdict::Healthy);
+    // Now a real breach trips (breaches_to_trip = 1).
+    assert_eq!(d.observe(0.0), DriftVerdict::Drift);
+
+    d.rearm();
+    // Fresh grace window after the repair.
+    assert_eq!(d.observe(0.0), DriftVerdict::Grace);
+    assert_eq!(d.observe(0.0), DriftVerdict::Grace);
+    assert_eq!(d.observe(0.99), DriftVerdict::Healthy);
+}
+
+// --------------------------------------------------------- integration:
+// real SimCard routes, deterministic defect draws.
+
+fn trained(n_rows: usize) -> (Dataset, Dataset, Ensemble, HatParams) {
+    let data = by_name("churn").unwrap().generate_n(n_rows);
+    let split = data.split(0.8, 0.0, 97);
+    let params = HatParams {
+        deploy_bits: 4,
+        gbdt: GbdtParams { n_rounds: 10, max_leaves: 8, ..Default::default() },
+        retrain_passes: 2,
+        ..Default::default()
+    };
+    let model = hat::train(&split.train, &params, None);
+    (split.train, split.test, model, params)
+}
+
+/// A defect-free card must never trip the monitor: canary agreement is
+/// 1.0 by determinism (the route serves the same engine the references
+/// were pinned from), so every post-grace probe is `Healthy`.
+#[test]
+fn defect_free_card_never_false_positives() {
+    let (_, eval, model, _) = trained(800);
+    let program = compile(&model, &CompileOptions::default()).unwrap();
+
+    let fleet = Fleet::new();
+    let injector = DefectInjector::new();
+    let backend = SimCardBackend::new(&program, &ChipConfig::default(), &CardConfig::default())
+        .with_injector(injector.clone());
+    fleet
+        .register_backends(
+            "churn",
+            vec![Box::new(backend) as Box<dyn Backend>],
+            Vec::new(),
+            ModelConfig::for_program(&program),
+        )
+        .unwrap();
+
+    let canary_rows: Vec<Vec<f32>> = (0..48).map(|i| eval.row(i).to_vec()).collect();
+    let canary = CanarySet::pin(&fleet, "churn", canary_rows).unwrap();
+    let mut monitor = HealthMonitor::new(canary, DriftConfig::default());
+
+    for probe in 0..10 {
+        let reading = monitor.probe(&fleet, "churn").unwrap();
+        assert_eq!(reading.agreement, 1.0, "probe {probe}");
+        assert_eq!(reading.effective_agreement, 1.0, "probe {probe}");
+        assert_eq!(reading.error_delta, 0, "probe {probe}");
+        let want = if probe < DriftConfig::default().grace_probes {
+            DriftVerdict::Grace
+        } else {
+            DriftVerdict::Healthy
+        };
+        assert_eq!(reading.verdict, want, "probe {probe}");
+    }
+    assert!(!monitor.is_tripped());
+    assert_eq!(injector.strikes_applied(), 0);
+    fleet.shutdown();
+}
+
+/// Deterministic defect draw that provably drags canary agreement below
+/// `trigger`: replayed offline through `CamEngine::with_defects` — the
+/// exact engine the struck card switches to — so the integration test
+/// cannot flake on a lucky draw.
+fn drifting_draw(
+    program: &xtime::compiler::CamProgram,
+    canaries: &[Vec<f32>],
+    trigger: f64,
+) -> (DefectSpec, u64) {
+    let clean = CamEngine::new(program);
+    let reference: Vec<f32> =
+        canaries.iter().map(|r| clean.predict(program, r)).collect();
+    let spec = DefectSpec::memristor(0.25);
+    for seed in 0xC0FE..0xC0FE + 32u64 {
+        let defective = CamEngine::with_defects(program, spec, seed);
+        let agree = canaries
+            .iter()
+            .zip(&reference)
+            .filter(|(r, want)| defective.predict(program, r) == **want)
+            .count();
+        if (agree as f64) < trigger * canaries.len() as f64 {
+            return (spec, seed);
+        }
+    }
+    panic!("no defect draw in the candidate range disturbs the canaries");
+}
+
+/// One full autonomous cycle: healthy serving (confident, undegraded
+/// replies) → mid-serve defect strike → monitor breaches and trips →
+/// [`SelfHealer::heal`] retrains against the live draw, verifies, swaps
+/// under epoch CAS, proves contract-10 bit-identity — and the re-armed
+/// monitor sees the repaired route healthy again.
+#[test]
+fn struck_card_trips_monitor_and_heal_restores_agreement() {
+    let (train, eval, model, params) = trained(1200);
+    let options = CompileOptions::default();
+    let program = compile(&model, &options).unwrap();
+    let chip = ChipConfig::default();
+    let card = CardConfig::default();
+
+    let fleet = Arc::new(Fleet::new());
+    let injector = DefectInjector::new();
+    let backend =
+        SimCardBackend::new(&program, &chip, &card).with_injector(injector.clone());
+    fleet
+        .register_backends(
+            "churn",
+            vec![Box::new(backend) as Box<dyn Backend>],
+            Vec::new(),
+            ModelConfig::for_program(&program),
+        )
+        .unwrap();
+    let epoch0 = fleet.route_epoch("churn").unwrap();
+
+    // Healthy serving: confident (binary task ⇒ σ(β·|logit|) ≥ 0.5),
+    // undegraded replies; degraded flag is observable when set.
+    let reply = fleet.infer("churn", eval.row(0)).unwrap();
+    assert!(reply.is_ok());
+    assert!((0.5..=1.0).contains(&reply.confidence), "got {}", reply.confidence);
+    assert!(!reply.degraded);
+    fleet.set_degraded("churn", true).unwrap();
+    assert!(fleet.infer("churn", eval.row(0)).unwrap().degraded);
+    fleet.set_degraded("churn", false).unwrap();
+
+    let canary_rows: Vec<Vec<f32>> = (0..48).map(|i| eval.row(i).to_vec()).collect();
+    let drift_cfg = cfg(0.90, 0.97, 2, 0);
+    let canary = CanarySet::pin(&fleet, "churn", canary_rows.clone()).unwrap();
+    let mut monitor = HealthMonitor::new(canary, drift_cfg);
+    assert_eq!(monitor.probe(&fleet, "churn").unwrap().verdict, DriftVerdict::Healthy);
+
+    // Mid-serve defect strike: the card switches to the tracked
+    // defective engine on its next batch.
+    let (spec, seed) = drifting_draw(&program, &canary_rows, drift_cfg.trigger_below);
+    injector.strike(spec, seed);
+
+    let r1 = monitor.probe(&fleet, "churn").unwrap();
+    assert!(r1.agreement < drift_cfg.trigger_below, "got {}", r1.agreement);
+    assert_eq!(r1.verdict, DriftVerdict::Suspect { breaches: 1 });
+    let r2 = monitor.probe(&fleet, "churn").unwrap();
+    assert_eq!(r2.verdict, DriftVerdict::Drift);
+    assert!(monitor.is_tripped());
+    assert_eq!(monitor.probe(&fleet, "churn").unwrap().verdict, DriftVerdict::Tripped);
+    assert_eq!(injector.live_draw(), Some((spec, seed)));
+
+    // Repair: background retrain against the live draw, verify gate,
+    // epoch-CAS swap, contract-10 bit-identity probe.
+    let mut healer = SelfHealer::new(HealContext {
+        fleet: fleet.clone(),
+        model: "churn".to_string(),
+        train,
+        eval: eval.clone(),
+        params,
+        options,
+        chip,
+        card,
+        batch_policy: BatchPolicy::default(),
+        queue_cap: DEFAULT_QUEUE_CAP,
+        verify: VerifyPolicy::default(),
+        store: None,
+    });
+    let (_repaired, new_injector, report) = healer.heal(model, &injector).unwrap();
+
+    assert_eq!(report.defects, spec);
+    assert_eq!(report.seed, seed);
+    assert_eq!(report.old_epoch, epoch0);
+    assert!(report.new_epoch > report.old_epoch, "swap must mint a fresh epoch");
+    assert_eq!(fleet.route_epoch("churn"), Some(report.new_epoch));
+    assert_eq!(report.bit_identity_rows, 64.min(eval.n_rows()));
+    assert!(
+        report.retrain.final_score >= report.retrain.initial_score,
+        "retrain keeps the best pass: {} -> {}",
+        report.retrain.initial_score,
+        report.retrain.final_score
+    );
+    // The repaired card serves the same diagnosed draw (that is the
+    // deployment the retrain optimized), with the degraded flag cleared.
+    assert_eq!(new_injector.live_draw(), Some((spec, seed)));
+    assert!(!fleet.infer("churn", eval.row(0)).unwrap().degraded);
+    assert_eq!(healer.history().len(), 1);
+
+    // Re-armed against the repaired deployment, the monitor is healthy:
+    // references re-pinned, agreement 1.0 by determinism.
+    monitor.rearm_with(&fleet, "churn").unwrap();
+    assert!(!monitor.is_tripped());
+    let reading = monitor.probe(&fleet, "churn").unwrap();
+    assert_eq!(reading.agreement, 1.0);
+    assert_eq!(reading.verdict, DriftVerdict::Healthy);
+
+    drop(healer);
+    Arc::try_unwrap(fleet).ok().unwrap().shutdown();
+}
