@@ -25,7 +25,7 @@ use std::path::Path;
 use xtime::bench_support::{
     cached_model, fast_mode, random_ensemble, random_query_bins, write_bench_json,
 };
-use xtime::compiler::{compile, CamEngine, CompileOptions};
+use xtime::compiler::{compile, compress_program, CamEngine, CompileOptions};
 use xtime::coordinator::{BatchPolicy, Server, XlaBackend};
 use xtime::data::{by_name, Task};
 use xtime::runtime::XlaCamEngine;
@@ -54,6 +54,29 @@ fn assert_planned_agrees(engine: &CamEngine, batch: &[Vec<u16>], nt: usize, labe
         );
     }
     println!("planned/scalar agreement on {label}: ✓ (1T and {nt}T)");
+}
+
+/// CI gate for contract 11: the capacity-compressed engine must
+/// reproduce the uncompressed one bit for bit — logits, f64 partials
+/// and `SearchStats` (`charged_rows` counts logical rows on both
+/// sides) — on every execution path. Panics on any divergence.
+fn assert_compressed_agrees(plain: &CamEngine, pressed: &CamEngine, batch: &[Vec<u16>], nt: usize) {
+    assert_eq!(
+        plain.infer_batch(batch),
+        pressed.infer_batch(batch),
+        "compressed engine diverged from uncompressed on infer_batch"
+    );
+    for threads in [1, nt] {
+        let (a, sa) = plain.partials_planned_stats(batch, threads);
+        let (b, sb) = pressed.partials_planned_stats(batch, threads);
+        assert_eq!(a, b, "compressed planned({threads}T) partials diverged");
+        assert_eq!(
+            (sa.charged_rows, sa.matches),
+            (sb.charged_rows, sb.matches),
+            "compressed planned({threads}T) SearchStats diverged"
+        );
+    }
+    println!("compressed/uncompressed agreement: ✓ (indexed, planned 1T and {nt}T)");
 }
 
 fn main() {
@@ -270,6 +293,42 @@ fn main() {
         s_plannedn.median / n_queries as f64,
         plannedn_rate,
     );
+
+    // Capacity compression (ISSUE 10, contract 11): the same acceptance
+    // model with the sparsity-aware compression pass applied. The gate
+    // proves bit-identity before anything is timed; the acceptance
+    // floor is a ≥2× CAM-row reduction on this topology.
+    let mut pressed_prog = big_prog.clone();
+    let creport = compress_program(&mut pressed_prog);
+    println!("compression: {}", creport.render());
+    assert!(
+        creport.row_reduction() >= 2.0,
+        "acceptance: 1024-tree model must compress ≥2× in CAM rows, got {:.2}×",
+        creport.row_reduction()
+    );
+    let pressed = CamEngine::new(&pressed_prog);
+    assert_compressed_agrees(&engine, &pressed, &gate, nt);
+    let s_press1 = time_fn(1, 5, || {
+        std::hint::black_box(pressed.infer_planned(&qbins, 1));
+    });
+    let s_pressn = time_fn(1, 5, || {
+        std::hint::black_box(pressed.infer_planned(&qbins, nt));
+    });
+    let press1_rate = n_queries as f64 / s_press1.median;
+    let pressn_rate = n_queries as f64 / s_pressn.median;
+    push(
+        "planned, compressed (1T)".into(),
+        format!("{n_queries}"),
+        s_press1.median / n_queries as f64,
+        press1_rate,
+    );
+    push(
+        format!("planned, compressed ({nt}T)"),
+        format!("{n_queries}"),
+        s_pressn.median / n_queries as f64,
+        pressn_rate,
+    );
+
     big_table.print(&format!(
         "functional engine scalar vs indexed vs planned — {n_trees}-tree model, {} CAM rows",
         big_prog.total_rows()
@@ -299,12 +358,21 @@ fn main() {
         .set("planned_1t_vs_scalar", Json::Num(planned1_rate / scalar_rate))
         .set("planned_nt_vs_scalar", Json::Num(plannedn_rate / scalar_rate))
         .set("planned_nt_vs_indexed", Json::Num(plannedn_rate / index_rate));
+    // Compression datapoint: the full CompressionReport plus the
+    // compressed-path rates (docs/BENCHMARKS.md `compression` block).
+    let mut compression = creport.to_json();
+    compression
+        .set("phys_rows", Json::Num(pressed_prog.total_phys_rows() as f64))
+        .set("planned_1t_rows_per_s", Json::Num(press1_rate))
+        .set("planned_nt_rows_per_s", Json::Num(pressn_rate))
+        .set("planned_nt_vs_uncompressed", Json::Num(pressn_rate / plannedn_rate));
     let mut j = Json::obj();
     j.set("bench", Json::Str("hotpath".into()))
         .set("fast_mode", Json::Bool(fast))
         .set("n_queries", Json::Num(n_queries as f64))
         .set("model", model)
         .set("paths", paths)
-        .set("speedup", speedup);
+        .set("speedup", speedup)
+        .set("compression", compression);
     write_bench_json("hotpath", &j);
 }

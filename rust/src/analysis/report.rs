@@ -30,6 +30,12 @@ pub enum RuleId {
     V5DeadLeaf,
     /// Sparsity census: wildcard density and shared-prefix counts.
     V6SparsityCensus,
+    /// Compressed-row match-set equivalence (contract 11): every
+    /// physical layout unit covers its logical rows exactly — merged
+    /// pairs are adjacent complementary siblings, packed units own
+    /// pairwise-disjoint constrained features, and word-image union
+    /// bounds reproduce the owners' windows.
+    V7CompressedEquivalence,
 }
 
 impl RuleId {
@@ -42,6 +48,7 @@ impl RuleId {
             RuleId::V4QuantizerGrid => "V4",
             RuleId::V5DeadLeaf => "V5",
             RuleId::V6SparsityCensus => "V6",
+            RuleId::V7CompressedEquivalence => "V7",
         }
     }
 
@@ -54,6 +61,7 @@ impl RuleId {
             RuleId::V4QuantizerGrid => "quantizer-grid",
             RuleId::V5DeadLeaf => "dead-leaf",
             RuleId::V6SparsityCensus => "sparsity-census",
+            RuleId::V7CompressedEquivalence => "compressed-equivalence",
         }
     }
 }
@@ -254,6 +262,9 @@ pub struct CoreCensus {
     /// Σ over adjacent row pairs of their longest common cell prefix —
     /// the compressibility signal prefix-sharing schemes exploit.
     pub shared_prefix_cells: usize,
+    /// Physical CAM words after capacity compression (= `n_rows` for
+    /// uncompressed programs; contract 11).
+    pub phys_rows: usize,
 }
 
 impl CoreCensus {
@@ -265,7 +276,8 @@ impl CoreCensus {
             .set("wildcard_cells", Json::Num(self.wildcard_cells as f64))
             .set("per_feature_wildcards", Json::from_usize_slice(&self.per_feature_wildcards))
             .set("never_match_rows", Json::Num(self.never_match_rows as f64))
-            .set("shared_prefix_cells", Json::Num(self.shared_prefix_cells as f64));
+            .set("shared_prefix_cells", Json::Num(self.shared_prefix_cells as f64))
+            .set("phys_rows", Json::Num(self.phys_rows as f64));
         j
     }
 }
@@ -281,6 +293,8 @@ pub struct SparsityCensus {
     pub wildcard_cells: usize,
     pub never_match_rows: usize,
     pub shared_prefix_cells: usize,
+    /// Total physical CAM words (= `n_rows` for uncompressed programs).
+    pub phys_rows: usize,
     pub cores: Vec<CoreCensus>,
 }
 
@@ -303,6 +317,7 @@ impl SparsityCensus {
             .set("wildcard_density", Json::Num(self.wildcard_density()))
             .set("never_match_rows", Json::Num(self.never_match_rows as f64))
             .set("shared_prefix_cells", Json::Num(self.shared_prefix_cells as f64))
+            .set("phys_rows", Json::Num(self.phys_rows as f64))
             .set("cores", Json::Arr(self.cores.iter().map(CoreCensus::to_json).collect()));
         j
     }

@@ -1,4 +1,4 @@
-//! The rule engine: checks V1–V6 over a compiled [`CamProgram`], its
+//! The rule engine: checks V1–V7 over a compiled [`CamProgram`], its
 //! per-core execution plans, and (optionally) a [`ShardPlan`].
 //!
 //! Every check is *static*: the verifier reads the compiled artifact —
@@ -14,7 +14,8 @@
 //!
 //! Entry points:
 //!
-//! * [`verify_program`] — V1/V2/V4/V5/V6 on a defect-free engine build;
+//! * [`verify_program`] — V1/V2/V4/V5/V6 (+V7 when compressed) on a
+//!   defect-free engine build;
 //! * [`verify_with_defects`] — same rules on a defect-perturbed build
 //!   (V5 dead-leaf warnings carry the defect draw);
 //! * [`verify_shard_plan`] — V3 on an explicit [`ShardPlan`];
@@ -25,10 +26,13 @@ use std::collections::BTreeMap;
 
 use super::report::{AnalysisReport, CoreCensus, Finding, Location, RuleId, SparsityCensus};
 use crate::cam::{DefectSpec, MACRO_BINS};
-use crate::compiler::{partition, CamEngine, CamProgram, PartitionOptions, PlanView, ShardPlan};
+use crate::compiler::{
+    partition, CamEngine, CamProgram, CoreLayout, PartitionOptions, PlanView, ShardPlan,
+};
 
 /// Verify a program as compiled (defect-free engine build): rules V1,
-/// V2, V4, V5, V6.
+/// V2, V4, V5, V6 — plus V7 when the program carries compression
+/// layouts (contract 11).
 pub fn verify_program(program: &CamProgram) -> AnalysisReport {
     let engine = CamEngine::new(program);
     verify_engine(program, &engine, None)
@@ -90,6 +94,20 @@ pub fn verify_engine(
     let mut report = AnalysisReport::new(&program.name);
     check_quantizer_grid(program, &mut report);
 
+    if let Some(layouts) = &program.layouts {
+        if layouts.len() != program.cores.len() {
+            report.push(Finding::deny(
+                RuleId::V7CompressedEquivalence,
+                Location::program(),
+                format!(
+                    "{} compression layouts for {} cores",
+                    layouts.len(),
+                    program.cores.len()
+                ),
+            ));
+        }
+    }
+
     let n_cores = engine.n_cores().min(program.cores.len());
     let mut cores = Vec::with_capacity(n_cores);
     let mut total = CoreCensus {
@@ -100,18 +118,25 @@ pub fn verify_engine(
         per_feature_wildcards: Vec::new(),
         never_match_rows: 0,
         shared_prefix_cells: 0,
+        phys_rows: 0,
     };
     for ci in 0..n_cores {
         let view = engine.plan_view(ci);
         check_interval_partition(ci, &view, &mut report);
         check_arena(ci, &view, &mut report);
         check_dead_rows(program, ci, &view, defect_ctx, &mut report);
-        let census = core_census(ci, &view);
+        let layout = program.layouts.as_ref().and_then(|l| l.get(ci));
+        if let Some(layout) = layout {
+            check_compression(program, ci, layout, &view, &mut report);
+        }
+        let phys_rows = layout.map_or(view.n_rows(), |l| l.n_phys_rows());
+        let census = core_census(ci, &view, phys_rows);
         total.n_rows += census.n_rows;
         total.n_cells += census.n_cells;
         total.wildcard_cells += census.wildcard_cells;
         total.never_match_rows += census.never_match_rows;
         total.shared_prefix_cells += census.shared_prefix_cells;
+        total.phys_rows += census.phys_rows;
         cores.push(census);
     }
     let census = SparsityCensus {
@@ -121,15 +146,23 @@ pub fn verify_engine(
         wildcard_cells: total.wildcard_cells,
         never_match_rows: total.never_match_rows,
         shared_prefix_cells: total.shared_prefix_cells,
+        phys_rows: total.phys_rows,
         cores,
+    };
+    let compressed = if program.layouts.is_some() {
+        format!(" ({} physical words after compression)", census.phys_rows)
+    } else {
+        String::new()
     };
     report.push(Finding::info(
         RuleId::V6SparsityCensus,
         Location::program(),
         format!(
-            "{} cores, {} rows, {:.1}% wildcard cells, {} never-match rows, {} shared-prefix cells",
+            "{} cores, {} rows{}, {:.1}% wildcard cells, {} never-match rows, \
+             {} shared-prefix cells",
             census.n_cores,
             census.n_rows,
+            compressed,
             100.0 * census.wildcard_density(),
             census.never_match_rows,
             census.shared_prefix_cells
@@ -372,6 +405,78 @@ fn check_arena(ci: usize, view: &PlanView<'_>, report: &mut AnalysisReport) {
         ));
     }
     let arena = view.arena();
+    if let Some(slots) = view.slots() {
+        // Deduplicated arena: offsets index the slot table, not the
+        // arena itself; the arena holds one copy of each distinct slice.
+        if arena.len() % n_words != 0 {
+            report.push(Finding::deny(
+                RuleId::V2ArenaBounds,
+                Location::core(ci),
+                format!(
+                    "deduplicated arena holds {} words, not a multiple of the \
+                     {n_words}-word slice width",
+                    arena.len()
+                ),
+            ));
+            return; // slice indexing below derives from n_words alignment
+        }
+        let n_slices = arena.len() / n_words;
+        let mut expect_off = 0usize;
+        for f in 0..view.n_features() {
+            let n_intervals = view.bounds(f).len() + 1;
+            let off = view.offset(f);
+            if off != expect_off {
+                report.push(Finding::deny(
+                    RuleId::V2ArenaBounds,
+                    Location::core(ci).feature(f),
+                    format!(
+                        "slot offset {off}, expected {expect_off} (slot bases must be contiguous)"
+                    ),
+                ));
+            }
+            expect_off += n_intervals;
+        }
+        if slots.len() != expect_off {
+            report.push(Finding::deny(
+                RuleId::V2ArenaBounds,
+                Location::core(ci),
+                format!("slot table holds {} entries, layout requires {expect_off}", slots.len()),
+            ));
+        }
+        'slot: for f in 0..view.n_features() {
+            let off = view.offset(f);
+            for iv in 0..=view.bounds(f).len() {
+                let Some(&slot) = slots.get(off + iv) else {
+                    break 'slot; // length mismatch already denied above
+                };
+                if slot as usize >= n_slices {
+                    report.push(Finding::deny(
+                        RuleId::V2ArenaBounds,
+                        Location::core(ci).feature(f).interval(iv),
+                        format!("slot {slot} points past the {n_slices}-slice arena"),
+                    ));
+                    break 'slot; // one corrupt table rarely stays alone
+                }
+            }
+        }
+        for sl in 0..n_slices {
+            let slice = &arena[sl * n_words..(sl + 1) * n_words];
+            if let Some((w, _)) =
+                slice.iter().enumerate().find(|(w, &word)| word & !legal[*w] != 0)
+            {
+                report.push(Finding::deny(
+                    RuleId::V2ArenaBounds,
+                    Location::core(ci).interval(sl),
+                    format!(
+                        "padding bits set above row {n_rows} in word {w} of arena slice {sl} \
+                         (would phantom-match a nonexistent row)"
+                    ),
+                ));
+                break; // one location is enough
+            }
+        }
+        return;
+    }
     let mut expect_off = 0usize;
     let mut in_bounds = vec![true; view.n_features()];
     for f in 0..view.n_features() {
@@ -471,12 +576,311 @@ fn check_dead_rows(
     }
 }
 
+/// V7 — compressed-row match-set equivalence (DESIGN.md §5,
+/// contract 11): a program carrying compression layouts must describe a
+/// physical image that matches *exactly* the logical rows it claims to
+/// compress. Checks, in order: (a) unit/row coverage — every logical
+/// row belongs to exactly one unit and the `unit_of_row` index agrees;
+/// (b) merged-pair validity — the two rows are adjacent leaves of one
+/// tree whose windows agree everywhere except the split feature, where
+/// they are non-empty complementary halves (`hi_left == lo_right`);
+/// (c) packing disjointness — no two units of one physical word own the
+/// same cell (overlapping constrained features); (d) word-image
+/// fidelity — each owned cell carries exactly the owning unit's union
+/// window recomputed from the logical rows, each unowned cell is a full
+/// don't-care; (e) dedup match-set equivalence — every elementary
+/// interval's slot resolves to a bitset identical to the membership
+/// recomputed from the programmed cells (rules V1/V2 check bounds and
+/// structure but never arena *content*; this is the only check that
+/// does).
+fn check_compression(
+    program: &CamProgram,
+    ci: usize,
+    layout: &CoreLayout,
+    view: &PlanView<'_>,
+    report: &mut AnalysisReport,
+) {
+    let rows = &program.cores[ci].rows;
+    let n_features = program.n_features;
+    let n_bins = program.n_bins;
+
+    // (a) unit/row coverage.
+    if layout.unit_of_row.len() != rows.len() {
+        report.push(Finding::deny(
+            RuleId::V7CompressedEquivalence,
+            Location::core(ci),
+            format!(
+                "layout maps {} rows but the core holds {}",
+                layout.unit_of_row.len(),
+                rows.len()
+            ),
+        ));
+        return; // every check below indexes rows through this map
+    }
+    let mut covered = vec![false; rows.len()];
+    let mut units_ok = true;
+    for (u, unit) in layout.units.iter().enumerate() {
+        let members = [Some(unit.rows.0), unit.rows.1];
+        for r in members.into_iter().flatten() {
+            let r = r as usize;
+            if r >= rows.len() {
+                report.push(Finding::deny(
+                    RuleId::V7CompressedEquivalence,
+                    Location::core(ci).row(r),
+                    format!("unit {u} references row {r} outside the {}-row core", rows.len()),
+                ));
+                units_ok = false;
+                continue;
+            }
+            if covered[r] {
+                report.push(Finding::deny(
+                    RuleId::V7CompressedEquivalence,
+                    Location::core(ci).row(r),
+                    format!("row {r} covered by two units"),
+                ));
+            }
+            covered[r] = true;
+            if layout.unit_of_row[r] != u as u32 {
+                report.push(Finding::deny(
+                    RuleId::V7CompressedEquivalence,
+                    Location::core(ci).row(r),
+                    format!(
+                        "unit_of_row[{r}] = {} but unit {u} claims the row",
+                        layout.unit_of_row[r]
+                    ),
+                ));
+            }
+        }
+    }
+    if let Some(r) = covered.iter().position(|&c| !c) {
+        report.push(Finding::deny(
+            RuleId::V7CompressedEquivalence,
+            Location::core(ci).row(r),
+            format!("row {r} belongs to no unit — its leaf would vanish from the physical image"),
+        ));
+    }
+    if !units_ok {
+        return; // window recomputation below would index out of bounds
+    }
+
+    // (b) merged-pair validity.
+    for (u, unit) in layout.units.iter().enumerate() {
+        let Some(b) = unit.rows.1 else {
+            if unit.split_feature.is_some() {
+                report.push(Finding::deny(
+                    RuleId::V7CompressedEquivalence,
+                    Location::core(ci).row(unit.rows.0 as usize),
+                    format!("single-row unit {u} carries a residual split feature"),
+                ));
+            }
+            continue;
+        };
+        let (a, b) = (unit.rows.0 as usize, b as usize);
+        let loc = Location::core(ci).row(a).tree(rows[a].tree);
+        let Some(split) = unit.split_feature else {
+            report.push(Finding::deny(
+                RuleId::V7CompressedEquivalence,
+                loc,
+                format!("merged unit {u} has no residual split feature"),
+            ));
+            continue;
+        };
+        let split = split as usize;
+        if b != a + 1 {
+            report.push(Finding::deny(
+                RuleId::V7CompressedEquivalence,
+                loc,
+                format!("merged rows {a} and {b} are not adjacent"),
+            ));
+        }
+        if rows[a].tree != rows[b].tree {
+            report.push(Finding::deny(
+                RuleId::V7CompressedEquivalence,
+                loc,
+                format!("merged rows {a} and {b} belong to trees {} and {}", rows[a].tree, rows[b].tree),
+            ));
+            continue;
+        }
+        if split >= n_features {
+            report.push(Finding::deny(
+                RuleId::V7CompressedEquivalence,
+                loc,
+                format!("split feature {split} outside the {n_features}-feature space"),
+            ));
+            continue;
+        }
+        for f in 0..n_features {
+            if f == split {
+                let empty = rows[a].lo[f] >= rows[a].hi[f] || rows[b].lo[f] >= rows[b].hi[f];
+                if empty || rows[a].hi[f] != rows[b].lo[f] {
+                    report.push(Finding::deny(
+                        RuleId::V7CompressedEquivalence,
+                        Location::core(ci).feature(f).row(a).tree(rows[a].tree),
+                        format!(
+                            "rows {a} and {b} are not complementary halves at the split: \
+                             [{}, {}) vs [{}, {})",
+                            rows[a].lo[f], rows[a].hi[f], rows[b].lo[f], rows[b].hi[f]
+                        ),
+                    ));
+                }
+            } else if rows[a].lo[f] != rows[b].lo[f] || rows[a].hi[f] != rows[b].hi[f] {
+                report.push(Finding::deny(
+                    RuleId::V7CompressedEquivalence,
+                    Location::core(ci).feature(f).row(a).tree(rows[a].tree),
+                    format!(
+                        "merged rows {a} and {b} disagree off the split feature: \
+                         [{}, {}) vs [{}, {})",
+                        rows[a].lo[f], rows[a].hi[f], rows[b].lo[f], rows[b].hi[f]
+                    ),
+                ));
+            }
+        }
+    }
+
+    // (c) packing disjointness + (d) word-image fidelity. Rebuild the
+    // expected image of every physical word from the logical rows and
+    // compare cell by cell.
+    if layout.word_of_unit.len() != layout.units.len() {
+        report.push(Finding::deny(
+            RuleId::V7CompressedEquivalence,
+            Location::core(ci),
+            format!(
+                "{} units but {} word assignments",
+                layout.units.len(),
+                layout.word_of_unit.len()
+            ),
+        ));
+        return;
+    }
+    let n_phys = layout.words.len();
+    let mut expect_owner = vec![vec![-1i32; n_features]; n_phys];
+    for (u, &w) in layout.word_of_unit.iter().enumerate() {
+        let w = w as usize;
+        if w >= n_phys {
+            report.push(Finding::deny(
+                RuleId::V7CompressedEquivalence,
+                Location::core(ci).row(layout.units[u].rows.0 as usize),
+                format!("unit {u} mapped to word {w} ≥ {n_phys} words"),
+            ));
+            continue;
+        }
+        for f in layout.unit_constrained(u, rows, n_bins) {
+            if f >= n_features {
+                continue; // corrupt row arity — already a V4 deny
+            }
+            if expect_owner[w][f] >= 0 {
+                report.push(Finding::deny(
+                    RuleId::V7CompressedEquivalence,
+                    Location::core(ci).feature(f).row(w),
+                    format!(
+                        "overlapping constrained features: units {} and {u} both \
+                         need cell {f} of word {w}",
+                        expect_owner[w][f]
+                    ),
+                ));
+            } else {
+                expect_owner[w][f] = u as i32;
+            }
+        }
+    }
+    for (w, word) in layout.words.iter().enumerate() {
+        if word.lo.len() != n_features || word.hi.len() != n_features || word.owner.len() != n_features
+        {
+            report.push(Finding::deny(
+                RuleId::V7CompressedEquivalence,
+                Location::core(ci).row(w),
+                format!(
+                    "word {w} arity (lo {}, hi {}, owner {}) does not match {n_features} features",
+                    word.lo.len(),
+                    word.hi.len(),
+                    word.owner.len()
+                ),
+            ));
+            continue;
+        }
+        for f in 0..n_features {
+            let u = expect_owner[w][f];
+            if word.owner[f] != u {
+                report.push(Finding::deny(
+                    RuleId::V7CompressedEquivalence,
+                    Location::core(ci).feature(f).row(w),
+                    format!(
+                        "word {w} cell {f} owned by unit {} but packing assigns {u}",
+                        word.owner[f]
+                    ),
+                ));
+                continue;
+            }
+            let want = if u >= 0 {
+                layout.unit_window(u as usize, rows, f)
+            } else {
+                (0, n_bins) // unowned cells stay full don't-care
+            };
+            if (word.lo[f], word.hi[f]) != want {
+                report.push(Finding::deny(
+                    RuleId::V7CompressedEquivalence,
+                    Location::core(ci).feature(f).row(w),
+                    format!(
+                        "wrong union bounds: word {w} cell {f} holds [{}, {}) but the \
+                         owning rows give [{}, {})",
+                        word.lo[f], word.hi[f], want.0, want.1
+                    ),
+                ));
+            }
+        }
+    }
+
+    // (e) dedup match-set equivalence. Recompute every elementary
+    // interval's membership from the programmed (possibly
+    // defect-perturbed) cells — exactly what `CorePlan::build` bitset —
+    // and require the slot-resolved slice to be bit-identical.
+    let Some(slots) = view.slots() else {
+        return;
+    };
+    let n_rows = view.n_rows();
+    let n_words = view.n_words();
+    if view.arena().len() % n_words != 0 {
+        return; // V2 already denied; slice addressing is meaningless
+    }
+    let n_slices = view.arena().len() / n_words;
+    'feature: for f in 0..view.n_features() {
+        let bounds = view.bounds(f);
+        let off = view.offset(f);
+        for iv in 0..=bounds.len() {
+            match slots.get(off + iv) {
+                Some(&s) if (s as usize) < n_slices => {}
+                _ => continue 'feature, // V2 already denied the table
+            }
+            let rep = if iv == 0 { 0 } else { bounds[iv - 1] };
+            let mut want = vec![0u64; n_words];
+            for r in 0..n_rows {
+                if view.cell(r, f).matches_ideal(rep) {
+                    want[r / 64] |= 1u64 << (r % 64);
+                }
+            }
+            if view.interval_slice(f, iv) != want.as_slice() {
+                report.push(Finding::deny(
+                    RuleId::V7CompressedEquivalence,
+                    Location::core(ci).feature(f).interval(iv),
+                    format!(
+                        "deduplicated slice for interval {iv} diverges from the match set \
+                         recomputed from the programmed cells (slot {})",
+                        slots[off + iv]
+                    ),
+                ));
+                continue 'feature; // one corrupt slot per feature is enough
+            }
+        }
+    }
+}
+
 /// V6 — per-core sparsity census over the programmed cells: wildcard
 /// density (fully-open windows — the compression target of ROADMAP
 /// item 2), dead rows, and the shared-prefix count (cells equal to the
 /// same column of the previous row — an upper bound on prefix-sharing
-/// row compression).
-fn core_census(ci: usize, view: &PlanView<'_>) -> CoreCensus {
+/// row compression). `phys_rows` is the physical word count after
+/// capacity compression (equal to `n_rows` for uncompressed cores).
+fn core_census(ci: usize, view: &PlanView<'_>, phys_rows: usize) -> CoreCensus {
     let n_rows = view.n_rows();
     let n_features = view.n_features();
     let mut per_feature = vec![0usize; n_features];
@@ -515,6 +919,7 @@ fn core_census(ci: usize, view: &PlanView<'_>) -> CoreCensus {
         per_feature_wildcards: per_feature,
         never_match_rows: dead,
         shared_prefix_cells: shared,
+        phys_rows,
     }
 }
 

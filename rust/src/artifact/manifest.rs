@@ -57,8 +57,48 @@ pub struct ArtifactManifest {
     /// Shard count of the embedded plan blob; `0` when the artifact
     /// carries only the unsharded program.
     pub n_shards: usize,
+    /// Capacity-compression summary of the program blob; `None` for
+    /// uncompressed programs. Omitted entirely from the canonical
+    /// encoding when `None`, so artifacts exported before the
+    /// compression pass existed keep their ids byte for byte.
+    pub compression: Option<CompressionMeta>,
     /// Role → blob reference. [`ROLE_PROGRAM`] is always present.
     pub blobs: BTreeMap<String, BlobRef>,
+}
+
+/// Manifest-level summary of a capacity-compressed program (DESIGN.md
+/// §5 contract 11): enough to report the reduction without decoding the
+/// program blob. The layouts themselves live in the program encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompressionMeta {
+    /// Logical CAM rows (= physical words before compression).
+    pub rows: usize,
+    /// Physical words the compressed program occupies.
+    pub phys_rows: usize,
+}
+
+impl CompressionMeta {
+    fn to_json(self) -> Json {
+        let mut o = Json::obj();
+        o.set("rows", Json::Num(self.rows as f64))
+            .set("phys_rows", Json::Num(self.phys_rows as f64));
+        o
+    }
+
+    /// Strict decode: a manifest carrying a malformed `compression`
+    /// object is corrupt and must surface as a structured error, never
+    /// a panic or a silently-ignored field.
+    fn from_json(j: &Json) -> Result<CompressionMeta, String> {
+        if !matches!(j, Json::Obj(_)) {
+            return Err("manifest field `compression` is not an object".into());
+        }
+        Ok(CompressionMeta {
+            rows: j.req_usize("rows").map_err(|e| format!("manifest `compression`: {e}"))?,
+            phys_rows: j
+                .req_usize("phys_rows")
+                .map_err(|e| format!("manifest `compression`: {e}"))?,
+        })
+    }
 }
 
 impl ArtifactManifest {
@@ -80,8 +120,11 @@ impl ArtifactManifest {
             .set("n_bits", Json::Num(self.n_bits as f64))
             .set("n_features", Json::Num(self.n_features as f64))
             .set("n_trees", Json::Num(self.n_trees as f64))
-            .set("n_shards", Json::Num(self.n_shards as f64))
-            .set("blobs", blobs);
+            .set("n_shards", Json::Num(self.n_shards as f64));
+        if let Some(c) = self.compression {
+            o.set("compression", c.to_json());
+        }
+        o.set("blobs", blobs);
         o
     }
 
@@ -109,6 +152,10 @@ impl ArtifactManifest {
             }
             _ => return Err("field `blobs` is not an object".into()),
         }
+        let compression = match j.get("compression") {
+            Some(c) => Some(CompressionMeta::from_json(c)?),
+            None => None,
+        };
         let m = ArtifactManifest {
             name: j.req_str("name")?.to_string(),
             task,
@@ -116,6 +163,7 @@ impl ArtifactManifest {
             n_features: j.req_usize("n_features")?,
             n_trees: j.req_usize("n_trees")?,
             n_shards: j.req_usize("n_shards")?,
+            compression,
             blobs,
         };
         m.program_blob()?;
@@ -167,6 +215,7 @@ mod tests {
             n_features: 13,
             n_trees: 16,
             n_shards: 0,
+            compression: None,
             blobs,
         }
     }
@@ -204,5 +253,37 @@ mod tests {
         let mut j = toy().to_json();
         j.set("format", Json::Str("hlo-text".into()));
         assert!(ArtifactManifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn compression_meta_roundtrips_and_gates_the_id() {
+        let plain = toy();
+        assert!(
+            !plain.to_json().to_string().contains("compression"),
+            "uncompressed manifests must not grow a compression key (id stability)"
+        );
+        let mut pressed = toy();
+        pressed.compression = Some(CompressionMeta { rows: 1024, phys_rows: 400 });
+        let text = pressed.to_json().to_string();
+        let back = ArtifactManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, pressed);
+        assert_eq!(back.to_json().to_string(), text, "canonical");
+        assert_ne!(plain.id(), pressed.id());
+    }
+
+    #[test]
+    fn malformed_compression_field_is_a_structured_error() {
+        // Wrong type entirely.
+        let mut j = toy().to_json();
+        j.set("compression", Json::Str("yes".into()));
+        let err = ArtifactManifest::from_json(&j).unwrap_err();
+        assert!(err.contains("compression"), "{err}");
+        // Right type, missing field.
+        let mut j = toy().to_json();
+        let mut c = Json::obj();
+        c.set("rows", Json::Num(10.0));
+        j.set("compression", c);
+        let err = ArtifactManifest::from_json(&j).unwrap_err();
+        assert!(err.contains("compression"), "{err}");
     }
 }

@@ -26,5 +26,8 @@ pub mod manifest;
 pub mod store;
 
 pub use digest::{sha256, sha256_hex};
-pub use manifest::{ArtifactManifest, BlobRef, FORMAT_MARKER, FORMAT_VERSION, ROLE_PROGRAM, ROLE_SHARD_PLAN};
+pub use manifest::{
+    ArtifactManifest, BlobRef, CompressionMeta, FORMAT_MARKER, FORMAT_VERSION, ROLE_PROGRAM,
+    ROLE_SHARD_PLAN,
+};
 pub use store::{export_program, ArtifactStore, GcReport, IndexEntry, LoadedArtifact, StoreError};

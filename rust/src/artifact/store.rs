@@ -16,7 +16,9 @@
 //! deletes blobs whose count reached zero and manifests no longer in
 //! the index.
 
-use super::manifest::{ArtifactManifest, BlobRef, FORMAT_VERSION, ROLE_PROGRAM, ROLE_SHARD_PLAN};
+use super::manifest::{
+    ArtifactManifest, BlobRef, CompressionMeta, FORMAT_VERSION, ROLE_PROGRAM, ROLE_SHARD_PLAN,
+};
 use super::digest::sha256_hex;
 use crate::compiler::{CamProgram, ShardPlan};
 use crate::util::Json;
@@ -520,6 +522,14 @@ pub fn export_program(
         );
         n_shards = p.n_shards();
     }
+    // Compressed programs advertise their capacity footprint in the
+    // manifest (contract 11); uncompressed manifests carry no
+    // `compression` key at all so pre-compression artifact ids are
+    // unchanged.
+    let compression = program.layouts.as_ref().map(|_| CompressionMeta {
+        rows: program.total_rows(),
+        phys_rows: program.total_phys_rows(),
+    });
     let manifest = ArtifactManifest {
         name: program.name.clone(),
         task: program.task,
@@ -527,6 +537,7 @@ pub fn export_program(
         n_features: program.n_features,
         n_trees: program.n_trees,
         n_shards,
+        compression,
         blobs,
     };
     store.publish(&manifest)
@@ -553,6 +564,7 @@ mod tests {
             n_features: 4,
             n_trees: 2,
             n_shards: 0,
+            compression: None,
             blobs,
         }
     }

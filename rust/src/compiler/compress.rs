@@ -1,0 +1,609 @@
+//! Sparsity-aware CAM capacity compression (ROADMAP item 1; DESIGN.md §5
+//! contract 11; ADR-008. Direction: MonoSparse-CAM 2407.11071, RETENTION
+//! 2506.05994).
+//!
+//! Real tree ensembles are wildly sparse: a depth-d root-to-leaf path
+//! constrains at most d of the model's features, so most macro-cells in a
+//! compiled core are don't-care wildcards. This pass exploits that to cut
+//! the *physical* CAM capacity a program occupies without touching its
+//! *logical* contents:
+//!
+//! 1. **Shared-prefix merging** — two adjacent leaves of the same tree
+//!    whose windows agree on every feature except the final split (where
+//!    they are complementary halves: `hi_left == lo_right`) collapse into
+//!    one physical word holding the union window, plus one *residual*
+//!    macro-cell that re-applies the split threshold to pick the leaf.
+//!    2 words → 1 word + 1 cell.
+//! 2. **Don't-care-aware row packing** — units (single rows or merged
+//!    pairs) whose constrained-feature sets are pairwise disjoint share
+//!    one physical word: each cell is owned by at most one unit, the
+//!    word image is the union of the owners' windows, and per-unit match
+//!    lines sense only the owned segments (MonoSparse-CAM's scheme).
+//! 3. **Arena interval dedup** — at engine lowering, elementary intervals
+//!    whose membership bitsets are identical share one slice of the
+//!    `CorePlan` arena through a slot indirection table (see
+//!    `engine::CorePlan`). Fewer distinct slices = fewer words ANDed
+//!    resident in cache.
+//!
+//! **Bit-identity by construction (contract 11):** the pass never
+//! rewrites, reorders, or drops a logical row — it only *annotates* the
+//! program with a [`CoreLayout`] describing how logical rows map onto
+//! physical words. The functional engine keeps evaluating logical rows in
+//! their original order, so predictions, f32 logits, f64 partial sums,
+//! `charged_rows`, and defect draws (which are keyed on logical rows) are
+//! identical to the uncompressed program on every path and thread count.
+//! Verifier rule V7 (deny) checks that the annotation is a faithful
+//! physical image; the differential suite in `tests/compression.rs` pins
+//! the bit-identity end to end.
+
+use super::paths::CamRow;
+use super::program::CamProgram;
+use crate::util::Json;
+
+/// One compression unit: a single logical row, or a merged pair of
+/// adjacent sibling leaves (`rows.1 = Some`) sharing a physical word
+/// with one residual cell on `split_feature`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Unit {
+    /// Logical row index(es) of this unit, in core order.
+    pub rows: (u32, Option<u32>),
+    /// For merged pairs: the one feature where the two rows are
+    /// complementary halves (`hi_left == lo_right`); the residual cell
+    /// lives here.
+    pub split_feature: Option<u16>,
+}
+
+impl Unit {
+    pub fn is_merged(&self) -> bool {
+        self.rows.1.is_some()
+    }
+}
+
+/// Physical image of one CAM word after packing: per-feature union
+/// window plus the owning unit of every cell (`-1` = unowned wildcard).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WordImage {
+    pub lo: Vec<u16>,
+    pub hi: Vec<u16>,
+    /// Unit index owning each cell, `-1` where no unit constrains it.
+    pub owner: Vec<i32>,
+}
+
+/// Physical layout of one core: how its logical rows map onto physical
+/// words. Purely an annotation — the logical rows stay authoritative for
+/// inference (contract 11).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CoreLayout {
+    /// `units[unit_of_row[r]]` covers logical row `r`.
+    pub unit_of_row: Vec<u32>,
+    pub units: Vec<Unit>,
+    /// Physical word index of each unit.
+    pub word_of_unit: Vec<u32>,
+    /// Physical word images, `words.len()` = compressed capacity.
+    pub words: Vec<WordImage>,
+}
+
+impl CoreLayout {
+    /// Physical words this core occupies after compression.
+    pub fn n_phys_rows(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Union window of a unit on one feature, recomputed from the
+    /// logical rows (the ground truth V7 checks word images against).
+    pub fn unit_window(&self, u: usize, rows: &[CamRow], f: usize) -> (u16, u16) {
+        let (a, b) = self.units[u].rows;
+        let lo = rows[a as usize].lo[f];
+        let hi = match b {
+            Some(b) => rows[b as usize].hi[f],
+            None => rows[a as usize].hi[f],
+        };
+        (lo, hi)
+    }
+
+    /// Features a unit physically occupies: every feature where its
+    /// union window is narrower than don't-care, plus the residual
+    /// cell's split feature for merged pairs.
+    pub fn unit_constrained(&self, u: usize, rows: &[CamRow], n_bins: u16) -> Vec<usize> {
+        let n_features = rows[self.units[u].rows.0 as usize].lo.len();
+        (0..n_features)
+            .filter(|&f| {
+                let (lo, hi) = self.unit_window(u, rows, f);
+                lo != 0 || hi < n_bins || self.units[u].split_feature == Some(f as u16)
+            })
+            .collect()
+    }
+
+    // ---- canonical serialization (artifact store digests these bytes) --
+
+    pub fn to_json(&self) -> Json {
+        let units = self
+            .units
+            .iter()
+            .map(|u| {
+                Json::Arr(vec![
+                    Json::Num(u.rows.0 as f64),
+                    Json::Num(u.rows.1.map_or(-1.0, |r| r as f64)),
+                    Json::Num(u.split_feature.map_or(-1.0, |f| f as f64)),
+                ])
+            })
+            .collect();
+        let words = self
+            .words
+            .iter()
+            .map(|w| {
+                let mut o = Json::obj();
+                o.set("lo", Json::Arr(w.lo.iter().map(|&v| Json::Num(v as f64)).collect()))
+                    .set("hi", Json::Arr(w.hi.iter().map(|&v| Json::Num(v as f64)).collect()))
+                    .set(
+                        "owner",
+                        Json::Arr(w.owner.iter().map(|&v| Json::Num(v as f64)).collect()),
+                    );
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("units", Json::Arr(units))
+            .set(
+                "word_of_unit",
+                Json::Arr(self.word_of_unit.iter().map(|&w| Json::Num(w as f64)).collect()),
+            )
+            .set("words", Json::Arr(words));
+        o
+    }
+
+    /// Decode one core's layout. `n_rows`/`n_features` come from the
+    /// already-decoded core so a corrupt file surfaces as a structured
+    /// error, never a slice panic downstream.
+    pub fn from_json(j: &Json, ci: usize, n_rows: usize, n_features: usize) -> Result<CoreLayout, String> {
+        let mut units = Vec::new();
+        let mut unit_of_row = vec![u32::MAX; n_rows];
+        for (ui, uj) in j.req_arr("units")?.iter().enumerate() {
+            let t = uj.as_arr().ok_or_else(|| format!("core {ci}: layout unit {ui} is not an array"))?;
+            if t.len() != 3 {
+                return Err(format!("core {ci}: layout unit {ui} has {} fields, want 3", t.len()));
+            }
+            let num = |k: usize| -> Result<i64, String> {
+                t[k].as_f64()
+                    .map(|v| v as i64)
+                    .ok_or_else(|| format!("core {ci}: layout unit {ui}[{k}] is not a number"))
+            };
+            let (r0, r1, sf) = (num(0)?, num(1)?, num(2)?);
+            if r0 < 0 || r0 as usize >= n_rows || (r1 >= 0 && r1 as usize >= n_rows) {
+                return Err(format!(
+                    "core {ci}: layout unit {ui} references rows ({r0}, {r1}) outside 0..{n_rows}"
+                ));
+            }
+            for r in [Some(r0), (r1 >= 0).then_some(r1)].into_iter().flatten() {
+                if unit_of_row[r as usize] != u32::MAX {
+                    return Err(format!("core {ci}: layout row {r} claimed by two units"));
+                }
+                unit_of_row[r as usize] = ui as u32;
+            }
+            if (r1 >= 0) != (sf >= 0) {
+                return Err(format!(
+                    "core {ci}: layout unit {ui}: merged pairs need a split feature (rows {r0},{r1}, split {sf})"
+                ));
+            }
+            if sf >= n_features as i64 {
+                return Err(format!("core {ci}: layout unit {ui} split feature {sf} ≥ {n_features}"));
+            }
+            units.push(Unit {
+                rows: (r0 as u32, (r1 >= 0).then_some(r1 as u32)),
+                split_feature: (sf >= 0).then_some(sf as u16),
+            });
+        }
+        if let Some(r) = unit_of_row.iter().position(|&u| u == u32::MAX) {
+            return Err(format!("core {ci}: layout covers no unit for row {r}"));
+        }
+        let word_of_unit: Vec<u32> =
+            j.req("word_of_unit")?.usize_vec()?.into_iter().map(|w| w as u32).collect();
+        if word_of_unit.len() != units.len() {
+            return Err(format!(
+                "core {ci}: layout has {} units but {} word assignments",
+                units.len(),
+                word_of_unit.len()
+            ));
+        }
+        let mut words = Vec::new();
+        for (wi, wj) in j.req_arr("words")?.iter().enumerate() {
+            let lo: Vec<u16> =
+                wj.req("lo")?.usize_vec()?.into_iter().map(|v| v as u16).collect();
+            let hi: Vec<u16> =
+                wj.req("hi")?.usize_vec()?.into_iter().map(|v| v as u16).collect();
+            let owner: Vec<i32> = wj
+                .req("owner")?
+                .f64_vec()?
+                .into_iter()
+                .map(|v| v as i32)
+                .collect();
+            if lo.len() != n_features || hi.len() != n_features || owner.len() != n_features {
+                return Err(format!(
+                    "core {ci}: layout word {wi} arrays disagree (lo {}, hi {}, owner {} for {n_features} features)",
+                    lo.len(),
+                    hi.len(),
+                    owner.len()
+                ));
+            }
+            words.push(WordImage { lo, hi, owner });
+        }
+        for (u, &w) in word_of_unit.iter().enumerate() {
+            if w as usize >= words.len() {
+                return Err(format!(
+                    "core {ci}: layout unit {u} mapped to word {w} ≥ {} words",
+                    words.len()
+                ));
+            }
+        }
+        Ok(CoreLayout { unit_of_row, units, word_of_unit, words })
+    }
+}
+
+/// What the pass achieved, per program (summed over cores). Ratios > 1
+/// mean the compressed form is smaller; `sim/cost.rs` consumes the
+/// physical row counts for the Fig. 8 area/power deltas.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CompressionReport {
+    /// Logical CAM rows (= uncompressed physical words).
+    pub rows_before: usize,
+    /// Physical words after merging + packing.
+    pub rows_after: usize,
+    /// Adjacent sibling-leaf pairs collapsed (technique 1).
+    pub merged_pairs: usize,
+    /// Residual threshold cells added by merging (one per pair).
+    pub residual_cells: usize,
+    /// Units placed into a word already holding another unit (technique 2).
+    pub packed_units: usize,
+    /// Distinct elementary-interval bitset slices before / after dedup
+    /// (technique 3; counted on the ideal, defect-free plan).
+    pub arena_slices_before: usize,
+    pub arena_slices_after: usize,
+    /// u64 arena words before / after dedup.
+    pub arena_words_before: usize,
+    pub arena_words_after: usize,
+}
+
+impl CompressionReport {
+    /// CAM row (word-line) reduction factor.
+    pub fn row_reduction(&self) -> f64 {
+        if self.rows_after == 0 {
+            1.0
+        } else {
+            self.rows_before as f64 / self.rows_after as f64
+        }
+    }
+
+    /// Bitset-arena word reduction factor.
+    pub fn arena_reduction(&self) -> f64 {
+        if self.arena_words_after == 0 {
+            1.0
+        } else {
+            self.arena_words_before as f64 / self.arena_words_after as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("rows_before", Json::Num(self.rows_before as f64))
+            .set("rows_after", Json::Num(self.rows_after as f64))
+            .set("row_reduction", Json::Num(self.row_reduction()))
+            .set("merged_pairs", Json::Num(self.merged_pairs as f64))
+            .set("residual_cells", Json::Num(self.residual_cells as f64))
+            .set("packed_units", Json::Num(self.packed_units as f64))
+            .set("arena_slices_before", Json::Num(self.arena_slices_before as f64))
+            .set("arena_slices_after", Json::Num(self.arena_slices_after as f64))
+            .set("arena_words_before", Json::Num(self.arena_words_before as f64))
+            .set("arena_words_after", Json::Num(self.arena_words_after as f64))
+            .set("arena_reduction", Json::Num(self.arena_reduction()));
+        o
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "rows {} → {} ({:.2}×: {} pairs merged, {} units packed, {} residual cells); \
+             arena {} → {} u64 words ({:.2}×, {} → {} slices)",
+            self.rows_before,
+            self.rows_after,
+            self.row_reduction(),
+            self.merged_pairs,
+            self.packed_units,
+            self.residual_cells,
+            self.arena_words_before,
+            self.arena_words_after,
+            self.arena_reduction(),
+            self.arena_slices_before,
+            self.arena_slices_after,
+        )
+    }
+}
+
+/// Two adjacent rows of one tree merge iff their windows agree on every
+/// feature except exactly one, where they are complementary halves
+/// (`hi_left == lo_right` — the final split of two sibling leaves).
+fn merge_feature(a: &CamRow, b: &CamRow) -> Option<u16> {
+    if a.tree != b.tree {
+        return None;
+    }
+    let mut split = None;
+    for f in 0..a.lo.len() {
+        if a.lo[f] == b.lo[f] && a.hi[f] == b.hi[f] {
+            continue;
+        }
+        // Complementary halves: same outer window, touching at the split.
+        if split.is_some() || a.lo[f] >= a.hi[f] || b.lo[f] >= b.hi[f] || a.hi[f] != b.lo[f] {
+            return None;
+        }
+        split = Some(f as u16);
+    }
+    split
+}
+
+/// Compress one core's rows into a [`CoreLayout`]: greedy left-to-right
+/// prefix merging, then first-fit disjoint-constrained packing. Returns
+/// the layout plus (merged_pairs, packed_units) for the report.
+pub fn compress_core(rows: &[CamRow], n_features: usize, n_bins: u16) -> (CoreLayout, usize, usize) {
+    // 1. Merge adjacent sibling leaves (pairs only, greedy left-to-right;
+    //    pairs-of-pairs would need a second residual level — ADR-008).
+    let mut units: Vec<Unit> = Vec::new();
+    let mut unit_of_row = vec![0u32; rows.len()];
+    let mut r = 0usize;
+    let mut merged_pairs = 0usize;
+    while r < rows.len() {
+        let unit = if r + 1 < rows.len() {
+            merge_feature(&rows[r], &rows[r + 1])
+                .map(|f| Unit { rows: (r as u32, Some((r + 1) as u32)), split_feature: Some(f) })
+        } else {
+            None
+        };
+        let u = units.len() as u32;
+        match unit {
+            Some(unit) => {
+                unit_of_row[r] = u;
+                unit_of_row[r + 1] = u;
+                units.push(unit);
+                merged_pairs += 1;
+                r += 2;
+            }
+            None => {
+                unit_of_row[r] = u;
+                units.push(Unit { rows: (r as u32, None), split_feature: None });
+                r += 1;
+            }
+        }
+    }
+
+    // 2. First-fit packing: a unit joins the first word whose owned
+    //    feature set is disjoint from its constrained set.
+    let layout_probe = CoreLayout {
+        unit_of_row: unit_of_row.clone(),
+        units: units.clone(),
+        word_of_unit: Vec::new(),
+        words: Vec::new(),
+    };
+    let mut words: Vec<WordImage> = Vec::new();
+    let mut word_of_unit = vec![0u32; units.len()];
+    let mut packed_units = 0usize;
+    for u in 0..units.len() {
+        let constrained = layout_probe.unit_constrained(u, rows, n_bins);
+        let fits = |w: &WordImage| constrained.iter().all(|&f| w.owner[f] < 0);
+        let w = match words.iter().position(fits) {
+            Some(w) => {
+                packed_units += 1;
+                w
+            }
+            None => {
+                words.push(WordImage {
+                    lo: vec![0; n_features],
+                    hi: vec![n_bins; n_features],
+                    owner: vec![-1; n_features],
+                });
+                words.len() - 1
+            }
+        };
+        word_of_unit[u] = w as u32;
+        for &f in &constrained {
+            let (lo, hi) = layout_probe.unit_window(u, rows, f);
+            words[w].lo[f] = lo;
+            words[w].hi[f] = hi;
+            words[w].owner[f] = u as i32;
+        }
+    }
+
+    (CoreLayout { unit_of_row, units, word_of_unit, words }, merged_pairs, packed_units)
+}
+
+/// Arena dedup statistics for one core: (slices_before, slices_after,
+/// bitset words per slice). Mirrors the membership construction in
+/// `engine::CorePlan::build` on the ideal (defect-free) cells — bin
+/// scaling is monotone, so the dedup classes are identical to what the
+/// engine's lowering actually shares.
+fn arena_stats(rows: &[CamRow], n_features: usize) -> (usize, usize, usize) {
+    let n_words = rows.len().div_ceil(64).max(1);
+    let mut before = 0usize;
+    let mut unique: std::collections::HashSet<Vec<u64>> = std::collections::HashSet::new();
+    for f in 0..n_features {
+        let mut bounds: Vec<u16> = Vec::new();
+        for row in rows {
+            bounds.push(row.lo[f]);
+            bounds.push(row.hi[f]);
+        }
+        bounds.retain(|&b| b > 0);
+        bounds.sort_unstable();
+        bounds.dedup();
+        for i in 0..bounds.len() + 1 {
+            let rep = if i == 0 { 0 } else { bounds[i - 1] };
+            let mut slice = vec![0u64; n_words];
+            for (r, row) in rows.iter().enumerate() {
+                if row.lo[f] <= rep && rep < row.hi[f] {
+                    slice[r / 64] |= 1u64 << (r % 64);
+                }
+            }
+            before += 1;
+            unique.insert(slice);
+        }
+    }
+    (before, unique.len(), n_words)
+}
+
+/// Run the full compression pass over a compiled program: annotate every
+/// core with its [`CoreLayout`] and return the [`CompressionReport`].
+/// Logical rows are untouched (contract 11); callers opt in via
+/// [`super::CompileOptions::compress`] or compress explicitly (the shard
+/// partitioner recompresses each shard this way).
+pub fn compress_program(program: &mut CamProgram) -> CompressionReport {
+    let mut report = CompressionReport::default();
+    let mut layouts = Vec::with_capacity(program.cores.len());
+    for core in &program.cores {
+        let (layout, merged, packed) = compress_core(&core.rows, program.n_features, program.n_bins);
+        report.rows_before += core.rows.len();
+        report.rows_after += layout.words.len();
+        report.merged_pairs += merged;
+        report.residual_cells += merged;
+        report.packed_units += packed;
+        let (s_before, s_after, n_words) = arena_stats(&core.rows, program.n_features);
+        report.arena_slices_before += s_before;
+        report.arena_slices_after += s_after;
+        report.arena_words_before += s_before * n_words;
+        report.arena_words_after += s_after * n_words;
+        layouts.push(layout);
+    }
+    program.layouts = Some(layouts);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::data::by_name;
+    use crate::trees::{gbdt, GbdtParams};
+
+    fn row(lo: &[u16], hi: &[u16], tree: u32) -> CamRow {
+        CamRow { lo: lo.to_vec(), hi: hi.to_vec(), leaf: 1.0, class: 0, tree }
+    }
+
+    #[test]
+    fn sibling_leaves_merge() {
+        // Two leaves split on feature 1 at bin 5: complementary halves.
+        let a = row(&[2, 0, 0], &[7, 5, 16], 0);
+        let b = row(&[2, 5, 0], &[7, 16, 16], 0);
+        assert_eq!(merge_feature(&a, &b), Some(1));
+        // Different trees never merge.
+        let c = row(&[2, 5, 0], &[7, 16, 16], 1);
+        assert_eq!(merge_feature(&a, &c), None);
+        // A gap between the halves breaks the merge.
+        let d = row(&[2, 6, 0], &[7, 16, 16], 0);
+        assert_eq!(merge_feature(&a, &d), None);
+        // Two differing features break it.
+        let e = row(&[3, 5, 0], &[7, 16, 16], 0);
+        assert_eq!(merge_feature(&a, &e), None);
+    }
+
+    #[test]
+    fn disjoint_rows_pack_into_one_word() {
+        // Three rows constraining disjoint features → one physical word.
+        let rows = vec![
+            row(&[1, 0, 0], &[4, 16, 16], 0),
+            row(&[0, 2, 0], &[16, 9, 16], 1),
+            row(&[0, 0, 3], &[16, 16, 8], 2),
+        ];
+        let (layout, merged, packed) = compress_core(&rows, 3, 16);
+        assert_eq!(merged, 0);
+        assert_eq!(packed, 2);
+        assert_eq!(layout.words.len(), 1);
+        let w = &layout.words[0];
+        assert_eq!((w.lo[0], w.hi[0], w.owner[0]), (1, 4, 0));
+        assert_eq!((w.lo[1], w.hi[1], w.owner[1]), (2, 9, 1));
+        assert_eq!((w.lo[2], w.hi[2], w.owner[2]), (3, 8, 2));
+    }
+
+    #[test]
+    fn conflicting_rows_stay_apart() {
+        let rows = vec![row(&[1, 0], &[4, 16], 0), row(&[2, 0], &[9, 16], 1)];
+        let (layout, _, packed) = compress_core(&rows, 2, 16);
+        assert_eq!(packed, 0);
+        assert_eq!(layout.words.len(), 2);
+    }
+
+    #[test]
+    fn merged_pair_keeps_split_cell_owned() {
+        // Siblings split on feature 0 whose union is full range: the
+        // residual cell still claims the feature so another unit cannot
+        // overwrite it.
+        let rows = vec![
+            row(&[0, 2], &[5, 9], 0),
+            row(&[5, 2], &[16, 9], 0),
+            row(&[3, 0], &[9, 16], 1),
+        ];
+        let (layout, merged, _) = compress_core(&rows, 2, 16);
+        assert_eq!(merged, 1);
+        assert_eq!(layout.units[0].split_feature, Some(0));
+        // Unit 1 (row 2) constrains feature 0 → cannot share unit 0's word.
+        assert_ne!(layout.word_of_unit[0], layout.word_of_unit[1]);
+    }
+
+    #[test]
+    fn compress_trained_model_reduces_rows_and_roundtrips() {
+        let d = by_name("churn").unwrap().generate_n(1500);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 10, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        let mut p = compile(&m, &CompileOptions::default()).unwrap();
+        let rows_before = p.total_rows();
+        let rep = compress_program(&mut p);
+        assert_eq!(rep.rows_before, rows_before);
+        assert!(rep.rows_after < rep.rows_before, "{}", rep.render());
+        assert!(rep.arena_words_after <= rep.arena_words_before);
+        let layouts = p.layouts.as_ref().unwrap();
+        assert_eq!(layouts.len(), p.cores.len());
+        // Layout invariants: every row covered exactly once, windows match.
+        for (core, layout) in p.cores.iter().zip(layouts) {
+            assert_eq!(layout.unit_of_row.len(), core.rows.len());
+            for (u, unit) in layout.units.iter().enumerate() {
+                assert_eq!(layout.unit_of_row[unit.rows.0 as usize], u as u32);
+                if let Some(b) = unit.rows.1 {
+                    assert_eq!(b, unit.rows.0 + 1, "merged rows must be adjacent");
+                    assert_eq!(layout.unit_of_row[b as usize], u as u32);
+                }
+            }
+            // JSON codec round-trips the layout exactly.
+            let back = CoreLayout::from_json(
+                &layout.to_json(),
+                0,
+                core.rows.len(),
+                p.n_features,
+            )
+            .unwrap();
+            assert_eq!(&back, layout);
+        }
+    }
+
+    #[test]
+    fn layout_decode_rejects_corruption() {
+        let rows = vec![row(&[1, 0], &[4, 16], 0), row(&[0, 2], &[16, 9], 1)];
+        let (layout, _, _) = compress_core(&rows, 2, 16);
+        let good = layout.to_json();
+        // Row index out of range.
+        let mut j = good.clone();
+        j.set("units", Json::Arr(vec![Json::Arr(vec![
+            Json::Num(7.0),
+            Json::Num(-1.0),
+            Json::Num(-1.0),
+        ])]));
+        assert!(CoreLayout::from_json(&j, 3, 2, 2).unwrap_err().contains("core 3"));
+        // Word assignment count mismatch.
+        let mut j = good.clone();
+        j.set("word_of_unit", Json::Arr(vec![Json::Num(0.0)]));
+        assert!(CoreLayout::from_json(&j, 0, 2, 2).unwrap_err().contains("word assignments"));
+        // Word arrays of the wrong arity.
+        let mut j = good.clone();
+        let mut w0 = Json::obj();
+        w0.set("lo", Json::Arr(vec![Json::Num(0.0)]))
+            .set("hi", Json::Arr(vec![Json::Num(16.0)]))
+            .set("owner", Json::Arr(vec![Json::Num(-1.0)]));
+        j.set("words", Json::Arr(vec![w0]));
+        assert!(CoreLayout::from_json(&j, 0, 2, 2).unwrap_err().contains("arrays disagree"));
+    }
+}

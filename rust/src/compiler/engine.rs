@@ -55,7 +55,9 @@ const QUERY_BLOCK: usize = 8;
 /// offset of this feature's interval slices in the core's shared arena.
 struct PlanFeature {
     bounds: Vec<u16>,
-    /// Word offset of interval 0 in [`CorePlan::arena`].
+    /// Position of interval 0: a word offset into [`CorePlan::arena`]
+    /// for direct plans, or this feature's base index into
+    /// [`CorePlan::slots`] for deduplicated plans (compressed programs).
     off: usize,
 }
 
@@ -74,17 +76,31 @@ struct CorePlan {
     features: Vec<PlanFeature>,
     /// Flattened `[n_features × 256]` level→interval-id lookup table.
     lut: Vec<u16>,
-    /// All interval bitsets of all features, `n_words` words each.
+    /// Interval bitsets, `n_words` words each. Direct plans store one
+    /// slice per (feature, interval) back to back; deduplicated plans
+    /// store only *distinct* slices, indirected through `slots`.
     arena: Vec<u64>,
     /// All-rows mask (the last word is partially filled).
     full: Vec<u64>,
+    /// Compression technique 3 (contract 11): per (feature, interval),
+    /// the arena slice index holding its membership bitset — identical
+    /// elementary intervals across all features of the core share one
+    /// slice. `None` = direct (uncompressed) addressing.
+    slots: Option<Vec<u32>>,
 }
 
 impl CorePlan {
     /// Build from a row-major `[n_rows × n_features]` cell matrix. Must
     /// be built *after* defect injection so batched queries see the same
     /// programmed levels as the scalar path.
-    fn build(n_rows: usize, n_features: usize, cells: &[MacroCell]) -> CorePlan {
+    ///
+    /// With `dedup` (compressed programs, contract 11), elementary
+    /// intervals whose membership bitsets are identical — across *all*
+    /// features of the core — share one arena slice through the `slots`
+    /// indirection. The slices any query resolves to are bit-for-bit the
+    /// ones the direct plan would return, so both addressing modes are
+    /// interchangeable on every path.
+    fn build(n_rows: usize, n_features: usize, cells: &[MacroCell], dedup: bool) -> CorePlan {
         debug_assert_eq!(cells.len(), n_rows * n_features);
         let n_words = n_rows.div_ceil(64).max(1);
         let mut full = vec![u64::MAX; n_words];
@@ -97,6 +113,8 @@ impl CorePlan {
         let mut features = Vec::with_capacity(n_features);
         let mut lut = vec![0u16; n_features * MACRO_BINS as usize];
         let mut arena: Vec<u64> = Vec::new();
+        let mut slots: Vec<u32> = Vec::new();
+        let mut seen: std::collections::HashMap<Vec<u64>, u32> = std::collections::HashMap::new();
         for f in 0..n_features {
             let mut bounds: Vec<u16> = Vec::with_capacity(2 * n_rows);
             for r in 0..n_rows {
@@ -112,15 +130,27 @@ impl CorePlan {
             // Within an elementary interval no bound level is crossed, so
             // row membership is constant; evaluate it once at the
             // interval's lower endpoint.
-            let off = arena.len();
-            arena.resize(off + (bounds.len() + 1) * n_words, 0);
+            let off = if dedup { slots.len() } else { arena.len() };
+            if !dedup {
+                arena.resize(off + (bounds.len() + 1) * n_words, 0);
+            }
             for i in 0..=bounds.len() {
                 let rep = if i == 0 { 0 } else { bounds[i - 1] };
-                let w = &mut arena[off + i * n_words..off + (i + 1) * n_words];
+                let mut slice = vec![0u64; n_words];
                 for r in 0..n_rows {
                     if cells[r * n_features + f].matches_ideal(rep) {
-                        w[r / 64] |= 1u64 << (r % 64);
+                        slice[r / 64] |= 1u64 << (r % 64);
                     }
+                }
+                if dedup {
+                    let next = (arena.len() / n_words) as u32;
+                    let slot = *seen.entry(slice.clone()).or_insert_with(|| {
+                        arena.extend_from_slice(&slice);
+                        next
+                    });
+                    slots.push(slot);
+                } else {
+                    arena[off + i * n_words..off + (i + 1) * n_words].copy_from_slice(&slice);
                 }
             }
             // LUT sweep: interval id = number of bounds ≤ level, i.e. the
@@ -138,7 +168,19 @@ impl CorePlan {
             }
             features.push(PlanFeature { bounds, off });
         }
-        CorePlan { n_words, features, lut, arena, full }
+        CorePlan { n_words, features, lut, arena, full, slots: dedup.then_some(slots) }
+    }
+
+    /// Resolve interval `iv` of feature `f` to its arena slice, through
+    /// the slot table when deduplicated.
+    #[inline]
+    fn interval_slice(&self, f: usize, iv: usize) -> &[u64] {
+        let off = self.features[f].off;
+        let start = match &self.slots {
+            Some(slots) => slots[off + iv] as usize * self.n_words,
+            None => off + iv * self.n_words,
+        };
+        &self.arena[start..][..self.n_words]
     }
 
     /// Planned-path interval resolution: one LUT load. `q` must already
@@ -148,7 +190,7 @@ impl CorePlan {
     fn rows_matching(&self, f: usize, q: u16) -> &[u64] {
         debug_assert!(q < MACRO_BINS, "query level {q} escaped DAC saturation");
         let iv = self.lut[f * MACRO_BINS as usize + q as usize] as usize;
-        &self.arena[self.features[f].off + iv * self.n_words..][..self.n_words]
+        self.interval_slice(f, iv)
     }
 
     /// Indexed-path interval resolution: binary search over the bound
@@ -157,7 +199,7 @@ impl CorePlan {
     fn rows_matching_indexed(&self, f: usize, q: u16) -> &[u64] {
         let fi = &self.features[f];
         let iv = fi.bounds.partition_point(|&b| b <= q);
-        &self.arena[fi.off + iv * self.n_words..][..self.n_words]
+        self.interval_slice(f, iv)
     }
 }
 
@@ -215,13 +257,28 @@ impl PlanView<'_> {
         &self.core.plan.features[f].bounds
     }
 
-    /// Word offset of feature `f`'s interval 0 in the arena.
+    /// Position of feature `f`'s interval 0: an arena word offset for
+    /// direct plans, a slot-table base index for deduplicated plans
+    /// (see [`PlanView::slots`]).
     pub fn offset(&self, f: usize) -> usize {
         self.core.plan.features[f].off
     }
 
     pub fn arena(&self) -> &[u64] {
         &self.core.plan.arena
+    }
+
+    /// The (feature, interval) → arena-slice slot table of a
+    /// deduplicated plan; `None` for direct plans.
+    pub fn slots(&self) -> Option<&[u32]> {
+        self.core.plan.slots.as_deref()
+    }
+
+    /// The membership bitset of feature `f`'s elementary interval `iv`,
+    /// resolved through whichever addressing mode the plan uses — the
+    /// verifier's probe for rule V7's match-set equivalence check.
+    pub fn interval_slice(&self, f: usize, iv: usize) -> &[u64] {
+        self.core.plan.interval_slice(f, iv)
     }
 
     /// The all-rows mask (last word partially filled).
@@ -270,12 +327,18 @@ impl CamEngine {
     pub fn with_defects(program: &CamProgram, defects: DefectSpec, seed: u64) -> CamEngine {
         let mut rng = Rng::new(seed ^ 0xDEFEC7);
         let scale = (crate::cam::MACRO_BINS / program.n_bins.max(1)) as u16;
+        // Compressed programs lower with the deduplicated arena
+        // (compression technique 3). The defect draw below is keyed on
+        // the *logical* rows, which compression never touches, so the
+        // draw — and therefore every programmed cell — is identical to
+        // the uncompressed engine's (contract 11).
+        let dedup = program.layouts.is_some();
         let mut cores = Vec::with_capacity(program.cores.len());
         for (ci, c) in program.cores.iter().enumerate() {
             let n_rows = c.rows.len();
             let mut crng = rng.fork(ci as u64);
             let (cells, _, dac) = core_defect_draw(program, c, defects, scale, &mut crng);
-            let plan = CorePlan::build(n_rows, program.n_features, &cells);
+            let plan = CorePlan::build(n_rows, program.n_features, &cells, dedup);
             cores.push(EngineCore {
                 cam: CoreCam::from_cells(n_rows, program.n_features, cells),
                 plan,
@@ -342,9 +405,32 @@ impl CamEngine {
         if n_rows == 0 || n_rows % 64 == 0 || core.plan.features.is_empty() {
             return false;
         }
-        let idx = core.plan.features[0].off + core.plan.n_words - 1;
-        core.plan.arena[idx] |= 1u64 << (n_rows % 64);
+        let nw = core.plan.n_words;
+        let base = match &core.plan.slots {
+            Some(slots) => slots[core.plan.features[0].off] as usize * nw,
+            None => core.plan.features[0].off,
+        };
+        core.plan.arena[base + nw - 1] |= 1u64 << (n_rows % 64);
         true
+    }
+
+    /// Mutation-test hook: remap feature 0's interval-0 slot of a
+    /// deduplicated plan to a different arena slice — the slice a query
+    /// resolves to no longer matches the programmed cells, so rule V7's
+    /// match-set equivalence check must fire. Returns `false` when the
+    /// plan is not deduplicated or has only one distinct slice.
+    #[doc(hidden)]
+    pub fn corrupt_dedup_slot(&mut self, ci: usize) -> bool {
+        let core = &mut self.cores[ci];
+        let n_slices = core.plan.arena.len() / core.plan.n_words;
+        let base = core.plan.features.first().map(|f| f.off);
+        match (&mut core.plan.slots, base) {
+            (Some(slots), Some(off)) if n_slices > 1 => {
+                slots[off] = (slots[off] + 1) % n_slices as u32;
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Quantizer-bin → 8-bit DAC level: the DAC's full-scale mapping,
@@ -1046,7 +1132,7 @@ mod tests {
         cells: Vec<MacroCell>,
         n_trees_core: usize,
     ) -> CamEngine {
-        let plan = CorePlan::build(n_rows, n_features, &cells);
+        let plan = CorePlan::build(n_rows, n_features, &cells, false);
         CamEngine {
             task: Task::Binary,
             n_outputs: 1,
@@ -1101,15 +1187,26 @@ mod tests {
                 let hi = g.usize_in(0, 257) as u16;
                 cells.push(MacroCell::new(lo, hi));
             }
-            let plan = CorePlan::build(n_rows, n_features, &cells);
+            // Both addressing modes, both resolutions: all four agree.
+            let plan = CorePlan::build(n_rows, n_features, &cells, false);
+            let deduped = CorePlan::build(n_rows, n_features, &cells, true);
             for f in 0..n_features {
                 for q in 0..MACRO_BINS {
                     prop::require(
                         plan.rows_matching(f, q) == plan.rows_matching_indexed(f, q),
                         format!("f={f} q={q} rows={n_rows}"),
                     )?;
+                    prop::require(
+                        deduped.rows_matching(f, q) == plan.rows_matching(f, q)
+                            && deduped.rows_matching_indexed(f, q) == plan.rows_matching(f, q),
+                        format!("dedup f={f} q={q} rows={n_rows}"),
+                    )?;
                 }
             }
+            prop::require(
+                deduped.arena.len() <= plan.arena.len(),
+                format!("dedup arena grew: {} > {}", deduped.arena.len(), plan.arena.len()),
+            )?;
             Ok(())
         });
     }

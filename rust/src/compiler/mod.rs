@@ -3,12 +3,14 @@
 //! bit-accurate functional engine used as the reference for the cycle
 //! simulator and the XLA runtime.
 
+pub mod compress;
 pub mod engine;
 pub mod noc;
 pub mod partition;
 pub mod paths;
 pub mod program;
 
+pub use compress::{compress_program, CompressionReport, CoreLayout, Unit, WordImage};
 pub use engine::{
     apply_base, defect_affected_trees, defective_score, hat_defect_retrain, CamEngine, PlanView,
     SearchStats,

@@ -327,7 +327,7 @@ pub fn partition(
             vec![0.0; program.base_score.len()]
         };
         let n_trees = assignment[s].len();
-        shards.push(CamProgram {
+        let mut shard = CamProgram {
             name: format!("{}::shard{}of{}", program.name, s, n_shards),
             task: program.task,
             n_features: program.n_features,
@@ -339,7 +339,16 @@ pub fn partition(
             noc,
             quantizer: program.quantizer.clone(),
             n_trees,
-        });
+            layouts: None,
+        };
+        // A compressed source yields compressed shards: the shard's row
+        // distribution differs from the source's, so its physical layout
+        // is recomputed from scratch rather than sliced out of the
+        // source's (contract 11 — the layout is only an annotation).
+        if program.layouts.is_some() {
+            super::compress::compress_program(&mut shard);
+        }
+        shards.push(shard);
     }
 
     Ok(ShardPlan {

@@ -1,6 +1,7 @@
 //! CAM program: the compiled form of a tree ensemble — core images,
 //! replication and NoC configuration (paper §III-A, §III-D).
 
+use super::compress::{compress_program, CoreLayout};
 use super::noc::NocConfig;
 use super::paths::{extract_rows, snap_tree, CamRow, HatReport};
 use crate::cam::CORE_ROWS;
@@ -39,11 +40,21 @@ pub struct CompileOptions {
     pub core_rows: usize,
     /// Chip core budget.
     pub chip_cores: usize,
+    /// Run the sparsity-aware capacity compression pass
+    /// (`compiler::compress`, DESIGN.md §5 contract 11) and attach the
+    /// physical [`CoreLayout`]s to the program. Bit-identical to an
+    /// uncompressed compile on every inference path.
+    pub compress: bool,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { replicas: 1, core_rows: CORE_ROWS, chip_cores: CHIP_CORES }
+        CompileOptions {
+            replicas: 1,
+            core_rows: CORE_ROWS,
+            chip_cores: CHIP_CORES,
+            compress: false,
+        }
     }
 }
 
@@ -65,6 +76,11 @@ pub struct CamProgram {
     pub quantizer: FeatureQuantizer,
     /// Total trees in the source ensemble.
     pub n_trees: usize,
+    /// Physical capacity layouts, one per core, when the program was
+    /// compressed (`compiler::compress`; contract 11). `None` = the
+    /// physical image is the logical rows, one word each. The layouts
+    /// are an annotation: inference always evaluates the logical rows.
+    pub layouts: Option<Vec<CoreLayout>>,
 }
 
 /// Compiler error.
@@ -149,7 +165,7 @@ pub fn compile(model: &Ensemble, options: &CompileOptions) -> Result<CamProgram,
 
     let noc = NocConfig::build(&cores, n_replicas, options.chip_cores);
 
-    Ok(CamProgram {
+    let mut program = CamProgram {
         name: model.name.clone(),
         task: model.task,
         n_features: model.n_features,
@@ -161,7 +177,12 @@ pub fn compile(model: &Ensemble, options: &CompileOptions) -> Result<CamProgram,
         noc,
         quantizer: model.quantizer.clone(),
         n_trees: model.n_trees(),
-    })
+        layouts: None,
+    };
+    if options.compress {
+        compress_program(&mut program);
+    }
+    Ok(program)
 }
 
 /// Post-training quantization: remap a trained ensemble onto the
@@ -297,6 +318,20 @@ impl CamProgram {
         self.cores.iter().map(|c| c.rows.len()).sum()
     }
 
+    /// Physical CAM words core `ci` occupies: its compressed layout's
+    /// word count when present, else one word per logical row.
+    pub fn phys_rows(&self, ci: usize) -> usize {
+        match &self.layouts {
+            Some(layouts) => layouts[ci].n_phys_rows(),
+            None => self.cores[ci].rows.len(),
+        }
+    }
+
+    /// Total physical CAM words across the program (one replica).
+    pub fn total_phys_rows(&self) -> usize {
+        (0..self.cores.len()).map(|ci| self.phys_rows(ci)).sum()
+    }
+
     // ---- serialization ---------------------------------------------------
     //
     // The encoding is *canonical*: every float uses the bit-exact
@@ -352,6 +387,11 @@ impl CamProgram {
             .set("base_score", Json::from_canon_f32_slice(&self.base_score))
             .set("cores", Json::Arr(cores))
             .set("quantizer", self.quantizer.to_json());
+        // Emitted only when present: uncompressed programs keep their
+        // pre-compression byte encoding (and therefore their digests).
+        if let Some(layouts) = &self.layouts {
+            o.set("layouts", Json::Arr(layouts.iter().map(|l| l.to_json()).collect()));
+        }
         o
     }
 
@@ -403,6 +443,27 @@ impl CamProgram {
                 replica: cj.req_usize("replica")? as u32,
             });
         }
+        let layouts = match j.get("layouts") {
+            Some(lj) => {
+                let arr = lj.as_arr().ok_or("field `layouts` is not an array")?;
+                if arr.len() != cores.len() {
+                    return Err(format!(
+                        "{} compression layouts for {} cores",
+                        arr.len(),
+                        cores.len()
+                    ));
+                }
+                Some(
+                    arr.iter()
+                        .enumerate()
+                        .map(|(ci, l)| {
+                            CoreLayout::from_json(l, ci, cores[ci].rows.len(), n_features)
+                        })
+                        .collect::<Result<Vec<_>, _>>()?,
+                )
+            }
+            None => None,
+        };
         let n_replicas = j.req_usize("n_replicas")?;
         if n_replicas == 0 {
             return Err("program has zero replicas".into());
@@ -438,6 +499,7 @@ impl CamProgram {
             noc,
             quantizer,
             n_trees: j.req_usize("n_trees")?,
+            layouts,
         })
     }
 
@@ -574,6 +636,45 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
         }
+    }
+
+    /// Compression layouts are an *optional* field: opting out keeps the
+    /// pre-compression byte encoding (stable digests), opting in is
+    /// canonical too, and the logical rows are identical either way
+    /// (contract 11).
+    #[test]
+    fn compressed_codec_is_canonical_and_optional() {
+        let m = small_model();
+        let plain = compile(&m, &CompileOptions::default()).unwrap();
+        let pressed = compile(&m, &CompileOptions { compress: true, ..Default::default() }).unwrap();
+        assert!(plain.layouts.is_none());
+        assert!(!plain.to_json().to_string().contains("\"layouts\""));
+        assert!(pressed.layouts.is_some());
+        assert!(pressed.total_phys_rows() < pressed.total_rows());
+        let text = pressed.to_json().to_string();
+        let back = CamProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.layouts, pressed.layouts);
+        for (a, b) in plain.cores.iter().zip(&pressed.cores) {
+            assert_eq!(a.rows, b.rows);
+            assert_eq!(a.trees, b.trees);
+        }
+    }
+
+    /// A layouts array that disagrees with the core count is a structured
+    /// decode error, never a panic.
+    #[test]
+    fn json_rejects_layout_core_mismatch() {
+        let m = small_model();
+        let p = compile(&m, &CompileOptions { compress: true, ..Default::default() }).unwrap();
+        let mut j = p.to_json();
+        if let Some(Json::Arr(layouts)) = j.get("layouts").cloned() {
+            let mut doubled = layouts.clone();
+            doubled.extend(layouts);
+            j.set("layouts", Json::Arr(doubled));
+        }
+        let err = CamProgram::from_json(&j).unwrap_err();
+        assert!(err.contains("compression layouts"), "{err}");
     }
 
     /// Pre-artifact program files (flat `quant_bits`/`quant_edges`, no

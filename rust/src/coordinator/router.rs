@@ -79,6 +79,13 @@ pub struct ModelConfig {
     /// [`Fleet::swap_program`] before any backend is built (DESIGN.md §5
     /// contract 8). Default: refuse deny-level findings.
     pub verify: VerifyPolicy,
+    /// Run the sparsity-aware capacity-compression pass
+    /// ([`crate::compiler::compress_program`]) on registration/swap when
+    /// the program is not already compressed. Bit-identical serving
+    /// either way (DESIGN.md §5 contract 11); the compressed route
+    /// occupies fewer physical CAM rows and is gated by verifier rule
+    /// V7 like any other compressed deployment.
+    pub compress: bool,
 }
 
 impl ModelConfig {
@@ -93,6 +100,7 @@ impl ModelConfig {
             queue_cap: DEFAULT_QUEUE_CAP,
             quantizer: program.quantizer.clone(),
             verify: VerifyPolicy::default(),
+            compress: false,
         }
     }
 
@@ -116,6 +124,13 @@ impl ModelConfig {
     /// dead-leaf warnings, e.g. for defect-free golden deployments).
     pub fn with_verify(mut self, policy: VerifyPolicy) -> ModelConfig {
         self.verify = policy;
+        self
+    }
+
+    /// Enable the capacity-compression pass at registration/swap time
+    /// (no-op for programs that already carry compression layouts).
+    pub fn with_compress(mut self, on: bool) -> ModelConfig {
+        self.compress = on;
         self
     }
 }
@@ -369,6 +384,7 @@ impl Fleet {
             queue_cap: 0,
             quantizer,
             verify: VerifyPolicy::default(),
+            compress: false,
         };
         self.register_backends(name, vec![backend], Vec::new(), cfg)
     }
@@ -805,11 +821,23 @@ fn load_for_serving(
 /// with the single backend's own `infer`), gated by the static verifier
 /// per [`ModelConfig::verify`] (contract 8). The sharded path verifies
 /// the *same* partition the backends are built from — one `partition`
-/// call, no verify/serve divergence window.
+/// call, no verify/serve divergence window. With
+/// [`ModelConfig::compress`] set, the capacity-compression pass runs
+/// first (contract 11: bit-identical serving), and the compressed
+/// program is what gets verified (V7) and deployed.
 fn verified_shards(
     program: &CamProgram,
     cfg: &ModelConfig,
 ) -> Result<(Vec<Box<dyn Backend>>, Vec<f32>), String> {
+    let compressed;
+    let program = if cfg.compress && program.layouts.is_none() {
+        let mut p = program.clone();
+        crate::compiler::compress_program(&mut p);
+        compressed = p;
+        &compressed
+    } else {
+        program
+    };
     let gate = cfg.verify != VerifyPolicy::Skip;
     if cfg.shards <= 1 {
         if gate {

@@ -136,23 +136,40 @@ fn cmd_compile(argv: &[String]) {
         Args::new("xtime compile", "compile a trained model to a CAM program")
             .opt("model", None, "input model JSON")
             .opt("replicas", Some("1"), "batch replicas (0 = fill the chip)")
-            .opt("out", None, "output program JSON"),
+            .opt("out", None, "output program JSON")
+            .flag(
+                "compress",
+                "run the sparsity-aware capacity-compression pass (bit-identical, contract 11)",
+            ),
         argv,
     );
     let model = load_model(&a.get("model"));
-    let opts = CompileOptions { replicas: a.get_usize("replicas"), ..Default::default() };
+    let opts = CompileOptions {
+        replicas: a.get_usize("replicas"),
+        compress: a.get_flag("compress"),
+        ..Default::default()
+    };
     let program = compile(&model, &opts).unwrap_or_else(|e| {
         eprintln!("compile error: {e}");
         std::process::exit(2);
     });
     let out = a.get("out");
     program.save(Path::new(&out)).expect("writing program");
+    let rows = if program.layouts.is_some() {
+        format!(
+            "{} rows in {} physical words ({:.2}×)",
+            program.total_rows(),
+            program.total_phys_rows(),
+            program.total_rows() as f64 / program.total_phys_rows().max(1) as f64
+        )
+    } else {
+        format!("{} rows", program.total_rows())
+    };
     println!(
-        "compiled {}: {} cores/replica × {} replicas, {} rows, {} routers ({} accumulating) → {out}",
+        "compiled {}: {} cores/replica × {} replicas, {rows}, {} routers ({} accumulating) → {out}",
         program.name,
         program.cores_per_replica(),
         program.n_replicas,
-        program.total_rows(),
         program.noc.n_routers(),
         program.noc.n_accumulating(),
     );
@@ -167,7 +184,7 @@ fn load_program(path: &str) -> CamProgram {
 
 fn cmd_verify(argv: &[String]) {
     let a = parse(
-        Args::new("xtime verify", "static verifier: lint a compiled CAM program (rules V1-V6)")
+        Args::new("xtime verify", "static verifier: lint a compiled CAM program (rules V1-V7)")
             .opt("program", None, "compiled CAM program JSON")
             .opt("shards", Some("1"), "also verify an n-shard partition (rule V3)")
             .opt("defect-pct", Some("0"), "lint under a memristor defect draw (rule V5)")
@@ -253,6 +270,10 @@ fn cmd_serve(argv: &[String]) {
                 "duration-s",
                 Some("30"),
                 "with --listen: seconds to serve before draining (0 = forever)",
+            )
+            .flag(
+                "compress",
+                "fleet mode: capacity-compress each model at registration (bit-identical)",
             ),
         argv,
     );
@@ -381,7 +402,8 @@ fn cmd_serve_fleet(a: &Args) {
             let cfg = ModelConfig::for_program(&art.program)
                 .with_shards(eff_shards)
                 .with_policy(policy)
-                .with_queue_cap(queue_cap);
+                .with_queue_cap(queue_cap)
+                .with_compress(a.get_flag("compress"));
             fleet.register_from_artifact(name, store, &id, Some(cfg)).unwrap_or_else(|e| {
                 eprintln!("registering `{name}`: {e}");
                 std::process::exit(2);
@@ -405,7 +427,8 @@ fn cmd_serve_fleet(a: &Args) {
             let cfg = ModelConfig::for_program(&program)
                 .with_shards(shards)
                 .with_policy(policy)
-                .with_queue_cap(queue_cap);
+                .with_queue_cap(queue_cap)
+                .with_compress(a.get_flag("compress"));
             fleet.register_program(name, &program, cfg).unwrap_or_else(|e| {
                 eprintln!("registering `{name}`: {e}");
                 std::process::exit(2);

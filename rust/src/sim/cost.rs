@@ -148,12 +148,18 @@ impl Activity {
     /// first segments charge all mapped rows and later segments only the
     /// per-tree matched candidates (`avg_charged` from the functional
     /// engine when available, else a conservative all-rows estimate).
+    /// Capacity-compressed programs (`CamProgram::layouts`) charge their
+    /// *physical* word count — match lines and sub-cells exist per word,
+    /// not per logical row — which is where the Fig. 8 compressed-energy
+    /// delta comes from; leaf reads and MMR/accumulate ops stay per
+    /// logical tree, since compression never changes what is computed
+    /// (contract 11).
     pub fn estimate(program: &CamProgram, cfg: &ChipConfig, avg_charged_frac: f64) -> Activity {
         let search_cycles = if program.n_bits > 4 { 2.0 } else { 1.0 };
         let n_segments = program.n_features.div_ceil(ARRAY_COLS).max(1);
         let mut a = Activity::default();
-        for core in &program.cores {
-            let rows = core.rows.len() as f64;
+        for (ci, core) in program.cores.iter().enumerate() {
+            let rows = program.phys_rows(ci) as f64;
             // Segment 1 charges all rows; subsequent segments only the
             // surviving fraction.
             let mut charged = rows;
@@ -261,6 +267,39 @@ mod tests {
             Activity::estimate(&compile(&big, &CompileOptions::default()).unwrap(), &cfg, 0.05)
                 .energy_nj();
         assert!(e_big > e_small, "{e_big} ≤ {e_small}");
+    }
+
+    #[test]
+    fn compression_lowers_search_energy() {
+        let d = by_name("churn").unwrap().generate_n(1000);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 20, max_leaves: 16, ..Default::default() },
+            None,
+        );
+        let plain = compile(&m, &CompileOptions::default()).unwrap();
+        let pressed = compile(
+            &m,
+            &CompileOptions { compress: true, ..Default::default() },
+        )
+        .unwrap();
+        let cfg = ChipConfig::default();
+        let e_plain = Activity::estimate(&plain, &cfg, 0.05);
+        let e_pressed = Activity::estimate(&pressed, &cfg, 0.05);
+        assert!(
+            pressed.total_phys_rows() < plain.total_rows(),
+            "compression should drop physical rows on a real model"
+        );
+        assert!(
+            e_pressed.subcell_searches < e_plain.subcell_searches,
+            "fewer physical words must charge fewer sub-cells: {} ≥ {}",
+            e_pressed.subcell_searches,
+            e_plain.subcell_searches
+        );
+        assert!(e_pressed.energy_nj() < e_plain.energy_nj());
+        // The computed work is untouched: same leaf reads, same MMR ops.
+        assert_eq!(e_pressed.sram_reads, e_plain.sram_reads);
+        assert_eq!(e_pressed.logic_ops, e_plain.logic_ops);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Static-verifier contract (ISSUE 7): the property suite proves every
 //! real compile path produces verifier-clean programs (zero deny-level
 //! findings — the verifier is a standing oracle over the compiler
-//! surface), and the mutation suite proves each rule V1–V6 actually
+//! surface), and the mutation suite proves each rule V1–V7 actually
 //! fires, on exactly its own `RuleId`, under a deliberate corruption.
 //! The fleet tests pin contract 8: `register_program`/`swap_program`
 //! refuse a blocked program with a diagnostic and leave live routes
@@ -269,6 +269,185 @@ fn mutation_wildcarded_row_moves_v6_census() {
         after.wildcard_cells
     );
     assert_eq!(after.n_cells, before.n_cells);
+}
+
+// ------------------------------------------------------------- V7 mutations
+
+fn compressed_gbdt_program(n_bits: u8) -> CamProgram {
+    let d = churn(400);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 8, max_leaves: 16, n_bits, ..Default::default() },
+        None,
+    );
+    compile(&m, &CompileOptions { compress: true, ..Default::default() }).unwrap()
+}
+
+/// The verifier-clean oracle extends to compression (ISSUE 10): every
+/// compile path that verifies clean uncompressed also verifies clean
+/// with the capacity-compression pass on — V7 runs and finds nothing.
+#[test]
+fn compressed_compile_paths_verify_clean() {
+    let opts = CompileOptions { compress: true, ..Default::default() };
+    let d = churn(400);
+    let m8 = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 8, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    assert_clean(&compile(&m8, &opts).unwrap(), "compressed gbdt 8-bit");
+    for bits in [4u8, 6] {
+        let (p, _) = compile_for_deploy(&m8, bits, &opts).unwrap();
+        assert_clean(&p, &format!("compressed gbdt PTQ {bits}-bit"));
+    }
+    let mrf = rf::train(&d, &RfParams { n_estimators: 8, max_leaves: 16, ..Default::default() });
+    assert_clean(&compile(&mrf, &opts).unwrap(), "compressed rf 8-bit");
+    let msyn = random_ensemble(12, 4, 10, Task::MultiClass(3), 5);
+    assert_clean(&compile(&msyn, &opts).unwrap(), "compressed synthetic multiclass");
+    let mone = random_ensemble(6, 0, 8, Task::Binary, 3);
+    assert_clean(&compile(&mone, &opts).unwrap(), "compressed single-leaf ensemble");
+}
+
+/// Defect draws on a compressed program still never deny: V7's dedup
+/// check recomputes interval membership from the *perturbed* cells, so
+/// the perturbed plan stays self-consistent (same contract as V1/V2).
+#[test]
+fn compressed_defect_draws_never_deny() {
+    let p = compressed_gbdt_program(8);
+    for seed in 0..4 {
+        let r = analysis::verify_with_defects(&p, DefectSpec::memristor(2.0), seed);
+        assert_eq!(r.deny_count(), 0, "compressed defect draw {seed}: {:?}", r.findings);
+    }
+}
+
+/// V7 packing disjointness: force two units that constrain the same
+/// feature into one physical word — the packed row is corrupt (two
+/// owners for one cell) and V7 must say so, at exactly that
+/// (core, feature, word), with no other rule disturbed (V1–V6 never
+/// read the layout annotation).
+#[test]
+fn mutation_overlapping_packed_units_fire_v7() {
+    let mut p = compressed_gbdt_program(8);
+    // Find two units in different words sharing a constrained feature.
+    let layouts = p.layouts.as_ref().expect("compressed program carries layouts");
+    let (ci, ua, ub, f) = p
+        .cores
+        .iter()
+        .enumerate()
+        .find_map(|(ci, core)| {
+            let l = &layouts[ci];
+            for ua in 0..l.units.len() {
+                for ub in ua + 1..l.units.len() {
+                    if l.word_of_unit[ua] == l.word_of_unit[ub] {
+                        continue;
+                    }
+                    let ca = l.unit_constrained(ua, &core.rows, p.n_bins);
+                    let cb = l.unit_constrained(ub, &core.rows, p.n_bins);
+                    if let Some(&f) = ca.iter().find(|f| cb.contains(*f)) {
+                        return Some((ci, ua, ub, f));
+                    }
+                }
+            }
+            None
+        })
+        .expect("some pair of units contends for a feature cell");
+    let w = layouts[ci].word_of_unit[ua];
+    p.layouts.as_mut().unwrap()[ci].word_of_unit[ub] = w;
+    let r = analysis::verify_program(&p);
+    assert_denies_only(&r, RuleId::V7CompressedEquivalence, "overlapping packed units");
+    let overlap = r
+        .findings
+        .iter()
+        .find(|fi| fi.message.contains("overlapping constrained features"))
+        .expect("disjointness finding present");
+    assert_eq!(overlap.location.core, Some(ci));
+    assert_eq!(overlap.location.feature, Some(f));
+    assert_eq!(overlap.location.row, Some(w as usize), "word index is the row coordinate");
+    assert!(overlap.message.contains(&format!("{ub}")), "{}", overlap.message);
+}
+
+/// V7 word-image fidelity: bump one owned cell's union bound in the
+/// physical image — the packed row no longer equals the union of its
+/// owning logical rows, and V7 reports the exact (core, feature, word)
+/// with both the held and the recomputed window.
+#[test]
+fn mutation_wrong_union_bounds_fires_v7() {
+    let mut p = compressed_gbdt_program(8);
+    let layouts = p.layouts.as_mut().expect("layouts");
+    let (ci, w, f) = layouts
+        .iter()
+        .enumerate()
+        .find_map(|(ci, l)| {
+            l.words.iter().enumerate().find_map(|(w, word)| {
+                (0..word.owner.len())
+                    .find(|&f| word.owner[f] >= 0 && word.hi[f] > word.lo[f])
+                    .map(|f| (ci, w, f))
+            })
+        })
+        .expect("some physical word has an owned, non-empty cell");
+    layouts[ci].words[w].hi[f] -= 1; // narrower than the owning rows' union
+    let r = analysis::verify_program(&p);
+    assert_denies_only(&r, RuleId::V7CompressedEquivalence, "wrong union bounds");
+    let bad = r
+        .findings
+        .iter()
+        .find(|fi| fi.message.contains("wrong union bounds"))
+        .expect("fidelity finding present");
+    assert_eq!(bad.location.core, Some(ci));
+    assert_eq!(bad.location.feature, Some(f));
+    assert_eq!(bad.location.row, Some(w));
+}
+
+/// V7 dedup equivalence: remap one slot of the deduplicated arena to a
+/// different slice — the slice a query resolves to diverges from the
+/// match set recomputed from the programmed cells. This is the only
+/// rule that checks arena slice *content*, so exactly V7 fires.
+#[test]
+fn mutation_corrupt_dedup_slot_fires_v7() {
+    let p = compressed_gbdt_program(8);
+    let mut engine = CamEngine::new(&p);
+    let ci = (0..engine.n_cores())
+        .find(|&ci| engine.corrupt_dedup_slot(ci))
+        .expect("some core has more than one distinct arena slice");
+    let r = analysis::verify_engine(&p, &engine, None);
+    assert_denies_only(&r, RuleId::V7CompressedEquivalence, "dedup slot corruption");
+    let bad = r
+        .findings
+        .iter()
+        .find(|fi| fi.message.contains("diverges from the match set"))
+        .expect("dedup finding present");
+    assert_eq!(bad.location.core, Some(ci));
+    assert_eq!(bad.location.feature, Some(0), "hook remaps feature 0");
+    assert_eq!(bad.location.interval, Some(0), "hook remaps interval 0");
+}
+
+/// V7 coverage: orphan a logical row from the unit map — its leaf would
+/// vanish from the physical image. Also pins the layout/core count
+/// consistency deny when a core's layout is dropped wholesale.
+#[test]
+fn mutation_dropped_unit_coverage_fires_v7() {
+    let mut p = compressed_gbdt_program(8);
+    {
+        let layouts = p.layouts.as_mut().expect("layouts");
+        // Point row 0's unit elsewhere without touching the unit list:
+        // unit 0 still claims row 0, so the map and the units disagree.
+        let l = &mut layouts[0];
+        l.unit_of_row[0] = (l.units.len() as u32).saturating_sub(1).max(1);
+    }
+    let r = analysis::verify_program(&p);
+    assert_denies_only(&r, RuleId::V7CompressedEquivalence, "unit map tampering");
+
+    let mut short = compressed_gbdt_program(8);
+    if short.cores.len() > 1 {
+        short.layouts.as_mut().unwrap().pop();
+        let r = analysis::verify_program(&short);
+        assert_denies_only(&r, RuleId::V7CompressedEquivalence, "short layout vector");
+        assert!(
+            r.findings.iter().any(|f| f.message.contains("compression layouts")),
+            "{:?}",
+            r.findings
+        );
+    }
 }
 
 // ---------------------------------------------------------------- contract 8

@@ -14,7 +14,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
-use xtime::artifact::{export_program, sha256_hex, ArtifactStore, StoreError};
+use xtime::artifact::{export_program, sha256_hex, ArtifactStore, CompressionMeta, StoreError};
 use xtime::bench_support::random_query_bins;
 use xtime::cam::DefectSpec;
 use xtime::compiler::{
@@ -292,6 +292,105 @@ fn gc_keeps_referenced_blobs_and_drops_unreferenced() {
     assert!(!store.blob_path(&prog_digest).exists());
     assert!(store.ls().is_empty());
     assert!(r.bytes_freed > 0);
+}
+
+/// Capacity-compressed programs travel too (ISSUE 10): the layout
+/// annotation survives the round trip byte-for-byte, the manifest
+/// carries the compression summary, the id stays a pure function of
+/// content (and differs from the uncompressed export's id), and the
+/// loaded program is verify-clean — V7 included — and bit-identical on
+/// every inference surface.
+#[test]
+fn compressed_artifact_roundtrips_digest_stable_and_bit_identical() {
+    let data = by_name("churn").unwrap().generate_n(400);
+    let model = gbdt::train(
+        &data,
+        &GbdtParams { n_rounds: 8, max_leaves: 16, seed: 17, ..Default::default() },
+        None,
+    );
+    let plain = compile(&model, &CompileOptions::default()).unwrap();
+    let pressed =
+        compile(&model, &CompileOptions { compress: true, ..Default::default() }).unwrap();
+    assert!(pressed.layouts.is_some(), "compression pass ran");
+
+    let (tmp_a, tmp_b) = (TmpStore::new("press-a"), TmpStore::new("press-b"));
+    let mut sa = tmp_a.open();
+    let mut sb = tmp_b.open();
+    let id_plain = export_program(&mut sa, &plain, None).unwrap();
+    let id1 = export_program(&mut sa, &pressed, None).unwrap();
+    let id2 = export_program(&mut sa, &pressed, None).unwrap();
+    let id3 = export_program(&mut sb, &pressed, None).unwrap();
+    assert_eq!(id1, id2, "re-export is digest-stable");
+    assert_eq!(id1, id3, "export in an independent store");
+    assert_ne!(id1, id_plain, "the layout annotation gates the id");
+
+    let art = tmp_a.open().load(&id1).expect("load compressed artifact");
+    assert_eq!(
+        art.manifest.compression,
+        Some(CompressionMeta {
+            rows: pressed.total_rows(),
+            phys_rows: pressed.total_phys_rows(),
+        }),
+        "manifest summarizes the compression"
+    );
+    assert_eq!(art.program.layouts, pressed.layouts, "layouts survive byte-for-byte");
+    assert_eq!(
+        xtime::analysis::verify_program(&art.program).deny_count(),
+        0,
+        "loaded compressed program is verify-clean"
+    );
+    // The uncompressed artifact's manifest must not grow the key.
+    let bare = sa.load(&id_plain).expect("load plain artifact");
+    assert_eq!(bare.manifest.compression, None);
+
+    let queries = random_query_bins(&pressed, 64, 0xC0DE);
+    let orig = CamEngine::new(&pressed);
+    let back = CamEngine::new(&art.program);
+    assert_eq!(bits2(&orig.infer_batch(&queries)), bits2(&back.infer_batch(&queries)));
+    assert_eq!(
+        bits2_f64(&orig.partials_batch(&queries)),
+        bits2_f64(&back.partials_batch(&queries))
+    );
+    for threads in [1usize, 2, 8] {
+        assert_eq!(
+            bits2(&orig.infer_planned(&queries, threads)),
+            bits2(&back.infer_planned(&queries, threads)),
+            "infer_planned × {threads} threads"
+        );
+    }
+}
+
+/// An old-format manifest that grew an unreadable `compression` field
+/// (wrong type, or missing sub-fields) surfaces as a structured
+/// [`StoreError::Corrupt`] naming the field — never a panic, never a
+/// silently-ignored annotation.
+#[test]
+fn malformed_compression_manifest_field_is_corrupt_not_panic() {
+    let tmp = TmpStore::new("press-bad");
+    let program = train_program("churn", 8, "gbdt", 19);
+    let mut store = tmp.open();
+    let id = export_program(&mut store, &program, None).unwrap();
+    let text = std::fs::read_to_string(store.manifest_path(&id)).unwrap();
+
+    // Each tampered manifest is stored under its own (correct) content
+    // id so the digest gate passes and the decoder is what rejects it.
+    for tamper in [Json::Str("gzip".into()), {
+        let mut c = Json::obj();
+        c.set("rows", Json::Num(10.0)); // phys_rows missing
+        c
+    }] {
+        let mut j = Json::parse(&text).unwrap();
+        j.set("compression", tamper);
+        let bytes = j.to_string().into_bytes();
+        let bad_id = sha256_hex(&bytes);
+        std::fs::write(store.manifest_path(&bad_id), &bytes).unwrap();
+        match store.load(&bad_id) {
+            Err(StoreError::Corrupt { detail, .. }) => {
+                assert!(detail.contains("compression"), "detail names the field: {detail}")
+            }
+            other => panic!("expected Corrupt, got {:?}", other.err()),
+        }
+    }
 }
 
 /// Cold start through the fleet: `register_from_artifact` with no

@@ -1,0 +1,298 @@
+//! Compressed-vs-uncompressed bit-identity: the differential harness
+//! behind DESIGN.md §5 contract 11. Capacity compression (row
+//! merging + packing + arena dedup, `compiler/compress.rs`) must leave
+//! every observable output of the engine untouched — predictions, f32
+//! logits (compared bit for bit via `to_bits`), f64 per-shard partials,
+//! and `SearchStats` charge accounting — across tasks, 4/6/8-bit
+//! precisions, GBDT and RF ensembles, defect draws, 1- and 2-shard
+//! deployments, and planned-path thread counts 1/2/8. Mirrors
+//! `batch_agreement.rs`: `assert_eq!` on raw values, never a tolerance.
+
+use xtime::bench_support::{random_ensemble, random_query_bins};
+use xtime::cam::DefectSpec;
+use xtime::compiler::{
+    compile, partition, CamEngine, CamProgram, CompileOptions, PartitionOptions,
+};
+use xtime::data::{by_name, Task};
+use xtime::trees::{gbdt, rf, Ensemble, GbdtParams, RfParams};
+use xtime::util::prop;
+
+/// Same pinned thread counts as the batch-agreement suite: one worker,
+/// a split, and more workers than most test programs have cores.
+const THREADS: [usize; 3] = [1, 2, 8];
+
+/// Compile a model both ways. The compressed program must carry layouts
+/// and identical *logical* contents — compression is an annotation.
+fn compile_pair(model: &Ensemble) -> (CamProgram, CamProgram) {
+    let plain = compile(model, &CompileOptions::default()).unwrap();
+    let pressed =
+        compile(model, &CompileOptions { compress: true, ..Default::default() }).unwrap();
+    assert!(pressed.layouts.is_some(), "compress option must annotate the program");
+    assert!(plain.layouts.is_none());
+    assert_eq!(plain.cores.len(), pressed.cores.len());
+    for (a, b) in plain.cores.iter().zip(&pressed.cores) {
+        assert_eq!(a.rows, b.rows, "compression must never touch logical rows");
+        assert_eq!(a.trees, b.trees);
+    }
+    (plain, pressed)
+}
+
+/// Exact agreement of two engines built from the plain / compressed
+/// forms of one program, on every path: scalar, indexed batch, planned
+/// at all pinned thread counts. Returns a witness for `prop::check`.
+fn engines_agree(
+    plain: &CamEngine,
+    pressed: &CamEngine,
+    batch: &[Vec<u16>],
+    label: &str,
+) -> prop::PropResult {
+    for (i, bins) in batch.iter().enumerate() {
+        prop::require(
+            plain.partials_bins(bins) == pressed.partials_bins(bins),
+            format!("{label}: row {i} f64 partials diverged"),
+        )?;
+        let (la, sa) = plain.infer_bins_stats(bins);
+        let (lb, sb) = pressed.infer_bins_stats(bins);
+        let (ba, bb): (Vec<u32>, Vec<u32>) = (
+            la.iter().map(|l| l.to_bits()).collect(),
+            lb.iter().map(|l| l.to_bits()).collect(),
+        );
+        prop::require(ba == bb, format!("{label}: row {i} logit bits diverged"))?;
+        prop::require(
+            plain.decide(&la) == pressed.decide(&lb),
+            format!("{label}: row {i} decision diverged"),
+        )?;
+        prop::require(
+            sa.charged_rows == sb.charged_rows,
+            format!(
+                "{label}: row {i} charged_rows {} vs {}",
+                sa.charged_rows, sb.charged_rows
+            ),
+        )?;
+        prop::require(
+            sa.matches == sb.matches,
+            format!("{label}: row {i} matches {} vs {}", sa.matches, sb.matches),
+        )?;
+    }
+    let (pa, sa) = plain.partials_batch_stats(batch);
+    let (pb, sb) = pressed.partials_batch_stats(batch);
+    prop::require(pa == pb, format!("{label}: indexed batch partials diverged"))?;
+    prop::require(
+        (sa.charged_rows, sa.matches) == (sb.charged_rows, sb.matches),
+        format!(
+            "{label}: indexed batch stats ({}, {}) vs ({}, {})",
+            sa.charged_rows, sa.matches, sb.charged_rows, sb.matches
+        ),
+    )?;
+    for &threads in &THREADS {
+        let (qa, ta) = plain.partials_planned_stats(batch, threads);
+        let (qb, tb) = pressed.partials_planned_stats(batch, threads);
+        prop::require(
+            qa == qb,
+            format!("{label}: planned({threads}T) partials diverged"),
+        )?;
+        prop::require(
+            plain.infer_planned(batch, threads) == pressed.infer_planned(batch, threads),
+            format!("{label}: planned({threads}T) logits diverged"),
+        )?;
+        prop::require(
+            (ta.charged_rows, ta.matches) == (tb.charged_rows, tb.matches),
+            format!(
+                "{label}: planned({threads}T) stats ({}, {}) vs ({}, {})",
+                ta.charged_rows, ta.matches, tb.charged_rows, tb.matches
+            ),
+        )?;
+    }
+    Ok(())
+}
+
+fn random_bin_batch(
+    g: &mut prop::Gen,
+    n_features: usize,
+    n_bins: usize,
+    rows: usize,
+) -> Vec<Vec<u16>> {
+    (0..rows)
+        .map(|_| (0..n_features).map(|_| g.usize_in(0, n_bins) as u16).collect())
+        .collect()
+}
+
+#[test]
+fn compressed_equals_plain_binary_8bit_gbdt() {
+    let d = by_name("churn").unwrap().generate_n(1200);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 12, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    let (plain, pressed) = compile_pair(&m);
+    let (ep, ec) = (CamEngine::new(&plain), CamEngine::new(&pressed));
+    prop::check(40, 0xC0135, |g| {
+        let batch = random_bin_batch(g, plain.n_features, plain.n_bins as usize, g.usize_in(1, 17));
+        engines_agree(&ep, &ec, &batch, "binary-8bit")
+    });
+}
+
+#[test]
+fn compressed_equals_plain_multiclass_multicore() {
+    let d = by_name("eye").unwrap().generate_n(1000);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 9, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    // Small cores force multi-core placement: per-core layouts.
+    let plain = compile(&m, &CompileOptions { core_rows: 48, ..Default::default() }).unwrap();
+    let pressed = compile(
+        &m,
+        &CompileOptions { core_rows: 48, compress: true, ..Default::default() },
+    )
+    .unwrap();
+    assert!(plain.cores_per_replica() > 1);
+    let (ep, ec) = (CamEngine::new(&plain), CamEngine::new(&pressed));
+    prop::check(30, 0xC0EE7E, |g| {
+        let batch = random_bin_batch(g, plain.n_features, plain.n_bins as usize, g.usize_in(1, 13));
+        engines_agree(&ep, &ec, &batch, "multiclass")
+    });
+}
+
+#[test]
+fn compressed_equals_plain_regression_rf() {
+    let d = by_name("rossmann").unwrap().generate_n(900);
+    let m = rf::train(&d, &RfParams { n_estimators: 8, max_leaves: 32, ..Default::default() });
+    let (plain, pressed) = compile_pair(&m);
+    let (ep, ec) = (CamEngine::new(&plain), CamEngine::new(&pressed));
+    prop::check(30, 0xC02F62, |g| {
+        let batch = random_bin_batch(g, plain.n_features, plain.n_bins as usize, g.usize_in(1, 13));
+        engines_agree(&ep, &ec, &batch, "regression-rf")
+    });
+}
+
+#[test]
+fn compressed_equals_plain_low_precision() {
+    // 4- and 6-bit grids give coarser windows → far more shared
+    // intervals and mergeable siblings, the regime where the dedup and
+    // merge machinery does real work.
+    for n_bits in [4u8, 6] {
+        let d = by_name("telco").unwrap().generate_n(800);
+        let m = gbdt::train(
+            &d,
+            &GbdtParams { n_rounds: 6, max_leaves: 8, n_bits, ..Default::default() },
+            None,
+        );
+        let (plain, pressed) = compile_pair(&m);
+        assert_eq!(plain.n_bins, 1 << n_bits);
+        let (ep, ec) = (CamEngine::new(&plain), CamEngine::new(&pressed));
+        prop::check(30, 0xC04B17 + n_bits as u64, |g| {
+            let batch =
+                random_bin_batch(g, plain.n_features, plain.n_bins as usize, g.usize_in(1, 17));
+            engines_agree(&ep, &ec, &batch, &format!("{n_bits}-bit"))
+        });
+    }
+}
+
+#[test]
+fn compressed_equals_plain_under_defects() {
+    // Defect draws are keyed on *logical* rows (contract 11), so the
+    // same spec + seed perturbs both builds identically and bit-identity
+    // must survive every draw — including the dedup rebuild from
+    // perturbed cells.
+    let d = by_name("churn").unwrap().generate_n(1000);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 10, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    let (plain, pressed) = compile_pair(&m);
+    prop::check(12, 0xC0DEFEC7, |g| {
+        let spec = DefectSpec {
+            memristor_pct: g.f64_unit() * 0.3,
+            dac_pct: g.f64_unit() * 0.2,
+        };
+        let seed = g.u64();
+        let ep = CamEngine::with_defects(&plain, spec, seed);
+        let ec = CamEngine::with_defects(&pressed, spec, seed);
+        let batch = random_bin_batch(g, plain.n_features, plain.n_bins as usize, 8);
+        engines_agree(&ep, &ec, &batch, "defects")
+    });
+}
+
+#[test]
+fn compressed_shards_reproduce_plain_shards() {
+    // Sharding a compressed program recomputes per-shard layouts; the
+    // f64 per-shard partials — the unit of cross-shard aggregation —
+    // must match the uncompressed partition shard for shard, row for
+    // row, at 1 and 2 shards.
+    let model = random_ensemble(256, 4, 16, Task::Binary, 11);
+    let (plain, pressed) = compile_pair(&model);
+    let batch = random_query_bins(&plain, 32, 0x5AFE);
+    for n_shards in [1usize, 2] {
+        let (pp, pc) = if n_shards == 1 {
+            (vec![plain.clone()], vec![pressed.clone()])
+        } else {
+            let a = partition(&plain, n_shards, &PartitionOptions::default()).unwrap();
+            let b = partition(&pressed, n_shards, &PartitionOptions::default()).unwrap();
+            assert!(
+                b.shards.iter().all(|s| s.layouts.is_some()),
+                "shards of a compressed program must be recompressed"
+            );
+            (a.shards, b.shards)
+        };
+        for (s, (sp, sc)) in pp.iter().zip(&pc).enumerate() {
+            let (ep, ec) = (CamEngine::new(sp), CamEngine::new(sc));
+            for (i, bins) in batch.iter().enumerate() {
+                assert_eq!(
+                    ep.partials_bins(bins),
+                    ec.partials_bins(bins),
+                    "{n_shards}-shard deployment, shard {s}, row {i}: f64 partials"
+                );
+            }
+            engines_agree(&ep, &ec, &batch, &format!("{n_shards}-shard s{s}")).unwrap();
+        }
+    }
+}
+
+#[test]
+fn sparse_benchmark_model_compresses_at_least_2x() {
+    // The ISSUE 10 capacity claim: shallow trees over many features are
+    // the paper's sparse regime; merging + packing must at least halve
+    // the physical row count on the 1024-tree benchmark ensemble.
+    let model = random_ensemble(1024, 4, 32, Task::Binary, 7);
+    let (plain, pressed) = compile_pair(&model);
+    let (rows, phys) = (pressed.total_rows(), pressed.total_phys_rows());
+    assert_eq!(plain.total_rows(), rows);
+    assert!(
+        rows as f64 / phys as f64 >= 2.0,
+        "expected ≥2× row reduction on the sparse benchmark model, got {rows} → {phys}"
+    );
+    // Spot-check bit-identity on the big model too (scalar + planned).
+    let (ep, ec) = (CamEngine::new(&plain), CamEngine::new(&pressed));
+    let batch = random_query_bins(&plain, 16, 0xB16);
+    engines_agree(&ep, &ec, &batch, "sparse-benchmark").unwrap();
+}
+
+#[test]
+fn compressed_program_roundtrips_and_verifies_clean() {
+    // Codec + verifier integration: the annotated program survives its
+    // canonical JSON round trip exactly and passes the V1–V7 gate, at 1
+    // and 2 shards.
+    let d = by_name("telco").unwrap().generate_n(900);
+    let m = gbdt::train(
+        &d,
+        &GbdtParams { n_rounds: 8, max_leaves: 16, ..Default::default() },
+        None,
+    );
+    let (_, pressed) = compile_pair(&m);
+    let text = pressed.to_json().to_string();
+    let back = CamProgram::from_json(&xtime::util::Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.to_json().to_string(), text, "canonical round trip");
+    assert_eq!(back.layouts, pressed.layouts);
+    for n_shards in [1usize, 2] {
+        let report = xtime::analysis::verify(&pressed, n_shards);
+        assert!(
+            report.is_clean(),
+            "compressed program must verify clean at {n_shards} shard(s):\n{}",
+            report.render()
+        );
+    }
+}

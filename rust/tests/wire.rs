@@ -548,6 +548,7 @@ fn backend_failure_maps_to_failed_rows_not_connection_loss() {
                     edges: vec![vec![0.5]],
                 },
                 verify: xtime::analysis::VerifyPolicy::Skip,
+                compress: false,
             },
         )
         .unwrap();
